@@ -1,0 +1,73 @@
+//! Deployment scenario: network-intrusion detection behind the
+//! dynamic-batching inference server (the L3 request path — pure table
+//! lookups, python nowhere in sight).
+//!
+//!     cargo run --release --example nid_serve
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use neuralut::config::Meta;
+use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer, ServerConfig};
+use neuralut::dataset::{self, GenOpts};
+use neuralut::metrics;
+use neuralut::report::pct;
+use neuralut::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let meta = Meta::load(Meta::default_dir())?;
+    let rt = Runtime::new()?;
+    let gen = GenOpts { n_train: 8000, n_test: 2000, ..Default::default() };
+    let opts = FlowOptions {
+        config: "nid".into(),
+        dense_steps: 300,
+        sparse_steps: 800,
+        skip_scale: 1.0,
+        seed: 7,
+        gen: gen.clone(),
+        emit_rtl: false,
+        verify_bit_exact: false,
+    };
+    let r = run_flow(&rt, &meta, &opts)?;
+    println!("trained NID netlist: {} L-LUTs, accuracy {}",
+             r.netlist.total_units(), pct(r.netlist_acc));
+
+    // sweep batching policies: latency/throughput trade-off
+    let top = &meta.config("nid")?.topology;
+    let splits = dataset::generate(&top.dataset, top.beta_in, &gen)?;
+    let test = &splits.test;
+    println!("\n{:<26} {:>12} {:>12} {:>12} {:>10}",
+             "policy", "req/s", "mean us", "p99 us", "acc");
+    for (max_batch, wait_us, workers) in
+        [(1usize, 0u64, 1usize), (16, 100, 2), (64, 200, 2), (256, 500, 2)]
+    {
+        let server = InferenceServer::start(
+            r.netlist.clone(),
+            ServerConfig {
+                max_batch,
+                max_wait: Duration::from_micros(wait_us),
+                workers,
+            },
+        );
+        let n_req = 4000usize;
+        let rows: Vec<Vec<i32>> =
+            (0..n_req).map(|i| test.row(i % test.n).to_vec()).collect();
+        let t = std::time::Instant::now();
+        let outs = server.infer_many(rows)?;
+        let secs = t.elapsed().as_secs_f64();
+        // accuracy of served answers
+        let thr = (1 << (top.beta.last().unwrap() - 1)) as i32;
+        let preds: Vec<i32> =
+            outs.iter().map(|row| (row[0] >= thr) as i32).collect();
+        let labels: Vec<i32> =
+            (0..n_req).map(|i| test.y[i % test.n]).collect();
+        let acc = metrics::accuracy(&preds, &labels);
+        let (_, _, mean, p99) = server.stats();
+        println!("{:<26} {:>12.0} {:>12.0} {:>12.0} {:>10}",
+                 format!("batch<={max_batch} wait {wait_us}us"),
+                 n_req as f64 / secs, mean, p99, pct(acc));
+        server.shutdown();
+    }
+    Ok(())
+}

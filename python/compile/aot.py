@@ -1,0 +1,249 @@
+"""AOT lowering: every model entry point -> HLO *text* artifacts + metadata.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--configs mnist,nid,...]
+
+Emits, per config ``c``:
+    <out>/<c>/train_step.hlo.txt        sparse-model AdamW step
+    <out>/<c>/train_step_dense.hlo.txt  dense variant w/ group lasso
+    <out>/<c>/infer.hlo.txt             quantized forward (codes + logits)
+    <out>/<c>/infer_pallas.hlo.txt      same through the L1 Pallas kernel
+    <out>/<c>/lut_infer.hlo.txt         truth-table inference (Pallas gather)
+    <out>/<c>/enum_l<k>.hlo.txt         truth-table enumeration of layer k
+and a global ``<out>/meta.json`` describing shapes and argument orders for
+the rust runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .topology import Topology, presets
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    # keep_unused=True: the rust side passes every recorded argument, so
+    # arguments that an entry point ignores (e.g. conn tensors of dense
+    # learned layers, lam in the sparse step) must stay in the signature.
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*example_args))
+
+
+# ---------------------------------------------------------------------------
+# Entry-point builders.  Every entry point takes a *flat* argument list whose
+# order is recorded in meta.json; params/opt-state/conn dicts are flattened
+# in param_spec/conn_spec order.
+# ---------------------------------------------------------------------------
+
+def _pack(names, values):
+    return dict(zip(names, values))
+
+
+def build_train_step(top: Topology, dense: bool):
+    pnames = [n for n, _ in M.param_spec(top, dense)]
+    snames = [n for n, _ in M.stats_spec(top)]
+    cnames = [n for n, _ in M.conn_spec(top)]
+    np_, ns, nc = len(pnames), len(snames), len(cnames)
+
+    def fn(*args):
+        i = 0
+        params = _pack(pnames, args[i:i + np_]); i += np_
+        m = _pack(pnames, args[i:i + np_]); i += np_
+        v = _pack(pnames, args[i:i + np_]); i += np_
+        stats = _pack(snames, args[i:i + ns]); i += ns
+        conn = _pack(cnames, args[i:i + nc]); i += nc
+        x, y, lr, wd, lam, ss, t = args[i:]
+        p2, m2, v2, s2, loss = M.train_step(top, dense, params, m, v, stats,
+                                            conn, x, y, lr, wd, lam, ss, t)
+        return tuple(p2[k] for k in pnames) + tuple(m2[k] for k in pnames) \
+            + tuple(v2[k] for k in pnames) + tuple(s2[k] for k in snames) \
+            + (loss,)
+
+    pshapes = [s for _, s in M.param_spec(top, dense)]
+    sshapes = [s for _, s in M.stats_spec(top)]
+    cshapes = [s for _, s in M.conn_spec(top)]
+    ex = [_sds(s) for s in pshapes] * 3 \
+        + [_sds(s) for s in sshapes] \
+        + [_sds(s, I32) for s in cshapes] \
+        + [_sds((top.batch, top.n_in), I32), _sds((top.batch,), I32),
+           _sds((), F32), _sds((), F32), _sds((), F32), _sds((), F32),
+           _sds((), F32)]
+    args = [f"p:{n}" for n in pnames] + [f"m:{n}" for n in pnames] \
+        + [f"v:{n}" for n in pnames] + [f"s:{n}" for n in snames] \
+        + [f"c:{n}" for n in cnames] \
+        + ["x", "y", "lr", "wd", "lam", "skip_scale", "t"]
+    outs = [f"p:{n}" for n in pnames] + [f"m:{n}" for n in pnames] \
+        + [f"v:{n}" for n in pnames] + [f"s:{n}" for n in snames] + ["loss"]
+    return fn, ex, args, outs
+
+
+def build_infer(top: Topology, use_pallas: bool):
+    pnames = [n for n, _ in M.param_spec(top, dense=False)]
+    snames = [n for n, _ in M.stats_spec(top)]
+    cnames = [n for n, _ in M.conn_spec(top)]
+    np_, ns, nc = len(pnames), len(snames), len(cnames)
+
+    def fn(*args):
+        params = _pack(pnames, args[:np_])
+        stats = _pack(snames, args[np_:np_ + ns])
+        conn = _pack(cnames, args[np_ + ns:np_ + ns + nc])
+        x, ss = args[np_ + ns + nc:]
+        logits, codes, _ = M.forward(top, params, stats, conn, x, ss,
+                                     use_pallas=use_pallas, train=False)
+        return codes, logits
+
+    ex = [_sds(s) for _, s in M.param_spec(top, dense=False)] \
+        + [_sds(s) for _, s in M.stats_spec(top)] \
+        + [_sds(s, I32) for _, s in M.conn_spec(top)] \
+        + [_sds((top.batch, top.n_in), I32), _sds((), F32)]
+    args = [f"p:{n}" for n in pnames] + [f"s:{n}" for n in snames] \
+        + [f"c:{n}" for n in cnames] + ["x", "skip_scale"]
+    return fn, ex, args, ["codes", "logits"]
+
+
+def build_enum(top: Topology, l: int):
+    lnames = [n for n, _ in M.param_spec(top, dense=False)
+              if n.startswith(f"l{l}_")]
+    lshapes = [s for n, s in M.param_spec(top, dense=False)
+               if n.startswith(f"l{l}_")]
+    snames = [n for n, _ in M.stats_spec(top) if n.startswith(f"l{l}_")]
+    sshapes = [s for n, s in M.stats_spec(top) if n.startswith(f"l{l}_")]
+
+    def fn(*args):
+        layer_params = _pack(lnames, args[:len(lnames)])
+        layer_stats = _pack(snames,
+                            args[len(lnames):len(lnames) + len(snames)])
+        logs_prev, ss = args[len(lnames) + len(snames):]
+        return (M.enum_layer(top, l, layer_params, layer_stats,
+                             logs_prev, ss),)
+
+    ex = [_sds(s) for s in lshapes] + [_sds(s) for s in sshapes] \
+        + [_sds((), F32), _sds((), F32)]
+    args = [f"p:{n}" for n in lnames] + [f"s:{n}" for n in snames] \
+        + ["logs_prev", "skip_scale"]
+    return fn, ex, args, ["tables"]
+
+
+def build_lut_infer(top: Topology):
+    tnames = [f"l{l}_tables" for l in range(top.n_layers)]
+    tshapes = [(top.w[l], top.table_entries(l)) for l in range(top.n_layers)]
+    cnames = [n for n, _ in M.conn_spec(top)]
+    nt, nc = len(tnames), len(cnames)
+
+    def fn(*args):
+        tables = _pack(tnames, args[:nt])
+        conn = _pack(cnames, args[nt:nt + nc])
+        x = args[nt + nc]
+        return (M.lut_infer(top, tables, conn, x, use_pallas=True),)
+
+    ex = [_sds(s, I32) for s in tshapes] \
+        + [_sds(s, I32) for _, s in M.conn_spec(top)] \
+        + [_sds((top.batch, top.n_in), I32)]
+    args = [f"t:{n}" for n in tnames] + [f"c:{n}" for n in cnames] + ["x"]
+    return fn, ex, args, ["codes"]
+
+
+# ---------------------------------------------------------------------------
+
+def emit_config(top: Topology, out_dir: str) -> dict:
+    cfg_dir = os.path.join(out_dir, top.name)
+    os.makedirs(cfg_dir, exist_ok=True)
+    entries = {}
+
+    def emit(name, built):
+        fn, ex, args, outs = built
+        t0 = time.time()
+        text = lower_entry(fn, ex)
+        path = os.path.join(cfg_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {"file": f"{top.name}/{name}.hlo.txt",
+                         "args": args, "outputs": outs}
+        print(f"  {top.name}/{name}: {len(text)} chars "
+              f"({time.time() - t0:.1f}s)")
+
+    emit("train_step", build_train_step(top, dense=False))
+    emit("train_step_dense", build_train_step(top, dense=True))
+    emit("infer", build_infer(top, use_pallas=False))
+    emit("infer_pallas", build_infer(top, use_pallas=True))
+    emit("lut_infer", build_lut_infer(top))
+    for l in range(top.n_layers):
+        emit(f"enum_l{l}", build_enum(top, l))
+
+    return {
+        "topology": top.to_json_dict(),
+        "relu_flags": [bool(b) for b in M.relu_flags(top)],
+        "param_spec": [[n, list(s)] for n, s in M.param_spec(top, False)],
+        "param_spec_dense": [[n, list(s)] for n, s in M.param_spec(top, True)],
+        "stats_spec": [[n, list(s)] for n, s in M.stats_spec(top)],
+        "conn_spec": [[n, list(s)] for n, s in M.conn_spec(top)],
+        "table_spec": [[f"l{l}_tables", [top.w[l], top.table_entries(l)]]
+                       for l in range(top.n_layers)],
+        "entries": entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="all",
+                    help="comma-separated preset names or 'all'")
+    ns = ap.parse_args()
+
+    all_tops = presets()
+    if ns.configs != "all":
+        want = set(ns.configs.split(","))
+        all_tops = [t for t in all_tops if t.name in want]
+        missing = want - {t.name for t in all_tops}
+        if missing:
+            raise SystemExit(f"unknown configs: {missing}")
+
+    os.makedirs(ns.out, exist_ok=True)
+    meta_path = os.path.join(ns.out, "meta.json")
+    meta = {"configs": {}, "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2,
+                                    "eps": M.ADAM_EPS}}
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            try:
+                meta = json.load(f)
+            except Exception:
+                pass
+        meta.setdefault("configs", {})
+
+    for top in all_tops:
+        print(f"config {top.name}")
+        meta["configs"][top.name] = emit_config(top, ns.out)
+
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

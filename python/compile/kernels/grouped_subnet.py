@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: grouped tiny-MLP forward over all L-LUT units.
+
+The NeuraLUT-Assemble training/enumeration hot spot is ``U`` independent
+sub-networks (one per L-LUT unit) of shape ``F -> N -> ... -> N -> 1``
+evaluated over a shared batch.  On a GPU the paper's PyTorch code would run
+this as a blocked batched-GEMM across threadblocks; the TPU-shaped mapping
+(DESIGN.md §4) tiles over *unit blocks*: each grid step keeps one block of
+``GU`` units' weights resident in VMEM and runs the whole subnet for the
+full batch tile, feeding the MXU with the ``[F,N]``/``[N,N]`` matmul chain.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO while keeping the same
+block structure.  Gradients are provided by a ``custom_vjp`` whose backward
+pass differentiates the pure-jnp reference (rematerializing the forward).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import grouped_subnet_ref
+
+
+def _unit_block(U: int, cap: int = 16) -> int:
+    """Largest divisor of ``U`` not exceeding ``cap`` (grid must tile U)."""
+    best = 1
+    for g in range(1, min(U, cap) + 1):
+        if U % g == 0:
+            best = g
+    return best
+
+
+def _kernel(x_ref, w0_ref, b0_ref, wh_ref, bh_ref, wout_ref, bout_ref,
+            wskip_ref, ss_ref, o_ref, *, S: int, final_relu: bool, Lh: int):
+    x = x_ref[...]          # [GU, B, F]
+    w0 = w0_ref[...]        # [GU, F, N]
+    h = jnp.einsum("ubf,ufn->ubn", x, w0) + b0_ref[...][:, None, :]
+    h = jnp.maximum(h, 0.0)
+    hs = {1: h}
+    for k in range(Lh):
+        pos = k + 2
+        h = jnp.einsum("ubn,unm->ubm", h, wh_ref[k]) + bh_ref[k][:, None, :]
+        if pos - S >= 1:
+            h = h + hs[pos - S]
+        h = jnp.maximum(h, 0.0)
+        hs[pos] = h
+    out = jnp.einsum("ubn,un->ub", h, wout_ref[...]) + bout_ref[...][:, None]
+    out = out + ss_ref[0] * jnp.einsum("ubf,uf->ub", x, wskip_ref[...])
+    if final_relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+def grouped_subnet_pallas(x, W0, b0, Wh, bh, wout, bout, wskip,
+                          S: int, final_relu: bool, skip_scale):
+    """Pallas forward with the same signature/semantics as the jnp oracle."""
+    U, B, F = x.shape
+    N = W0.shape[-1]
+    Lh = Wh.shape[0]
+    GU = _unit_block(U)
+    ss = jnp.asarray(skip_scale, jnp.float32).reshape(1)
+
+    grid = (U // GU,)
+    return pl.pallas_call(
+        functools.partial(_kernel, S=S, final_relu=final_relu, Lh=Lh),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((GU, B, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((GU, F, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((GU, N), lambda i: (i, 0)),
+            pl.BlockSpec((Lh, GU, N, N), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((Lh, GU, N), lambda i: (0, i, 0)),
+            pl.BlockSpec((GU, N), lambda i: (i, 0)),
+            pl.BlockSpec((GU,), lambda i: (i,)),
+            pl.BlockSpec((GU, F), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((GU, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((U, B), jnp.float32),
+        interpret=True,
+    )(x, W0, b0, Wh, bh, wout, bout, wskip, ss)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9))
+def grouped_subnet(x, W0, b0, Wh, bh, wout, bout, wskip, S, final_relu,
+                   skip_scale):
+    return grouped_subnet_pallas(x, W0, b0, Wh, bh, wout, bout, wskip,
+                                 S, final_relu, skip_scale)
+
+
+def _fwd(x, W0, b0, Wh, bh, wout, bout, wskip, S, final_relu, skip_scale):
+    y = grouped_subnet_pallas(x, W0, b0, Wh, bh, wout, bout, wskip,
+                              S, final_relu, skip_scale)
+    return y, (x, W0, b0, Wh, bh, wout, bout, wskip, skip_scale)
+
+
+def _bwd(S, final_relu, res, g):
+    x, W0, b0, Wh, bh, wout, bout, wskip, skip_scale = res
+    # Differentiate the pure-jnp oracle (rematerialized forward): correct by
+    # construction and keeps the backward pass out of the Pallas kernel.
+    _, vjp = jax.vjp(
+        lambda *a: grouped_subnet_ref(*a, S=S, final_relu=final_relu,
+                                      skip_scale=skip_scale),
+        x, W0, b0, Wh, bh, wout, bout, wskip)
+    grads = vjp(g)
+    return grads + (jnp.zeros_like(jnp.asarray(skip_scale)),)
+
+
+grouped_subnet.defvjp(_fwd, _bwd)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: LUT-network inference by table lookup.
+
+This is the TPU analogue of the FPGA's ROM read: pack each unit's ``F``
+input codes into a ``beta*F``-bit address, then gather the truth-table
+entry.  One grid step holds a block of units' tables in VMEM and serves the
+whole batch — the BlockSpec plays the role that BRAM/LUTRAM partitioning
+plays on the FPGA.
+
+Used by the ``lut_infer`` AOT artifact (the request-path executable of the
+serving demo) and validated against ``ref.lut_gather_ref`` plus the rust
+netlist simulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _unit_block(U: int, cap: int = 32) -> int:
+    best = 1
+    for g in range(1, min(U, cap) + 1):
+        if U % g == 0:
+            best = g
+    return best
+
+
+def _kernel(tables_ref, codes_ref, o_ref, *, bits: int):
+    codes = codes_ref[...]               # [B, GU, F]
+    tables = tables_ref[...]             # [GU, T]
+    # Pack the per-input codes into the table address with python-int shift
+    # amounts (a jnp constant array would be captured, which Pallas forbids).
+    F = codes.shape[-1]
+    idx = codes[..., 0]
+    for f in range(1, F):
+        idx = idx + (codes[..., f] << (bits * f))   # [B, GU]
+    o_ref[...] = jnp.take_along_axis(tables, idx.T, axis=1).T
+
+
+def lut_gather_pallas(tables, codes, bits: int):
+    """tables: [U, T] i32, codes: [B, U, F] i32 -> [B, U] i32 output codes."""
+    U, T = tables.shape
+    B, U2, F = codes.shape
+    assert U == U2
+    GU = _unit_block(U)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=(U // GU,),
+        in_specs=[
+            pl.BlockSpec((GU, T), lambda i: (i, 0)),
+            pl.BlockSpec((B, GU, F), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, GU), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, U), jnp.int32),
+        interpret=True,
+    )(tables, codes)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness reference for:
+
+* ``grouped_subnet``  — the batched per-L-LUT tiny-MLP forward (the training
+  and enumeration hot spot), and
+* ``lut_gather``      — table-lookup inference (the FPGA ROM analogue).
+
+They are also the numerics used inside the *training*, *inference* and
+*enumeration* entry points of ``model.py``, so that the enumerated truth
+tables compose bit-exactly with the quantized inference path (see
+DESIGN.md §3.3).  The Pallas kernels are validated against these in
+``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grouped_subnet_ref(x, W0, b0, Wh, bh, wout, bout, wskip,
+                       S: int, final_relu: bool, skip_scale=1.0):
+    """Forward pass of ``U`` independent sub-networks over a shared batch.
+
+    Args:
+      x:     [U, B, F]  unit inputs (already dequantized).
+      W0:    [U, F, N]  first dense layer.
+      b0:    [U, N]
+      Wh:    [Lh, U, N, N] hidden dense layers (``Lh = L_sub - 1``; may be
+             a zero-length leading axis).
+      bh:    [Lh, U, N]
+      wout:  [U, N]     output projection.
+      bout:  [U]
+      wskip: [U, F]     unit-level linear skip (the paper's tree-level skip
+             path folded inside the L-LUT; disabled when ``skip_scale=0``).
+      S:     residual step inside the subnet.
+      final_relu: apply ReLU to the pre-quantized output (only the final
+             tree layer keeps an activation in NeuraLUT-Assemble).
+      skip_scale: scalar multiplier on the skip path (ablation hook).
+
+    Returns:
+      [U, B] pre-quantization unit outputs.
+    """
+    h = jnp.maximum(jnp.einsum("ubf,ufn->ubn", x, W0) + b0[:, None, :], 0.0)
+    hs = {1: h}
+    for k in range(Wh.shape[0]):
+        pos = k + 2  # hidden state index, 1-based
+        h = jnp.einsum("ubn,unm->ubm", h, Wh[k]) + bh[k][:, None, :]
+        if pos - S >= 1:
+            h = h + hs[pos - S]
+        h = jnp.maximum(h, 0.0)
+        hs[pos] = h
+    out = jnp.einsum("ubn,un->ub", h, wout) + bout[:, None]
+    out = out + skip_scale * jnp.einsum("ubf,uf->ub", x, wskip)
+    if final_relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def pack_codes(codes, bits: int):
+    """[..., F] per-input codes -> [...] packed L-LUT address (LSB = input 0)."""
+    F = codes.shape[-1]
+    shifts = jnp.array([bits * f for f in range(F)], dtype=jnp.int32)
+    return jnp.sum(codes << shifts, axis=-1)
+
+
+def lut_gather_ref(tables, codes, bits: int):
+    """Table-lookup inference for one L-LUT layer.
+
+    Args:
+      tables: [U, T] int32 truth tables, ``T = 2^(bits * F)``.
+      codes:  [B, U, F] int32 input codes of each unit.
+      bits:   per-input code width.
+
+    Returns:
+      [B, U] int32 output codes.
+    """
+    idx = pack_codes(codes, bits)  # [B, U]
+    # out[b, u] = tables[u, idx[b, u]]
+    return jnp.take_along_axis(tables, idx.T, axis=1).T

@@ -1,0 +1,361 @@
+"""L2: the NeuraLUT-Assemble model in JAX.
+
+Entry points (all lowered to HLO text by ``aot.py`` and driven from rust):
+
+* ``train_step``        — one AdamW step of the sparse (tree) model.
+* ``train_step_dense``  — one AdamW step of the dense variant used by the
+                          hardware-aware pruning phase, with the group-lasso
+                          regularizer on learned layers.
+* ``infer``             — quantized forward; returns output codes + logits.
+* ``infer_pallas``      — same forward through the L1 Pallas kernel.
+* ``enum_layer``        — truth-table enumeration of one layer's units.
+* ``lut_infer``         — full LUT-network inference from truth tables via
+                          the L1 ``lut_gather`` Pallas kernel.
+
+Bit-exactness contract (DESIGN.md §3.3): ``infer``, ``enum_layer`` and the
+rust netlist simulator all compose; ``infer`` and ``enum_layer`` share the
+same jnp unit-forward and the same encode/decode, so composing the
+enumerated tables reproduces ``infer``'s output codes exactly.
+
+Parameters are handled as a *flat ordered dict* so the HLO argument order
+is deterministic and recorded in ``meta.json`` for the rust runtime.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .topology import Topology
+from .kernels.ref import grouped_subnet_ref, lut_gather_ref
+from .kernels.grouped_subnet import grouped_subnet as grouped_subnet_pallas_vjp
+from .kernels.lut_gather import lut_gather_pallas
+
+Params = Dict[str, jnp.ndarray]
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+def relu_flags(top: Topology) -> List[bool]:
+    """Output-activation flags per layer.
+
+    NeuraLUT-Assemble removes the neuron activation everywhere except the
+    final layer of each assembled tree (a maximal run ``[learned layer,
+    assemble*, ...]``); the network's output layer stays linear so the
+    logits are unconstrained.
+    """
+    n = top.n_layers
+    flags = []
+    for l in range(n):
+        run_end = (l == n - 1) or (top.a[l + 1] == 0)
+        flags.append(run_end and l != n - 1)
+    return flags
+
+
+def param_spec(top: Topology, dense: bool) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list of trainable parameters."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    Lh = top.L_sub - 1
+    assert Lh >= 1, "L_sub must be >= 2"
+    for l in range(top.n_layers):
+        w = top.w[l]
+        fan = top.in_width(l) if (dense and top.a[l] == 0) else top.F[l]
+        n = top.N
+        spec += [
+            (f"l{l}_W0", (w, fan, n)),
+            (f"l{l}_b0", (w, n)),
+            (f"l{l}_Wh", (Lh, w, n, n)),
+            (f"l{l}_bh", (Lh, w, n)),
+            (f"l{l}_wout", (w, n)),
+            (f"l{l}_bout", (w,)),
+            (f"l{l}_wskip", (w, fan)),
+            (f"l{l}_gamma", (w,)),   # per-unit batch-norm scale
+            (f"l{l}_bnb", (w,)),     # per-unit batch-norm shift
+            (f"l{l}_logs", ()),
+        ]
+    return spec
+
+
+def stats_spec(top: Topology) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Batch-norm running statistics (updated by EMA in train_step, used
+    verbatim by infer/enumerate — the Brevitas-style folded BN)."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    for l in range(top.n_layers):
+        spec += [(f"l{l}_rm", (top.w[l],)), (f"l{l}_rv", (top.w[l],))]
+    return spec
+
+
+def conn_spec(top: Topology) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list of connection-index inputs (int32)."""
+    return [(f"l{l}_conn", (top.w[l], top.F[l])) for l in range(top.n_layers)]
+
+
+def init_params(top: Topology, dense: bool, key) -> Params:
+    """He-style init (the rust side re-implements this; kept for pytest)."""
+    params: Params = {}
+    for name, shape in param_spec(top, dense):
+        key, sub = jax.random.split(key)
+        if name.endswith("_logs"):
+            params[name] = jnp.zeros(shape, jnp.float32)  # scale s = 1.0
+        elif name.endswith("_gamma"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b0", "_bh", "_bout", "_bnb")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith("_wskip"):
+            fan_in = shape[-1]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) \
+                * (0.5 / jnp.sqrt(fan_in))
+        else:
+            fan_in = shape[-2]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) \
+                * jnp.sqrt(2.0 / fan_in)
+    return params
+
+
+def init_stats(top: Topology) -> Params:
+    return {
+        name: (jnp.ones(shape, jnp.float32) if name.endswith("_rv")
+               else jnp.zeros(shape, jnp.float32))
+        for name, shape in stats_spec(top)
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _unit_forward(xin, p, l: int, S: int, final_relu: bool, skip_scale,
+                  use_pallas: bool):
+    """xin: [U, B, F] -> [U, B] pre-quantization outputs of layer ``l``."""
+    args = (xin, p[f"l{l}_W0"], p[f"l{l}_b0"], p[f"l{l}_Wh"], p[f"l{l}_bh"],
+            p[f"l{l}_wout"], p[f"l{l}_bout"], p[f"l{l}_wskip"])
+    if use_pallas:
+        return grouped_subnet_pallas_vjp(*args, S, final_relu, skip_scale)
+    return grouped_subnet_ref(*args, S=S, final_relu=final_relu,
+                              skip_scale=skip_scale)
+
+
+def _dense_layer_forward(prev, p, l: int, S: int, final_relu: bool,
+                         skip_scale):
+    """Dense learned layer: every unit sees the full previous width.
+
+    prev: [B, P] -> [U, B] with W0: [U, P, N], wskip: [U, P].
+    """
+    h = jnp.einsum("bp,upn->ubn", prev, p[f"l{l}_W0"]) \
+        + p[f"l{l}_b0"][:, None, :]
+    h = jnp.maximum(h, 0.0)
+    hs = {1: h}
+    Wh, bh = p[f"l{l}_Wh"], p[f"l{l}_bh"]
+    for k in range(Wh.shape[0]):
+        pos = k + 2
+        h = jnp.einsum("ubn,unm->ubm", h, Wh[k]) + bh[k][:, None, :]
+        if pos - S >= 1:
+            h = h + hs[pos - S]
+        h = jnp.maximum(h, 0.0)
+        hs[pos] = h
+    out = jnp.einsum("ubn,un->ub", h, p[f"l{l}_wout"]) \
+        + p[f"l{l}_bout"][:, None]
+    out = out + skip_scale * jnp.einsum("bp,up->ub", prev, p[f"l{l}_wskip"])
+    if final_relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def batch_norm(out, params: Params, stats: Params, l: int, train: bool):
+    """Per-unit batch norm on the pre-quantization output (paper §III-B1:
+    'each sub-network incorporates batch normalization').
+
+    out: [B, U].  Training mode normalizes with batch statistics and
+    returns EMA-updated running stats; eval mode (and enumeration) uses the
+    running statistics so the function is per-sample and enumerable.
+    """
+    gamma = params[f"l{l}_gamma"]
+    bnb = params[f"l{l}_bnb"]
+    if train:
+        mu = jnp.mean(out, axis=0)                      # [U]
+        var = jnp.var(out, axis=0)
+        new_rm = BN_MOMENTUM * stats[f"l{l}_rm"] + (1 - BN_MOMENTUM) * mu
+        new_rv = BN_MOMENTUM * stats[f"l{l}_rv"] + (1 - BN_MOMENTUM) * var
+        y = gamma * (out - mu) / jnp.sqrt(var + BN_EPS) + bnb
+        return y, {f"l{l}_rm": new_rm, f"l{l}_rv": new_rv}
+    y = gamma * (out - stats[f"l{l}_rm"]) \
+        / jnp.sqrt(stats[f"l{l}_rv"] + BN_EPS) + bnb
+    return y, {}
+
+
+def forward(top: Topology, params: Params, stats: Params, conn: Params,
+            x_codes, skip_scale, dense: bool = False,
+            use_pallas: bool = False, train: bool = False):
+    """Quantized forward pass.
+
+    Returns (logits [B, w_last], out_codes [B, w_last] int32, new_stats).
+    """
+    flags = relu_flags(top)
+    prev = quant.decode(x_codes, quant.input_scale(), top.beta_in)  # [B, P]
+    logits = None
+    codes = None
+    new_stats: Params = {}
+    for l in range(top.n_layers):
+        if dense and top.a[l] == 0:
+            out = _dense_layer_forward(prev, params, l, top.S, flags[l],
+                                       skip_scale)                   # [U, B]
+        else:
+            idx = conn[f"l{l}_conn"]                                 # [U, F]
+            xin = prev[:, idx]                                       # [B,U,F]
+            xin = jnp.transpose(xin, (1, 0, 2))                      # [U,B,F]
+            out = _unit_forward(xin, params, l, top.S, flags[l],
+                                skip_scale, use_pallas)              # [U, B]
+        out = out.T                                                  # [B, U]
+        out, upd = batch_norm(out, params, stats, l, train)
+        new_stats.update(upd)
+        s = jnp.exp(params[f"l{l}_logs"])
+        if l == top.n_layers - 1:
+            logits = out
+            codes = quant.encode(out, s, top.beta[l])
+        else:
+            prev = quant.fake_quant(out, s, top.beta[l])
+    return logits, codes, new_stats
+
+
+# ---------------------------------------------------------------------------
+# Loss / regularizer / optimizer
+# ---------------------------------------------------------------------------
+
+def loss_fn(top: Topology, logits, y):
+    """Cross-entropy (n_classes > 1) or BCE-with-logit (n_classes == 1)."""
+    if top.n_classes > 1:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    z = logits[:, 0]
+    yf = y.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0.0) - z * yf + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def group_reg(top: Topology, params: Params) -> jnp.ndarray:
+    """Hardware-aware group lasso on dense learned layers.
+
+    Group = all first-layer weights (W0 column + skip weight) of one
+    (unit, candidate input) pair; the l2-of-group, l1-across-groups norm
+    drives whole connections to zero so top-F selection is meaningful.
+    """
+    reg = jnp.float32(0.0)
+    for l in range(top.n_layers):
+        if top.a[l] == 0:
+            w0 = params[f"l{l}_W0"]        # [U, P, N]
+            sk = params[f"l{l}_wskip"]     # [U, P]
+            g = jnp.sqrt(jnp.sum(w0 * w0, axis=-1) + sk * sk + 1e-12)
+            reg = reg + jnp.sum(g)
+    return reg
+
+
+def train_step(top: Topology, dense: bool, params: Params, m: Params,
+               v: Params, stats: Params, conn: Params, x_codes, y, lr, wd,
+               lam, skip_scale, t):
+    """One AdamW (decoupled weight decay) step; lr follows the SGDR schedule
+    computed by the rust coordinator and passed in as a scalar.
+    Returns (params', m', v', stats', loss)."""
+
+    def objective(p):
+        logits, _, new_stats = forward(top, p, stats, conn, x_codes,
+                                       skip_scale, dense=dense, train=True)
+        loss = loss_fn(top, logits, y)
+        if dense:
+            loss = loss + lam * group_reg(top, p)
+        return loss, new_stats
+
+    (loss, new_stats), grads = jax.value_and_grad(objective, has_aux=True)(params)
+    b1t = jnp.power(ADAM_B1, t)
+    b2t = jnp.power(ADAM_B2, t)
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        mk = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g
+        vk = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * g * g
+        mhat = mk / (1.0 - b1t)
+        vhat = vk / (1.0 - b2t)
+        upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        new_p[k] = params[k] - lr * upd - lr * wd * params[k]
+        new_m[k] = mk
+        new_v[k] = vk
+    out_stats = {k: new_stats.get(k, stats[k]) for k in stats}
+    return new_p, new_m, new_v, out_stats, loss
+
+
+# ---------------------------------------------------------------------------
+# Enumeration + LUT inference
+# ---------------------------------------------------------------------------
+
+def enum_inputs(top: Topology, l: int):
+    """All 2^(bits*F) input-code combinations of a unit in layer ``l``.
+
+    Returns int32 [T, F]; input f occupies bits [bits*f, bits*(f+1)) of the
+    table address (must match ``ref.pack_codes`` and the rust netlist).
+    """
+    bits = top.in_bits(l)
+    F = top.F[l]
+    T = top.table_entries(l)
+    addr = jnp.arange(T, dtype=jnp.int32)[:, None]
+    shifts = jnp.array([bits * f for f in range(F)], dtype=jnp.int32)
+    return (addr >> shifts) & ((1 << bits) - 1)
+
+
+def enum_layer(top: Topology, l: int, layer_params: Params,
+               layer_stats: Params, logs_prev, skip_scale):
+    """Truth tables of layer ``l``: int32 [w_l, T].
+
+    ``logs_prev`` is the (trained) log-scale of the producer signals
+    (layer l-1's output quantizer, or 0.0 == log 1.0 for the input layer).
+    ``layer_stats`` carries the BN running statistics, which at inference
+    make each unit a pure per-sample function — hence enumerable.
+    """
+    flags = relu_flags(top)
+    bits = top.in_bits(l)
+    s_prev = jnp.exp(logs_prev)
+    codes = enum_inputs(top, l)                                  # [T, F]
+    x = quant.decode(codes, s_prev, bits)                        # [T, F]
+    xin = jnp.broadcast_to(x[None], (top.w[l],) + x.shape)       # [U, T, F]
+    out = _unit_forward(xin, layer_params, l, top.S, flags[l],
+                        skip_scale, use_pallas=False)            # [U, T]
+    out, _ = batch_norm(out.T, layer_params, layer_stats, l, train=False)
+    out = out.T
+    s = jnp.exp(layer_params[f"l{l}_logs"])
+    return quant.encode(out, s, top.beta[l])
+
+
+def lut_infer(top: Topology, tables: Dict[str, jnp.ndarray], conn: Params,
+              x_codes, use_pallas: bool = True):
+    """Full LUT-network forward from truth tables (int32 codes end-to-end).
+
+    This is the quantized network *as the FPGA executes it*: pure table
+    lookups, no arithmetic.  Output: int32 [B, w_last] codes.
+    """
+    prev = x_codes                                                # [B, P]
+    for l in range(top.n_layers):
+        idx = conn[f"l{l}_conn"]                                  # [U, F]
+        codes = prev[:, idx]                                      # [B, U, F]
+        bits = top.in_bits(l)
+        tab = tables[f"l{l}_tables"]
+        if use_pallas:
+            prev = lut_gather_pallas(tab, codes, bits)
+        else:
+            prev = lut_gather_ref(tab, codes, bits)
+    return prev
+
+
+def predictions(top: Topology, out_codes):
+    """Class predictions from output codes (codes are monotone in value)."""
+    if top.n_classes > 1:
+        return jnp.argmax(out_codes, axis=-1)
+    return (out_codes[:, 0] >= (1 << (top.beta[-1] - 1))).astype(jnp.int32)

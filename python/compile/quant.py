@@ -1,0 +1,61 @@
+"""Uniform symmetric quantization shared by training, enumeration and the
+rust netlist simulator.
+
+Codes are unsigned integers ``c in [0, 2^beta)`` — these are the values that
+travel on wires and address L-LUTs.  A code decodes to the *midrise* value
+
+    v(c) = s * ((2c + 1) / 2^beta - 1)            in (-s, s)
+
+and a real ``x`` encodes (with clipping) as
+
+    c(x) = clamp(floor(x / s * 2^(beta-1)) + 2^(beta-1), 0, 2^beta - 1).
+
+``decode(encode(x))`` is the bin-center reconstruction of ``x`` on [-s, s).
+For ``beta = 1`` this is the antipodal binary quantizer {-s/2, +s/2}.
+
+The straight-through estimator (``fake_quant``) is the Brevitas-style QAT
+quantizer: forward emits the reconstruction, backward passes gradients
+through the clip, and the learned scale ``s`` receives gradient through the
+reconstruction formula.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def encode(x: jnp.ndarray, s, beta: int) -> jnp.ndarray:
+    """Real values -> int32 codes in [0, 2^beta)."""
+    half = float(1 << (beta - 1))
+    c = jnp.floor(x / s * half) + half
+    return jnp.clip(c, 0.0, float((1 << beta) - 1)).astype(jnp.int32)
+
+
+def decode(c: jnp.ndarray, s, beta: int) -> jnp.ndarray:
+    """int32 codes -> midrise reconstruction values."""
+    levels = float(1 << beta)
+    return s * ((2.0 * c.astype(jnp.float32) + 1.0) / levels - 1.0)
+
+
+def reconstruct(x: jnp.ndarray, s, beta: int) -> jnp.ndarray:
+    """decode(encode(x)) without the integer round-trip (same float result)."""
+    return decode(encode(x, s, beta), s, beta)
+
+
+def fake_quant(x: jnp.ndarray, s, beta: int) -> jnp.ndarray:
+    """Straight-through fake quantization with learned scale.
+
+    Forward: midrise reconstruction on [-s, s).  Backward: identity inside
+    the clip range w.r.t. ``x`` (zero outside), and the scale ``s`` learns
+    through the reconstruction value (PACT/Brevitas-style).
+    """
+    xc = jnp.clip(x, -s, s * (1.0 - 2.0 ** (-beta)))
+    v = reconstruct(x, s, beta)
+    # STE: value v in the forward pass, gradient of xc in the backward pass.
+    return xc + jax.lax.stop_gradient(v - xc)
+
+
+def input_scale() -> float:
+    """Fixed scale of the network-input quantizer: features live in [-1, 1)."""
+    return 1.0

@@ -1,0 +1,175 @@
+"""Topology definitions for NeuraLUT-Assemble (Table I of the paper).
+
+A model is a sequence of L-LUT layers. Layer ``l`` has:
+
+* ``w[l]``    — number of L-LUT units,
+* ``a[l]``    — 1 if this is an *assemble* (tree) layer with fixed strided
+                wiring (unit j reads outputs ``[F*j, F*j+F)`` of layer l-1,
+                requiring ``w[l-1] == F[l] * w[l]``), 0 if it is a *learned*
+                layer whose ``F[l]`` input connections are selected by
+                hardware-aware pruning,
+* ``F[l]``    — unit fan-in,
+* ``beta[l]`` — output bit-width of the layer's units.
+
+``beta_in`` is the bit-width of the (quantized) network inputs.  The unit
+inside every L-LUT is a dense sub-network ``F -> N -> ... -> N -> 1`` with
+``L_sub`` hidden layers, ReLU on hidden layers, intra-subnet residual
+connections every ``S`` layers, and a unit-level linear skip ``x @ w_skip``
+added to the output (the paper's tree-level skip path, folded inside the
+enumerated truth table).  Only the final layer applies an output activation
+at training time; every layer output is fake-quantized to ``beta[l]`` bits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List
+
+
+MAX_TABLE_ADDR_BITS = 16  # hard cap so 2^(beta*F) enumeration stays feasible
+
+
+@dataclasses.dataclass
+class Topology:
+    """Full architecture description (the paper's Table I parameters)."""
+
+    name: str
+    n_in: int                # raw input feature count
+    beta_in: int             # input quantization bits
+    w: List[int]             # units per layer
+    a: List[int]             # assemble flags per layer
+    F: List[int]             # fan-ins per layer
+    beta: List[int]          # output bits per layer
+    L_sub: int               # hidden layers inside each unit ("L" in Table I)
+    N: int                   # hidden width inside each unit
+    S: int                   # residual step inside each unit
+    n_classes: int           # classification arity (1 => binary/BCE head)
+    dataset: str             # dataset id understood by the rust side
+    batch: int = 128         # AOT-fixed training/inference batch size
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.w)
+
+    def in_width(self, l: int) -> int:
+        """Number of producer signals feeding layer ``l``."""
+        return self.n_in if l == 0 else self.w[l - 1]
+
+    def in_bits(self, l: int) -> int:
+        """Bit-width of each signal feeding layer ``l``."""
+        return self.beta_in if l == 0 else self.beta[l - 1]
+
+    def table_entries(self, l: int) -> int:
+        """Number of truth-table entries of each unit in layer ``l``."""
+        return 1 << (self.in_bits(l) * self.F[l])
+
+    def validate(self) -> None:
+        n = self.n_layers
+        if not (len(self.a) == len(self.F) == len(self.beta) == n):
+            raise ValueError(f"{self.name}: w/a/F/beta length mismatch")
+        if self.w[-1] != (self.n_classes if self.n_classes > 1 else 1):
+            raise ValueError(
+                f"{self.name}: final layer width {self.w[-1]} != head width")
+        for l in range(n):
+            if self.a[l]:
+                if l == 0:
+                    raise ValueError(f"{self.name}: layer 0 cannot assemble")
+                if self.w[l - 1] != self.F[l] * self.w[l]:
+                    raise ValueError(
+                        f"{self.name}: assemble layer {l} needs "
+                        f"w[l-1]=F*w[l] ({self.w[l-1]} != {self.F[l]}*{self.w[l]})")
+            addr = self.in_bits(l) * self.F[l]
+            if addr > MAX_TABLE_ADDR_BITS:
+                raise ValueError(
+                    f"{self.name}: layer {l} table address {addr} bits "
+                    f"exceeds cap {MAX_TABLE_ADDR_BITS}")
+            if self.F[l] > self.in_width(l):
+                raise ValueError(
+                    f"{self.name}: layer {l} fan-in {self.F[l]} exceeds "
+                    f"producer width {self.in_width(l)}")
+        if self.L_sub < 1 or self.N < 1 or self.S < 1:
+            raise ValueError(f"{self.name}: bad L/N/S")
+
+    def fixed_connections(self, l: int) -> List[List[int]]:
+        """Strided wiring of an assemble layer (the black edges of Fig. 2)."""
+        assert self.a[l] == 1
+        f = self.F[l]
+        return [[f * j + k for k in range(f)] for j in range(self.w[l])]
+
+    def to_json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Presets.
+#
+# "scaled" presets keep every structural property of the paper's Table II
+# configurations (assemble-constraint ratios, fan-ins, bit-widths, L/N/S)
+# but shrink layer widths so the whole toolflow runs in minutes on one CPU
+# core.  NID is small enough that we keep the paper's exact topology.
+# Figure 5's three options are built per the paper's description: 16-input
+# trees of 4-LUTs (opt1), 16-input trees of 2-LUTs (opt2), and 64-input
+# trees of 2-LUTs (opt3), one tree per jet class.
+# ---------------------------------------------------------------------------
+
+def presets() -> List[Topology]:
+    ps = [
+        Topology(
+            name="mnist", n_in=784, beta_in=1,
+            w=[360, 60, 10], a=[0, 1, 1], F=[6, 6, 6], beta=[1, 1, 6],
+            L_sub=2, N=16, S=2, n_classes=10, dataset="mnist", batch=96,
+        ),
+        Topology(
+            name="jsc_cb", n_in=16, beta_in=4,
+            w=[80, 40, 20, 10, 5], a=[0, 1, 1, 1, 1],
+            F=[2, 2, 2, 2, 2], beta=[4, 4, 4, 4, 8],
+            L_sub=2, N=16, S=2, n_classes=5, dataset="jsc_cernbox", batch=128,
+        ),
+        Topology(
+            name="jsc_oml", n_in=16, beta_in=3,
+            w=[80, 40, 20, 10, 5], a=[0, 1, 1, 1, 1],
+            F=[2, 2, 2, 2, 2], beta=[3, 3, 3, 3, 8],
+            L_sub=2, N=16, S=2, n_classes=5, dataset="jsc_openml", batch=128,
+        ),
+        Topology(  # paper-exact NID topology (Table II)
+            name="nid", n_in=593, beta_in=1,
+            w=[60, 20, 9, 3, 1], a=[0, 1, 0, 1, 1],
+            F=[6, 3, 3, 3, 3], beta=[2, 2, 2, 2, 2],
+            L_sub=2, N=16, S=2, n_classes=1, dataset="nid", batch=128,
+        ),
+        # Fig. 5 option (1): 16-input trees of 4-input LUTs (depth 2).
+        Topology(
+            name="fig5_opt1", n_in=16, beta_in=2,
+            w=[20, 5], a=[0, 1], F=[4, 4], beta=[2, 8],
+            L_sub=2, N=16, S=2, n_classes=5, dataset="jsc_cernbox", batch=128,
+        ),
+        # Fig. 5 option (2): 16-input trees of 2-input LUTs (depth 4).
+        Topology(
+            name="fig5_opt2", n_in=16, beta_in=2,
+            w=[40, 20, 10, 5], a=[0, 1, 1, 1], F=[2, 2, 2, 2],
+            beta=[2, 2, 2, 8],
+            L_sub=2, N=16, S=2, n_classes=5, dataset="jsc_cernbox", batch=128,
+        ),
+        # Fig. 5 option (3): 64-input trees of 2-input LUTs (depth 6).
+        Topology(
+            name="fig5_opt3", n_in=16, beta_in=2,
+            w=[160, 80, 40, 20, 10, 5], a=[0, 1, 1, 1, 1, 1],
+            F=[2, 2, 2, 2, 2, 2], beta=[2, 2, 2, 2, 2, 8],
+            L_sub=2, N=16, S=2, n_classes=5, dataset="jsc_cernbox", batch=128,
+        ),
+    ]
+    for p in ps:
+        p.validate()
+    return ps
+
+
+def preset(name: str) -> Topology:
+    for p in presets():
+        if p.name == name:
+            return p
+    raise KeyError(name)
+
+
+if __name__ == "__main__":
+    print(json.dumps([p.to_json_dict() for p in presets()], indent=1))

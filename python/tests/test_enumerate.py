@@ -1,0 +1,132 @@
+"""The reproduction's correctness keystone, checked in pure python first:
+
+composing the enumerated truth tables (``enum_layer``) through code-level
+lookups (``lut_infer``) must reproduce ``forward``'s output codes
+*bit-exactly* — this is what makes the generated FPGA netlist equivalent to
+the trained QAT model, and what the rust netlist simulator re-verifies at
+the system level.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.topology import Topology, preset
+
+CASES = [
+    Topology(name="tiny1", n_in=12, beta_in=2, w=[8, 4, 2], a=[0, 1, 1],
+             F=[3, 2, 2], beta=[2, 2, 4], L_sub=2, N=8, S=2, n_classes=2,
+             dataset="synthetic", batch=32),
+    Topology(name="tiny2", n_in=20, beta_in=1, w=[12, 4, 3], a=[0, 1, 0],
+             F=[4, 3, 2], beta=[1, 2, 5], L_sub=3, N=8, S=2, n_classes=3,
+             dataset="synthetic", batch=16),
+    Topology(name="tiny3", n_in=6, beta_in=3, w=[6, 3, 1], a=[0, 1, 1],
+             F=[2, 2, 3], beta=[3, 2, 2], L_sub=2, N=4, S=2, n_classes=1,
+             dataset="synthetic", batch=64),
+]
+for c in CASES:
+    c.validate()
+
+
+def _busy_stats(top, key):
+    # non-trivial running stats so the BN path is actually exercised
+    stats = {}
+    for (name, shape) in M.stats_spec(top):
+        key, k = jax.random.split(key)
+        if name.endswith("_rv"):
+            stats[name] = jax.random.uniform(k, shape, jnp.float32, 0.5, 2.0)
+        else:
+            stats[name] = jax.random.normal(k, shape, jnp.float32) * 0.3
+    return stats
+
+
+def _rand_conn(top, key):
+    conn = {}
+    for l in range(top.n_layers):
+        if top.a[l]:
+            conn[f"l{l}_conn"] = jnp.array(top.fixed_connections(l), jnp.int32)
+        else:
+            key, k = jax.random.split(key)
+            conn[f"l{l}_conn"] = jax.random.randint(
+                k, (top.w[l], top.F[l]), 0, top.in_width(l), dtype=jnp.int32)
+    return conn
+
+
+def _enumerate_all(top, params, stats, skip_scale=1.0):
+    tables = {}
+    for l in range(top.n_layers):
+        layer_params = {k: v for k, v in params.items()
+                        if k.startswith(f"l{l}_")}
+        layer_stats = {k: v for k, v in stats.items()
+                       if k.startswith(f"l{l}_")}
+        logs_prev = jnp.float32(0.0) if l == 0 else params[f"l{l-1}_logs"]
+        tables[f"l{l}_tables"] = M.enum_layer(top, l, layer_params,
+                                              layer_stats, logs_prev,
+                                              skip_scale)
+    return tables
+
+
+@pytest.mark.parametrize("top", CASES, ids=lambda t: t.name)
+@pytest.mark.parametrize("skip_scale", [1.0, 0.0])
+def test_lut_composition_bit_exact(top, skip_scale):
+    key = jax.random.PRNGKey(hash(top.name) % 2**31)
+    params = M.init_params(top, dense=False, key=key)
+    stats = _busy_stats(top, key)
+    conn = _rand_conn(top, jax.random.PRNGKey(1))
+    x = jax.random.randint(jax.random.PRNGKey(2), (top.batch, top.n_in), 0,
+                           1 << top.beta_in, dtype=jnp.int32)
+
+    _, want_codes, _ = M.forward(top, params, stats, conn, x, skip_scale)
+    tables = _enumerate_all(top, params, stats, skip_scale)
+    got = M.lut_infer(top, tables, conn, x, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_codes))
+    got_pallas = M.lut_infer(top, tables, conn, x, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got_pallas),
+                                  np.asarray(want_codes))
+
+
+def test_lut_composition_after_training():
+    """Bit-exactness must also hold for *trained* (non-random) weights."""
+    top = CASES[0]
+    params = M.init_params(top, dense=False, key=jax.random.PRNGKey(0))
+    stats = M.init_stats(top)
+    conn = _rand_conn(top, jax.random.PRNGKey(1))
+    x = jax.random.randint(jax.random.PRNGKey(2), (top.batch, top.n_in), 0,
+                           1 << top.beta_in, dtype=jnp.int32)
+    y = jax.random.randint(jax.random.PRNGKey(3), (top.batch,), 0, 2,
+                           dtype=jnp.int32)
+    m = {k: jnp.zeros_like(p) for k, p in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+    step = jax.jit(lambda p, m_, v_, st, t: M.train_step(
+        top, False, p, m_, v_, st, conn, x, y, jnp.float32(0.02),
+        jnp.float32(1e-4), jnp.float32(0.0), jnp.float32(1.0), t))
+    for t in range(1, 21):
+        params, m, v, stats, _ = step(params, m, v, stats, jnp.float32(t))
+
+    _, want_codes, _ = M.forward(top, params, stats, conn, x, 1.0)
+    tables = _enumerate_all(top, params, stats)
+    got = M.lut_infer(top, tables, conn, x, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_codes))
+
+
+def test_enum_inputs_bit_layout():
+    top = CASES[0]
+    codes = np.asarray(M.enum_inputs(top, 1))  # bits=2, F=2 -> T=16
+    assert codes.shape == (16, 2)
+    for addr in range(16):
+        assert codes[addr, 0] == (addr >> 0) & 3
+        assert codes[addr, 1] == (addr >> 2) & 3
+
+
+def test_tables_code_range():
+    top = CASES[1]
+    params = M.init_params(top, dense=False, key=jax.random.PRNGKey(4))
+    tables = _enumerate_all(top, params, M.init_stats(top))
+    for l in range(top.n_layers):
+        t = np.asarray(tables[f"l{l}_tables"])
+        assert t.shape == (top.w[l], top.table_entries(l))
+        assert t.min() >= 0 and t.max() < (1 << top.beta[l])

@@ -1,0 +1,79 @@
+"""Guard the python<->rust contract: the artifact metadata emitted by
+aot.py must stay consistent with the model's parameter/argument layout,
+because the rust runtime assembles HLO argument lists purely from it.
+
+Runs against the checked-in artifacts if present (after `make artifacts`),
+otherwise regenerates the spec in-memory for one config.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import model as M
+from compile.aot import (build_enum, build_infer, build_lut_infer,
+                         build_train_step)
+from compile.topology import preset, presets
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _flat_names(spec):
+    return [n for n, _ in spec]
+
+
+@pytest.mark.parametrize("top", presets(), ids=lambda t: t.name)
+def test_builder_arg_orders_are_derivable(top):
+    """Every builder's recorded arg list must follow the spec ordering the
+    rust side reconstructs: params, (m, v, stats for train), conn, step
+    inputs — with the documented prefixes."""
+    fn, ex, args, outs = build_train_step(top, dense=False)
+    pn = _flat_names(M.param_spec(top, False))
+    sn = _flat_names(M.stats_spec(top))
+    cn = _flat_names(M.conn_spec(top))
+    want = [f"p:{n}" for n in pn] + [f"m:{n}" for n in pn] \
+        + [f"v:{n}" for n in pn] + [f"s:{n}" for n in sn] \
+        + [f"c:{n}" for n in cn] \
+        + ["x", "y", "lr", "wd", "lam", "skip_scale", "t"]
+    assert args == want
+    assert len(ex) == len(args)
+    assert outs[-1] == "loss"
+
+    fn, ex, args, outs = build_infer(top, use_pallas=False)
+    assert len(ex) == len(args)
+    assert args[-2:] == ["x", "skip_scale"]
+    assert outs == ["codes", "logits"]
+
+    fn, ex, args, outs = build_lut_infer(top)
+    assert len(ex) == len(args)
+    assert args[-1] == "x"
+
+    for l in range(top.n_layers):
+        fn, ex, args, outs = build_enum(top, l)
+        assert len(ex) == len(args)
+        assert args[-2:] == ["logs_prev", "skip_scale"]
+        assert all(a.split(":", 1)[-1].startswith(f"l{l}_")
+                   for a in args[:-2]), f"layer {l} arg leak: {args}"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "meta.json")),
+    reason="artifacts not built",
+)
+def test_checked_in_meta_matches_current_model():
+    with open(os.path.join(ARTIFACTS, "meta.json")) as f:
+        meta = json.load(f)
+    for name, cfg in meta["configs"].items():
+        top = preset(name)
+        assert cfg["topology"]["w"] == top.w, name
+        assert cfg["param_spec"] == [
+            [n, list(s)] for n, s in M.param_spec(top, False)], name
+        assert cfg["stats_spec"] == [
+            [n, list(s)] for n, s in M.stats_spec(top)], name
+        # every artifact file referenced must exist
+        for ename, e in cfg["entries"].items():
+            path = os.path.join(ARTIFACTS, e["file"])
+            assert os.path.exists(path), f"{name}/{ename} missing {path}"
+        # relu flags recorded == recomputed
+        assert cfg["relu_flags"] == [bool(b) for b in M.relu_flags(top)], name

@@ -1,0 +1,154 @@
+"""Model-level tests: shapes, training-step sanity, pallas/ref agreement."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import quant
+from compile.topology import Topology, preset
+
+TINY = Topology(
+    name="tiny", n_in=12, beta_in=2,
+    w=[8, 4, 2], a=[0, 1, 1], F=[3, 2, 2], beta=[2, 2, 4],
+    L_sub=2, N=8, S=2, n_classes=2, dataset="synthetic", batch=16,
+)
+TINY.validate()
+
+
+def _rand_conn(top, key):
+    conn = {}
+    for l in range(top.n_layers):
+        if top.a[l]:
+            conn[f"l{l}_conn"] = jnp.array(top.fixed_connections(l), jnp.int32)
+        else:
+            key, k = jax.random.split(key)
+            conn[f"l{l}_conn"] = jax.random.randint(
+                k, (top.w[l], top.F[l]), 0, top.in_width(l), dtype=jnp.int32)
+    return conn
+
+
+def _setup(top, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(top, dense=False, key=key)
+    stats = M.init_stats(top)
+    conn = _rand_conn(top, jax.random.PRNGKey(seed + 1))
+    x = jax.random.randint(jax.random.PRNGKey(seed + 2),
+                           (top.batch, top.n_in), 0, 1 << top.beta_in,
+                           dtype=jnp.int32)
+    y = jax.random.randint(jax.random.PRNGKey(seed + 3), (top.batch,), 0,
+                           max(top.n_classes, 2), dtype=jnp.int32)
+    return params, stats, conn, x, y
+
+
+def test_forward_shapes():
+    params, stats, conn, x, _ = _setup(TINY)
+    logits, codes = M.forward(TINY, params, stats, conn, x, 1.0)[:2]
+    assert logits.shape == (TINY.batch, TINY.w[-1])
+    assert codes.shape == (TINY.batch, TINY.w[-1])
+    assert codes.dtype == jnp.int32
+    assert int(codes.min()) >= 0 and int(codes.max()) < (1 << TINY.beta[-1])
+
+
+def test_forward_codes_match_logit_quantization():
+    params, stats, conn, x, _ = _setup(TINY)
+    logits, codes = M.forward(TINY, params, stats, conn, x, 1.0)[:2]
+    s = jnp.exp(params[f"l{TINY.n_layers-1}_logs"])
+    want = quant.encode(logits, s, TINY.beta[-1])
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(want))
+
+
+def test_forward_pallas_matches_ref():
+    params, stats, conn, x, _ = _setup(TINY)
+    (l1, c1) = M.forward(TINY, params, stats, conn, x, 1.0, use_pallas=False)[:2]
+    (l2, c2) = M.forward(TINY, params, stats, conn, x, 1.0, use_pallas=True)[:2]
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5,
+                               atol=1e-6)
+    # codes may only differ if a value sits exactly on a bin edge; with
+    # random float inputs that has probability ~0
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_train_step_decreases_loss():
+    params, stats, conn, x, y = _setup(TINY)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+    losses = []
+    step = jax.jit(lambda p, m_, v_, st, t: M.train_step(
+        TINY, False, p, m_, v_, st, conn, x, y,
+        jnp.float32(0.01), jnp.float32(0.0), jnp.float32(0.0),
+        jnp.float32(1.0), t))
+    for t in range(1, 41):
+        params, m, v, stats, loss = step(params, m, v, stats, jnp.float32(t))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[::10]
+
+
+def test_train_step_dense_group_reg_shrinks_groups():
+    top = dataclasses.replace(TINY, name="tinyd")
+    params = M.init_params(top, dense=True, key=jax.random.PRNGKey(0))
+    stats = M.init_stats(top)
+    conn = _rand_conn(top, jax.random.PRNGKey(1))
+    x = jax.random.randint(jax.random.PRNGKey(2), (top.batch, top.n_in), 0,
+                           1 << top.beta_in, dtype=jnp.int32)
+    y = jax.random.randint(jax.random.PRNGKey(3), (top.batch,), 0, 2,
+                           dtype=jnp.int32)
+    m = {k: jnp.zeros_like(p) for k, p in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+    reg0 = float(M.group_reg(top, params))
+    step = jax.jit(lambda p, m_, v_, st, t: M.train_step(
+        top, True, p, m_, v_, st, conn, x, y,
+        jnp.float32(0.01), jnp.float32(0.0), jnp.float32(3e-3),
+        jnp.float32(1.0), t))
+    for t in range(1, 31):
+        params, m, v, stats, loss = step(params, m, v, stats, jnp.float32(t))
+    assert float(M.group_reg(top, params)) < reg0
+
+
+def test_dense_forward_uses_full_width():
+    """Dense variant must see inputs outside the sparse conn set."""
+    top = TINY
+    params = M.init_params(top, dense=True, key=jax.random.PRNGKey(5))
+    stats = M.init_stats(top)
+    conn = _rand_conn(top, jax.random.PRNGKey(6))
+    x = jnp.zeros((top.batch, top.n_in), jnp.int32)
+    x2 = x.at[:, -1].set((1 << top.beta_in) - 1)
+    l1, _, _ = M.forward(top, params, stats, conn, x, 1.0, dense=True)
+    l2, _, _ = M.forward(top, params, stats, conn, x2, 1.0, dense=True)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_skip_scale_zero_kills_skip_path():
+    params, stats, conn, x, _ = _setup(TINY)
+    p2 = dict(params)
+    for l in range(TINY.n_layers):
+        p2[f"l{l}_wskip"] = params[f"l{l}_wskip"] + 7.0
+    la, _, _ = M.forward(TINY, params, stats, conn, x, 0.0)
+    lb, _, _ = M.forward(TINY, p2, stats, conn, x, 0.0)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_predictions_binary_and_multiclass():
+    codes = jnp.array([[1, 5, 3], [7, 0, 2]], dtype=jnp.int32)
+    top3 = dataclasses.replace(TINY, n_classes=3, w=[8, 4, 3],
+                               a=[0, 1, 0], F=[3, 2, 2])
+    np.testing.assert_array_equal(
+        np.asarray(M.predictions(top3, codes)), [1, 0])
+    topb = preset("nid")
+    bc = jnp.array([[0], [1], [2], [3]], dtype=jnp.int32)  # beta=2 -> thr 2
+    np.testing.assert_array_equal(
+        np.asarray(M.predictions(topb, bc)), [0, 0, 1, 1])
+
+
+def test_loss_fn_bce_matches_manual():
+    topb = preset("nid")
+    logits = jnp.array([[0.5], [-1.0], [2.0]], jnp.float32)
+    y = jnp.array([1, 0, 1], jnp.int32)
+    want = -np.mean([np.log(1 / (1 + np.exp(-0.5))),
+                     np.log(1 - 1 / (1 + np.exp(1.0))),
+                     np.log(1 / (1 + np.exp(-2.0)))])
+    got = float(M.loss_fn(topb, logits, y))
+    assert abs(got - want) < 1e-5

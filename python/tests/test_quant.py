@@ -1,0 +1,68 @@
+"""Quantizer unit tests: code/value round-trips, STE, edge cases."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import quant
+
+
+@pytest.mark.parametrize("beta", [1, 2, 3, 4, 6, 8])
+def test_encode_range(beta):
+    x = jnp.linspace(-3.0, 3.0, 1001)
+    c = quant.encode(x, 1.0, beta)
+    assert int(c.min()) >= 0
+    assert int(c.max()) <= (1 << beta) - 1
+    # extremes saturate
+    assert int(quant.encode(jnp.array([-10.0]), 1.0, beta)[0]) == 0
+    assert int(quant.encode(jnp.array([10.0]), 1.0, beta)[0]) == (1 << beta) - 1
+
+
+@pytest.mark.parametrize("beta", [1, 2, 4, 6])
+def test_decode_midrise_symmetric(beta):
+    codes = jnp.arange(1 << beta, dtype=jnp.int32)
+    v = np.asarray(quant.decode(codes, 1.0, beta))
+    # midrise: values symmetric about 0, none exactly 0
+    np.testing.assert_allclose(v, -v[::-1], atol=1e-7)
+    assert np.all(np.abs(v) > 0)
+    assert np.all(np.diff(v) > 0)
+
+
+@pytest.mark.parametrize("beta", [1, 2, 4])
+@pytest.mark.parametrize("s", [0.5, 1.0, 2.0])
+def test_roundtrip_bin_centers(beta, s):
+    codes = jnp.arange(1 << beta, dtype=jnp.int32)
+    v = quant.decode(codes, s, beta)
+    c2 = quant.encode(v, s, beta)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(c2))
+
+
+def test_reconstruct_matches_encode_decode():
+    x = jnp.linspace(-2.0, 2.0, 257)
+    for beta in (1, 3, 6):
+        a = quant.reconstruct(x, 1.3, beta)
+        b = quant.decode(quant.encode(x, 1.3, beta), 1.3, beta)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fake_quant_forward_value():
+    x = jnp.linspace(-2.0, 2.0, 101)
+    for beta in (1, 2, 4):
+        fq = quant.fake_quant(x, 1.0, beta)
+        rec = quant.reconstruct(x, 1.0, beta)
+        np.testing.assert_allclose(np.asarray(fq), np.asarray(rec), atol=1e-7)
+
+
+def test_fake_quant_ste_gradient():
+    # gradient w.r.t. x is 1 inside the clip range, 0 outside
+    g = jax.grad(lambda x: jnp.sum(quant.fake_quant(x, 1.0, 4)))
+    x = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+    gx = np.asarray(g(x))
+    np.testing.assert_allclose(gx, [0.0, 1.0, 1.0, 1.0, 0.0], atol=1e-6)
+
+
+def test_fake_quant_scale_gradient_nonzero():
+    g = jax.grad(lambda s: jnp.sum(quant.fake_quant(
+        jnp.linspace(-2, 2, 64), s, 3)))
+    assert abs(float(g(1.0))) > 0.0

@@ -1,0 +1,81 @@
+"""Topology validation tests: presets, assemble constraints, helpers."""
+
+import dataclasses
+
+import pytest
+
+from compile import model as M
+from compile.topology import Topology, preset, presets
+
+
+def test_all_presets_validate():
+    ps = presets()
+    assert {p.name for p in ps} >= {
+        "mnist", "jsc_cb", "jsc_oml", "nid",
+        "fig5_opt1", "fig5_opt2", "fig5_opt3"}
+    for p in ps:
+        p.validate()
+
+
+def test_assemble_ratio_enforced():
+    t = preset("mnist")
+    bad = dataclasses.replace(t, w=[360, 61, 10])
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+def test_layer0_cannot_assemble():
+    t = preset("mnist")
+    bad = dataclasses.replace(t, a=[1, 1, 1])
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+def test_table_cap_enforced():
+    t = preset("jsc_cb")
+    bad = dataclasses.replace(t, beta=[4, 4, 4, 4, 8], F=[16, 2, 2, 2, 2])
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+def test_table_entries():
+    t = preset("nid")
+    # layer0: beta_in=1, F=6 -> 64 entries; layer1: beta=2, F=3 -> 64
+    assert t.table_entries(0) == 64
+    assert t.table_entries(1) == 64
+
+
+def test_fixed_connections_strided():
+    t = preset("mnist")
+    conns = t.fixed_connections(1)
+    assert len(conns) == 60
+    assert conns[0] == [0, 1, 2, 3, 4, 5]
+    assert conns[59] == [354, 355, 356, 357, 358, 359]
+
+
+def test_relu_flags_tree_runs():
+    # mnist a=[0,1,1]: single run ending at output -> no output relu anywhere
+    assert M.relu_flags(preset("mnist")) == [False, False, False]
+    # nid a=[0,1,0,1,1]: runs {0,1},{2,3,4}; relu at layer1 only
+    assert M.relu_flags(preset("nid")) == [False, True, False, False, False]
+
+
+def test_param_spec_shapes():
+    t = preset("nid")
+    spec = dict(M.param_spec(t, dense=False))
+    assert spec["l0_W0"] == (60, 6, 16)
+    assert spec["l0_Wh"] == (1, 60, 16, 16)
+    assert spec["l2_wskip"] == (9, 3)
+    assert spec["l4_bout"] == (1,)
+    dense = dict(M.param_spec(t, dense=True))
+    assert dense["l0_W0"] == (60, 593, 16)   # learned layer densified
+    assert dense["l1_W0"] == (20, 3, 16)     # assemble layer unchanged
+    assert dense["l2_wskip"] == (9, 20)
+
+
+def test_fig5_tree_shapes():
+    o1, o2, o3 = preset("fig5_opt1"), preset("fig5_opt2"), preset("fig5_opt3")
+    # 5 trees (one per class), 16 inputs each
+    assert o1.w == [20, 5] and o1.F[0] == 4
+    assert o2.w[0] * o2.F[0] // o2.w[-1] // 2 ** (len(o2.w) - 1)  # shape holds
+    assert o3.w[0] * o3.F[0] == 320  # 64 inputs x 5 trees

@@ -1,0 +1,107 @@
+//! Shared harness code for the table/figure benches.
+//!
+//! Every bench prints the paper exhibit it regenerates (same rows/series),
+//! using scaled-down training budgets by default; set `NLA_FULL=1` to
+//! multiply budgets 4x for closer-to-paper operating points.
+
+#![allow(dead_code)]
+
+use neuralut::config::Meta;
+use neuralut::coordinator::{run_flow, FlowOptions, FlowResult};
+use neuralut::dataset::GenOpts;
+use neuralut::runtime::Runtime;
+
+pub fn scale() -> usize {
+    if std::env::var("NLA_FULL").is_ok() {
+        4
+    } else {
+        1
+    }
+}
+
+/// Per-config quick training budgets (dense steps, sparse steps, n_train,
+/// n_test), chosen so the whole bench suite completes in minutes on one
+/// CPU core.
+pub fn budget(config: &str) -> (usize, usize, usize, usize) {
+    let s = scale();
+    let (d, t, tr, te) = match config {
+        "nid" => (300, 800, 8000, 1500),
+        "mnist" => (40, 600, 8000, 1500),
+        "jsc_cb" | "jsc_oml" => (150, 800, 10000, 1500),
+        c if c.starts_with("fig5") => (60, 400, 6000, 1200),
+        _ => (30, 150, 4000, 1000),
+    };
+    (d * s, t * s, tr * s, te * s)
+}
+
+pub fn options(config: &str, seed: u64) -> FlowOptions {
+    let (dense, sparse, n_train, n_test) = budget(config);
+    FlowOptions {
+        config: config.to_string(),
+        dense_steps: dense,
+        sparse_steps: sparse,
+        skip_scale: 1.0,
+        seed,
+        gen: GenOpts { n_train, n_test, seed: 0xDA7A, augment: false },
+        emit_rtl: false,
+        verify_bit_exact: false,
+    }
+}
+
+pub fn run(rt: &Runtime, meta: &Meta, opts: &FlowOptions) -> FlowResult {
+    let sw = std::time::Instant::now();
+    let r = run_flow(rt, meta, opts).expect("flow failed");
+    eprintln!(
+        "  [{}{}] qat {:.3} netlist {:.3} ({:.0}s)",
+        opts.config,
+        if opts.skip_scale == 0.0 { " w/o-skips" }
+        else if opts.dense_steps == 0 { " w/o-learned" } else { "" },
+        r.qat_acc,
+        r.netlist_acc,
+        sw.elapsed().as_secs_f64()
+    );
+    r
+}
+
+/// A Table IV row reported from the paper itself (prior work we do not
+/// re-implement; clearly labelled in the output).
+pub struct PaperRow {
+    pub dataset: &'static str,
+    pub model: &'static str,
+    pub acc: f64,
+    pub luts: u64,
+    pub ffs: u64,
+    pub fmax: u64,
+    pub latency_ns: f64,
+}
+
+pub const PAPER_ROWS: &[PaperRow] = &[
+    // MNIST
+    PaperRow { dataset: "mnist", model: "NeuraLUT-Assemble (paper)", acc: 0.979, luts: 5070, ffs: 725, fmax: 863, latency_ns: 2.1 },
+    PaperRow { dataset: "mnist", model: "TreeLUT (paper)", acc: 0.966, luts: 4478, ffs: 597, fmax: 791, latency_ns: 2.5 },
+    PaperRow { dataset: "mnist", model: "DWN (paper)", acc: 0.978, luts: 2092, ffs: 1757, fmax: 873, latency_ns: 9.2 },
+    PaperRow { dataset: "mnist", model: "PolyLUT-Add (paper)", acc: 0.96, luts: 14810, ffs: 2609, fmax: 625, latency_ns: 10.0 },
+    PaperRow { dataset: "mnist", model: "AmigoLUT-NeuraLUT (paper)", acc: 0.955, luts: 16081, ffs: 13292, fmax: 925, latency_ns: 7.6 },
+    PaperRow { dataset: "mnist", model: "NeuraLUT (paper)", acc: 0.96, luts: 54798, ffs: 3757, fmax: 431, latency_ns: 12.0 },
+    PaperRow { dataset: "mnist", model: "PolyLUT (paper)", acc: 0.975, luts: 75131, ffs: 4668, fmax: 353, latency_ns: 17.0 },
+    PaperRow { dataset: "mnist", model: "FINN (paper)", acc: 0.96, luts: 91131, ffs: 0, fmax: 200, latency_ns: 310.0 },
+    PaperRow { dataset: "mnist", model: "hls4ml-binary (paper)", acc: 0.95, luts: 260092, ffs: 165513, fmax: 200, latency_ns: 190.0 },
+    // JSC CERNBox
+    PaperRow { dataset: "jsc_cb", model: "NeuraLUT-Assemble (paper)", acc: 0.75, luts: 8539, ffs: 1332, fmax: 352, latency_ns: 5.7 },
+    PaperRow { dataset: "jsc_cb", model: "AmigoLUT-NeuraLUT (paper)", acc: 0.744, luts: 42742, ffs: 4717, fmax: 520, latency_ns: 9.6 },
+    PaperRow { dataset: "jsc_cb", model: "PolyLUT-Add (paper)", acc: 0.75, luts: 36484, ffs: 1209, fmax: 315, latency_ns: 16.0 },
+    PaperRow { dataset: "jsc_cb", model: "NeuraLUT (paper)", acc: 0.75, luts: 92357, ffs: 4885, fmax: 368, latency_ns: 14.0 },
+    PaperRow { dataset: "jsc_cb", model: "PolyLUT (paper)", acc: 0.751, luts: 246071, ffs: 12384, fmax: 203, latency_ns: 25.0 },
+    PaperRow { dataset: "jsc_cb", model: "LogicNets (paper)", acc: 0.72, luts: 37931, ffs: 810, fmax: 427, latency_ns: 13.0 },
+    // JSC OpenML
+    PaperRow { dataset: "jsc_oml", model: "NeuraLUT-Assemble (paper)", acc: 0.76, luts: 1780, ffs: 540, fmax: 941, latency_ns: 2.1 },
+    PaperRow { dataset: "jsc_oml", model: "TreeLUT (paper)", acc: 0.756, luts: 2234, ffs: 347, fmax: 735, latency_ns: 2.7 },
+    PaperRow { dataset: "jsc_oml", model: "DWN (paper)", acc: 0.763, luts: 6302, ffs: 4128, fmax: 695, latency_ns: 14.4 },
+    PaperRow { dataset: "jsc_oml", model: "hls4ml (paper)", acc: 0.762, luts: 63251, ffs: 4394, fmax: 200, latency_ns: 45.0 },
+    // NID
+    PaperRow { dataset: "nid", model: "NeuraLUT-Assemble (paper)", acc: 0.93, luts: 91, ffs: 24, fmax: 1471, latency_ns: 1.4 },
+    PaperRow { dataset: "nid", model: "TreeLUT (paper)", acc: 0.927, luts: 345, ffs: 33, fmax: 681, latency_ns: 1.5 },
+    PaperRow { dataset: "nid", model: "PolyLUT-Add (paper)", acc: 0.92, luts: 1649, ffs: 830, fmax: 620, latency_ns: 8.0 },
+    PaperRow { dataset: "nid", model: "PolyLUT (paper)", acc: 0.922, luts: 3165, ffs: 774, fmax: 580, latency_ns: 9.0 },
+    PaperRow { dataset: "nid", model: "LogicNets (paper)", acc: 0.91, luts: 15949, ffs: 1274, fmax: 471, latency_ns: 13.0 },
+];

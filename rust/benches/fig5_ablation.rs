@@ -1,0 +1,104 @@
+//! Figure 5: JSC ablation over three tree architectures x three
+//! configurations (complete / w/o learned mappings / w/o tree-level
+//! skips), reporting mapped area (bar) and accuracy spread over seeds
+//! (box).  (`cargo bench --bench fig5_ablation`)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use neuralut::config::Meta;
+use neuralut::report::{pct, Table};
+use neuralut::runtime::Runtime;
+
+fn main() {
+    let meta = Meta::load(Meta::default_dir()).expect("run `make artifacts`");
+    let rt = Runtime::new().expect("pjrt");
+    let seeds: Vec<u64> = if common::scale() > 1 {
+        vec![7, 17, 27, 37]
+    } else {
+        vec![7, 17]
+    };
+
+    let mut table = Table::new(
+        "Fig. 5 — JSC ablation: area (P-LUTs) and accuracy over seeds",
+        &["architecture", "variant", "P-LUTs", "acc mean", "acc min..max"],
+    );
+
+    let archs = [
+        ("fig5_opt1", "(1) 16-in tree of 4-LUTs, depth 2"),
+        ("fig5_opt2", "(2) 16-in tree of 2-LUTs, depth 4"),
+        ("fig5_opt3", "(3) 64-in tree of 2-LUTs, depth 6"),
+    ];
+    let mut area_by_arch = Vec::new();
+    let mut complete_mean = Vec::new();
+    let mut wo_map_mean = Vec::new();
+    let mut wo_skip_mean = Vec::new();
+    for (config, label) in archs {
+        for (variant, dense0, skip) in [
+            ("complete", false, 1.0f32),
+            ("w/o learned mappings", true, 1.0),
+            ("w/o tree-level skips", false, 0.0),
+        ] {
+            let mut accs = Vec::new();
+            let mut area = 0usize;
+            for &seed in &seeds {
+                let mut opts = common::options(config, seed);
+                if dense0 {
+                    opts.dense_steps = 0; // random connectivity
+                }
+                opts.skip_scale = skip;
+                let r = common::run(&rt, &meta, &opts);
+                accs.push(r.netlist_acc);
+                area = r.mapped.total_luts();
+            }
+            let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+            let min = accs.iter().cloned().fold(1.0f64, f64::min);
+            let max = accs.iter().cloned().fold(0.0f64, f64::max);
+            table.row(&[
+                label.into(),
+                variant.into(),
+                area.to_string(),
+                pct(mean),
+                format!("{}..{}", pct(min), pct(max)),
+            ]);
+            match variant {
+                "complete" => {
+                    complete_mean.push(mean);
+                    area_by_arch.push(area);
+                }
+                "w/o learned mappings" => wo_map_mean.push(mean),
+                _ => wo_skip_mean.push(mean),
+            }
+        }
+    }
+    table.print();
+
+    // the paper's Fig. 5 takeaways, as shape checks
+    println!("\nshape checks:");
+    let a1 = area_by_arch[0] as f64;
+    let a2 = area_by_arch[1] as f64;
+    let a3 = area_by_arch[2] as f64;
+    println!(
+        "  area(1)/area(2) = {:.1}x (paper: 26x worst-case bound; support-\n   reduced tables land lower), area(1)/area(3) = {:.1}x (paper: 3.4x)",
+        a1 / a2, a1 / a3
+    );
+    let d_map: f64 = complete_mean
+        .iter()
+        .zip(&wo_map_mean)
+        .map(|(c, w)| c - w)
+        .sum::<f64>() / 3.0;
+    let d_skip: f64 = complete_mean
+        .iter()
+        .zip(&wo_skip_mean)
+        .map(|(c, w)| c - w)
+        .sum::<f64>() / 3.0;
+    println!("  mean accuracy drop w/o learned mappings: {:.1}pp", d_map * 100.0);
+    println!("  mean accuracy drop w/o tree-level skips: {:.1}pp", d_skip * 100.0);
+    println!(
+        "  skip-ablation drop by depth (paper: grows with tree depth): \
+         d2 {:.1}pp, d4 {:.1}pp, d6 {:.1}pp",
+        (complete_mean[0] - wo_skip_mean[0]) * 100.0,
+        (complete_mean[1] - wo_skip_mean[1]) * 100.0,
+        (complete_mean[2] - wo_skip_mean[2]) * 100.0
+    );
+}

@@ -1,0 +1,105 @@
+//! L3 hot-path microbenchmarks: netlist simulator throughput (gather vs
+//! bitsliced kernels) and the batching server, used for the §Perf pass.
+//! Custom harness (no criterion offline); medians over repeated runs.
+//! (`cargo bench --bench netlist_hotpath`)
+
+use std::time::Instant;
+
+use neuralut::coordinator::{InferenceServer, ServerConfig};
+use neuralut::netlist::testutil::{random_inputs as random_inputs_pub,
+                                  random_netlist as random_netlist_pub};
+use neuralut::report::Table;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn bench<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    median(times)
+}
+
+fn main() {
+    let mut table = Table::new(
+        "netlist simulator + server hot path",
+        &["case", "batch", "median time", "throughput"],
+    );
+
+    // MNIST-shaped boolean netlist: 784 x 1b inputs, layers like the preset
+    let mnist_like = random_netlist_pub(
+        1, 784, 1, &[(360, 6, 1), (60, 6, 1), (10, 6, 6)]);
+    // JSC-shaped multi-bit netlist
+    let jsc_like = random_netlist_pub(
+        2, 16, 4, &[(80, 2, 4), (40, 2, 4), (20, 2, 4), (10, 2, 4), (5, 2, 8)]);
+
+    for (name, nl, n_in) in [("mnist-like (mostly 1-bit)", &mnist_like, 784),
+                             ("jsc-like (4-bit)", &jsc_like, 16)] {
+        for batch in [1usize, 64, 1024] {
+            let x = random_inputs_pub(9, nl, batch);
+            let mut sim = nl.simulator();
+            let t = bench(9, || {
+                let out = sim.eval_batch(&x, batch);
+                std::hint::black_box(&out);
+            });
+            table.row(&[
+                name.into(),
+                batch.to_string(),
+                format!("{:.1} us", t * 1e6),
+                format!("{:.2} Msamples/s", batch as f64 / t / 1e6),
+            ]);
+        }
+        let _ = n_in;
+    }
+
+    // per-sample eval_one (the naive baseline the batched path replaced)
+    {
+        let batch = 1024usize;
+        let x = random_inputs_pub(9, &mnist_like, batch);
+        let t = bench(5, || {
+            for b in 0..batch {
+                let out = mnist_like
+                    .eval_one(&x[b * 784..(b + 1) * 784])
+                    .unwrap();
+                std::hint::black_box(&out);
+            }
+        });
+        table.row(&[
+            "mnist-like eval_one loop (baseline)".into(),
+            batch.to_string(),
+            format!("{:.1} us", t * 1e6),
+            format!("{:.2} Msamples/s", batch as f64 / t / 1e6),
+        ]);
+    }
+
+    // batching server end-to-end (threads + channels + sim)
+    {
+        let server = InferenceServer::start(mnist_like.clone(),
+                                            ServerConfig::default());
+        let n = 4096usize;
+        let rows: Vec<Vec<i32>> = {
+            let x = random_inputs_pub(11, &mnist_like, n);
+            (0..n).map(|b| x[b * 784..(b + 1) * 784].to_vec()).collect()
+        };
+        let t = Instant::now();
+        server.infer_many(rows).unwrap();
+        let secs = t.elapsed().as_secs_f64();
+        let (_, batches, mean, p99) = server.stats();
+        table.row(&[
+            format!("server e2e ({batches} batches, mean {mean:.0}us p99 {p99:.0}us)"),
+            n.to_string(),
+            format!("{:.1} ms", secs * 1e3),
+            format!("{:.2} Msamples/s", n as f64 / secs / 1e6),
+        ]);
+        server.shutdown();
+    }
+
+    table.print();
+}

@@ -1,0 +1,65 @@
+//! Table III: latency / Fmax / LUT / FF under the two pipelining
+//! strategies (register every L-LUT layer vs every 3 layers).
+//! (`cargo bench --bench table3_pipelining`)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use neuralut::config::Meta;
+use neuralut::report::Table;
+use neuralut::runtime::Runtime;
+use neuralut::timing::{evaluate, DelayModel, Pipelining};
+
+fn main() {
+    let meta = Meta::load(Meta::default_dir()).expect("run `make artifacts`");
+    let rt = Runtime::new().expect("pjrt");
+    let dm = DelayModel::default();
+    let mut table = Table::new(
+        "Table III — pipelining strategies (model estimates; paper values in parens)",
+        &["dataset", "strategy", "latency (ns)", "Fmax (MHz)", "LUTs", "FFs"],
+    );
+
+    // paper's Table III numbers for side-by-side shape comparison
+    let paper: &[(&str, f64, f64, u64, u64, f64, f64, u64, u64)] = &[
+        // (cfg, p1 lat, p1 fmax, p1 luts, p1 ffs, p3 lat, p3 fmax, p3 luts, p3 ffs)
+        ("mnist", 6.6, 912.0, 5089, 5699, 2.1, 863.0, 5070, 725),
+        ("jsc_cb", 7.0, 994.0, 8535, 2717, 5.7, 352.0, 8539, 1332),
+        ("jsc_oml", 6.6, 1067.0, 1844, 1983, 2.1, 941.0, 1780, 540),
+        ("nid", 3.4, 1479.0, 95, 187, 1.4, 1471.0, 91, 24),
+    ];
+
+    for &(config, l1, f1, lu1, ff1, l3, f3, lu3, ff3) in paper {
+        let opts = common::options(config, 7);
+        let r = common::run(&rt, &meta, &opts);
+        let p1 = evaluate(&r.mapped, Pipelining::EveryLayer, &dm);
+        let p3 = evaluate(&r.mapped, Pipelining::EveryK(3), &dm);
+        table.row(&[
+            config.into(),
+            "every layer".into(),
+            format!("{:.1} ({l1})", p1.latency_ns),
+            format!("{:.0} ({f1})", p1.fmax_mhz),
+            format!("{} ({lu1})", p1.luts),
+            format!("{} ({ff1})", p1.ffs),
+        ]);
+        table.row(&[
+            config.into(),
+            "every 3 layers".into(),
+            format!("{:.1} ({l3})", p3.latency_ns),
+            format!("{:.0} ({f3})", p3.fmax_mhz),
+            format!("{} ({lu3})", p3.luts),
+            format!("{} ({ff3})", p3.ffs),
+        ]);
+        // shape assertions from the paper's discussion
+        assert!(p3.ffs < p1.ffs, "{config}: pipeline-3 must register fewer bits");
+        assert!(p3.latency_ns < p1.latency_ns,
+                "{config}: pipeline-3 must cut latency");
+        assert!(p3.fmax_mhz <= p1.fmax_mhz * 1.001,
+                "{config}: fewer cuts cannot raise fmax");
+    }
+    table.print();
+    println!(
+        "\nshape checks passed: 3-layer pipelining always cuts FFs and \
+         latency at some Fmax cost, largest where L-LUTs are deepest \
+         (JSC CERNBox), as in the paper."
+    );
+}

@@ -1,0 +1,366 @@
+//! LogicNets-style baseline: extremely sparse *linear* neurons absorbed
+//! into L-LUTs (Umuroglu et al., FPL'20).
+//!
+//! Each unit computes `quant(act(sum_i w_i * decode(c_i) + b))` over a
+//! fixed random subset of `F` producers — a continuous piecewise-linear
+//! function per L-LUT, versus NeuraLUT-Assemble's hidden MLPs.  Training
+//! (STE fake-quant, SGD with momentum) runs in pure rust: this baseline
+//! deliberately exercises none of the JAX path, demonstrating that the
+//! downstream netlist/mapping/timing substrates are model-agnostic.
+
+use anyhow::Result;
+
+use crate::dataset::Dataset;
+use crate::netlist::{LayerSpec, Netlist};
+use crate::pruning;
+use crate::util::Rng;
+
+/// LogicNets-like architecture: widths/fan-ins/bits per layer.
+#[derive(Clone, Debug)]
+pub struct LogicNetsConfig {
+    pub n_in: usize,
+    pub beta_in: usize,
+    pub w: Vec<usize>,
+    pub f: Vec<usize>,
+    pub beta: Vec<usize>,
+    pub n_classes: usize,
+    pub seed: u64,
+}
+
+impl LogicNetsConfig {
+    /// The paper's NID-scale LogicNets point (scaled like our presets).
+    pub fn nid() -> LogicNetsConfig {
+        LogicNetsConfig {
+            n_in: 593,
+            beta_in: 1,
+            w: vec![64, 32, 1],
+            f: vec![6, 4, 4],
+            beta: vec![2, 2, 2],
+            n_classes: 1,
+            seed: 11,
+        }
+    }
+
+    /// JSC-scale configuration.
+    pub fn jsc() -> LogicNetsConfig {
+        LogicNetsConfig {
+            n_in: 16,
+            beta_in: 4,
+            w: vec![64, 32, 5],
+            f: vec![2, 2, 2],
+            beta: vec![4, 4, 8],
+            n_classes: 5,
+            seed: 13,
+        }
+    }
+
+    fn in_width(&self, l: usize) -> usize {
+        if l == 0 { self.n_in } else { self.w[l - 1] }
+    }
+
+    fn in_bits(&self, l: usize) -> usize {
+        if l == 0 { self.beta_in } else { self.beta[l - 1] }
+    }
+}
+
+/// Midrise decode (mirrors `quant.decode`).
+fn decode(c: i32, s: f32, bits: usize) -> f32 {
+    let levels = (1usize << bits) as f32;
+    s * ((2.0 * c as f32 + 1.0) / levels - 1.0)
+}
+
+/// Midrise encode with clipping (mirrors `quant.encode`).
+fn encode(x: f32, s: f32, bits: usize) -> i32 {
+    let half = (1i64 << (bits - 1)) as f32;
+    let c = (x / s * half).floor() as i64 + half as i64;
+    c.clamp(0, (1i64 << bits) - 1) as i32
+}
+
+struct Layer {
+    conn: Vec<Vec<u32>>,
+    /// per-unit weights [w][F] and bias
+    w: Vec<Vec<f32>>,
+    b: Vec<f32>,
+    /// momentum buffers
+    mw: Vec<Vec<f32>>,
+    mb: Vec<f32>,
+    /// output scale (fixed; LogicNets uses fixed scale factors)
+    scale: f32,
+    bits: usize,
+    relu: bool,
+}
+
+/// A trained LogicNets-style model.
+pub struct LogicNetsModel {
+    cfg: LogicNetsConfig,
+    layers: Vec<Layer>,
+}
+
+impl LogicNetsModel {
+    /// Random-connectivity init (the defining LogicNets choice).
+    pub fn new(cfg: &LogicNetsConfig) -> LogicNetsModel {
+        let mut rng = Rng::new(cfg.seed);
+        let mut layers = Vec::new();
+        for l in 0..cfg.w.len() {
+            let p = cfg.in_width(l);
+            let conn = pruning::random_connections(cfg.w[l], p, cfg.f[l], &mut rng);
+            let std = (2.0 / cfg.f[l] as f32).sqrt();
+            let w: Vec<Vec<f32>> = (0..cfg.w[l])
+                .map(|_| (0..cfg.f[l]).map(|_| rng.normal() * std).collect())
+                .collect();
+            layers.push(Layer {
+                conn,
+                mw: vec![vec![0.0; cfg.f[l]]; cfg.w[l]],
+                mb: vec![0.0; cfg.w[l]],
+                w,
+                b: vec![0.0; cfg.w[l]],
+                scale: 2.0,
+                bits: cfg.beta[l],
+                relu: l + 1 < cfg.w.len(),
+            });
+        }
+        LogicNetsModel { cfg: cfg.clone(), layers }
+    }
+
+    /// Forward with straight-through quantization.  Returns per-layer
+    /// pre-activation values and the final logits.
+    fn forward(&self, x_codes: &[i32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len() + 1);
+        let first: Vec<f32> = x_codes
+            .iter()
+            .map(|&c| decode(c, 1.0, self.cfg.beta_in))
+            .collect();
+        acts.push(first);
+        for (l, layer) in self.layers.iter().enumerate() {
+            let prev = &acts[l];
+            let mut out = Vec::with_capacity(layer.w.len());
+            for u in 0..layer.w.len() {
+                let mut acc = layer.b[u];
+                for (k, &src) in layer.conn[u].iter().enumerate() {
+                    acc += layer.w[u][k] * prev[src as usize];
+                }
+                if layer.relu {
+                    acc = acc.max(0.0);
+                }
+                out.push(acc);
+            }
+            let is_last = l + 1 == self.layers.len();
+            let quantized: Vec<f32> = if is_last {
+                out.clone() // logits stay continuous for the loss
+            } else {
+                out.iter()
+                    .map(|&v| decode(encode(v, layer.scale, layer.bits),
+                                     layer.scale, layer.bits))
+                    .collect()
+            };
+            acts.push(quantized);
+            if is_last {
+                return (acts, out);
+            }
+        }
+        unreachable!()
+    }
+
+    /// One SGD-with-momentum step on a single sample (STE backward).
+    fn step(&mut self, x_codes: &[i32], y: i32, lr: f32) -> f32 {
+        let (acts, logits) = self.forward(x_codes);
+        // loss gradient on logits
+        let k = self.layers.last().unwrap().w.len();
+        let mut grad = vec![0.0f32; k];
+        let loss;
+        if self.cfg.n_classes > 1 {
+            let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = logits.iter().map(|&z| (z - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            loss = -(exps[y as usize] / sum).ln();
+            for i in 0..k {
+                grad[i] = exps[i] / sum - if i == y as usize { 1.0 } else { 0.0 };
+            }
+        } else {
+            let z = logits[0];
+            let p = 1.0 / (1.0 + (-z).exp());
+            loss = if y == 1 { -(p.max(1e-7)).ln() } else { -((1.0 - p).max(1e-7)).ln() };
+            grad[0] = p - y as f32;
+        }
+        // backprop with STE through quantizers (identity in clip range)
+        for l in (0..self.layers.len()).rev() {
+            let prev = acts[l].clone();
+            let mut prev_grad = vec![0.0f32; prev.len()];
+            let layer = &mut self.layers[l];
+            for u in 0..layer.w.len() {
+                let mut g = grad[u];
+                if layer.relu {
+                    // recompute pre-act sign cheaply from stored activation
+                    // (activation 0 means relu clipped)
+                    let mut acc = layer.b[u];
+                    for (k2, &src) in layer.conn[u].iter().enumerate() {
+                        acc += layer.w[u][k2] * prev[src as usize];
+                    }
+                    if acc <= 0.0 {
+                        g = 0.0;
+                    }
+                }
+                for (k2, &src) in layer.conn[u].iter().enumerate() {
+                    let gw = g * prev[src as usize];
+                    layer.mw[u][k2] = 0.9 * layer.mw[u][k2] + gw;
+                    prev_grad[src as usize] += g * layer.w[u][k2];
+                }
+                layer.mb[u] = 0.9 * layer.mb[u] + g;
+            }
+            for u in 0..layer.w.len() {
+                for k2 in 0..layer.w[u].len() {
+                    layer.w[u][k2] -= lr * layer.mw[u][k2];
+                }
+                layer.b[u] -= lr * layer.mb[u];
+            }
+            grad = prev_grad;
+        }
+        loss
+    }
+
+    /// Train with SGD over the dataset.
+    pub fn train(&mut self, data: &Dataset, epochs: usize, lr: f32) -> f32 {
+        let mut rng = Rng::new(self.cfg.seed ^ 0x7141);
+        let mut last = 0.0;
+        for e in 0..epochs {
+            let order = rng.permutation(data.n);
+            let decayed = lr * 0.5f32.powi(e as i32 / 4);
+            let mut sum = 0.0;
+            for &i in &order {
+                sum += self.step(data.row(i), data.y[i], decayed);
+            }
+            last = sum / data.n as f32;
+        }
+        last
+    }
+
+    /// Quantized-inference prediction for one sample.
+    pub fn predict(&self, x_codes: &[i32]) -> i32 {
+        let (_, logits) = self.forward(x_codes);
+        if self.cfg.n_classes > 1 {
+            let mut best = 0;
+            for i in 1..logits.len() {
+                if logits[i] > logits[best] {
+                    best = i;
+                }
+            }
+            best as i32
+        } else {
+            (logits[0] > 0.0) as i32
+        }
+    }
+
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let hits = (0..data.n)
+            .filter(|&i| self.predict(data.row(i)) == data.y[i])
+            .count();
+        hits as f64 / data.n as f64
+    }
+
+    /// Absorb every neuron into an L-LUT by enumeration (pure rust) and
+    /// emit the netlist — same downstream pipeline as the main model.
+    pub fn to_netlist(&self) -> Result<Netlist> {
+        let cfg = &self.cfg;
+        let mut specs = Vec::new();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let in_bits = cfg.in_bits(l);
+            let entries = 1usize << (in_bits * cfg.f[l]);
+            let in_scale = if l == 0 { 1.0 } else { self.layers[l - 1].scale };
+            let is_last = l + 1 == self.layers.len();
+            let mut tables = Vec::with_capacity(cfg.w[l] * entries);
+            for u in 0..cfg.w[l] {
+                for addr in 0..entries {
+                    let mut acc = layer.b[u];
+                    for k in 0..cfg.f[l] {
+                        let c = ((addr >> (in_bits * k)) & ((1 << in_bits) - 1)) as i32;
+                        acc += layer.w[u][k] * decode(c, in_scale, in_bits);
+                    }
+                    if layer.relu {
+                        acc = acc.max(0.0);
+                    }
+                    let _ = is_last;
+                    tables.push(encode(acc, layer.scale, layer.bits) as u16);
+                }
+            }
+            let conn: Vec<u32> = layer.conn.iter().flatten().copied().collect();
+            specs.push(LayerSpec {
+                w: cfg.w[l],
+                fan_in: cfg.f[l],
+                in_bits,
+                out_bits: layer.bits,
+                conn,
+                tables,
+            });
+        }
+        Netlist::from_parts("logicnets", cfg.n_in, cfg.beta_in, specs)
+    }
+
+    /// Netlist-level accuracy (prediction from quantized output codes).
+    pub fn netlist_accuracy(&self, nl: &Netlist, data: &Dataset) -> Result<f64> {
+        let out = nl.eval_batch(&data.x, data.n)?;
+        let w = nl.out_width();
+        let ob = nl.out_bits();
+        let preds: Vec<i32> = (0..data.n)
+            .map(|i| {
+                let row = &out[i * w..(i + 1) * w];
+                if self.cfg.n_classes > 1 {
+                    let mut best = 0usize;
+                    for j in 1..w {
+                        if row[j] > row[best] {
+                            best = j;
+                        }
+                    }
+                    best as i32
+                } else {
+                    (row[0] >= (1 << (ob - 1))) as i32
+                }
+            })
+            .collect();
+        Ok(crate::metrics::accuracy(&preds, &data.y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{synthetic_blobs, GenOpts};
+
+    #[test]
+    fn trains_above_chance_on_blobs() {
+        let opts = GenOpts { n_train: 600, n_test: 200, ..Default::default() };
+        let splits = synthetic_blobs(12, 2, 2, &opts);
+        let cfg = LogicNetsConfig {
+            n_in: 12, beta_in: 2, w: vec![16, 1], f: vec![4, 4],
+            beta: vec![2, 2], n_classes: 1, seed: 5,
+        };
+        let mut model = LogicNetsModel::new(&cfg);
+        model.train(&splits.train, 6, 0.02);
+        let acc = model.accuracy(&splits.test);
+        assert!(acc > 0.65, "accuracy {acc}");
+    }
+
+    #[test]
+    fn netlist_conversion_is_valid_and_close() {
+        let opts = GenOpts { n_train: 400, n_test: 150, ..Default::default() };
+        let splits = synthetic_blobs(12, 2, 2, &opts);
+        let cfg = LogicNetsConfig {
+            n_in: 12, beta_in: 2, w: vec![12, 1], f: vec![3, 4],
+            beta: vec![2, 3], n_classes: 1, seed: 6,
+        };
+        let mut model = LogicNetsModel::new(&cfg);
+        model.train(&splits.train, 5, 0.02);
+        let nl = model.to_netlist().unwrap();
+        nl.validate().unwrap();
+        let float_acc = model.accuracy(&splits.test);
+        let lut_acc = model.netlist_accuracy(&nl, &splits.test).unwrap();
+        // final-layer logits are quantized in the netlist: small gap allowed
+        assert!((float_acc - lut_acc).abs() < 0.15,
+                "float {float_acc} vs lut {lut_acc}");
+    }
+
+    #[test]
+    fn presets_construct() {
+        LogicNetsModel::new(&LogicNetsConfig::nid());
+        LogicNetsModel::new(&LogicNetsConfig::jsc());
+    }
+}

@@ -1,0 +1,176 @@
+//! Floating-point fully-connected MLP reference (the "FP FC" column of
+//! the paper's Table II): same-order capacity, no quantization, no
+//! sparsity — the accuracy ceiling the LUT models are compared against.
+//! Pure-rust SGD with momentum; small datasets train in seconds.
+
+use crate::dataset::Dataset;
+use crate::util::Rng;
+
+/// Fully-connected float MLP: n_in -> hidden... -> n_out.
+pub struct Mlp {
+    sizes: Vec<usize>,
+    /// weights[l]: [out, in] row-major; biases[l]: [out]
+    w: Vec<Vec<f32>>,
+    b: Vec<Vec<f32>>,
+    mw: Vec<Vec<f32>>,
+    mb: Vec<Vec<f32>>,
+    n_classes: usize,
+}
+
+impl Mlp {
+    pub fn new(n_in: usize, hidden: &[usize], n_classes: usize, seed: u64) -> Mlp {
+        let n_out = if n_classes > 1 { n_classes } else { 1 };
+        let mut sizes = vec![n_in];
+        sizes.extend_from_slice(hidden);
+        sizes.push(n_out);
+        let mut rng = Rng::new(seed);
+        let mut w: Vec<Vec<f32>> = Vec::new();
+        let mut b: Vec<Vec<f32>> = Vec::new();
+        for l in 0..sizes.len() - 1 {
+            let std = (2.0 / sizes[l] as f32).sqrt();
+            w.push((0..sizes[l] * sizes[l + 1]).map(|_| rng.normal() * std).collect());
+            b.push(vec![0.0; sizes[l + 1]]);
+        }
+        let mw: Vec<Vec<f32>> = w.iter().map(|x| vec![0.0; x.len()]).collect();
+        let mb: Vec<Vec<f32>> = b.iter().map(|x| vec![0.0; x.len()]).collect();
+        Mlp { sizes, w, b, mw, mb, n_classes }
+    }
+
+    fn decode_row(&self, row: &[i32], beta: usize) -> Vec<f32> {
+        let levels = (1usize << beta) as f32;
+        row.iter()
+            .map(|&c| (2.0 * c as f32 + 1.0) / levels - 1.0)
+            .collect()
+    }
+
+    fn forward(&self, x: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts = vec![x.to_vec()];
+        for l in 0..self.w.len() {
+            let (ni, no) = (self.sizes[l], self.sizes[l + 1]);
+            let prev = &acts[l];
+            let mut out = vec![0.0f32; no];
+            for o in 0..no {
+                let mut acc = self.b[l][o];
+                let row = &self.w[l][o * ni..(o + 1) * ni];
+                for i in 0..ni {
+                    acc += row[i] * prev[i];
+                }
+                out[o] = if l + 1 < self.w.len() { acc.max(0.0) } else { acc };
+            }
+            acts.push(out);
+        }
+        let logits = acts.last().unwrap().clone();
+        (acts, logits)
+    }
+
+    fn step(&mut self, x: &[f32], y: i32, lr: f32) -> f32 {
+        let (acts, logits) = self.forward(x);
+        let no = *self.sizes.last().unwrap();
+        let mut grad = vec![0.0f32; no];
+        let loss;
+        if self.n_classes > 1 {
+            let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = logits.iter().map(|&z| (z - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            loss = -(exps[y as usize] / sum).max(1e-9).ln();
+            for o in 0..no {
+                grad[o] = exps[o] / sum - if o == y as usize { 1.0 } else { 0.0 };
+            }
+        } else {
+            let z = logits[0];
+            let p = 1.0 / (1.0 + (-z).exp());
+            loss = if y == 1 { -p.max(1e-7).ln() } else { -(1.0 - p).max(1e-7).ln() };
+            grad[0] = p - y as f32;
+        }
+        for l in (0..self.w.len()).rev() {
+            let (ni, no) = (self.sizes[l], self.sizes[l + 1]);
+            let prev = &acts[l];
+            let mut prev_grad = vec![0.0f32; ni];
+            for o in 0..no {
+                let mut g = grad[o];
+                if l + 1 < self.w.len() && acts[l + 1][o] <= 0.0 {
+                    g = 0.0;
+                }
+                let row = o * ni;
+                for i in 0..ni {
+                    self.mw[l][row + i] = 0.9 * self.mw[l][row + i] + g * prev[i];
+                    prev_grad[i] += g * self.w[l][row + i];
+                }
+                self.mb[l][o] = 0.9 * self.mb[l][o] + g;
+            }
+            for o in 0..no {
+                let row = o * ni;
+                for i in 0..ni {
+                    self.w[l][row + i] -= lr * self.mw[l][row + i];
+                }
+                self.b[l][o] -= lr * self.mb[l][o];
+            }
+            grad = prev_grad;
+        }
+        loss
+    }
+
+    /// Train on (quantized-code) data, decoding to floats first.  The
+    /// step size is scaled by 1/sqrt(n_in) so wide inputs (e.g. 784-dim
+    /// MNIST) stay stable under momentum SGD.
+    pub fn train(&mut self, data: &Dataset, epochs: usize, lr: f32, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let scale = (16.0 / self.sizes[0] as f32).sqrt().min(1.0);
+        for e in 0..epochs {
+            let order = rng.permutation(data.n);
+            let decayed = lr * scale * 0.5f32.powi(e as i32 / 3);
+            for &i in &order {
+                let x = self.decode_row(data.row(i), data.beta_in);
+                self.step(&x, data.y[i], decayed);
+            }
+        }
+    }
+
+    pub fn predict(&self, row: &[i32], beta: usize) -> i32 {
+        let x = self.decode_row(row, beta);
+        let (_, logits) = self.forward(&x);
+        if self.n_classes > 1 {
+            let mut best = 0usize;
+            for i in 1..logits.len() {
+                if logits[i] > logits[best] {
+                    best = i;
+                }
+            }
+            best as i32
+        } else {
+            (logits[0] > 0.0) as i32
+        }
+    }
+
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let hits = (0..data.n)
+            .filter(|&i| self.predict(data.row(i), data.beta_in) == data.y[i])
+            .count();
+        hits as f64 / data.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{synthetic_blobs, GenOpts};
+
+    #[test]
+    fn mlp_learns_blobs() {
+        let opts = GenOpts { n_train: 800, n_test: 200, ..Default::default() };
+        let s = synthetic_blobs(10, 3, 3, &opts);
+        let mut mlp = Mlp::new(10, &[32, 32], 3, 1);
+        mlp.train(&s.train, 6, 0.01, 2);
+        let acc = mlp.accuracy(&s.test);
+        assert!(acc > 0.8, "accuracy {acc}");
+    }
+
+    #[test]
+    fn mlp_binary_head() {
+        let opts = GenOpts { n_train: 600, n_test: 200, ..Default::default() };
+        let s = synthetic_blobs(8, 2, 2, &opts);
+        let mut mlp = Mlp::new(8, &[16], 1, 3);
+        mlp.train(&s.train, 5, 0.01, 4);
+        assert!(mlp.accuracy(&s.test) > 0.75);
+    }
+}

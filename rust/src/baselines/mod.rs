@@ -1,0 +1,17 @@
+//! Baseline systems the paper compares against (Table IV).
+//!
+//! Fully implemented here:
+//! * [`logicnets`] — LogicNets-style quantized *linear* sparse neurons
+//!   with fixed random connectivity, trained in pure rust (no JAX) and
+//!   converted to an L-LUT netlist through the same enumeration → mapping
+//!   → timing pipeline as our model.
+//! * [`treelut`] — TreeLUT-style gradient-boosted decision trees with a
+//!   LUT cost model for the comparator + adder-tree hardware.
+//!
+//! The remaining Table IV rows (DWN, FINN, hls4ml, PolyLUT, PolyLUT-Add,
+//! AmigoLUT) are reported from the paper's cited numbers by the table4
+//! harness, clearly labelled `paper-reported`.
+
+pub mod logicnets;
+pub mod mlp;
+pub mod treelut;

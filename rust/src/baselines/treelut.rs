@@ -1,0 +1,289 @@
+//! TreeLUT-style baseline: gradient-boosted decision trees mapped onto
+//! LUTs (Khataei & Bazargan, FPGA'25).
+//!
+//! Implements classic gradient boosting with depth-bounded regression
+//! trees over the quantized input codes (one-vs-rest for multi-class,
+//! logistic for binary), plus the hardware cost model TreeLUT's evaluation
+//! relies on: every internal node is a `beta_in`-bit comparator against a
+//! constant (<= 1 P-LUT for beta <= 6), leaf values are quantized to a
+//! small fixed width and summed by a balanced adder tree whose cost is
+//! counted per output bit, and the whole design is 1-2 pipeline stages.
+
+use crate::dataset::Dataset;
+use crate::mapper::{MappedLayer, MappedNetlist};
+use crate::util::Rng;
+
+/// Boosting hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TreeLutConfig {
+    pub n_trees: usize,
+    pub depth: usize,
+    pub lr: f32,
+    /// leaf-value quantization bits (TreeLUT quantizes leaves)
+    pub leaf_bits: usize,
+    pub seed: u64,
+}
+
+impl Default for TreeLutConfig {
+    fn default() -> Self {
+        TreeLutConfig { n_trees: 24, depth: 3, lr: 0.35, leaf_bits: 5, seed: 3 }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf(f32),
+    Split { feat: usize, thr: i32, left: usize, right: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn eval(&self, row: &[i32]) -> f32 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf(v) => return *v,
+                Node::Split { feat, thr, left, right } => {
+                    i = if row[*feat] <= *thr { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    fn internal_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Split { .. })).count()
+    }
+}
+
+/// Fit one regression tree to residuals by greedy variance reduction.
+fn fit_tree(data: &Dataset, idx: &[usize], resid: &[f32], depth: usize,
+            rng: &mut Rng) -> Tree {
+    let mut nodes = Vec::new();
+    build(data, idx, resid, depth, &mut nodes, rng);
+    Tree { nodes }
+}
+
+fn build(data: &Dataset, idx: &[usize], resid: &[f32], depth: usize,
+         nodes: &mut Vec<Node>, rng: &mut Rng) -> usize {
+    let mean = if idx.is_empty() {
+        0.0
+    } else {
+        idx.iter().map(|&i| resid[i]).sum::<f32>() / idx.len() as f32
+    };
+    if depth == 0 || idx.len() < 8 {
+        nodes.push(Node::Leaf(mean));
+        return nodes.len() - 1;
+    }
+    // candidate features: random subset (stochastic GBM)
+    let n_try = (data.n_in as f64).sqrt().ceil() as usize + 1;
+    let feats = rng.sample_distinct(data.n_in, n_try.min(data.n_in));
+    let base_score: f32 = idx.iter().map(|&i| (resid[i] - mean).powi(2)).sum();
+    let mut best: Option<(usize, i32, f32)> = None;
+    let max_code = (1 << data.beta_in) - 1;
+    for &f in &feats {
+        for thr in 0..max_code {
+            let (mut sl, mut nl, mut sr, mut nr) = (0f32, 0usize, 0f32, 0usize);
+            for &i in idx {
+                if data.row(i)[f] <= thr {
+                    sl += resid[i];
+                    nl += 1;
+                } else {
+                    sr += resid[i];
+                    nr += 1;
+                }
+            }
+            if nl < 4 || nr < 4 {
+                continue;
+            }
+            let ml = sl / nl as f32;
+            let mr = sr / nr as f32;
+            // variance reduction = n_l*m_l^2 + n_r*m_r^2 - n*m^2 (up to const)
+            let gain = nl as f32 * ml * ml + nr as f32 * mr * mr
+                - idx.len() as f32 * mean * mean;
+            if gain > best.map(|b| b.2).unwrap_or(1e-6) {
+                best = Some((f, thr, gain));
+            }
+        }
+    }
+    let _ = base_score;
+    match best {
+        None => {
+            nodes.push(Node::Leaf(mean));
+            nodes.len() - 1
+        }
+        Some((feat, thr, _)) => {
+            let (li, ri): (Vec<usize>, Vec<usize>) =
+                idx.iter().partition(|&&i| data.row(i)[feat] <= thr);
+            let me = nodes.len();
+            nodes.push(Node::Leaf(0.0)); // placeholder
+            let left = build(data, &li, resid, depth - 1, nodes, rng);
+            let right = build(data, &ri, resid, depth - 1, nodes, rng);
+            nodes[me] = Node::Split { feat, thr, left, right };
+            me
+        }
+    }
+}
+
+/// A trained TreeLUT-style ensemble (K one-vs-rest boosters, or 1 for
+/// binary tasks).
+pub struct TreeLutModel {
+    cfg: TreeLutConfig,
+    n_classes: usize,
+    /// boosters[class][round]
+    boosters: Vec<Vec<Tree>>,
+    base: Vec<f32>,
+}
+
+impl TreeLutModel {
+    pub fn train(data: &Dataset, cfg: &TreeLutConfig) -> TreeLutModel {
+        let k = data.n_classes.max(2);
+        let heads = if k == 2 { 1 } else { k };
+        let mut rng = Rng::new(cfg.seed);
+        let idx: Vec<usize> = (0..data.n).collect();
+        let mut boosters = Vec::with_capacity(heads);
+        let mut base = Vec::with_capacity(heads);
+        for class in 0..heads {
+            let targets: Vec<f32> = (0..data.n)
+                .map(|i| {
+                    let pos = if heads == 1 { data.y[i] == 1 } else { data.y[i] as usize == class };
+                    if pos { 1.0 } else { 0.0 }
+                })
+                .collect();
+            let prior = targets.iter().sum::<f32>() / data.n as f32;
+            let b0 = (prior.max(1e-4) / (1.0 - prior).max(1e-4)).ln();
+            let mut scores = vec![b0; data.n];
+            let mut trees = Vec::with_capacity(cfg.n_trees);
+            for _ in 0..cfg.n_trees {
+                // logistic gradient
+                let resid: Vec<f32> = (0..data.n)
+                    .map(|i| targets[i] - 1.0 / (1.0 + (-scores[i]).exp()))
+                    .collect();
+                let tree = fit_tree(data, &idx, &resid, cfg.depth, &mut rng);
+                for i in 0..data.n {
+                    scores[i] += cfg.lr * tree.eval(data.row(i));
+                }
+                trees.push(tree);
+            }
+            boosters.push(trees);
+            base.push(b0);
+        }
+        TreeLutModel { cfg: cfg.clone(), n_classes: k, boosters, base }
+    }
+
+    fn score(&self, row: &[i32], head: usize) -> f32 {
+        self.base[head]
+            + self.cfg.lr
+                * self.boosters[head].iter().map(|t| t.eval(row)).sum::<f32>()
+    }
+
+    pub fn predict(&self, row: &[i32]) -> i32 {
+        if self.boosters.len() == 1 {
+            (self.score(row, 0) > 0.0) as i32
+        } else {
+            let mut best = 0usize;
+            let mut bs = f32::MIN;
+            for h in 0..self.boosters.len() {
+                let s = self.score(row, h);
+                if s > bs {
+                    bs = s;
+                    best = h;
+                }
+            }
+            best as i32
+        }
+    }
+
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let hits = (0..data.n)
+            .filter(|&i| self.predict(data.row(i)) == data.y[i])
+            .count();
+        hits as f64 / data.n as f64
+    }
+
+    /// TreeLUT hardware cost model, expressed as a `MappedNetlist` so the
+    /// shared timing model produces Fmax/latency/ADP for Table IV.
+    ///
+    /// * comparator layer: one P-LUT per internal node (beta_in <= 6 bit
+    ///   compare-to-constant), depth 1;
+    /// * per-tree leaf mux: path muxes fold into ~depth/2 LUT levels;
+    /// * adder tree over quantized leaf values: (n_trees - 1) adders per
+    ///   head, `leaf_bits + log2(n_trees)` LUTs each, log2(n_trees) levels.
+    pub fn hardware_model(&self) -> MappedNetlist {
+        let heads = self.boosters.len();
+        let internal: usize = self
+            .boosters
+            .iter()
+            .flat_map(|ts| ts.iter().map(|t| t.internal_nodes()))
+            .sum();
+        let trees_per_head = self.cfg.n_trees;
+        let sum_bits = self.cfg.leaf_bits
+            + (usize::BITS - (trees_per_head.max(1)).leading_zeros()) as usize;
+        let mux_luts: usize = heads * trees_per_head * (1 << (self.cfg.depth - 1));
+        let adders = heads * trees_per_head.saturating_sub(1) * sum_bits;
+        let levels = (usize::BITS - (trees_per_head.max(1)).leading_zeros()) as f64;
+        let layers = vec![
+            // comparators + leaf muxes (combinational front)
+            MappedLayer {
+                luts: internal + mux_luts,
+                depth: 1.0 + (self.cfg.depth as f64) / 2.0,
+                out_bits_total: heads * trees_per_head * self.cfg.leaf_bits,
+                luts_worst_case: internal + mux_luts,
+            },
+            // adder tree
+            MappedLayer {
+                luts: adders,
+                depth: levels,
+                out_bits_total: heads * sum_bits,
+                luts_worst_case: adders,
+            },
+        ];
+        MappedNetlist { layers, input_bits: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{synthetic_blobs, GenOpts};
+
+    #[test]
+    fn boosting_learns_blobs() {
+        let opts = GenOpts { n_train: 600, n_test: 200, ..Default::default() };
+        let s = synthetic_blobs(10, 2, 3, &opts);
+        let model = TreeLutModel::train(
+            &s.train,
+            &TreeLutConfig { n_trees: 12, depth: 3, ..Default::default() },
+        );
+        let acc = model.accuracy(&s.test);
+        assert!(acc > 0.8, "accuracy {acc}");
+    }
+
+    #[test]
+    fn multiclass_one_vs_rest() {
+        let opts = GenOpts { n_train: 900, n_test: 300, ..Default::default() };
+        let s = synthetic_blobs(10, 3, 3, &opts);
+        let model = TreeLutModel::train(
+            &s.train,
+            &TreeLutConfig { n_trees: 10, depth: 3, ..Default::default() },
+        );
+        assert_eq!(model.boosters.len(), 3);
+        let acc = model.accuracy(&s.test);
+        assert!(acc > 0.6, "accuracy {acc}");
+    }
+
+    #[test]
+    fn hardware_model_scales_with_trees() {
+        let opts = GenOpts { n_train: 300, n_test: 100, ..Default::default() };
+        let s = synthetic_blobs(8, 2, 2, &opts);
+        let small = TreeLutModel::train(
+            &s.train, &TreeLutConfig { n_trees: 4, ..Default::default() });
+        let big = TreeLutModel::train(
+            &s.train, &TreeLutConfig { n_trees: 16, ..Default::default() });
+        assert!(big.hardware_model().total_luts()
+                > small.hardware_model().total_luts());
+    }
+}

@@ -1,0 +1,204 @@
+//! Configuration system: network topologies (the paper's Table I
+//! parameters), training hyper-parameters, and the AOT artifact metadata
+//! emitted by `python/compile/aot.py`.
+//!
+//! The rust side never re-derives shapes on its own: everything about the
+//! compiled HLO interfaces (parameter names/shapes, argument order per
+//! entry point, truth-table shapes) comes from `artifacts/meta.json`, so
+//! the two languages cannot drift apart silently.
+
+mod topology;
+mod train;
+
+pub use topology::Topology;
+pub use train::TrainConfig;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One lowered entry point (e.g. `train_step`): its HLO file and flat
+/// argument/output name lists.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// Everything `aot.py` recorded about one compiled configuration.
+#[derive(Clone, Debug)]
+pub struct ConfigMeta {
+    pub topology: Topology,
+    pub relu_flags: Vec<bool>,
+    /// (name, shape) of sparse-model trainable parameters, in HLO order.
+    pub param_spec: Vec<(String, Vec<usize>)>,
+    /// (name, shape) of dense-variant parameters, in HLO order.
+    pub param_spec_dense: Vec<(String, Vec<usize>)>,
+    /// (name, shape) of batch-norm running statistics.
+    pub stats_spec: Vec<(String, Vec<usize>)>,
+    /// (name, shape) of connection-index inputs.
+    pub conn_spec: Vec<(String, Vec<usize>)>,
+    /// (name, shape) of per-layer truth tables.
+    pub table_spec: Vec<(String, Vec<usize>)>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+/// The parsed `artifacts/meta.json`.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigMeta>,
+}
+
+fn parse_spec(j: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    j.as_arr()?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr()?;
+            if p.len() != 2 {
+                bail!("bad spec entry");
+            }
+            Ok((p[0].as_str()?.to_string(), p[1].usize_vec()?))
+        })
+        .collect()
+}
+
+impl Meta {
+    /// Load and validate `<dir>/meta.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Meta> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing meta.json")?;
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.at("configs")?.as_obj()? {
+            let topology = Topology::from_json(cj.at("topology")?)
+                .with_context(|| format!("config {name}"))?;
+            topology.validate()?;
+            let relu_flags = cj
+                .at("relu_flags")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_bool())
+                .collect::<Result<Vec<_>>>()?;
+            let mut entries = BTreeMap::new();
+            for (ename, ej) in cj.at("entries")?.as_obj()? {
+                let args = ej
+                    .at("args")?
+                    .as_arr()?
+                    .iter()
+                    .map(|a| Ok(a.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = ej
+                    .at("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|a| Ok(a.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?;
+                entries.insert(
+                    ename.clone(),
+                    EntrySpec {
+                        name: ename.clone(),
+                        file: dir.join(ej.at("file")?.as_str()?),
+                        args,
+                        outputs,
+                    },
+                );
+            }
+            configs.insert(
+                name.clone(),
+                ConfigMeta {
+                    topology,
+                    relu_flags,
+                    param_spec: parse_spec(cj.at("param_spec")?)?,
+                    param_spec_dense: parse_spec(cj.at("param_spec_dense")?)?,
+                    stats_spec: parse_spec(cj.at("stats_spec")?)?,
+                    conn_spec: parse_spec(cj.at("conn_spec")?)?,
+                    table_spec: parse_spec(cj.at("table_spec")?)?,
+                    entries,
+                },
+            );
+        }
+        Ok(Meta { dir, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigMeta> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("unknown config '{name}' in meta.json"))
+    }
+
+    /// Default artifacts directory: `$NLA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("NLA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+impl ConfigMeta {
+    /// Entry spec lookup with a good error.
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact entry '{name}' missing"))
+    }
+
+    /// Shape of parameter `name` (sparse spec).
+    pub fn param_shape(&self, name: &str) -> Result<&[usize]> {
+        self.param_spec
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.as_slice())
+            .with_context(|| format!("unknown param '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta_json() -> String {
+        r#"{
+ "adam": {"b1": 0.9, "b2": 0.999, "eps": 1e-08},
+ "configs": {
+  "tiny": {
+   "topology": {"name":"tiny","n_in":12,"beta_in":2,"w":[8,4,2],
+     "a":[0,1,1],"F":[3,2,2],"beta":[2,2,4],"L_sub":2,"N":8,"S":2,
+     "n_classes":2,"dataset":"synthetic","batch":16},
+   "relu_flags": [false,false,false],
+   "param_spec": [["l0_W0",[8,3,8]],["l0_logs",[]]],
+   "param_spec_dense": [["l0_W0",[8,12,8]],["l0_logs",[]]],
+   "stats_spec": [["l0_rm",[8]],["l0_rv",[8]]],
+   "conn_spec": [["l0_conn",[8,3]]],
+   "table_spec": [["l0_tables",[8,64]]],
+   "entries": {
+    "infer": {"file":"tiny/infer.hlo.txt","args":["p:l0_W0","x"],
+              "outputs":["codes","logits"]}
+   }
+  }
+ }
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_sample_meta() {
+        let dir = std::env::temp_dir().join("nla_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), sample_meta_json()).unwrap();
+        let meta = Meta::load(&dir).unwrap();
+        let cfg = meta.config("tiny").unwrap();
+        assert_eq!(cfg.topology.w, vec![8, 4, 2]);
+        assert_eq!(cfg.param_shape("l0_W0").unwrap(), &[8, 3, 8]);
+        assert_eq!(cfg.entry("infer").unwrap().args.len(), 2);
+        assert!(cfg.entry("nope").is_err());
+        assert!(meta.config("missing").is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! The paper's Table I architecture parameters, mirrored from
+//! `python/compile/topology.py` (the python copy is authoritative at
+//! build time; this struct is populated from `meta.json`).
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+/// Hard cap on table address bits so 2^(beta*F) enumeration stays feasible.
+pub const MAX_TABLE_ADDR_BITS: usize = 16;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    pub name: String,
+    pub n_in: usize,
+    pub beta_in: usize,
+    /// units per layer
+    pub w: Vec<usize>,
+    /// assemble flags per layer (fixed strided wiring)
+    pub a: Vec<u8>,
+    /// fan-in per layer
+    pub f: Vec<usize>,
+    /// output bits per layer
+    pub beta: Vec<usize>,
+    /// hidden layers inside each unit
+    pub l_sub: usize,
+    /// hidden width inside each unit
+    pub n_hidden: usize,
+    /// residual step inside each unit
+    pub s: usize,
+    pub n_classes: usize,
+    pub dataset: String,
+    /// AOT-fixed batch size of every compiled entry point
+    pub batch: usize,
+}
+
+impl Topology {
+    pub fn from_json(j: &Json) -> Result<Topology> {
+        Ok(Topology {
+            name: j.at("name")?.as_str()?.to_string(),
+            n_in: j.at("n_in")?.as_usize()?,
+            beta_in: j.at("beta_in")?.as_usize()?,
+            w: j.at("w")?.usize_vec()?,
+            a: j.at("a")?.usize_vec()?.iter().map(|&x| x as u8).collect(),
+            f: j.at("F")?.usize_vec()?,
+            beta: j.at("beta")?.usize_vec()?,
+            l_sub: j.at("L_sub")?.as_usize()?,
+            n_hidden: j.at("N")?.as_usize()?,
+            s: j.at("S")?.as_usize()?,
+            n_classes: j.at("n_classes")?.as_usize()?,
+            dataset: j.at("dataset")?.as_str()?.to_string(),
+            batch: j.at("batch")?.as_usize()?,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Number of producer signals feeding layer `l`.
+    pub fn in_width(&self, l: usize) -> usize {
+        if l == 0 {
+            self.n_in
+        } else {
+            self.w[l - 1]
+        }
+    }
+
+    /// Bit-width of each signal feeding layer `l`.
+    pub fn in_bits(&self, l: usize) -> usize {
+        if l == 0 {
+            self.beta_in
+        } else {
+            self.beta[l - 1]
+        }
+    }
+
+    /// Truth-table entries of each unit in layer `l`: `2^(in_bits * F)`.
+    pub fn table_entries(&self, l: usize) -> usize {
+        1usize << (self.in_bits(l) * self.f[l])
+    }
+
+    /// Table address width in bits for layer `l`.
+    pub fn addr_bits(&self, l: usize) -> usize {
+        self.in_bits(l) * self.f[l]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n_layers();
+        if self.a.len() != n || self.f.len() != n || self.beta.len() != n {
+            bail!("{}: w/a/F/beta length mismatch", self.name);
+        }
+        let head = if self.n_classes > 1 { self.n_classes } else { 1 };
+        if *self.w.last().unwrap() != head {
+            bail!("{}: final width != head width", self.name);
+        }
+        for l in 0..n {
+            if self.a[l] == 1 {
+                if l == 0 {
+                    bail!("{}: layer 0 cannot assemble", self.name);
+                }
+                if self.w[l - 1] != self.f[l] * self.w[l] {
+                    bail!(
+                        "{}: assemble layer {l} needs w[l-1]=F*w[l] ({} != {}*{})",
+                        self.name, self.w[l - 1], self.f[l], self.w[l]
+                    );
+                }
+            }
+            if self.addr_bits(l) > MAX_TABLE_ADDR_BITS {
+                bail!("{}: layer {l} table address too wide", self.name);
+            }
+            if self.f[l] > self.in_width(l) {
+                bail!("{}: layer {l} fan-in exceeds producer width", self.name);
+            }
+        }
+        if self.l_sub < 2 || self.n_hidden < 1 || self.s < 1 {
+            bail!("{}: bad L/N/S", self.name);
+        }
+        Ok(())
+    }
+
+    /// Strided wiring of an assemble layer (the black edges of Fig. 2).
+    pub fn fixed_connections(&self, l: usize) -> Vec<Vec<u32>> {
+        assert_eq!(self.a[l], 1);
+        let f = self.f[l];
+        (0..self.w[l])
+            .map(|j| (0..f).map(|k| (f * j + k) as u32).collect())
+            .collect()
+    }
+
+    /// Output-activation flags (ReLU at the end of every *internal* tree
+    /// run; the network output layer stays linear). Mirrors
+    /// `model.relu_flags`.
+    pub fn relu_flags(&self) -> Vec<bool> {
+        let n = self.n_layers();
+        (0..n)
+            .map(|l| {
+                let run_end = l == n - 1 || self.a[l + 1] == 0;
+                run_end && l != n - 1
+            })
+            .collect()
+    }
+
+    /// Maximal runs of layers forming assembled trees:
+    /// each run starts at a learned layer and extends through the
+    /// following assemble layers. Returned as (start, end_inclusive).
+    pub fn tree_runs(&self) -> Vec<(usize, usize)> {
+        let mut runs = Vec::new();
+        let mut start = 0usize;
+        for l in 1..self.n_layers() {
+            if self.a[l] == 0 {
+                runs.push((start, l - 1));
+                start = l;
+            }
+        }
+        runs.push((start, self.n_layers() - 1));
+        runs
+    }
+
+    /// Total L-LUT count (one per unit).
+    pub fn total_units(&self) -> usize {
+        self.w.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn tiny() -> Topology {
+        Topology {
+            name: "tiny".into(),
+            n_in: 12,
+            beta_in: 2,
+            w: vec![8, 4, 2],
+            a: vec![0, 1, 1],
+            f: vec![3, 2, 2],
+            beta: vec![2, 2, 4],
+            l_sub: 2,
+            n_hidden: 8,
+            s: 2,
+            n_classes: 2,
+            dataset: "synthetic".into(),
+            batch: 16,
+        }
+    }
+
+    pub fn nid_like() -> Topology {
+        Topology {
+            name: "nid".into(),
+            n_in: 593,
+            beta_in: 1,
+            w: vec![60, 20, 9, 3, 1],
+            a: vec![0, 1, 0, 1, 1],
+            f: vec![6, 3, 3, 3, 3],
+            beta: vec![2, 2, 2, 2, 2],
+            l_sub: 2,
+            n_hidden: 16,
+            s: 2,
+            n_classes: 1,
+            dataset: "nid".into(),
+            batch: 128,
+        }
+    }
+
+    #[test]
+    fn tiny_validates() {
+        tiny().validate().unwrap();
+        nid_like().validate().unwrap();
+    }
+
+    #[test]
+    fn widths_and_bits() {
+        let t = tiny();
+        assert_eq!(t.in_width(0), 12);
+        assert_eq!(t.in_width(1), 8);
+        assert_eq!(t.in_bits(0), 2);
+        assert_eq!(t.in_bits(2), 2);
+        assert_eq!(t.table_entries(0), 64);
+        assert_eq!(t.addr_bits(2), 4);
+    }
+
+    #[test]
+    fn assemble_constraint_checked() {
+        let mut t = tiny();
+        t.w = vec![8, 5, 2];
+        t.n_classes = 2;
+        t.w[2] = 2;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn fixed_connections_strided() {
+        let t = tiny();
+        let c = t.fixed_connections(1);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c[0], vec![0, 1]);
+        assert_eq!(c[3], vec![6, 7]);
+    }
+
+    #[test]
+    fn relu_flags_match_python_semantics() {
+        assert_eq!(tiny().relu_flags(), vec![false, false, false]);
+        assert_eq!(
+            nid_like().relu_flags(),
+            vec![false, true, false, false, false]
+        );
+    }
+
+    #[test]
+    fn tree_runs() {
+        assert_eq!(tiny().tree_runs(), vec![(0, 2)]);
+        assert_eq!(nid_like().tree_runs(), vec![(0, 1), (2, 4)]);
+    }
+}

@@ -1,0 +1,106 @@
+//! Training hyper-parameters and the SGDR (cosine warm restarts) learning
+//! rate schedule [Loshchilov & Hutter '17] used by the paper, computed on
+//! the rust side and fed to the AOT `train_step` executable as a scalar.
+
+/// Hyper-parameters of one training phase (dense pre-training or the
+/// sparse tree training / retraining).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr_max: f32,
+    pub lr_min: f32,
+    /// first SGDR restart period, in steps
+    pub t0: usize,
+    /// period multiplier at each restart
+    pub t_mult: usize,
+    /// decoupled weight decay
+    pub weight_decay: f32,
+    /// group-lasso coefficient (dense phase only)
+    pub lambda_group: f32,
+    /// evaluate every `eval_every` steps (0 = only at end)
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// Defaults for the sparse (tree) training phase.  The first restart
+    /// period is steps/7 so that with t_mult = 2 the three periods
+    /// (p, 2p, 4p) end exactly at the training horizon — the run finishes
+    /// at the *bottom* of the last cosine, not mid-restart.
+    pub fn sparse(steps: usize) -> TrainConfig {
+        TrainConfig {
+            steps,
+            lr_max: 0.02,
+            lr_min: 1e-4,
+            t0: (steps.max(7) / 7).max(1),
+            t_mult: 2,
+            weight_decay: 1e-4,
+            lambda_group: 0.0,
+            eval_every: 0,
+            seed: 0xA55E,
+        }
+    }
+
+    /// Defaults for the dense pre-training phase (learned mappings).
+    pub fn dense(steps: usize) -> TrainConfig {
+        TrainConfig {
+            lambda_group: 2e-4,
+            weight_decay: 0.0,
+            ..TrainConfig::sparse(steps)
+        }
+    }
+
+    /// SGDR learning rate at 0-based step `t`.  Past the planned horizon
+    /// (all three cosine periods) the rate stays at `lr_min` so trailing
+    /// steps cannot kick the model back up a restart.
+    pub fn lr_at(&self, t: usize) -> f32 {
+        if self.t_mult == 2 && t >= self.t0.max(1) * 7 {
+            return self.lr_min;
+        }
+        let (mut period, mut start) = (self.t0.max(1), 0usize);
+        while t >= start + period {
+            start += period;
+            period = period.saturating_mul(self.t_mult.max(1)).max(1);
+        }
+        let frac = (t - start) as f32 / period as f32;
+        self.lr_min
+            + 0.5 * (self.lr_max - self.lr_min)
+                * (1.0 + (std::f32::consts::PI * frac).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgdr_restarts() {
+        let c = TrainConfig { t0: 10, t_mult: 2, ..TrainConfig::sparse(70) };
+        // at t=0 lr = lr_max
+        assert!((c.lr_at(0) - c.lr_max).abs() < 1e-6);
+        // just before first restart, lr near lr_min
+        assert!(c.lr_at(9) < c.lr_max * 0.2);
+        // restart at t=10: back to lr_max
+        assert!((c.lr_at(10) - c.lr_max).abs() < 1e-6);
+        // second period is 20 long: next restart at t=30
+        assert!((c.lr_at(30) - c.lr_max).abs() < 1e-6);
+        assert!(c.lr_at(29) < c.lr_at(30));
+    }
+
+    #[test]
+    fn lr_monotone_within_period() {
+        let c = TrainConfig { t0: 16, t_mult: 2, ..TrainConfig::sparse(16) };
+        for t in 1..16 {
+            assert!(c.lr_at(t) <= c.lr_at(t - 1) + 1e-7);
+        }
+    }
+
+    #[test]
+    fn lr_bounded() {
+        let c = TrainConfig::sparse(100);
+        for t in 0..100 {
+            let lr = c.lr_at(t);
+            assert!(lr >= c.lr_min - 1e-7 && lr <= c.lr_max + 1e-7);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! The end-to-end NeuraLUT-Assemble toolflow (paper Fig. 3):
+//!
+//! 1. (optional) dense pre-training with the group-lasso regularizer and
+//!    top-F connection selection — the "learned mappings";
+//! 2. sparse QAT of the assembled tree model, from scratch, on the
+//!    selected connectivity (SGDR + AdamW via the PJRT `train_step`);
+//! 3. sub-network → L-LUT conversion by exhaustive enumeration;
+//! 4. netlist extraction and **bit-exactness verification** against the
+//!    quantized PJRT forward on the whole test set;
+//! 5. technology mapping and timing under both pipelining strategies;
+//! 6. Verilog RTL emission with a parse-back round-trip check.
+
+use anyhow::Result;
+
+use crate::config::{ConfigMeta, Meta, TrainConfig};
+use crate::coordinator::session::{predictions, Session};
+use crate::dataset::{self, GenOpts, Splits};
+use crate::mapper::{map_netlist, MappedNetlist};
+use crate::metrics;
+use crate::netlist::Netlist;
+use crate::pruning;
+use crate::rtl;
+use crate::runtime::Runtime;
+use crate::timing::{evaluate as time_evaluate, DelayModel, Pipelining, TimingReport};
+
+/// Options for one toolflow run.
+#[derive(Clone, Debug)]
+pub struct FlowOptions {
+    pub config: String,
+    /// steps of the dense learned-mappings phase (0 = skip; connections
+    /// are then random — the "w/o Learned Mappings" ablation)
+    pub dense_steps: usize,
+    pub sparse_steps: usize,
+    /// 1.0 normal; 0.0 ablates tree-level skips ("w/o Tree-Level Skips")
+    pub skip_scale: f32,
+    pub seed: u64,
+    pub gen: GenOpts,
+    /// emit RTL text (large for big configs)
+    pub emit_rtl: bool,
+    /// verify netlist == PJRT quantized forward on the test set
+    pub verify_bit_exact: bool,
+}
+
+impl FlowOptions {
+    pub fn quick(config: &str) -> FlowOptions {
+        FlowOptions {
+            config: config.to_string(),
+            dense_steps: 30,
+            sparse_steps: 150,
+            skip_scale: 1.0,
+            seed: 7,
+            gen: GenOpts::default(),
+            emit_rtl: false,
+            verify_bit_exact: true,
+        }
+    }
+}
+
+/// Everything a table/figure harness needs from one run.
+pub struct FlowResult {
+    pub config: String,
+    /// QAT accuracy of the trained quantized model (PJRT forward)
+    pub qat_acc: f64,
+    /// accuracy of the extracted LUT netlist (rust simulator)
+    pub netlist_acc: f64,
+    /// netlist output == PJRT output on every test row?
+    pub bit_exact: Option<bool>,
+    pub netlist: Netlist,
+    pub mapped: MappedNetlist,
+    /// (strategy name, report) for both pipelining strategies
+    pub reports: Vec<(String, TimingReport)>,
+    pub losses: Vec<f32>,
+    /// learned-mapping hit quality on NID (fraction of selected inputs
+    /// that are informative), when measurable
+    pub rtl_text: Option<String>,
+}
+
+/// Run the complete toolflow for one configuration.
+pub fn run_flow(rt: &Runtime, meta: &Meta, opts: &FlowOptions) -> Result<FlowResult> {
+    let cfg: &ConfigMeta = meta.config(&opts.config)?;
+    let top = cfg.topology.clone();
+    let splits: Splits = dataset::generate(&top.dataset, top.beta_in, &opts.gen)?;
+
+    // ---- phase 1: learned mappings (dense + group lasso + top-F) ----
+    let learned_conns = if opts.dense_steps > 0 {
+        log::info!("[{}] dense phase: {} steps", top.name, opts.dense_steps);
+        let mut dense = Session::new(rt, cfg, true, None, opts.seed ^ 0xDE45E,
+                                     opts.skip_scale)?;
+        let tc = TrainConfig::dense(opts.dense_steps);
+        dense.train(&splits.train, &tc)?;
+        let scores = dense.group_scores()?;
+        let mut conns = Vec::new();
+        for (k, l) in dense.learned_layers().into_iter().enumerate() {
+            conns.push(pruning::select_top_f(&scores[k], top.f[l]));
+        }
+        if top.dataset == "nid" && std::env::var("NLA_TRACE").is_ok() {
+            let informative =
+                crate::dataset::nid_informative_positions(opts.gen.seed);
+            eprintln!("[{}] learned-mapping hit rate on informative bits: {:.2}",
+                      top.name,
+                      pruning::selection_hit_rate(&conns[0], &informative));
+        }
+        Some(conns)
+    } else {
+        None
+    };
+
+    // ---- phase 2: sparse tree QAT, trained from scratch ----
+    // Train in chunks, validating on a held-out slice of the training set
+    // after each chunk and keeping the best checkpoint (the role the
+    // paper's long SGDR schedule plays; QAT of deep quantized trees is
+    // noisy enough that last-iterate selection throws accuracy away).
+    log::info!("[{}] sparse phase: {} steps", top.name, opts.sparse_steps);
+    let (fit, val) = split_train(&splits.train, 0.85);
+    let mut sess = Session::new(rt, cfg, false, learned_conns.as_deref(),
+                                opts.seed, opts.skip_scale)?;
+    let tc = TrainConfig::sparse(opts.sparse_steps);
+    let chunks = 8usize;
+    let chunk_len = (opts.sparse_steps / chunks).max(1);
+    let mut losses = Vec::new();
+    let mut best: Option<(f64, Vec<(String, Vec<usize>, Vec<f32>)>,
+                          Vec<(String, Vec<usize>, Vec<f32>)>)> = None;
+    for chunk in 0..chunks {
+        losses.extend(sess.train_range(&fit, &tc, chunk * chunk_len,
+                                        chunk_len)?);
+        let val_acc = sess.evaluate(&val)?;
+        if std::env::var("NLA_TRACE").is_ok() {
+            eprintln!("[{}] step {}: loss {:.4} val acc {:.3}",
+                      top.name, (chunk + 1) * chunk_len,
+                      losses.last().copied().unwrap_or(f32::NAN), val_acc);
+        }
+        if best.as_ref().map(|(a, _, _)| val_acc > *a).unwrap_or(true) {
+            best = Some((val_acc, sess.params.snapshot()?,
+                         sess.stats.snapshot()?));
+        }
+    }
+    if let Some((_, psnap, ssnap)) = &best {
+        sess.params.restore(psnap)?;
+        sess.stats.restore(ssnap)?;
+    }
+    let qat_acc = sess.evaluate(&splits.test)?;
+
+    // ---- phase 3/4: enumerate -> netlist -> verify ----
+    let netlist = sess.to_netlist()?;
+    let test = &splits.test;
+    let net_out = netlist.eval_batch(&test.x, test.n)?;
+    let net_preds = predictions(&top, &net_out);
+    let netlist_acc = metrics::accuracy(&net_preds, &test.y);
+
+    let bit_exact = if opts.verify_bit_exact {
+        Some(verify_bit_exact(&mut sess, &netlist, test)?)
+    } else {
+        None
+    };
+
+    // ---- phase 5: map + time ----
+    let mapped = map_netlist(&netlist, true);
+    let dm = DelayModel::default();
+    let reports = vec![
+        ("pipeline-1".to_string(),
+         time_evaluate(&mapped, Pipelining::EveryLayer, &dm)),
+        ("pipeline-3".to_string(),
+         time_evaluate(&mapped, Pipelining::EveryK(3), &dm)),
+    ];
+
+    // ---- phase 6: RTL ----
+    let rtl_text = if opts.emit_rtl {
+        let cuts = reports[1].1.cuts.clone();
+        let text = rtl::emit(&netlist, &rtl::RtlOptions {
+            cuts,
+            module_name: format!("neuralut_{}", top.name),
+        });
+        rtl::verify_roundtrip(&text, &netlist)?;
+        Some(text)
+    } else {
+        None
+    };
+
+    Ok(FlowResult {
+        config: opts.config.clone(),
+        qat_acc,
+        netlist_acc,
+        bit_exact,
+        netlist,
+        mapped,
+        reports,
+        losses,
+        rtl_text,
+    })
+}
+
+/// Deterministic train/validation split (by prefix; generators already
+/// interleave classes).
+fn split_train(d: &crate::dataset::Dataset, frac: f64)
+               -> (crate::dataset::Dataset, crate::dataset::Dataset) {
+    let n_fit = ((d.n as f64 * frac) as usize).clamp(1, d.n.saturating_sub(1));
+    let fit = crate::dataset::Dataset {
+        x: d.x[..n_fit * d.n_in].to_vec(),
+        y: d.y[..n_fit].to_vec(),
+        n: n_fit,
+        n_in: d.n_in,
+        beta_in: d.beta_in,
+        n_classes: d.n_classes,
+    };
+    let val = crate::dataset::Dataset {
+        x: d.x[n_fit * d.n_in..].to_vec(),
+        y: d.y[n_fit..].to_vec(),
+        n: d.n - n_fit,
+        n_in: d.n_in,
+        beta_in: d.beta_in,
+        n_classes: d.n_classes,
+    };
+    (fit, val)
+}
+
+/// Compare netlist simulation against the PJRT quantized forward on the
+/// whole test set — the reproduction's system-level keystone.
+fn verify_bit_exact(sess: &mut Session, nl: &Netlist,
+                    test: &crate::dataset::Dataset) -> Result<bool> {
+    let top = sess.cfg.topology.clone();
+    let mut i = 0usize;
+    while i < test.n {
+        let idx: Vec<usize> = (i..(i + top.batch).min(test.n)).collect();
+        let (x, _) = test.batch(&idx, top.batch);
+        let pjrt_codes = sess.infer_codes(&x, "infer")?;
+        let net_codes = nl.eval_batch(&x, top.batch)?;
+        if pjrt_codes != net_codes {
+            let w = nl.out_width();
+            for (row, (a, b)) in pjrt_codes.chunks(w).zip(net_codes.chunks(w)).enumerate() {
+                if a != b {
+                    log::error!("bit-exactness broke at test row {}: {:?} vs {:?}",
+                                i + row, a, b);
+                    break;
+                }
+            }
+            return Ok(false);
+        }
+        i += top.batch;
+    }
+    Ok(true)
+}

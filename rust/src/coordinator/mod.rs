@@ -1,0 +1,20 @@
+//! L3 coordinator: the toolflow that drives the whole reproduction.
+//!
+//! * [`Session`] — owns one model configuration's parameter state and its
+//!   compiled PJRT executables; exposes train / evaluate / enumerate.
+//! * [`flow`] — the end-to-end pipeline of the paper's Fig. 3: QAT
+//!   (optionally with the dense learned-mappings pre-phase and pruning),
+//!   sub-network → L-LUT conversion, netlist extraction + bit-exactness
+//!   verification, technology mapping, timing under both pipelining
+//!   strategies, and RTL emission.
+//! * [`server`] — a dynamic-batching inference server over the bit-exact
+//!   netlist simulator (the deployment-side story of an ultra-low-latency
+//!   NN: requests are answered by pure table lookups).
+
+pub mod flow;
+pub mod server;
+mod session;
+
+pub use flow::{run_flow, FlowOptions, FlowResult};
+pub use server::{InferenceServer, ServerConfig};
+pub use session::Session;

@@ -1,0 +1,260 @@
+//! Dynamic-batching inference server over the bit-exact netlist simulator.
+//!
+//! Deployment story of an ultra-low-latency LUT network: the "FPGA" (our
+//! simulator) answers classification requests.  A router thread collects
+//! requests into batches — dispatching either when `max_batch` is reached
+//! or when the oldest waiting request exceeds `max_wait`, the standard
+//! latency/throughput knob — and worker threads evaluate batches on their
+//! own simulator instances.  Python is nowhere on this path.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::LatencyStats;
+use crate::netlist::Netlist;
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            workers: 2,
+        }
+    }
+}
+
+struct Request {
+    x: Vec<i32>,
+    enqueued: Instant,
+    reply: Sender<Vec<i32>>,
+}
+
+/// Handle to a running server.
+pub struct InferenceServer {
+    tx: Sender<Request>,
+    n_in: usize,
+    out_width: usize,
+    stop: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<LatencyStats>>,
+    batches: Arc<AtomicU64>,
+    requests: Arc<AtomicU64>,
+}
+
+impl InferenceServer {
+    /// Spawn the router + workers for a netlist.
+    pub fn start(nl: Netlist, cfg: ServerConfig) -> InferenceServer {
+        let n_in = nl.n_in;
+        let out_width = nl.out_width();
+        let (tx, rx) = channel::<Request>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Mutex::new(LatencyStats::default()));
+        let batches = Arc::new(AtomicU64::new(0));
+        let requests = Arc::new(AtomicU64::new(0));
+
+        // router: batch assembly; workers: evaluation
+        let (btx, brx) = channel::<Vec<Request>>();
+        let brx = Arc::new(Mutex::new(brx));
+        let mut handles = Vec::new();
+
+        {
+            let stop = stop.clone();
+            let cfg = cfg.clone();
+            let batches = batches.clone();
+            handles.push(std::thread::spawn(move || {
+                router_loop(rx, btx, &cfg, &stop, &batches);
+            }));
+        }
+        let nl = Arc::new(nl);
+        for _ in 0..cfg.workers.max(1) {
+            let brx = brx.clone();
+            let nl = nl.clone();
+            let stats = stats.clone();
+            let requests = requests.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut sim = nl.simulator();
+                loop {
+                    let batch = {
+                        let guard = brx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    let bsz = batch.len();
+                    let mut x = Vec::with_capacity(bsz * nl.n_in);
+                    for r in &batch {
+                        x.extend_from_slice(&r.x);
+                    }
+                    let out = sim.eval_batch(&x, bsz);
+                    let now = Instant::now();
+                    for (i, r) in batch.into_iter().enumerate() {
+                        let row =
+                            out[i * nl.out_width()..(i + 1) * nl.out_width()].to_vec();
+                        let lat = now.duration_since(r.enqueued).as_secs_f64() * 1e6;
+                        stats.lock().unwrap().record(lat);
+                        let _ = r.reply.send(row);
+                    }
+                    requests.fetch_add(bsz as u64, Ordering::Relaxed);
+                }
+            }));
+        }
+
+        InferenceServer { tx, n_in, out_width, stop, handles, stats, batches, requests }
+    }
+
+    /// Synchronous request: submit one sample, wait for its output codes.
+    pub fn infer(&self, x: Vec<i32>) -> Result<Vec<i32>> {
+        anyhow::ensure!(x.len() == self.n_in, "bad input width");
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { x, enqueued: Instant::now(), reply: rtx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rrx.recv()?)
+    }
+
+    /// Fire-and-collect: submit many samples from this thread, waiting for
+    /// each (used by benches together with multiple client threads).
+    pub fn infer_many(&self, rows: Vec<Vec<i32>>) -> Result<Vec<Vec<i32>>> {
+        let mut replies = Vec::with_capacity(rows.len());
+        for x in rows {
+            let (rtx, rrx) = channel();
+            self.tx
+                .send(Request { x, enqueued: Instant::now(), reply: rtx })
+                .map_err(|_| anyhow::anyhow!("server stopped"))?;
+            replies.push(rrx);
+        }
+        replies.into_iter().map(|r| Ok(r.recv()?)).collect()
+    }
+
+    pub fn out_width(&self) -> usize {
+        self.out_width
+    }
+
+    /// (requests served, batches dispatched, mean latency us, p99 us)
+    pub fn stats(&self) -> (u64, u64, f64, f64) {
+        let s = self.stats.lock().unwrap();
+        (
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            s.mean(),
+            s.percentile(99.0),
+        )
+    }
+
+    /// Stop the server and join all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        drop(self.tx); // closes the router's receiver eventually
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn router_loop(rx: Receiver<Request>, btx: Sender<Vec<Request>>,
+               cfg: &ServerConfig, stop: &AtomicBool, batches: &AtomicU64) {
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) && pending.is_empty() {
+            break;
+        }
+        let deadline = pending
+            .first()
+            .map(|r| r.enqueued + cfg.max_wait)
+            .unwrap_or_else(|| Instant::now() + Duration::from_millis(5));
+        // drain whatever is available
+        loop {
+            match rx.try_recv() {
+                Ok(req) => {
+                    pending.push(req);
+                    if pending.len() >= cfg.max_batch {
+                        break;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    stop.store(true, Ordering::SeqCst);
+                    break;
+                }
+            }
+        }
+        let now = Instant::now();
+        if !pending.is_empty() && (pending.len() >= cfg.max_batch || now >= deadline) {
+            let take = pending.len().min(cfg.max_batch);
+            let batch: Vec<Request> = pending.drain(..take).collect();
+            batches.fetch_add(1, Ordering::Relaxed);
+            if btx.send(batch).is_err() {
+                break;
+            }
+        } else if pending.is_empty() {
+            // block briefly for the next request
+            match rx.recv_timeout(Duration::from_millis(2)) {
+                Ok(req) => pending.push(req),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    stop.store(true, Ordering::SeqCst);
+                }
+            }
+        } else {
+            std::thread::sleep(Duration::from_micros(20));
+        }
+    }
+    // btx drops here; workers exit when the channel closes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::testutil::{random_inputs, random_netlist};
+
+    #[test]
+    fn server_matches_direct_simulation() {
+        let nl = random_netlist(31, 12, 1, &[(8, 3, 2), (4, 2, 2), (2, 2, 3)]);
+        let direct = nl.clone();
+        let server = InferenceServer::start(
+            nl,
+            ServerConfig { max_batch: 8, max_wait: Duration::from_micros(100), workers: 2 },
+        );
+        let x = random_inputs(31, &direct, 40);
+        let rows: Vec<Vec<i32>> = (0..40).map(|b| x[b * 12..(b + 1) * 12].to_vec()).collect();
+        let got = server.infer_many(rows.clone()).unwrap();
+        for (b, row) in rows.iter().enumerate() {
+            let want = direct.eval_one(row).unwrap();
+            assert_eq!(got[b], want, "row {b}");
+        }
+        let (reqs, batches, mean, p99) = server.stats();
+        assert_eq!(reqs, 40);
+        assert!(batches >= 1 && batches <= 40);
+        assert!(mean > 0.0 && p99 >= mean * 0.5);
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_single_request() {
+        let nl = random_netlist(32, 6, 2, &[(3, 2, 2)]);
+        let direct = nl.clone();
+        let server = InferenceServer::start(nl, ServerConfig::default());
+        let x = random_inputs(9, &direct, 1);
+        let got = server.infer(x.clone()).unwrap();
+        assert_eq!(got, direct.eval_one(&x).unwrap());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let nl = random_netlist(33, 4, 1, &[(2, 2, 1)]);
+        let server = InferenceServer::start(nl, ServerConfig::default());
+        server.shutdown(); // no hang
+    }
+}

@@ -1,0 +1,355 @@
+//! A training/inference session for one compiled configuration.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ConfigMeta, TrainConfig};
+use crate::dataset::Dataset;
+use crate::metrics;
+use crate::netlist::{LayerSpec, Netlist};
+use crate::pruning;
+use crate::runtime::{lit_i32, lit_scalar_f32, to_vec_f32, to_vec_i32, Exec,
+                     ParamStore, Runtime};
+use crate::util::Rng;
+
+/// Owns parameter + optimizer + connection state for one model and the
+/// lazily compiled executables that operate on it.
+pub struct Session {
+    rt: Runtime,
+    pub cfg: ConfigMeta,
+    /// dense variant (learned layers see the full previous width)?
+    pub dense: bool,
+    pub params: ParamStore,
+    m: ParamStore,
+    v: ParamStore,
+    /// batch-norm running statistics (EMA-updated by train_step)
+    pub stats: ParamStore,
+    conn_lits: ParamStore,
+    /// plain copy of the connections for netlist extraction
+    pub connections: Vec<Vec<Vec<u32>>>,
+    /// skip-path multiplier (1.0 normal, 0.0 = "w/o tree-level skips")
+    pub skip_scale: f32,
+    execs: BTreeMap<String, Exec>,
+    /// 1-based Adam step counter
+    t: usize,
+}
+
+impl Session {
+    /// Create a session with freshly initialized parameters and the given
+    /// per-layer connections for learned layers (assemble layers always
+    /// use the fixed strided wiring).
+    pub fn new(rt: &Runtime, cfg: &ConfigMeta, dense: bool,
+               learned_conns: Option<&[Vec<Vec<u32>>]>, seed: u64,
+               skip_scale: f32) -> Result<Session> {
+        let top = &cfg.topology;
+        let mut rng = Rng::new(seed);
+        let spec = if dense { &cfg.param_spec_dense } else { &cfg.param_spec };
+        let params = ParamStore::init_params(spec, &mut rng)?;
+        let m = ParamStore::zeros(spec)?;
+        let v = ParamStore::zeros(spec)?;
+        // BN running stats: mean 0, variance 1
+        let mut stats = ParamStore::new();
+        for (name, shape) in &cfg.stats_spec {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let fill = if name.ends_with("_rv") { 1.0 } else { 0.0 };
+            stats.insert(name, crate::runtime::lit_f32(&vec![fill; n], shape)?);
+        }
+
+        // connections: one Vec<Vec<u32>> per layer
+        let mut connections: Vec<Vec<Vec<u32>>> = Vec::new();
+        let mut li = 0usize;
+        for l in 0..top.n_layers() {
+            if top.a[l] == 1 {
+                connections.push(top.fixed_connections(l));
+            } else {
+                match learned_conns {
+                    Some(lc) => {
+                        let c = lc
+                            .get(li)
+                            .with_context(|| format!("missing learned conn for layer {l}"))?;
+                        anyhow::ensure!(c.len() == top.w[l], "conn row count");
+                        connections.push(c.clone());
+                        li += 1;
+                    }
+                    None => {
+                        let mut crng = rng.fork(100 + l as u64);
+                        connections.push(pruning::random_connections(
+                            top.w[l], top.in_width(l), top.f[l], &mut crng));
+                    }
+                }
+            }
+        }
+        let mut conn_lits = ParamStore::new();
+        for (l, conn) in connections.iter().enumerate() {
+            let flat: Vec<i32> = conn
+                .iter()
+                .flat_map(|row| row.iter().map(|&i| i as i32))
+                .collect();
+            conn_lits.insert(
+                &format!("l{l}_conn"),
+                lit_i32(&flat, &[top.w[l], top.f[l]])?,
+            );
+        }
+
+        Ok(Session {
+            rt: rt.clone(),
+            cfg: cfg.clone(),
+            dense,
+            params,
+            m,
+            v,
+            stats,
+            conn_lits,
+            connections,
+            skip_scale,
+            execs: BTreeMap::new(),
+            t: 0,
+        })
+    }
+
+    /// Learned-layer indices (in layer order).
+    pub fn learned_layers(&self) -> Vec<usize> {
+        (0..self.cfg.topology.n_layers())
+            .filter(|&l| self.cfg.topology.a[l] == 0)
+            .collect()
+    }
+
+    fn exec(&mut self, name: &str) -> Result<&Exec> {
+        if !self.execs.contains_key(name) {
+            let spec = self.cfg.entry(name)?.clone();
+            let exec = self.rt.load(&spec)?;
+            self.execs.insert(name.to_string(), exec);
+        }
+        Ok(&self.execs[name])
+    }
+
+    /// One optimizer step on a prepared batch. Returns the loss.
+    pub fn train_step(&mut self, x: &[i32], y: &[i32], lr: f32, wd: f32,
+                      lam: f32) -> Result<f32> {
+        let top = &self.cfg.topology;
+        let entry = if self.dense { "train_step_dense" } else { "train_step" };
+        self.t += 1;
+        let x_lit = lit_i32(x, &[top.batch, top.n_in])?;
+        let y_lit = lit_i32(y, &[top.batch])?;
+        let lr_l = lit_scalar_f32(lr);
+        let wd_l = lit_scalar_f32(wd);
+        let lam_l = lit_scalar_f32(lam);
+        let ss_l = lit_scalar_f32(self.skip_scale);
+        let t_l = lit_scalar_f32(self.t as f32);
+
+        // assemble args (can't use run_with: params/m/v borrow self.execs)
+        let spec = self.cfg.entry(entry)?.clone();
+        self.exec(entry)?; // ensure compiled
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(spec.args.len());
+        for tok in &spec.args {
+            let lit = if let Some(name) = tok.strip_prefix("p:") {
+                self.params.get(name)?
+            } else if let Some(name) = tok.strip_prefix("m:") {
+                self.m.get(name)?
+            } else if let Some(name) = tok.strip_prefix("v:") {
+                self.v.get(name)?
+            } else if let Some(name) = tok.strip_prefix("s:") {
+                self.stats.get(name)?
+            } else if let Some(name) = tok.strip_prefix("c:") {
+                self.conn_lits.get(name)?
+            } else {
+                match tok.as_str() {
+                    "x" => &x_lit,
+                    "y" => &y_lit,
+                    "lr" => &lr_l,
+                    "wd" => &wd_l,
+                    "lam" => &lam_l,
+                    "skip_scale" => &ss_l,
+                    "t" => &t_l,
+                    other => bail!("unknown arg token '{other}'"),
+                }
+            };
+            args.push(lit);
+        }
+        let outs = self.execs[entry].run(&args)?;
+
+        // scatter outputs back by name
+        let out_names = &self.execs[entry].spec.outputs;
+        let mut loss = f32::NAN;
+        for (name, lit) in out_names.iter().zip(outs) {
+            if let Some(p) = name.strip_prefix("p:") {
+                self.params.insert(p, lit);
+            } else if let Some(p) = name.strip_prefix("m:") {
+                self.m.insert(p, lit);
+            } else if let Some(p) = name.strip_prefix("v:") {
+                self.v.insert(p, lit);
+            } else if let Some(p) = name.strip_prefix("s:") {
+                self.stats.insert(p, lit);
+            } else if name == "loss" {
+                loss = to_vec_f32(&lit)?[0];
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Full training run per the config's SGDR schedule; returns the loss
+    /// trace. Batches cycle deterministically through shuffled epochs.
+    pub fn train(&mut self, data: &Dataset, tc: &TrainConfig) -> Result<Vec<f32>> {
+        self.train_range(data, tc, 0, tc.steps)
+    }
+
+    /// Train `count` steps starting at global SGDR step `start` (allows a
+    /// caller to interleave evaluation while keeping one schedule).
+    pub fn train_range(&mut self, data: &Dataset, tc: &TrainConfig,
+                       start: usize, count: usize) -> Result<Vec<f32>> {
+        let top = self.cfg.topology.clone();
+        let mut order_rng = Rng::new(tc.seed ^ 0x0D0E ^ start as u64);
+        let mut order = order_rng.permutation(data.n);
+        let mut cursor = 0usize;
+        let mut losses = Vec::with_capacity(count);
+        for step in start..start + count {
+            if cursor + top.batch > data.n {
+                order_rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            let idx = &order[cursor..(cursor + top.batch).min(data.n)];
+            cursor += top.batch;
+            let (x, y) = data.batch(idx, top.batch);
+            let lr = tc.lr_at(step);
+            let loss = self.train_step(&x, &y, lr, tc.weight_decay, tc.lambda_group)?;
+            losses.push(loss);
+            if tc.eval_every > 0 && (step + 1) % tc.eval_every == 0 {
+                log::info!("step {}: loss {:.4}", step + 1, loss);
+            }
+        }
+        Ok(losses)
+    }
+
+    /// Quantized-forward output codes for one padded batch (row-major).
+    pub fn infer_codes(&mut self, x: &[i32], entry: &str) -> Result<Vec<i32>> {
+        let top = self.cfg.topology.clone();
+        anyhow::ensure!(x.len() == top.batch * top.n_in, "bad batch size");
+        let x_lit = lit_i32(x, &[top.batch, top.n_in])?;
+        let ss_l = lit_scalar_f32(self.skip_scale);
+        let spec = self.cfg.entry(entry)?.clone();
+        self.exec(entry)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(spec.args.len());
+        for tok in &spec.args {
+            let lit = if let Some(name) = tok.strip_prefix("p:") {
+                self.params.get(name)?
+            } else if let Some(name) = tok.strip_prefix("s:") {
+                self.stats.get(name)?
+            } else if let Some(name) = tok.strip_prefix("c:") {
+                self.conn_lits.get(name)?
+            } else {
+                match tok.as_str() {
+                    "x" => &x_lit,
+                    "skip_scale" => &ss_l,
+                    other => bail!("unknown arg token '{other}'"),
+                }
+            };
+            args.push(lit);
+        }
+        let outs = self.execs[entry].run(&args)?;
+        let ci = self.execs[entry].output_index("codes")?;
+        to_vec_i32(&outs[ci])
+    }
+
+    /// Accuracy of the QAT model on a dataset via the `infer` entry.
+    pub fn evaluate(&mut self, data: &Dataset) -> Result<f64> {
+        let top = self.cfg.topology.clone();
+        let mut preds: Vec<i32> = Vec::with_capacity(data.n);
+        let mut i = 0usize;
+        while i < data.n {
+            let idx: Vec<usize> = (i..(i + top.batch).min(data.n)).collect();
+            let (x, _) = data.batch(&idx, top.batch);
+            let codes = self.infer_codes(&x, "infer")?;
+            let batch_preds = predictions(&top, &codes);
+            preds.extend_from_slice(&batch_preds[..idx.len()]);
+            i += top.batch;
+        }
+        Ok(metrics::accuracy(&preds, &data.y))
+    }
+
+    /// Enumerate every layer's truth tables (paper §III-B2).
+    pub fn enumerate(&mut self) -> Result<Vec<Vec<i32>>> {
+        anyhow::ensure!(!self.dense, "enumerate requires the sparse model");
+        let top = self.cfg.topology.clone();
+        let mut tables = Vec::with_capacity(top.n_layers());
+        for l in 0..top.n_layers() {
+            let entry = format!("enum_l{l}");
+            let logs_prev = if l == 0 {
+                0.0
+            } else {
+                to_vec_f32(self.params.get(&format!("l{}_logs", l - 1))?)?[0]
+            };
+            let lp_l = lit_scalar_f32(logs_prev);
+            let ss_l = lit_scalar_f32(self.skip_scale);
+            let spec = self.cfg.entry(&entry)?.clone();
+            self.exec(&entry)?;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(spec.args.len());
+            for tok in &spec.args {
+                let lit = if let Some(name) = tok.strip_prefix("p:") {
+                    self.params.get(name)?
+                } else if let Some(name) = tok.strip_prefix("s:") {
+                    self.stats.get(name)?
+                } else {
+                    match tok.as_str() {
+                        "logs_prev" => &lp_l,
+                        "skip_scale" => &ss_l,
+                        other => bail!("unknown arg token '{other}'"),
+                    }
+                };
+                args.push(lit);
+            }
+            let outs = self.execs[&entry].run(&args)?;
+            tables.push(to_vec_i32(&outs[0])?);
+        }
+        Ok(tables)
+    }
+
+    /// Extract the LUT netlist from enumerated tables.
+    pub fn to_netlist(&mut self) -> Result<Netlist> {
+        let top = self.cfg.topology.clone();
+        let tables = self.enumerate()?;
+        let mut layers = Vec::with_capacity(top.n_layers());
+        for l in 0..top.n_layers() {
+            let conn: Vec<u32> = self.connections[l]
+                .iter()
+                .flat_map(|row| row.iter().copied())
+                .collect();
+            let t: Vec<u16> = tables[l].iter().map(|&v| v as u16).collect();
+            layers.push(LayerSpec {
+                w: top.w[l],
+                fan_in: top.f[l],
+                in_bits: top.in_bits(l),
+                out_bits: top.beta[l],
+                conn,
+                tables: t,
+            });
+        }
+        Netlist::from_parts(&top.name, top.n_in, top.beta_in, layers)
+    }
+
+    /// Group-lasso scores of a dense session's learned layers, for
+    /// connection selection (paper's hardware-aware pruning).
+    pub fn group_scores(&self) -> Result<Vec<Vec<Vec<f32>>>> {
+        anyhow::ensure!(self.dense, "group scores come from the dense phase");
+        let top = &self.cfg.topology;
+        let mut all = Vec::new();
+        for l in self.learned_layers() {
+            let units = top.w[l];
+            let p = top.in_width(l);
+            let n = top.n_hidden;
+            let w0 = to_vec_f32(self.params.get(&format!("l{l}_W0"))?)?;
+            let wskip = to_vec_f32(self.params.get(&format!("l{l}_wskip"))?)?;
+            all.push(pruning::group_scores(units, p, n, &w0, &wskip));
+        }
+        Ok(all)
+    }
+}
+
+/// Class predictions from output codes (mirrors `model.predictions`).
+pub fn predictions(top: &crate::config::Topology, codes: &[i32]) -> Vec<i32> {
+    if top.n_classes > 1 {
+        metrics::argmax_rows(codes, *top.w.last().unwrap())
+    } else {
+        metrics::binary_rows(codes, *top.beta.last().unwrap())
+    }
+}

@@ -1,0 +1,32 @@
+//! # NeuraLUT-Assemble
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *NeuraLUT-Assemble: Hardware-aware Assembling of Sub-Neural Networks
+//! for Efficient LUT Inference* (Andronic & Constantinides, 2025).
+//!
+//! Layer map:
+//! * **L1/L2** live in `python/compile/` and run only at build time
+//!   (`make artifacts`), producing HLO-text executables.
+//! * **L3** is this crate: the toolflow coordinator (train → prune →
+//!   retrain → enumerate → map → time → RTL), every hardware substrate
+//!   (netlist simulator, technology mapper, timing model, RTL emitter),
+//!   datasets, baselines, a batching inference server, and the benchmark
+//!   harnesses that regenerate the paper's tables and figures.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod luts;
+pub mod mapper;
+pub mod metrics;
+pub mod netlist;
+pub mod pruning;
+pub mod report;
+pub mod rtl;
+pub mod runtime;
+pub mod timing;
+pub mod util;

@@ -1,0 +1,175 @@
+//! Logical-LUT (L-LUT) representation.
+//!
+//! An L-LUT is a lookup table of arbitrary size (paper §I): a unit with
+//! `fan_in` inputs of `in_bits` bits each and one `out_bits`-bit output,
+//! i.e. a finite function over `2^(in_bits*fan_in)` addresses.  Input `f`
+//! occupies address bits `[in_bits*f, in_bits*(f+1))` — the same layout as
+//! `ref.pack_codes` on the python side and the RTL concatenation order.
+
+use anyhow::{bail, Result};
+
+/// One L-LUT truth table.  Entries are output codes (< 2^out_bits).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TruthTable {
+    pub fan_in: usize,
+    pub in_bits: usize,
+    pub out_bits: usize,
+    pub entries: Vec<u16>,
+}
+
+impl TruthTable {
+    pub fn new(fan_in: usize, in_bits: usize, out_bits: usize,
+               entries: Vec<u16>) -> Result<TruthTable> {
+        let want = 1usize << (fan_in * in_bits);
+        if entries.len() != want {
+            bail!("table has {} entries, want {want}", entries.len());
+        }
+        if out_bits > 16 {
+            bail!("out_bits {out_bits} > 16 unsupported");
+        }
+        let max = ((1u32 << out_bits) - 1) as u16;
+        if let Some(bad) = entries.iter().find(|&&e| e > max) {
+            bail!("entry {bad} exceeds {out_bits}-bit output");
+        }
+        Ok(TruthTable { fan_in, in_bits, out_bits, entries })
+    }
+
+    pub fn addr_bits(&self) -> usize {
+        self.fan_in * self.in_bits
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Pack per-input codes into a table address (LSB = input 0).
+    pub fn pack(&self, codes: &[u16]) -> usize {
+        debug_assert_eq!(codes.len(), self.fan_in);
+        let mut addr = 0usize;
+        for (f, &c) in codes.iter().enumerate() {
+            debug_assert!((c as usize) < (1 << self.in_bits));
+            addr |= (c as usize) << (self.in_bits * f);
+        }
+        addr
+    }
+
+    /// Unpack a table address into per-input codes.
+    pub fn unpack(&self, addr: usize) -> Vec<u16> {
+        let mask = (1usize << self.in_bits) - 1;
+        (0..self.fan_in)
+            .map(|f| ((addr >> (self.in_bits * f)) & mask) as u16)
+            .collect()
+    }
+
+    pub fn lookup(&self, codes: &[u16]) -> u16 {
+        self.entries[self.pack(codes)]
+    }
+
+    /// Extract output bit `b` as a boolean function (bit-per-address).
+    pub fn output_bit(&self, b: usize) -> Vec<bool> {
+        assert!(b < self.out_bits);
+        self.entries.iter().map(|&e| (e >> b) & 1 == 1).collect()
+    }
+
+    /// True input-variable support of output bit `b`: the set of *address
+    /// bits* the function actually depends on.  Synthesis tools perform
+    /// the same reduction; it is what shrinks trained tables below the
+    /// worst-case P-LUT cost.
+    pub fn bit_support(&self, b: usize) -> Vec<usize> {
+        let f = self.output_bit(b);
+        let n = self.addr_bits();
+        let mut support = Vec::new();
+        for v in 0..n {
+            let stride = 1usize << v;
+            let mut depends = false;
+            'outer: for base in 0..self.entries.len() {
+                if base & stride == 0 && f[base] != f[base | stride] {
+                    depends = true;
+                    break 'outer;
+                }
+            }
+            if depends {
+                support.push(v);
+            }
+        }
+        support
+    }
+
+    /// Is output bit `b` constant?
+    pub fn bit_constant(&self, b: usize) -> Option<bool> {
+        let f = self.output_bit(b);
+        if f.iter().all(|&x| x) {
+            Some(true)
+        } else if f.iter().all(|&x| !x) {
+            Some(false)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor2() -> TruthTable {
+        // 2 one-bit inputs, 1-bit output: XOR
+        TruthTable::new(2, 1, 1, vec![0, 1, 1, 0]).unwrap()
+    }
+
+    #[test]
+    fn construct_validates() {
+        assert!(TruthTable::new(2, 1, 1, vec![0, 1, 1]).is_err()); // size
+        assert!(TruthTable::new(2, 1, 1, vec![0, 1, 1, 2]).is_err()); // range
+        assert!(TruthTable::new(2, 2, 4, vec![0; 16]).is_ok());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let t = TruthTable::new(3, 2, 2, vec![0; 64]).unwrap();
+        for addr in 0..64 {
+            assert_eq!(t.pack(&t.unpack(addr)), addr);
+        }
+        // layout: input f at bits [2f, 2f+2)
+        assert_eq!(t.pack(&[1, 2, 3]), 1 + (2 << 2) + (3 << 4));
+    }
+
+    #[test]
+    fn lookup_xor() {
+        let t = xor2();
+        assert_eq!(t.lookup(&[0, 0]), 0);
+        assert_eq!(t.lookup(&[1, 0]), 1);
+        assert_eq!(t.lookup(&[0, 1]), 1);
+        assert_eq!(t.lookup(&[1, 1]), 0);
+    }
+
+    #[test]
+    fn support_full_for_xor() {
+        assert_eq!(xor2().bit_support(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn support_reduced_when_input_ignored() {
+        // f(a, b) = a  (ignores b)
+        let t = TruthTable::new(2, 1, 1, vec![0, 1, 0, 1]).unwrap();
+        assert_eq!(t.bit_support(0), vec![0]);
+    }
+
+    #[test]
+    fn constant_detection() {
+        let t = TruthTable::new(2, 1, 1, vec![1, 1, 1, 1]).unwrap();
+        assert_eq!(t.bit_constant(0), Some(true));
+        assert_eq!(xor2().bit_constant(0), None);
+    }
+
+    #[test]
+    fn output_bit_extraction() {
+        let t = TruthTable::new(1, 2, 2, vec![0, 1, 2, 3]).unwrap();
+        assert_eq!(t.output_bit(0), vec![false, true, false, true]);
+        assert_eq!(t.output_bit(1), vec![false, false, true, true]);
+    }
+}

@@ -1,0 +1,272 @@
+//! `neuralut` — CLI for the NeuraLUT-Assemble toolflow.
+//!
+//! Subcommands:
+//!   list                      show compiled configurations
+//!   flow   --config <name>    run the full toolflow (train → LUTs → timing)
+//!   rtl    --config <name>    run the flow and write Verilog
+//!   serve  --config <name>    train, extract netlist, run the batch server
+//!
+//! Common flags: --steps N --dense-steps N --train N --test N --seed N
+//!               --no-skips --random-conn --augment --artifacts DIR
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use neuralut::config::Meta;
+use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer, ServerConfig};
+use neuralut::report::{pct, sci, Table};
+use neuralut::runtime::Runtime;
+use neuralut::util::Stopwatch;
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".into());
+    let mut flags = HashMap::new();
+    let mut switches = Vec::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            match name {
+                "no-skips" | "random-conn" | "augment" | "verify" | "quiet" => {
+                    switches.push(name.to_string());
+                }
+                _ => {
+                    let v = it.next().with_context(|| format!("--{name} needs a value"))?;
+                    flags.insert(name.to_string(), v);
+                }
+            }
+        } else {
+            bail!("unexpected argument '{a}'");
+        }
+    }
+    Ok(Args { cmd, flags, switches })
+}
+
+impl Args {
+    fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+    fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+fn flow_options(args: &Args) -> Result<FlowOptions> {
+    let config = args
+        .flags
+        .get("config")
+        .context("--config <name> is required")?
+        .clone();
+    let mut opts = FlowOptions::quick(&config);
+    opts.dense_steps = args.usize_flag("dense-steps", opts.dense_steps)?;
+    opts.sparse_steps = args.usize_flag("steps", opts.sparse_steps)?;
+    opts.seed = args.usize_flag("seed", opts.seed as usize)? as u64;
+    opts.gen.n_train = args.usize_flag("train", opts.gen.n_train)?;
+    opts.gen.n_test = args.usize_flag("test", opts.gen.n_test)?;
+    opts.gen.augment = args.has("augment");
+    if args.has("no-skips") {
+        opts.skip_scale = 0.0;
+    }
+    if args.has("random-conn") {
+        opts.dense_steps = 0;
+    }
+    Ok(opts)
+}
+
+fn meta_from(args: &Args) -> Result<Meta> {
+    let dir = args
+        .flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Meta::default_dir);
+    Meta::load(dir)
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let meta = meta_from(args)?;
+    let mut t = Table::new("compiled configurations",
+                           &["config", "dataset", "layers w", "F", "beta", "L-LUTs"]);
+    for (name, cfg) in &meta.configs {
+        let top = &cfg.topology;
+        t.row(&[
+            name.clone(),
+            top.dataset.clone(),
+            format!("{:?}", top.w),
+            format!("{:?}", top.f),
+            format!("{:?}", top.beta),
+            top.total_units().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn print_flow_result(r: &neuralut::coordinator::FlowResult) {
+    let mut t = Table::new(
+        &format!("toolflow result: {}", r.config),
+        &["metric", "value"],
+    );
+    t.row(&["QAT accuracy".into(), pct(r.qat_acc)]);
+    t.row(&["netlist accuracy".into(), pct(r.netlist_acc)]);
+    if let Some(be) = r.bit_exact {
+        t.row(&["netlist == PJRT (bit-exact)".into(), be.to_string()]);
+    }
+    t.row(&["L-LUTs".into(), r.netlist.total_units().to_string()]);
+    t.row(&["P-LUTs (mapped)".into(), r.mapped.total_luts().to_string()]);
+    for (name, rep) in &r.reports {
+        t.row(&[format!("{name} Fmax"), format!("{:.0} MHz", rep.fmax_mhz)]);
+        t.row(&[format!("{name} latency"), format!("{:.2} ns", rep.latency_ns)]);
+        t.row(&[format!("{name} FFs"), rep.ffs.to_string()]);
+        t.row(&[format!("{name} area-delay"), sci(rep.area_delay)]);
+    }
+    t.print();
+}
+
+fn cmd_flow(args: &Args) -> Result<()> {
+    let meta = meta_from(args)?;
+    let rt = Runtime::new()?;
+    let opts = flow_options(args)?;
+    let sw = Stopwatch::start();
+    let r = run_flow(&rt, &meta, &opts)?;
+    print_flow_result(&r);
+    println!("\nflow completed in {:.1}s", sw.secs());
+    Ok(())
+}
+
+fn cmd_rtl(args: &Args) -> Result<()> {
+    let meta = meta_from(args)?;
+    let rt = Runtime::new()?;
+    let mut opts = flow_options(args)?;
+    opts.emit_rtl = true;
+    let out = args
+        .flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("{}.v", opts.config));
+    let r = run_flow(&rt, &meta, &opts)?;
+    let text = r.rtl_text.as_ref().context("no RTL emitted")?;
+    std::fs::write(&out, text)?;
+    print_flow_result(&r);
+    println!("\nwrote {} ({} lines)", out, text.lines().count());
+    Ok(())
+}
+
+/// Run the flow, then print netlist-level statistics: per-layer support
+/// histograms, constant/duplicate units — the signals the mapper's
+/// synthesis-style optimizations exploit.
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let meta = meta_from(args)?;
+    let rt = Runtime::new()?;
+    let opts = flow_options(args)?;
+    let r = run_flow(&rt, &meta, &opts)?;
+    let mut t = Table::new(
+        &format!("netlist inspection: {}", r.config),
+        &["layer", "units", "addr bits", "avg support", "const bits",
+          "dup units", "P-LUTs"],
+    );
+    for (l, layer) in r.netlist.layers.iter().enumerate() {
+        let mut support_sum = 0usize;
+        let mut bits = 0usize;
+        let mut consts = 0usize;
+        let mut seen = std::collections::HashSet::new();
+        let mut dups = 0usize;
+        for u in 0..layer.w {
+            let tt = layer.truth_table(u);
+            for b in 0..layer.out_bits {
+                bits += 1;
+                if tt.bit_constant(b).is_some() {
+                    consts += 1;
+                } else {
+                    support_sum += tt.bit_support(b).len();
+                }
+            }
+            if !seen.insert((layer.unit_conn(u).to_vec(),
+                             layer.unit_table(u).to_vec())) {
+                dups += 1;
+            }
+        }
+        t.row(&[
+            l.to_string(),
+            layer.w.to_string(),
+            (layer.in_bits * layer.fan_in).to_string(),
+            format!("{:.2}", support_sum as f64 / bits.max(1) as f64),
+            consts.to_string(),
+            dups.to_string(),
+            r.mapped.layers[l].luts.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\ntotal P-LUTs {} (worst case {})",
+             r.mapped.total_luts(), r.mapped.total_luts_worst_case());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let meta = meta_from(args)?;
+    let rt = Runtime::new()?;
+    let opts = flow_options(args)?;
+    let n_req = args.usize_flag("requests", 2000)?;
+    let r = run_flow(&rt, &meta, &opts)?;
+    print_flow_result(&r);
+
+    let top = &meta.config(&opts.config)?.topology;
+    let splits = neuralut::dataset::generate(&top.dataset, top.beta_in, &opts.gen)?;
+    let server = InferenceServer::start(r.netlist.clone(), ServerConfig::default());
+    let sw = Stopwatch::start();
+    let rows: Vec<Vec<i32>> = (0..n_req)
+        .map(|i| splits.test.row(i % splits.test.n).to_vec())
+        .collect();
+    let _ = server.infer_many(rows)?;
+    let secs = sw.secs();
+    let (reqs, batches, mean, p99) = server.stats();
+    println!(
+        "\nserved {reqs} requests in {batches} batches: {:.0} req/s, \
+         latency mean {:.0}us p99 {:.0}us",
+        reqs as f64 / secs, mean, p99
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn main() {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.cmd.as_str() {
+        "list" => cmd_list(&args),
+        "flow" => cmd_flow(&args),
+        "rtl" => cmd_rtl(&args),
+        "serve" => cmd_serve(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            println!(
+                "neuralut <list|flow|rtl|serve|inspect> --config <name> \
+                 [--steps N] [--dense-steps N] [--train N] [--test N] \
+                 [--seed N] [--no-skips] [--random-conn] [--augment] \
+                 [--artifacts DIR] [--out FILE] [--requests N]"
+            );
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}' (try: help)");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,240 @@
+//! Technology mapping: L-LUTs onto physical K=6 FPGA LUTs (P-LUTs).
+//!
+//! This is the substitute for Vivado synthesis (DESIGN.md §2).  Each
+//! output bit of an L-LUT is an `A`-input boolean function (`A =
+//! in_bits * fan_in` address bits).  Mapping follows what synthesis tools
+//! do with ROM-style `case` blocks on UltraScale+:
+//!
+//! * `A <= 6`  — one LUT6;
+//! * `A == 7`  — two LUT6 + the slice's dedicated F7 mux (free);
+//! * `A == 8`  — four LUT6 + F7/F8 muxes (free);
+//! * `A > 8`   — Shannon decomposition: two cofactor circuits of `A-1`
+//!   inputs plus a fabric 2:1 mux (packed into LUT6s, counted).
+//!
+//! Before costing, each output bit's *true support* is computed from the
+//! trained table — constant bits cost nothing and bits that ignore some
+//! inputs map to smaller LUTs.  This is exactly the logic trimming a real
+//! synthesis run performs, and it is why trained designs come in under
+//! the worst-case `w * out_bits * cost(A)` bound.
+
+use crate::netlist::Netlist;
+
+/// Worst-case P-LUT count for one `a`-input boolean function (K = 6).
+pub fn plut_cost(a: usize) -> usize {
+    match a {
+        0 => 0,           // constant: absorbed
+        1 => 0,           // wire / inverter: absorbed into neighbours
+        2..=6 => 1,
+        7 => 2,           // 2 x LUT6 + F7MUX (dedicated, free)
+        8 => 4,           // 4 x LUT6 + F7/F8 (dedicated, free)
+        _ => 2 * plut_cost(a - 1) + 1, // Shannon + fabric mux
+    }
+}
+
+/// Logic depth in P-LUT levels for one `a`-input function (fractions model
+/// the dedicated-mux delay, which is much smaller than a LUT level).
+pub fn plut_depth(a: usize) -> f64 {
+    match a {
+        0 | 1 => 0.0,
+        2..=6 => 1.0,
+        7 => 1.5,
+        8 => 2.0,
+        _ => plut_depth(a - 1) + 1.0,
+    }
+}
+
+/// Mapping result for one netlist layer.
+#[derive(Clone, Debug)]
+pub struct MappedLayer {
+    /// P-LUTs after support reduction.
+    pub luts: usize,
+    /// worst output-bit depth in P-LUT levels
+    pub depth: f64,
+    /// signal bits produced by this layer (`w * out_bits`) — the cost of
+    /// registering its outputs.
+    pub out_bits_total: usize,
+    /// worst-case P-LUTs without support reduction (reported for ablation)
+    pub luts_worst_case: usize,
+}
+
+/// Mapping result for a whole netlist.
+#[derive(Clone, Debug)]
+pub struct MappedNetlist {
+    pub layers: Vec<MappedLayer>,
+    /// primary input bits (for input-register accounting)
+    pub input_bits: usize,
+}
+
+impl MappedNetlist {
+    pub fn total_luts(&self) -> usize {
+        self.layers.iter().map(|l| l.luts).sum()
+    }
+
+    pub fn total_luts_worst_case(&self) -> usize {
+        self.layers.iter().map(|l| l.luts_worst_case).sum()
+    }
+}
+
+/// Map a netlist. `optimize` enables support reduction and duplicate-unit
+/// sharing (on for all real flows; off gives the worst-case bound used in
+/// the ablation bench).
+pub fn map_netlist(nl: &Netlist, optimize: bool) -> MappedNetlist {
+    let layers = nl
+        .layers
+        .iter()
+        .map(|layer| {
+            let a_full = layer.in_bits * layer.fan_in;
+            let mut luts = 0usize;
+            let mut depth = 0f64;
+            let worst = layer.w * layer.out_bits * plut_cost(a_full);
+            // duplicate-unit sharing: two units with identical producers
+            // and identical tables synthesize to one circuit (trained
+            // LUT-NNs converge to shared functions surprisingly often —
+            // the post-training table optimizations of ReducedLUT et al.
+            // start from the same observation).
+            let mut seen: std::collections::HashSet<(Vec<u32>, Vec<u16>)> =
+                std::collections::HashSet::new();
+            for u in 0..layer.w {
+                if optimize {
+                    let key = (layer.unit_conn(u).to_vec(),
+                               layer.unit_table(u).to_vec());
+                    if !seen.insert(key) {
+                        continue; // shared with an earlier identical unit
+                    }
+                }
+                let tt = layer.truth_table(u);
+                for b in 0..layer.out_bits {
+                    let a_eff = if optimize {
+                        if tt.bit_constant(b).is_some() {
+                            0
+                        } else {
+                            tt.bit_support(b).len()
+                        }
+                    } else {
+                        a_full
+                    };
+                    luts += plut_cost(a_eff);
+                    depth = depth.max(plut_depth(a_eff));
+                }
+            }
+            MappedLayer {
+                luts,
+                depth,
+                out_bits_total: layer.w * layer.out_bits,
+                luts_worst_case: worst,
+            }
+        })
+        .collect();
+    MappedNetlist { layers, input_bits: nl.n_in * nl.in_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{LayerSpec, Netlist};
+
+    #[test]
+    fn cost_table() {
+        assert_eq!(plut_cost(0), 0);
+        assert_eq!(plut_cost(1), 0);
+        assert_eq!(plut_cost(4), 1);
+        assert_eq!(plut_cost(6), 1);
+        assert_eq!(plut_cost(7), 2);
+        assert_eq!(plut_cost(8), 4);
+        assert_eq!(plut_cost(9), 9);   // 2*4+1
+        assert_eq!(plut_cost(10), 19); // 2*9+1
+    }
+
+    #[test]
+    fn depth_table() {
+        assert_eq!(plut_depth(6), 1.0);
+        assert_eq!(plut_depth(7), 1.5);
+        assert_eq!(plut_depth(8), 2.0);
+        assert_eq!(plut_depth(9), 3.0);
+    }
+
+    fn single_layer(tables: Vec<u16>, fan_in: usize, in_bits: usize,
+                    out_bits: usize, w: usize, n_in: usize) -> Netlist {
+        let conn: Vec<u32> = (0..w * fan_in).map(|i| (i % n_in) as u32).collect();
+        let nl = Netlist {
+            name: "t".into(),
+            n_in,
+            in_bits,
+            layers: vec![LayerSpec { w, fan_in, in_bits, out_bits, conn, tables }],
+        };
+        nl.validate().unwrap();
+        nl
+    }
+
+    #[test]
+    fn constant_output_costs_zero() {
+        let nl = single_layer(vec![1u16; 64], 6, 1, 1, 1, 8);
+        let m = map_netlist(&nl, true);
+        assert_eq!(m.total_luts(), 0);
+        assert_eq!(m.total_luts_worst_case(), 1);
+    }
+
+    #[test]
+    fn full_support_costs_one_lut6() {
+        // parity of 6 inputs: depends on everything
+        let tables: Vec<u16> =
+            (0..64u32).map(|a| (a.count_ones() & 1) as u16).collect();
+        let nl = single_layer(tables, 6, 1, 1, 1, 8);
+        let m = map_netlist(&nl, true);
+        assert_eq!(m.total_luts(), 1);
+        assert_eq!(m.layers[0].depth, 1.0);
+    }
+
+    #[test]
+    fn support_reduction_shrinks_wide_units() {
+        // 8-address-bit unit that actually only uses 2 inputs
+        let tables: Vec<u16> = (0..256u32)
+            .map(|a| (((a & 1) ^ ((a >> 1) & 1)) & 1) as u16)
+            .collect();
+        let nl = single_layer(tables, 2, 4, 1, 1, 4);
+        let opt = map_netlist(&nl, true);
+        let raw = map_netlist(&nl, false);
+        assert_eq!(opt.total_luts(), 1); // 2-input XOR -> 1 LUT
+        assert_eq!(raw.total_luts(), 4); // worst case for A=8
+        assert!(opt.layers[0].depth < raw.layers[0].depth);
+    }
+
+    #[test]
+    fn duplicate_units_are_shared() {
+        // two identical parity units + one distinct unit
+        let parity: Vec<u16> =
+            (0..16u32).map(|a| (a.count_ones() & 1) as u16).collect();
+        let distinct: Vec<u16> = (0..16u32).map(|a| (a & 1) as u16).collect();
+        let nl = Netlist {
+            name: "dup".into(),
+            n_in: 4,
+            in_bits: 1,
+            layers: vec![LayerSpec {
+                w: 3,
+                fan_in: 4,
+                in_bits: 1,
+                out_bits: 1,
+                conn: vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3],
+                tables: [parity.clone(), parity, distinct].concat(),
+            }],
+        };
+        nl.validate().unwrap();
+        let opt = map_netlist(&nl, true);
+        // parity shared once (1 LUT) + distinct unit is a wire (cost 0)
+        assert_eq!(opt.total_luts(), 1);
+        assert_eq!(map_netlist(&nl, false).total_luts(), 3);
+    }
+
+    #[test]
+    fn multibit_outputs_cost_per_bit() {
+        // identity table over a 2-bit input: bit0 and bit1 are wires
+        let nl = single_layer(vec![0, 1, 2, 3], 1, 2, 2, 1, 1);
+        let m = map_netlist(&nl, true);
+        assert_eq!(m.total_luts(), 0); // both bits are single-input wires
+        // 2-bit function of 4 address bits: bit0 = a0^a2, bit1 = a1^a3
+        let tables: Vec<u16> = (0..16u16).map(|a| (a ^ (a >> 2)) & 3).collect();
+        let nl2 = single_layer(tables, 2, 2, 2, 1, 2);
+        let m2 = map_netlist(&nl2, true);
+        assert_eq!(m2.total_luts(), 2);
+    }
+}

@@ -1,0 +1,122 @@
+//! Evaluation metrics: classification accuracy, confusion counts, and
+//! latency statistics for the serving path.
+
+/// Accuracy of predictions vs labels.
+pub fn accuracy(pred: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(labels).filter(|(p, y)| p == y).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Argmax over each row of `codes` (row-major, `width` per row) — class
+/// prediction for multi-class heads (codes are monotone in value).
+pub fn argmax_rows(codes: &[i32], width: usize) -> Vec<i32> {
+    assert!(width > 0);
+    codes
+        .chunks_exact(width)
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best as i32
+        })
+        .collect()
+}
+
+/// Binary prediction from single-unit output codes: positive iff the code
+/// is in the upper half of the range (value > 0 in midrise decoding).
+pub fn binary_rows(codes: &[i32], out_bits: usize) -> Vec<i32> {
+    let thr = 1i32 << (out_bits - 1);
+    codes.iter().map(|&c| (c >= thr) as i32).collect()
+}
+
+/// K x K confusion matrix (rows = true, cols = predicted).
+pub fn confusion(pred: &[i32], labels: &[i32], k: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; k]; k];
+    for (&p, &y) in pred.iter().zip(labels) {
+        m[y as usize][p as usize] += 1;
+    }
+    m
+}
+
+/// Online latency statistics (microseconds) for the serving benches.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, micros: f64) {
+        self.samples.push(micros);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax_rows(&[1, 3, 3, 0, 5, 5], 3), vec![1, 1]);
+    }
+
+    #[test]
+    fn binary_threshold() {
+        // out_bits=2 -> threshold 2
+        assert_eq!(binary_rows(&[0, 1, 2, 3], 2), vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let m = confusion(&[0, 1, 1, 0], &[0, 1, 0, 0], 2);
+        assert_eq!(m[0][0], 2);
+        assert_eq!(m[0][1], 1);
+        assert_eq!(m[1][1], 1);
+        assert_eq!(m[1][0], 0);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(s.percentile(50.0), 51.0); // round(49.5) = 50 -> s[50]
+        assert_eq!(s.percentile(99.0), 99.0);
+        assert_eq!(s.count(), 100);
+    }
+}

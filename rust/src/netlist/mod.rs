@@ -1,0 +1,291 @@
+//! L-LUT netlist: the hardware-level view of a trained NeuraLUT-Assemble
+//! model, and its bit-exact simulator.
+//!
+//! A netlist is a feed-forward sequence of L-LUT layers; layer `l` has
+//! `w` units, each reading `fan_in` producer signals (by index into the
+//! previous layer's outputs, or the primary inputs for `l = 0`) and
+//! emitting an `out_bits`-bit code.  This mirrors exactly what the RTL
+//! emitter writes and what the Vivado flow would synthesize, so simulating
+//! it *is* simulating the FPGA design at the value level.
+//!
+//! The simulator is the L3 serving hot path (see `benches/netlist_hotpath`
+//! and EXPERIMENTS.md §Perf): `eval_batch` uses precomputed address
+//! strides, and a bitsliced kernel accelerates the β=1 layers.
+
+mod sim;
+
+pub use sim::BitslicedLayer;
+
+use anyhow::{bail, Context, Result};
+
+use crate::luts::TruthTable;
+
+/// One layer of the netlist.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub w: usize,
+    pub fan_in: usize,
+    pub in_bits: usize,
+    pub out_bits: usize,
+    /// `w * fan_in` producer indices, unit-major.
+    pub conn: Vec<u32>,
+    /// `w * 2^(in_bits*fan_in)` table entries, unit-major.
+    pub tables: Vec<u16>,
+}
+
+impl LayerSpec {
+    pub fn entries_per_unit(&self) -> usize {
+        1usize << (self.in_bits * self.fan_in)
+    }
+
+    pub fn unit_table(&self, u: usize) -> &[u16] {
+        let t = self.entries_per_unit();
+        &self.tables[u * t..(u + 1) * t]
+    }
+
+    pub fn unit_conn(&self, u: usize) -> &[u32] {
+        &self.conn[u * self.fan_in..(u + 1) * self.fan_in]
+    }
+
+    /// View unit `u` as a `TruthTable` (for mapping / RTL / analysis).
+    pub fn truth_table(&self, u: usize) -> TruthTable {
+        TruthTable::new(self.fan_in, self.in_bits, self.out_bits,
+                        self.unit_table(u).to_vec())
+            .expect("layer invariants guarantee a valid table")
+    }
+}
+
+/// A complete LUT netlist.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub name: String,
+    pub n_in: usize,
+    pub in_bits: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Netlist {
+    pub fn validate(&self) -> Result<()> {
+        let mut prev_w = self.n_in;
+        let mut prev_bits = self.in_bits;
+        for (l, layer) in self.layers.iter().enumerate() {
+            if layer.conn.len() != layer.w * layer.fan_in {
+                bail!("layer {l}: conn len mismatch");
+            }
+            if layer.tables.len() != layer.w * layer.entries_per_unit() {
+                bail!("layer {l}: tables len mismatch");
+            }
+            if layer.in_bits != prev_bits {
+                bail!("layer {l}: in_bits {} != producer bits {prev_bits}",
+                      layer.in_bits);
+            }
+            if let Some(&c) = layer.conn.iter().find(|&&c| c as usize >= prev_w) {
+                bail!("layer {l}: conn index {c} out of range (prev width {prev_w})");
+            }
+            let max = ((1u32 << layer.out_bits) - 1) as u16;
+            if layer.tables.iter().any(|&e| e > max) {
+                bail!("layer {l}: table entry exceeds out_bits");
+            }
+            prev_w = layer.w;
+            prev_bits = layer.out_bits;
+        }
+        Ok(())
+    }
+
+    pub fn out_width(&self) -> usize {
+        self.layers.last().map(|l| l.w).unwrap_or(self.n_in)
+    }
+
+    pub fn out_bits(&self) -> usize {
+        self.layers.last().map(|l| l.out_bits).unwrap_or(self.in_bits)
+    }
+
+    /// Total number of L-LUTs.
+    pub fn total_units(&self) -> usize {
+        self.layers.iter().map(|l| l.w).sum()
+    }
+
+    /// Evaluate one sample (codes) -> output codes. Reference-simple path.
+    pub fn eval_one(&self, x: &[i32]) -> Result<Vec<i32>> {
+        if x.len() != self.n_in {
+            bail!("input width {} != {}", x.len(), self.n_in);
+        }
+        let mut prev: Vec<u16> = x.iter().map(|&c| c as u16).collect();
+        for layer in &self.layers {
+            let mut next = vec![0u16; layer.w];
+            let t = layer.entries_per_unit();
+            for u in 0..layer.w {
+                let mut addr = 0usize;
+                for (f, &src) in layer.unit_conn(u).iter().enumerate() {
+                    addr |= (prev[src as usize] as usize) << (layer.in_bits * f);
+                }
+                next[u] = layer.tables[u * t + addr];
+            }
+            prev = next;
+        }
+        Ok(prev.into_iter().map(|c| c as i32).collect())
+    }
+
+    /// Evaluate a batch (row-major codes) -> row-major output codes.
+    /// This is the optimized request-path entry point.
+    pub fn eval_batch(&self, x: &[i32], batch: usize) -> Result<Vec<i32>> {
+        if x.len() != batch * self.n_in {
+            bail!("batch input len mismatch");
+        }
+        let mut sim = sim::Simulator::new(self);
+        Ok(sim.eval_batch(x, batch))
+    }
+
+    /// Persistent simulator with reusable scratch buffers (hot path).
+    pub fn simulator(&self) -> sim::Simulator<'_> {
+        sim::Simulator::new(self)
+    }
+
+    /// Build a netlist from per-layer (conn, tables) data plus widths —
+    /// the bridge from the enumeration artifacts.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        name: &str,
+        n_in: usize,
+        in_bits: usize,
+        specs: Vec<LayerSpec>,
+    ) -> Result<Netlist> {
+        let nl = Netlist { name: name.to_string(), n_in, in_bits, layers: specs };
+        nl.validate().context("netlist validation")?;
+        Ok(nl)
+    }
+}
+
+/// Random-netlist generators shared by unit tests, integration tests and
+/// the hot-path benches (hence not `#[cfg(test)]`).
+pub mod testutil {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Random valid netlist for property tests.
+    pub fn random_netlist(seed: u64, n_in: usize, in_bits: usize,
+                          layer_shapes: &[(usize, usize, usize)]) -> Netlist {
+        // layer_shapes: (w, fan_in, out_bits)
+        let mut rng = Rng::new(seed);
+        let mut prev_w = n_in;
+        let mut prev_bits = in_bits;
+        let mut layers = Vec::new();
+        for &(w, fan_in, out_bits) in layer_shapes {
+            let entries = 1usize << (prev_bits * fan_in);
+            let conn: Vec<u32> = (0..w * fan_in)
+                .map(|_| rng.below(prev_w) as u32)
+                .collect();
+            let tables: Vec<u16> = (0..w * entries)
+                .map(|_| rng.below(1 << out_bits) as u16)
+                .collect();
+            layers.push(LayerSpec {
+                w,
+                fan_in,
+                in_bits: prev_bits,
+                out_bits,
+                conn,
+                tables,
+            });
+            prev_w = w;
+            prev_bits = out_bits;
+        }
+        let nl = Netlist {
+            name: format!("rand{seed}"),
+            n_in,
+            in_bits,
+            layers,
+        };
+        nl.validate().unwrap();
+        nl
+    }
+
+    pub fn random_inputs(seed: u64, nl: &Netlist, batch: usize) -> Vec<i32> {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        (0..batch * nl.n_in)
+            .map(|_| rng.below(1 << nl.in_bits) as i32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn validate_catches_errors() {
+        let mut nl = random_netlist(1, 8, 1, &[(4, 2, 2), (2, 2, 3)]);
+        nl.validate().unwrap();
+        nl.layers[1].conn[0] = 99;
+        assert!(nl.validate().is_err());
+        let mut nl2 = random_netlist(2, 8, 1, &[(4, 2, 2)]);
+        nl2.layers[0].tables[3] = 7; // > 2 bits
+        assert!(nl2.validate().is_err());
+    }
+
+    #[test]
+    fn eval_one_identity_chain() {
+        // one unit copying its single input through an identity table
+        let ident = LayerSpec {
+            w: 1,
+            fan_in: 1,
+            in_bits: 2,
+            out_bits: 2,
+            conn: vec![0],
+            tables: vec![0, 1, 2, 3],
+        };
+        let nl = Netlist {
+            name: "id".into(),
+            n_in: 1,
+            in_bits: 2,
+            layers: vec![ident.clone(), ident],
+        };
+        nl.validate().unwrap();
+        for c in 0..4 {
+            assert_eq!(nl.eval_one(&[c]).unwrap(), vec![c]);
+        }
+    }
+
+    #[test]
+    fn eval_batch_matches_eval_one() {
+        let nl = random_netlist(7, 16, 2, &[(12, 3, 2), (6, 2, 1), (3, 2, 4)]);
+        let batch = 33;
+        let x = random_inputs(7, &nl, batch);
+        let got = nl.eval_batch(&x, batch).unwrap();
+        let ow = nl.out_width();
+        for b in 0..batch {
+            let one = nl.eval_one(&x[b * 16..(b + 1) * 16]).unwrap();
+            assert_eq!(&got[b * ow..(b + 1) * ow], &one[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn xor_tree_semantics() {
+        // 4 one-bit inputs -> 2 XOR LUTs -> 1 XOR LUT == parity
+        let xor = vec![0u16, 1, 1, 0];
+        let l0 = LayerSpec {
+            w: 2, fan_in: 2, in_bits: 1, out_bits: 1,
+            conn: vec![0, 1, 2, 3],
+            tables: [xor.clone(), xor.clone()].concat(),
+        };
+        let l1 = LayerSpec {
+            w: 1, fan_in: 2, in_bits: 1, out_bits: 1,
+            conn: vec![0, 1],
+            tables: xor,
+        };
+        let nl = Netlist { name: "par".into(), n_in: 4, in_bits: 1,
+                           layers: vec![l0, l1] };
+        nl.validate().unwrap();
+        for v in 0..16u32 {
+            let x: Vec<i32> = (0..4).map(|i| ((v >> i) & 1) as i32).collect();
+            let parity = (v.count_ones() & 1) as i32;
+            assert_eq!(nl.eval_one(&x).unwrap(), vec![parity], "v={v}");
+        }
+    }
+
+    #[test]
+    fn total_units() {
+        let nl = random_netlist(3, 8, 1, &[(4, 2, 1), (2, 2, 1)]);
+        assert_eq!(nl.total_units(), 6);
+    }
+}

@@ -1,0 +1,310 @@
+//! Batched netlist simulation — the L3 request-path hot loop.
+//!
+//! Two execution strategies per layer:
+//!
+//! * **gather**: signal-major scratch buffers (`prev[signal][batch]`), one
+//!   table read per (unit, sample) with the address assembled from the
+//!   unit's producers.  Works for any layer.
+//! * **bitsliced**: for pure-boolean layers (`in_bits == out_bits == 1`,
+//!   `fan_in <= 6`) each signal is packed 64 samples/word and every unit's
+//!   truth table is evaluated with a Shannon mux-tree over whole words —
+//!   ~64 samples per table evaluation.  This is the FPGA-netlist analogue
+//!   of SIMD bit-parallel simulation and the main §Perf optimization.
+
+use super::{LayerSpec, Netlist};
+
+/// Precomputed bitsliced form of a boolean layer.
+#[derive(Clone, Debug)]
+pub struct BitslicedLayer {
+    pub w: usize,
+    pub fan_in: usize,
+    /// per-unit producer indices
+    conn: Vec<u32>,
+    /// per-unit truth table packed into a u64 (addr bit -> table bit)
+    packed: Vec<u64>,
+}
+
+impl BitslicedLayer {
+    /// Build if the layer qualifies (boolean signals, fan_in <= 6).
+    pub fn try_build(layer: &LayerSpec) -> Option<BitslicedLayer> {
+        if layer.in_bits != 1 || layer.out_bits != 1 || layer.fan_in > 6 {
+            return None;
+        }
+        let packed = (0..layer.w)
+            .map(|u| {
+                let t = layer.unit_table(u);
+                t.iter()
+                    .enumerate()
+                    .fold(0u64, |acc, (addr, &e)| acc | ((e as u64 & 1) << addr))
+            })
+            .collect();
+        Some(BitslicedLayer {
+            w: layer.w,
+            fan_in: layer.fan_in,
+            conn: layer.conn.clone(),
+            packed,
+        })
+    }
+
+    /// Evaluate one unit's truth table over 64 samples at once via a
+    /// Shannon expansion on the packed table.
+    #[inline(always)]
+    fn eval_unit(table: u64, inputs: &[u64]) -> u64 {
+        // mux tree: split on the highest input; cofactors are bit-ranges
+        // of the packed table.  Iterative form: start with 2^F table
+        // "lanes" of 1 bit and combine.
+        match inputs.len() {
+            0 => {
+                if table & 1 == 1 { !0u64 } else { 0u64 }
+            }
+            _ => {
+                let x = inputs[inputs.len() - 1];
+                let half = 1usize << (inputs.len() - 1);
+                let mask = if half >= 64 { !0u64 } else { (1u64 << half) - 1 };
+                let f0 = table & mask;
+                let f1 = (table >> half) & mask;
+                let lo = Self::eval_unit(f0, &inputs[..inputs.len() - 1]);
+                let hi = Self::eval_unit(f1, &inputs[..inputs.len() - 1]);
+                (!x & lo) | (x & hi)
+            }
+        }
+    }
+
+    /// prev: signal-major packed words `[signal][word]`; out likewise.
+    pub fn eval(&self, prev: &[u64], nwords: usize, out: &mut [u64]) {
+        debug_assert_eq!(out.len(), self.w * nwords);
+        let mut ins = [0u64; 6];
+        for u in 0..self.w {
+            let conn = &self.conn[u * self.fan_in..(u + 1) * self.fan_in];
+            let table = self.packed[u];
+            for wd in 0..nwords {
+                for (f, &src) in conn.iter().enumerate() {
+                    ins[f] = prev[src as usize * nwords + wd];
+                }
+                out[u * nwords + wd] =
+                    Self::eval_unit(table, &ins[..self.fan_in]);
+            }
+        }
+    }
+}
+
+enum LayerKernel {
+    Gather,
+    Bitsliced(BitslicedLayer),
+}
+
+/// Reusable-buffer simulator bound to a netlist.
+pub struct Simulator<'a> {
+    nl: &'a Netlist,
+    kernels: Vec<LayerKernel>,
+    /// scratch: signal-major u16 codes
+    buf_a: Vec<u16>,
+    buf_b: Vec<u16>,
+    /// scratch: packed boolean words
+    bits_a: Vec<u64>,
+    bits_b: Vec<u64>,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(nl: &'a Netlist) -> Simulator<'a> {
+        let kernels = nl
+            .layers
+            .iter()
+            .map(|l| match BitslicedLayer::try_build(l) {
+                Some(b) => LayerKernel::Bitsliced(b),
+                None => LayerKernel::Gather,
+            })
+            .collect();
+        Simulator { nl, kernels, buf_a: Vec::new(), buf_b: Vec::new(),
+                    bits_a: Vec::new(), bits_b: Vec::new() }
+    }
+
+    /// How many layers run the bitsliced kernel (introspection for benches).
+    pub fn bitsliced_layers(&self) -> usize {
+        self.kernels
+            .iter()
+            .filter(|k| matches!(k, LayerKernel::Bitsliced(_)))
+            .count()
+    }
+
+    /// Row-major input codes -> row-major output codes.
+    ///
+    /// Representation-aware execution (§Perf, EXPERIMENTS.md): signals stay
+    /// *packed* (64 samples/word) across consecutive bitsliced layers and
+    /// are only materialized as codes at gather-layer boundaries.  The
+    /// first version of this function re-packed/unpacked at every layer
+    /// and was slower than the naive per-sample loop; this one is ~10x
+    /// faster on boolean-dominated netlists.  Small batches skip the
+    /// bitsliced machinery entirely (word packing doesn't amortize).
+    pub fn eval_batch(&mut self, x: &[i32], batch: usize) -> Vec<i32> {
+        assert_eq!(x.len(), batch * self.nl.n_in);
+        let use_bits = batch >= 32;
+        let max_w = self
+            .nl
+            .layers
+            .iter()
+            .map(|l| l.w)
+            .max()
+            .unwrap_or(0)
+            .max(self.nl.n_in);
+        self.buf_a.resize(max_w * batch, 0);
+        self.buf_b.resize(max_w * batch, 0);
+        // transpose input to signal-major
+        for s in 0..self.nl.n_in {
+            for b in 0..batch {
+                self.buf_a[s * batch + b] = x[b * self.nl.n_in + s] as u16;
+            }
+        }
+        let nwords = (batch + 63) / 64;
+        // own the ping-pong buffers locally to keep borrows disjoint
+        let mut cur = std::mem::take(&mut self.buf_a);
+        let mut next = std::mem::take(&mut self.buf_b);
+        let mut bits_cur = std::mem::take(&mut self.bits_a);
+        let mut bits_next = std::mem::take(&mut self.bits_b);
+        let mut packed = false; // is the live value in bits_cur?
+        for (l, layer) in self.nl.layers.iter().enumerate() {
+            let prev_w = if l == 0 { self.nl.n_in } else { self.nl.layers[l - 1].w };
+            match &self.kernels[l] {
+                LayerKernel::Bitsliced(bl) if use_bits => {
+                    if !packed {
+                        // pack codes (0/1) into words once per boolean run
+                        bits_cur.clear();
+                        bits_cur.resize(prev_w * nwords, 0);
+                        for s in 0..prev_w {
+                            let row = &cur[s * batch..(s + 1) * batch];
+                            let dst = &mut bits_cur[s * nwords..(s + 1) * nwords];
+                            for (b, &c) in row.iter().enumerate() {
+                                dst[b / 64] |= ((c & 1) as u64) << (b % 64);
+                            }
+                        }
+                        packed = true;
+                    }
+                    bits_next.clear();
+                    bits_next.resize(bl.w * nwords, 0);
+                    bl.eval(&bits_cur, nwords, &mut bits_next);
+                    std::mem::swap(&mut bits_cur, &mut bits_next);
+                }
+                _ => {
+                    if packed {
+                        // unpack the boolean run's output back to codes
+                        for s in 0..prev_w {
+                            let src = &bits_cur[s * nwords..(s + 1) * nwords];
+                            let row = &mut cur[s * batch..(s + 1) * batch];
+                            for (b, slot) in row.iter_mut().enumerate() {
+                                *slot = ((src[b / 64] >> (b % 64)) & 1) as u16;
+                            }
+                        }
+                        packed = false;
+                    }
+                    let t = layer.entries_per_unit();
+                    for u in 0..layer.w {
+                        let conn = layer.unit_conn(u);
+                        let table = &layer.tables[u * t..(u + 1) * t];
+                        let dst = &mut next[u * batch..(u + 1) * batch];
+                        for b in 0..batch {
+                            let mut addr = 0usize;
+                            for (f, &src) in conn.iter().enumerate() {
+                                addr |= (cur[src as usize * batch + b] as usize)
+                                    << (layer.in_bits * f);
+                            }
+                            dst[b] = table[addr];
+                        }
+                    }
+                    std::mem::swap(&mut cur, &mut next);
+                }
+            }
+        }
+        let ow = self.nl.out_width();
+        if packed {
+            for s in 0..ow {
+                let src = &bits_cur[s * nwords..(s + 1) * nwords];
+                let row = &mut cur[s * batch..(s + 1) * batch];
+                for (b, slot) in row.iter_mut().enumerate() {
+                    *slot = ((src[b / 64] >> (b % 64)) & 1) as u16;
+                }
+            }
+        }
+        // transpose back to row-major
+        let mut out = vec![0i32; batch * ow];
+        for u in 0..ow {
+            for b in 0..batch {
+                out[b * ow + u] = cur[u * batch + b] as i32;
+            }
+        }
+        self.buf_a = cur;
+        self.buf_b = next;
+        self.bits_a = bits_cur;
+        self.bits_b = bits_next;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn bitsliced_eval_unit_matches_table() {
+        // exhaustive over all 2^(2^3) 3-input functions is large; sample
+        for seed in 0..32u64 {
+            let table = seed.wrapping_mul(0x9E3779B97F4A7C15);
+            let masked = table & ((1u64 << 8) - 1);
+            for v in 0..8usize {
+                let ins: Vec<u64> = (0..3)
+                    .map(|f| if (v >> f) & 1 == 1 { !0u64 } else { 0 })
+                    .collect();
+                let got = BitslicedLayer::eval_unit(masked, &ins) & 1;
+                let want = (masked >> v) & 1;
+                assert_eq!(got, want, "table {masked:08b} v {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitsliced_layer_matches_gather() {
+        // boolean netlist: bitsliced path must agree with eval_one
+        let nl = random_netlist(11, 32, 1, &[(16, 6, 1), (8, 2, 1), (4, 2, 1)]);
+        let mut sim = Simulator::new(&nl);
+        assert_eq!(sim.bitsliced_layers(), 3);
+        let batch = 200; // not a multiple of 64: exercises tail handling
+        let x = random_inputs(11, &nl, batch);
+        let got = sim.eval_batch(&x, batch);
+        let ow = nl.out_width();
+        for b in 0..batch {
+            let one = nl.eval_one(&x[b * 32..(b + 1) * 32]).unwrap();
+            assert_eq!(&got[b * ow..(b + 1) * ow], &one[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn mixed_width_netlist_uses_gather() {
+        let nl = random_netlist(13, 16, 2, &[(8, 2, 2), (4, 2, 1), (2, 2, 1)]);
+        let mut sim = Simulator::new(&nl);
+        // first two layers have multi-bit signals -> gather; last is boolean
+        // but fed by 1-bit outputs so it can bitslice
+        assert!(sim.bitsliced_layers() >= 1);
+        let x = random_inputs(13, &nl, 65);
+        let got = sim.eval_batch(&x, 65);
+        for b in 0..65 {
+            let one = nl.eval_one(&x[b * 16..(b + 1) * 16]).unwrap();
+            let ow = nl.out_width();
+            assert_eq!(&got[b * ow..(b + 1) * ow], &one[..]);
+        }
+    }
+
+    #[test]
+    fn simulator_reuse_across_batches() {
+        let nl = random_netlist(17, 8, 1, &[(4, 3, 2), (2, 2, 3)]);
+        let mut sim = nl.simulator();
+        for (seed, batch) in [(1u64, 5usize), (2, 64), (3, 129)] {
+            let x = random_inputs(seed, &nl, batch);
+            let got = sim.eval_batch(&x, batch);
+            let ow = nl.out_width();
+            for b in 0..batch {
+                let one = nl.eval_one(&x[b * 8..(b + 1) * 8]).unwrap();
+                assert_eq!(&got[b * ow..(b + 1) * ow], &one[..]);
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Hardware-aware structured pruning — the "learned mappings" stage.
+//!
+//! Following PolyLUT's extended method (paper §II-F, §III-A): after dense
+//! training with the group-lasso regularizer (which lives in the L2
+//! `train_step_dense` artifact), each learned layer's units keep only
+//! their top-`F` candidate inputs by *group norm* — the l2 norm of all
+//! first-layer weights attached to one (unit, input) pair, including the
+//! skip weight.  The sparse tree model is then retrained from scratch on
+//! the selected connectivity.
+//!
+//! The "w/o Learned Mappings" ablation of Fig. 5 replaces the selection
+//! with seeded random connectivity.
+
+use crate::util::Rng;
+
+/// Group-norm score of every (unit, candidate input) pair of a dense
+/// learned layer.
+///
+/// * `w0_dense`: `[units, p, n_hidden]` flattened row-major
+/// * `wskip_dense`: `[units, p]` flattened row-major
+///
+/// Returns `[units][p]` scores.
+pub fn group_scores(units: usize, p: usize, n_hidden: usize,
+                    w0_dense: &[f32], wskip_dense: &[f32]) -> Vec<Vec<f32>> {
+    assert_eq!(w0_dense.len(), units * p * n_hidden);
+    assert_eq!(wskip_dense.len(), units * p);
+    (0..units)
+        .map(|u| {
+            (0..p)
+                .map(|i| {
+                    let base = (u * p + i) * n_hidden;
+                    let mut acc = 0f64;
+                    for k in 0..n_hidden {
+                        let w = w0_dense[base + k] as f64;
+                        acc += w * w;
+                    }
+                    let s = wskip_dense[u * p + i] as f64;
+                    (acc + s * s).sqrt() as f32
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Keep the top-`f` inputs per unit by score (ties broken by lower index,
+/// result sorted ascending for deterministic wiring).
+pub fn select_top_f(scores: &[Vec<f32>], f: usize) -> Vec<Vec<u32>> {
+    scores
+        .iter()
+        .map(|row| {
+            let mut idx: Vec<u32> = (0..row.len() as u32).collect();
+            idx.sort_by(|&a, &b| {
+                row[b as usize]
+                    .partial_cmp(&row[a as usize])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let mut top: Vec<u32> = idx.into_iter().take(f).collect();
+            top.sort_unstable();
+            top
+        })
+        .collect()
+}
+
+/// Random connectivity baseline (the Fig. 5 "w/o Learned Mappings"
+/// ablation, and the LogicNets-style fixed random sparsity).
+/// Connections are distinct per unit when `p >= f`.
+pub fn random_connections(units: usize, p: usize, f: usize,
+                          rng: &mut Rng) -> Vec<Vec<u32>> {
+    (0..units)
+        .map(|_| {
+            let mut c: Vec<u32> = if f <= p {
+                rng.sample_distinct(p, f).into_iter().map(|i| i as u32).collect()
+            } else {
+                (0..f).map(|_| rng.below(p) as u32).collect()
+            };
+            c.sort_unstable();
+            c
+        })
+        .collect()
+}
+
+/// Fraction of selected connections that land in a reference index set —
+/// used to quantify how well learned mappings find informative inputs
+/// (the paper's NID argument).
+pub fn selection_hit_rate(selected: &[Vec<u32>], reference: &[usize]) -> f64 {
+    let refset: std::collections::HashSet<u32> =
+        reference.iter().map(|&i| i as u32).collect();
+    let total: usize = selected.iter().map(|s| s.len()).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let hits: usize = selected
+        .iter()
+        .flat_map(|s| s.iter())
+        .filter(|&&i| refset.contains(&i))
+        .count();
+    hits as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_scores_math() {
+        // 1 unit, 2 inputs, 2 hidden: input0 weights (3,4), skip 0 -> 5
+        //                             input1 weights (0,0), skip 2 -> 2
+        let s = group_scores(1, 2, 2, &[3.0, 4.0, 0.0, 0.0], &[0.0, 2.0]);
+        assert!((s[0][0] - 5.0).abs() < 1e-6);
+        assert!((s[0][1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_f_selects_largest_sorted() {
+        let scores = vec![vec![0.1, 5.0, 0.3, 4.0, 0.2]];
+        let sel = select_top_f(&scores, 2);
+        assert_eq!(sel[0], vec![1, 3]);
+    }
+
+    #[test]
+    fn top_f_deterministic_on_ties() {
+        let scores = vec![vec![1.0, 1.0, 1.0, 1.0]];
+        assert_eq!(select_top_f(&scores, 2)[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn random_connections_distinct_and_in_range() {
+        let mut rng = Rng::new(1);
+        let conns = random_connections(50, 30, 6, &mut rng);
+        for c in &conns {
+            assert_eq!(c.len(), 6);
+            assert!(c.windows(2).all(|w| w[0] < w[1])); // sorted distinct
+            assert!(c.iter().all(|&i| i < 30));
+        }
+    }
+
+    #[test]
+    fn random_connections_with_repetition_when_f_gt_p() {
+        let mut rng = Rng::new(2);
+        let conns = random_connections(4, 3, 5, &mut rng);
+        for c in &conns {
+            assert_eq!(c.len(), 5);
+            assert!(c.iter().all(|&i| i < 3));
+        }
+    }
+
+    #[test]
+    fn hit_rate() {
+        let sel = vec![vec![0, 1, 2], vec![3, 9]];
+        assert!((selection_hit_rate(&sel, &[0, 1, 3]) - 0.6).abs() < 1e-9);
+        assert_eq!(selection_hit_rate(&[], &[1]), 0.0);
+    }
+
+    #[test]
+    fn learned_beats_random_on_planted_signal() {
+        // scores peaked on a known informative set: selection must hit it
+        let informative: Vec<usize> = (10..16).collect();
+        let scores: Vec<Vec<f32>> = (0..8)
+            .map(|u| {
+                (0..100)
+                    .map(|i| {
+                        if informative.contains(&i) { 2.0 + u as f32 * 0.01 }
+                        else { 0.1 }
+                    })
+                    .collect()
+            })
+            .collect();
+        let sel = select_top_f(&scores, 6);
+        assert!((selection_hit_rate(&sel, &informative) - 1.0).abs() < 1e-9);
+        let mut rng = Rng::new(3);
+        let rand = random_connections(8, 100, 6, &mut rng);
+        assert!(selection_hit_rate(&rand, &informative) < 0.3);
+    }
+}

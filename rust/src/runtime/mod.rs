@@ -1,0 +1,109 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the CPU PJRT client, and
+//! execute them from the coordinator hot paths.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! All entry points were lowered with `return_tuple=True`, so every
+//! execution returns one tuple buffer which is decomposed into per-output
+//! literals.  Argument order is *never* guessed: it comes from
+//! `EntrySpec::args` recorded in meta.json, and `Exec::run` checks arity.
+
+mod tensor;
+
+pub use tensor::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, to_vec_i32, ParamStore};
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::EntrySpec;
+
+/// Shared PJRT CPU client.
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!("PJRT platform: {}", client.platform_name());
+        Ok(Runtime { client: Arc::new(client) })
+    }
+
+    /// Load + compile one artifact entry point.
+    pub fn load(&self, spec: &EntrySpec) -> Result<Exec> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {:?}", spec.file))?;
+        Ok(Exec { exe, spec: spec.clone() })
+    }
+}
+
+/// One compiled executable plus its interface description.
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: EntrySpec,
+}
+
+impl Exec {
+    /// Execute with positional literal arguments (must match
+    /// `spec.args` arity); returns the decomposed output tuple.
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "{}: got {} args, expected {} ({:?}...)",
+                self.spec.name,
+                args.len(),
+                self.spec.args.len(),
+                &self.spec.args[..self.spec.args.len().min(4)]
+            );
+        }
+        let bufs = self.exe.execute::<&xla::Literal>(args)?;
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result tuple")?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, expected {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Assemble the argument list from the entry's recorded token order.
+    /// Tokens: `p:<name>` / `m:` / `v:` (param stores), `c:<name>`
+    /// (connections), `t:<name>` (tables), plain names (step inputs).
+    pub fn run_with<'a, F>(&self, mut resolve: F) -> Result<Vec<xla::Literal>>
+    where
+        F: FnMut(&str) -> Result<&'a xla::Literal>,
+    {
+        let args = self
+            .spec
+            .args
+            .iter()
+            .map(|tok| resolve(tok).with_context(|| format!("arg '{tok}'")))
+            .collect::<Result<Vec<_>>>()?;
+        self.run(&args)
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .outputs
+            .iter()
+            .position(|o| o == name)
+            .with_context(|| format!("{}: no output '{name}'", self.spec.name))
+    }
+}

@@ -1,0 +1,159 @@
+//! Literal helpers and the named parameter store.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::Rng;
+
+/// f32 literal with the given dimensions ([] = scalar).
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_f32: {} elems for dims {dims:?}", data.len());
+    if dims.is_empty() {
+        anyhow::ensure!(data.len() == 1);
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let v = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(v.reshape(&dims_i64)?)
+}
+
+/// i32 literal with the given dimensions.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_i32: {} elems for dims {dims:?}", data.len());
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let v = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(v.reshape(&dims_i64)?)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+pub fn to_vec_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+/// Named tensor store (parameters, optimizer state, connections, tables).
+/// Keeps literals keyed by name; ordering for HLO calls always comes from
+/// the entry's recorded arg list, never from map order.
+pub struct ParamStore {
+    map: BTreeMap<String, xla::Literal>,
+}
+
+impl ParamStore {
+    pub fn new() -> ParamStore {
+        ParamStore { map: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, lit: xla::Literal) {
+        self.map.insert(name.to_string(), lit);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&xla::Literal> {
+        self.map.get(name).with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// He-style initialization mirroring `model.init_params` on the
+    /// python side (exact distributions need not match — training happens
+    /// here in rust — but shapes and magnitudes do).
+    pub fn init_params(spec: &[(String, Vec<usize>)], rng: &mut Rng) -> Result<ParamStore> {
+        let mut store = ParamStore::new();
+        for (name, shape) in spec {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let data: Vec<f32> = if name.ends_with("_logs") {
+                vec![0.0] // scale s = 1.0
+            } else if name.ends_with("_b0")
+                || name.ends_with("_bh")
+                || name.ends_with("_bout")
+            {
+                vec![0.0; n]
+            } else if name.ends_with("_wskip") {
+                let fan_in = *shape.last().unwrap_or(&1) as f32;
+                (0..n).map(|_| rng.normal() * 0.5 / fan_in.sqrt()).collect()
+            } else {
+                // dense weights: He over the contraction dim (last-but-one)
+                let fan_in = if shape.len() >= 2 {
+                    shape[shape.len() - 2] as f32
+                } else {
+                    1.0
+                };
+                (0..n).map(|_| rng.normal() * (2.0 / fan_in).sqrt()).collect()
+            };
+            store.insert(name, lit_f32(&data, shape)?);
+        }
+        Ok(store)
+    }
+
+    /// Zero tensors with the same shapes (Adam moment init).
+    pub fn zeros(spec: &[(String, Vec<usize>)]) -> Result<ParamStore> {
+        let mut store = ParamStore::new();
+        for (name, shape) in spec {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            store.insert(name, lit_f32(&vec![0.0; n], shape)?);
+        }
+        Ok(store)
+    }
+
+    /// Replace tensors from a parallel (names, literals) result slice.
+    pub fn update_from(&mut self, names: &[String], lits: Vec<xla::Literal>) {
+        for (name, lit) in names.iter().zip(lits) {
+            self.map.insert(name.clone(), lit);
+        }
+    }
+
+    /// Deep-copy all f32 tensors to host (checkpoint snapshot).
+    pub fn snapshot(&self) -> Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+        self.map
+            .iter()
+            .map(|(name, lit)| {
+                let dims: Vec<usize> = match lit.shape()? {
+                    xla::Shape::Array(a) => {
+                        a.dims().iter().map(|&d| d as usize).collect()
+                    }
+                    _ => anyhow::bail!("snapshot: non-array tensor {name}"),
+                };
+                Ok((name.clone(), dims, lit.to_vec::<f32>()?))
+            })
+            .collect()
+    }
+
+    /// Restore a snapshot taken with [`ParamStore::snapshot`].
+    pub fn restore(&mut self, snap: &[(String, Vec<usize>, Vec<f32>)]) -> Result<()> {
+        for (name, dims, data) in snap {
+            self.map.insert(name.clone(), lit_f32(data, dims)?);
+        }
+        Ok(())
+    }
+}
+
+impl Default for ParamStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}

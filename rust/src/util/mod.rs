@@ -1,0 +1,61 @@
+//! Shared utilities: deterministic RNG, minimal JSON, small helpers.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// ceil(a / b) for positive integers.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// log2 of the next power of two (>= 1 input).
+pub fn log2_ceil(mut n: usize) -> u32 {
+    let mut bits = 0;
+    let mut cap = 1usize;
+    while cap < n {
+        cap <<= 1;
+        bits += 1;
+
+    }
+    bits
+}
+
+/// Simple wall-clock stopwatch for benches and perf logging.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 5), 1);
+    }
+
+    #[test]
+    fn log2_ceil_cases() {
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(64), 6);
+        assert_eq!(log2_ceil(65), 7);
+    }
+}

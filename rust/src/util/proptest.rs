@@ -1,0 +1,105 @@
+//! Minimal property-based testing harness (the offline vendor set has no
+//! `proptest`, so we provide the 10% of it these suites need): seeded
+//! case generation, `forall`-style runners, and first-failure reporting
+//! with the failing seed so any case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with NLA_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("NLA_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` generated inputs; panic with the failing seed.
+///
+/// `gen` receives a per-case RNG derived from (base_seed, case index); a
+/// failure message names the case seed so `replay` can reproduce it.
+pub fn forall<T, G, P>(name: &str, base_seed: u64, cases: usize,
+                       mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = case_seed(base_seed, case);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Derive the RNG seed of one case (exposed for replay).
+pub fn case_seed(base_seed: u64, case: usize) -> u64 {
+    base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Replay a single failing case.
+pub fn replay<T, G, P>(base_seed: u64, case: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed(base_seed, case));
+    let input = gen(&mut rng);
+    prop(&input).expect("replayed case must now pass");
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn vec_i32(rng: &mut Rng, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..len)
+            .map(|_| lo + rng.below((hi - lo + 1) as usize) as i32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("sum-commutes", 1, 32,
+               |rng| (rng.below(100) as i64, rng.below(100) as i64),
+               |&(a, b)| {
+                   if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+               });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn forall_reports_failures_with_seed() {
+        forall("always-fails", 2, 8, |rng| rng.below(10), |_| Err("no".into()));
+    }
+
+    #[test]
+    fn case_seeds_are_distinct() {
+        let seeds: std::collections::HashSet<u64> =
+            (0..100).map(|c| case_seed(42, c)).collect();
+        assert_eq!(seeds.len(), 100);
+    }
+
+    #[test]
+    fn gen_helpers_bounds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let v = gen::usize_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        let xs = gen::vec_i32(&mut rng, 50, -2, 5);
+        assert!(xs.iter().all(|&x| (-2..=5).contains(&x)));
+    }
+}

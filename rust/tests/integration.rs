@@ -1,0 +1,189 @@
+//! Integration tests over the compiled artifacts + PJRT runtime.
+//!
+//! These require `make artifacts` to have run (meta.json + HLO files);
+//! they are the system-level counterpart of python/tests/test_enumerate.py:
+//! the rust-driven training loop, the enumeration executables, the netlist
+//! simulator and the RTL emitter must all agree.
+//!
+//! The smallest configuration (nid) is used throughout to keep the suite
+//! fast; the full-size configs are exercised by the benches/examples.
+
+use neuralut::config::{Meta, TrainConfig};
+use neuralut::coordinator::{run_flow, FlowOptions, Session};
+use neuralut::dataset::{self, GenOpts};
+use neuralut::mapper::map_netlist;
+use neuralut::rtl;
+use neuralut::runtime::Runtime;
+use neuralut::timing::{evaluate, DelayModel, Pipelining};
+
+fn meta() -> Meta {
+    Meta::load(Meta::default_dir()).expect("run `make artifacts` first")
+}
+
+fn small_gen() -> GenOpts {
+    GenOpts { n_train: 1200, n_test: 400, ..Default::default() }
+}
+
+#[test]
+fn meta_has_all_presets() {
+    let meta = meta();
+    for cfg in ["mnist", "jsc_cb", "jsc_oml", "nid",
+                "fig5_opt1", "fig5_opt2", "fig5_opt3"] {
+        let c = meta.config(cfg).unwrap();
+        assert!(c.entries.contains_key("train_step"), "{cfg}");
+        assert!(c.entries.contains_key("train_step_dense"), "{cfg}");
+        assert!(c.entries.contains_key("infer"), "{cfg}");
+        assert!(c.entries.contains_key("infer_pallas"), "{cfg}");
+        assert!(c.entries.contains_key("lut_infer"), "{cfg}");
+        for l in 0..c.topology.n_layers() {
+            assert!(c.entries.contains_key(&format!("enum_l{l}")), "{cfg} l{l}");
+        }
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_via_pjrt() {
+    let meta = meta();
+    let rt = Runtime::new().unwrap();
+    let cfg = meta.config("nid").unwrap();
+    let splits =
+        dataset::generate("nid", cfg.topology.beta_in, &small_gen()).unwrap();
+    let mut sess = Session::new(&rt, cfg, false, None, 3, 1.0).unwrap();
+    let tc = TrainConfig::sparse(60);
+    let losses = sess.train(&splits.train, &tc).unwrap();
+    let head: f32 = losses[..10].iter().sum::<f32>() / 10.0;
+    let tail: f32 = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(tail < head, "loss did not decrease: {head} -> {tail}");
+}
+
+#[test]
+fn netlist_is_bit_exact_with_pjrt_infer() {
+    // the system-level keystone, on trained (non-random) weights
+    let meta = meta();
+    let rt = Runtime::new().unwrap();
+    let cfg = meta.config("nid").unwrap();
+    let splits =
+        dataset::generate("nid", cfg.topology.beta_in, &small_gen()).unwrap();
+    let mut sess = Session::new(&rt, cfg, false, None, 5, 1.0).unwrap();
+    sess.train(&splits.train, &TrainConfig::sparse(40)).unwrap();
+    let nl = sess.to_netlist().unwrap();
+    nl.validate().unwrap();
+
+    let top = cfg.topology.clone();
+    let idx: Vec<usize> = (0..top.batch.min(splits.test.n)).collect();
+    let (x, _) = splits.test.batch(&idx, top.batch);
+    let pjrt = sess.infer_codes(&x, "infer").unwrap();
+    let net = nl.eval_batch(&x, top.batch).unwrap();
+    assert_eq!(pjrt, net, "netlist must reproduce the PJRT forward exactly");
+}
+
+#[test]
+fn pallas_infer_agrees_with_ref_infer() {
+    // the L1 Pallas kernel path (infer_pallas artifact) must match the
+    // pure-jnp path (infer artifact) on the same trained parameters
+    let meta = meta();
+    let rt = Runtime::new().unwrap();
+    let cfg = meta.config("nid").unwrap();
+    let splits =
+        dataset::generate("nid", cfg.topology.beta_in, &small_gen()).unwrap();
+    let mut sess = Session::new(&rt, cfg, false, None, 9, 1.0).unwrap();
+    sess.train(&splits.train, &TrainConfig::sparse(25)).unwrap();
+    let top = cfg.topology.clone();
+    let idx: Vec<usize> = (0..top.batch.min(splits.test.n)).collect();
+    let (x, _) = splits.test.batch(&idx, top.batch);
+    let a = sess.infer_codes(&x, "infer").unwrap();
+    let b = sess.infer_codes(&x, "infer_pallas").unwrap();
+    assert_eq!(a, b, "pallas and jnp forwards must produce the same codes");
+}
+
+#[test]
+fn skip_ablation_changes_model_but_stays_bit_exact() {
+    let meta = meta();
+    let rt = Runtime::new().unwrap();
+    let cfg = meta.config("nid").unwrap();
+    let splits =
+        dataset::generate("nid", cfg.topology.beta_in, &small_gen()).unwrap();
+    let mut sess = Session::new(&rt, cfg, false, None, 5, 0.0).unwrap();
+    sess.train(&splits.train, &TrainConfig::sparse(25)).unwrap();
+    let nl = sess.to_netlist().unwrap();
+    let top = cfg.topology.clone();
+    let idx: Vec<usize> = (0..top.batch.min(splits.test.n)).collect();
+    let (x, _) = splits.test.batch(&idx, top.batch);
+    let pjrt = sess.infer_codes(&x, "infer").unwrap();
+    let net = nl.eval_batch(&x, top.batch).unwrap();
+    assert_eq!(pjrt, net);
+}
+
+#[test]
+fn full_flow_with_rtl_roundtrip() {
+    let meta = meta();
+    let rt = Runtime::new().unwrap();
+    let opts = FlowOptions {
+        config: "fig5_opt1".into(),
+        dense_steps: 10,
+        sparse_steps: 40,
+        skip_scale: 1.0,
+        seed: 21,
+        gen: small_gen(),
+        emit_rtl: true,
+        verify_bit_exact: true,
+    };
+    let r = run_flow(&rt, &meta, &opts).unwrap();
+    assert_eq!(r.bit_exact, Some(true));
+    let text = r.rtl_text.unwrap();
+    rtl::verify_roundtrip(&text, &r.netlist).unwrap();
+    // mapping + timing sanity
+    assert!(r.mapped.total_luts() > 0);
+    for (_, rep) in &r.reports {
+        assert!(rep.fmax_mhz > 50.0 && rep.latency_ns > 0.1);
+    }
+}
+
+#[test]
+fn learned_mappings_change_connectivity() {
+    let meta = meta();
+    let rt = Runtime::new().unwrap();
+    let cfg = meta.config("nid").unwrap();
+    let splits =
+        dataset::generate("nid", cfg.topology.beta_in, &small_gen()).unwrap();
+    // dense phase
+    let mut dense = Session::new(&rt, cfg, true, None, 5, 1.0).unwrap();
+    dense.train(&splits.train, &TrainConfig::dense(20)).unwrap();
+    let scores = dense.group_scores().unwrap();
+    assert_eq!(scores.len(), dense.learned_layers().len());
+    let top = &cfg.topology;
+    let conns: Vec<Vec<Vec<u32>>> = dense
+        .learned_layers()
+        .iter()
+        .enumerate()
+        .map(|(k, &l)| neuralut::pruning::select_top_f(&scores[k], top.f[l]))
+        .collect();
+    // a random session picks different wiring
+    let rand_sess = Session::new(&rt, cfg, false, None, 5, 1.0).unwrap();
+    let learned_sess =
+        Session::new(&rt, cfg, false, Some(&conns), 5, 1.0).unwrap();
+    assert_ne!(rand_sess.connections[0], learned_sess.connections[0]);
+    // assemble layers always strided
+    assert_eq!(rand_sess.connections[1], learned_sess.connections[1]);
+}
+
+#[test]
+fn mapper_and_timing_on_trained_netlist() {
+    let meta = meta();
+    let rt = Runtime::new().unwrap();
+    let cfg = meta.config("nid").unwrap();
+    let splits =
+        dataset::generate("nid", cfg.topology.beta_in, &small_gen()).unwrap();
+    let mut sess = Session::new(&rt, cfg, false, None, 13, 1.0).unwrap();
+    sess.train(&splits.train, &TrainConfig::sparse(30)).unwrap();
+    let nl = sess.to_netlist().unwrap();
+    let mapped = map_netlist(&nl, true);
+    let raw = map_netlist(&nl, false);
+    // support reduction can only shrink the design
+    assert!(mapped.total_luts() <= raw.total_luts());
+    let dm = DelayModel::default();
+    let p1 = evaluate(&mapped, Pipelining::EveryLayer, &dm);
+    let p3 = evaluate(&mapped, Pipelining::EveryK(3), &dm);
+    assert!(p3.ffs <= p1.ffs);
+    assert!(p3.stages <= p1.stages);
+}

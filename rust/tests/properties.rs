@@ -1,0 +1,251 @@
+//! Property-based test suites over the hardware substrates (no artifacts
+//! needed — these run on randomly generated netlists/tables, 64 cases per
+//! property by default, `NLA_PROP_CASES` to widen).
+
+use neuralut::luts::TruthTable;
+use neuralut::mapper::{map_netlist, plut_cost, plut_depth};
+use neuralut::netlist::testutil::{random_inputs, random_netlist};
+use neuralut::pruning;
+use neuralut::rtl;
+use neuralut::timing::{evaluate, DelayModel, Pipelining};
+use neuralut::util::proptest::{default_cases, forall, gen};
+use neuralut::util::Rng;
+
+/// Random (n_in, in_bits, layer shapes) within substrate limits.
+fn arb_shape(rng: &mut Rng) -> (u64, usize, usize, Vec<(usize, usize, usize)>) {
+    let seed = rng.next_u64();
+    let n_in = gen::usize_in(rng, 4, 24);
+    let in_bits = gen::usize_in(rng, 1, 3);
+    let n_layers = gen::usize_in(rng, 1, 4);
+    let mut shapes = Vec::new();
+    let mut bits = in_bits;
+    for _ in 0..n_layers {
+        let fan_in = gen::usize_in(rng, 1, 3.min(8 / bits));
+        let out_bits = gen::usize_in(rng, 1, 3);
+        let w = gen::usize_in(rng, 1, 12);
+        shapes.push((w, fan_in, out_bits));
+        bits = out_bits;
+    }
+    (seed, n_in, in_bits, shapes)
+}
+
+#[test]
+fn prop_eval_batch_equals_eval_one() {
+    forall("eval_batch == eval_one", 0xA1, default_cases(), arb_shape,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_netlist(seed, n_in, in_bits, shapes);
+        let batch = 1 + (seed % 90) as usize;
+        let x = random_inputs(seed ^ 1, &nl, batch);
+        let got = nl.eval_batch(&x, batch).map_err(|e| e.to_string())?;
+        let ow = nl.out_width();
+        for b in 0..batch {
+            let one = nl
+                .eval_one(&x[b * n_in..(b + 1) * n_in])
+                .map_err(|e| e.to_string())?;
+            if got[b * ow..(b + 1) * ow] != one[..] {
+                return Err(format!("row {b} differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_outputs_in_code_range() {
+    forall("outputs within out_bits", 0xA2, default_cases(), arb_shape,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_netlist(seed, n_in, in_bits, shapes);
+        let x = random_inputs(seed ^ 2, &nl, 40);
+        let out = nl.eval_batch(&x, 40).map_err(|e| e.to_string())?;
+        let max = (1i32 << nl.out_bits()) - 1;
+        if out.iter().all(|&c| c >= 0 && c <= max) {
+            Ok(())
+        } else {
+            Err("code out of range".into())
+        }
+    });
+}
+
+#[test]
+fn prop_rtl_roundtrip_any_netlist() {
+    forall("rtl emit/parse roundtrip", 0xA3, 24, arb_shape,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_netlist(seed, n_in, in_bits, shapes);
+        // random register cuts
+        let mut rng = Rng::new(seed ^ 3);
+        let cuts: Vec<usize> =
+            (0..nl.layers.len()).filter(|_| rng.bernoulli(0.5)).collect();
+        let text = rtl::emit(&nl, &rtl::RtlOptions {
+            cuts,
+            module_name: "prop_top".into(),
+        });
+        rtl::verify_roundtrip(&text, &nl).map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_support_reduction_never_increases_cost() {
+    forall("mapper: optimized <= worst case", 0xA4, default_cases(),
+           arb_shape, |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_netlist(seed, n_in, in_bits, shapes);
+        let opt = map_netlist(&nl, true);
+        let raw = map_netlist(&nl, false);
+        if opt.total_luts() <= raw.total_luts() {
+            Ok(())
+        } else {
+            Err(format!("{} > {}", opt.total_luts(), raw.total_luts()))
+        }
+    });
+}
+
+#[test]
+fn prop_plut_cost_monotone_in_inputs() {
+    for a in 1..14 {
+        assert!(plut_cost(a) <= plut_cost(a + 1), "cost not monotone at {a}");
+        assert!(plut_depth(a) <= plut_depth(a + 1) + 1e-9);
+    }
+}
+
+#[test]
+fn prop_more_pipeline_cuts_more_ffs_fewer_latency_per_stage() {
+    forall("pipelining monotonicity", 0xA5, default_cases(), arb_shape,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_netlist(seed, n_in, in_bits, shapes);
+        let m = map_netlist(&nl, true);
+        let dm = DelayModel::default();
+        let p1 = evaluate(&m, Pipelining::EveryLayer, &dm);
+        let p3 = evaluate(&m, Pipelining::EveryK(3), &dm);
+        let pc = evaluate(&m, Pipelining::None, &dm);
+        if p3.ffs > p1.ffs {
+            return Err("k=3 registered more bits than k=1".into());
+        }
+        if p3.stages > p1.stages {
+            return Err("k=3 produced more stages".into());
+        }
+        if pc.stages != 1 {
+            return Err("combinational must be 1 stage".into());
+        }
+        // single-stage clock can never beat the pipelined clock
+        if pc.fmax_mhz > p1.fmax_mhz + 1e-9 {
+            return Err("combinational fmax exceeded pipelined".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truth_table_support_is_sound() {
+    // perturbing a non-support address bit never changes the output
+    forall("support soundness", 0xA6, default_cases(),
+           |rng| {
+               let fan_in = gen::usize_in(rng, 1, 3);
+               let in_bits = gen::usize_in(rng, 1, 3);
+               let entries = 1usize << (fan_in * in_bits);
+               let t: Vec<u16> =
+                   (0..entries).map(|_| rng.below(4) as u16).collect();
+               (fan_in, in_bits, t)
+           },
+           |&(fan_in, in_bits, ref entries)| {
+        let tt = TruthTable::new(fan_in, in_bits, 2, entries.clone())
+            .map_err(|e| e.to_string())?;
+        for bit in 0..2 {
+            let support = tt.bit_support(bit);
+            let f = tt.output_bit(bit);
+            let a = tt.addr_bits();
+            for v in 0..a {
+                if support.contains(&v) {
+                    continue;
+                }
+                let stride = 1usize << v;
+                for base in 0..entries.len() {
+                    if base & stride == 0 && f[base] != f[base | stride] {
+                        return Err(format!("bit {v} outside support matters"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_top_f_selection_is_argmax_prefix() {
+    forall("top-F == sorted prefix", 0xA7, default_cases(),
+           |rng| {
+               let p = gen::usize_in(rng, 4, 40);
+               let f = gen::usize_in(rng, 1, p.min(8));
+               let scores: Vec<f32> =
+                   (0..p).map(|_| rng.range(0.0, 10.0)).collect();
+               (f, scores)
+           },
+           |&(f, ref scores)| {
+        let sel = pruning::select_top_f(&[scores.clone()], f);
+        let min_sel = sel[0]
+            .iter()
+            .map(|&i| scores[i as usize])
+            .fold(f32::MAX, f32::min);
+        let max_unsel = (0..scores.len() as u32)
+            .filter(|i| !sel[0].contains(i))
+            .map(|i| scores[i as usize])
+            .fold(f32::MIN, f32::max);
+        if sel[0].len() != f {
+            return Err("wrong cardinality".into());
+        }
+        if max_unsel > min_sel + 1e-6 {
+            return Err("non-top element selected".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_server_answers_match_direct_eval_under_random_load() {
+    use neuralut::coordinator::{InferenceServer, ServerConfig};
+    use std::time::Duration;
+    forall("server == direct", 0xA8, 8, arb_shape,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_netlist(seed, n_in, in_bits, shapes);
+        let direct = nl.clone();
+        let mut rng = Rng::new(seed ^ 9);
+        let server = InferenceServer::start(nl, ServerConfig {
+            max_batch: gen::usize_in(&mut rng, 1, 16),
+            max_wait: Duration::from_micros(gen::usize_in(&mut rng, 10, 300) as u64),
+            workers: gen::usize_in(&mut rng, 1, 3),
+        });
+        let n = gen::usize_in(&mut rng, 1, 60);
+        let rows: Vec<Vec<i32>> = (0..n)
+            .map(|i| {
+                let x = random_inputs(seed ^ (100 + i as u64), &direct, 1);
+                x
+            })
+            .collect();
+        let got = server.infer_many(rows.clone()).map_err(|e| e.to_string())?;
+        server.shutdown();
+        for (i, row) in rows.iter().enumerate() {
+            let want = direct.eval_one(row).map_err(|e| e.to_string())?;
+            if got[i] != want {
+                return Err(format!("request {i} wrong"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantizer_consistency_rust_side() {
+    // Dataset::encode_features must agree with the midrise decode used by
+    // the baselines (encode(decode(c)) == c), for all betas in use.
+    forall("rust encode/decode roundtrip", 0xA9, default_cases(),
+           |rng| gen::usize_in(rng, 1, 8),
+           |&beta| {
+        let levels = 1i64 << beta;
+        for c in 0..levels {
+            let v = ((2 * c + 1) as f32 / levels as f32) - 1.0;
+            let back = neuralut::dataset::Dataset::encode_features(&[v], beta);
+            if back[0] as i64 != c {
+                return Err(format!("beta {beta} code {c} -> {}", back[0]));
+            }
+        }
+        Ok(())
+    });
+}
