@@ -32,15 +32,22 @@ fn main() -> Result<()> {
     let r = run_flow(&rt, &meta, &opts)?;
     println!("trained NID netlist: {} L-LUTs, accuracy {}",
              r.netlist.total_units(), pct(r.netlist_acc));
+    {
+        let sim = r.netlist.simulator();
+        println!("simulator kernels: {}/{} layers bit-plane",
+                 sim.bitplane_layers(), r.netlist.layers.len());
+    }
 
-    // sweep batching policies: latency/throughput trade-off
+    // sweep batching policies: latency/throughput trade-off; the last
+    // rows add intra-batch parallelism (sim_threads) on top of batching
     let top = &meta.config("nid")?.topology;
     let splits = dataset::generate(&top.dataset, top.beta_in, &gen)?;
     let test = &splits.test;
-    println!("\n{:<26} {:>12} {:>12} {:>12} {:>10}",
+    println!("\n{:<32} {:>12} {:>12} {:>12} {:>10}",
              "policy", "req/s", "mean us", "p99 us", "acc");
-    for (max_batch, wait_us, workers) in
-        [(1usize, 0u64, 1usize), (16, 100, 2), (64, 200, 2), (256, 500, 2)]
+    for (max_batch, wait_us, workers, sim_threads) in
+        [(1usize, 0u64, 1usize, 1usize), (16, 100, 2, 1), (64, 200, 2, 1),
+         (256, 500, 2, 1), (256, 500, 2, 4)]
     {
         let server = InferenceServer::start(
             r.netlist.clone(),
@@ -48,6 +55,7 @@ fn main() -> Result<()> {
                 max_batch,
                 max_wait: Duration::from_micros(wait_us),
                 workers,
+                sim_threads,
             },
         );
         let n_req = 4000usize;
@@ -64,8 +72,8 @@ fn main() -> Result<()> {
             (0..n_req).map(|i| test.y[i % test.n]).collect();
         let acc = metrics::accuracy(&preds, &labels);
         let (_, _, mean, p99) = server.stats();
-        println!("{:<26} {:>12.0} {:>12.0} {:>12.0} {:>10}",
-                 format!("batch<={max_batch} wait {wait_us}us"),
+        println!("{:<32} {:>12.0} {:>12.0} {:>12.0} {:>10}",
+                 format!("batch<={max_batch} wait {wait_us}us x{sim_threads}t"),
                  n_req as f64 / secs, mean, p99, pct(acc));
         server.shutdown();
     }

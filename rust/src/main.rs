@@ -220,7 +220,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let top = &meta.config(&opts.config)?.topology;
     let splits = neuralut::dataset::generate(&top.dataset, top.beta_in, &opts.gen)?;
-    let server = InferenceServer::start(r.netlist.clone(), ServerConfig::default());
+    {
+        let sim = r.netlist.simulator();
+        println!("simulator kernels: {}/{} layers bit-plane",
+                 sim.bitplane_layers(), r.netlist.layers.len());
+    }
+    let cfg = ServerConfig {
+        max_batch: args.usize_flag("max-batch", 64)?,
+        workers: args.usize_flag("workers", 2)?,
+        sim_threads: args.usize_flag("sim-threads", 1)?,
+        ..ServerConfig::default()
+    };
+    let server = InferenceServer::start(r.netlist.clone(), cfg);
     let sw = Stopwatch::start();
     let rows: Vec<Vec<i32>> = (0..n_req)
         .map(|i| splits.test.row(i % splits.test.n).to_vec())
@@ -256,7 +267,8 @@ fn main() {
                 "neuralut <list|flow|rtl|serve|inspect> --config <name> \
                  [--steps N] [--dense-steps N] [--train N] [--test N] \
                  [--seed N] [--no-skips] [--random-conn] [--augment] \
-                 [--artifacts DIR] [--out FILE] [--requests N]"
+                 [--artifacts DIR] [--out FILE] [--requests N] \
+                 [--max-batch N] [--workers N] [--sim-threads N]"
             );
             Ok(())
         }

@@ -9,12 +9,15 @@
 //! it *is* simulating the FPGA design at the value level.
 //!
 //! The simulator is the L3 serving hot path (see `benches/netlist_hotpath`
-//! and EXPERIMENTS.md §Perf): `eval_batch` uses precomputed address
-//! strides, and a bitsliced kernel accelerates the β=1 layers.
+//! and EXPERIMENTS.md §Hot path): `eval_batch` uses precomputed address
+//! strides, and a bit-plane kernel evaluates every layer whose per-output-
+//! bit support fits a physical LUT — boolean *and* multi-bit — 64 samples
+//! per word, optionally chunked across worker threads.
 
 mod sim;
 
-pub use sim::BitslicedLayer;
+pub use sim::{eval_packed, BitPlaneLayer, KernelChoice, SimOptions,
+              Simulator, MAX_PLANE_SUPPORT};
 
 use anyhow::{bail, Context, Result};
 
@@ -141,6 +144,11 @@ impl Netlist {
         sim::Simulator::new(self)
     }
 
+    /// Persistent simulator with explicit kernel/threading options.
+    pub fn simulator_with(&self, opts: sim::SimOptions) -> sim::Simulator<'_> {
+        sim::Simulator::with_options(self, opts)
+    }
+
     /// Build a netlist from per-layer (conn, tables) data plus widths —
     /// the bridge from the enumeration artifacts.
     #[allow(clippy::too_many_arguments)]
@@ -191,6 +199,75 @@ pub mod testutil {
         }
         let nl = Netlist {
             name: format!("rand{seed}"),
+            n_in,
+            in_bits,
+            layers,
+        };
+        nl.validate().unwrap();
+        nl
+    }
+
+    /// Random netlist whose truth tables have *bounded true support*:
+    /// each output bit depends on at most `max_support` of the unit's raw
+    /// address bits, and is constant with probability 1/8 (zero-support
+    /// planes).  Trained NeuraLUT-Assemble tables look like this after
+    /// pruning — it is exactly the structure that lets the bit-plane
+    /// kernel cover layers whose raw address width exceeds a physical
+    /// LUT.  Used by the sim tests, the property suite and the
+    /// `netlist_hotpath` bench.
+    pub fn random_reducible_netlist(seed: u64, n_in: usize, in_bits: usize,
+                                    layer_shapes: &[(usize, usize, usize)],
+                                    max_support: usize) -> Netlist {
+        assert!(max_support <= 6);
+        let mut rng = Rng::new(seed);
+        let mut prev_w = n_in;
+        let mut prev_bits = in_bits;
+        let mut layers = Vec::new();
+        for &(w, fan_in, out_bits) in layer_shapes {
+            let addr_bits = prev_bits * fan_in;
+            let entries = 1usize << addr_bits;
+            let conn: Vec<u32> = (0..w * fan_in)
+                .map(|_| rng.below(prev_w) as u32)
+                .collect();
+            let mut tables = vec![0u16; w * entries];
+            for u in 0..w {
+                for b in 0..out_bits {
+                    let cap = max_support.min(addr_bits);
+                    let s = if rng.below(8) == 0 || cap == 0 {
+                        0
+                    } else {
+                        1 + rng.below(cap)
+                    };
+                    let support = rng.sample_distinct(addr_bits.max(1), s);
+                    let f = if (1usize << s) >= 64 {
+                        rng.next_u64()
+                    } else {
+                        rng.next_u64() & ((1u64 << (1usize << s)) - 1)
+                    };
+                    for addr in 0..entries {
+                        let mut m = 0usize;
+                        for (i, &v) in support.iter().enumerate() {
+                            m |= ((addr >> v) & 1) << i;
+                        }
+                        if (f >> m) & 1 == 1 {
+                            tables[u * entries + addr] |= 1 << b;
+                        }
+                    }
+                }
+            }
+            layers.push(LayerSpec {
+                w,
+                fan_in,
+                in_bits: prev_bits,
+                out_bits,
+                conn,
+                tables,
+            });
+            prev_w = w;
+            prev_bits = out_bits;
+        }
+        let nl = Netlist {
+            name: format!("reducible{seed}"),
             n_in,
             in_bits,
             layers,

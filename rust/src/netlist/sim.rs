@@ -5,140 +5,385 @@
 //! * **gather**: signal-major scratch buffers (`prev[signal][batch]`), one
 //!   table read per (unit, sample) with the address assembled from the
 //!   unit's producers.  Works for any layer.
-//! * **bitsliced**: for pure-boolean layers (`in_bits == out_bits == 1`,
-//!   `fan_in <= 6`) each signal is packed 64 samples/word and every unit's
-//!   truth table is evaluated with a Shannon mux-tree over whole words —
-//!   ~64 samples per table evaluation.  This is the FPGA-netlist analogue
-//!   of SIMD bit-parallel simulation and the main §Perf optimization.
+//! * **bit-plane**: the layer is decomposed into one boolean function per
+//!   (unit, output bit) — a *plane*.  Each plane's true support is found
+//!   with `TruthTable::bit_support` and the table is projected onto it
+//!   (`TruthTable::reduced_bit_table`), so a plane qualifies whenever its
+//!   *reduced* support fits in [`MAX_PLANE_SUPPORT`] address bits even if
+//!   the raw address width is larger.  Signals are kept packed 64
+//!   samples/word and every plane is evaluated with a Shannon mux-tree
+//!   over whole words — ~64 samples per table evaluation.  Pure-boolean
+//!   layers (the original "bitsliced" kernel) are the β=1 special case;
+//!   see DESIGN.md §Netlist simulator.
+//!
+//! The packed representation survives across consecutive bit-plane layers
+//! (no unpack at multi-bit boundaries — that is what v2 adds over the
+//! boolean-only bitsliced kernel), and evaluation can be chunked across
+//! worker threads per layer ([`SimOptions::threads`], plumbed from
+//! `ServerConfig::sim_threads` on the serving path).
 
 use super::{LayerSpec, Netlist};
 
-/// Precomputed bitsliced form of a boolean layer.
-#[derive(Clone, Debug)]
-pub struct BitslicedLayer {
-    pub w: usize,
-    pub fan_in: usize,
-    /// per-unit producer indices
-    conn: Vec<u32>,
-    /// per-unit truth table packed into a u64 (addr bit -> table bit)
-    packed: Vec<u64>,
+/// Widest reduced support a plane may have and still use the packed
+/// kernel: the reduced table must fit in a `u64` (2^6 entries).  This is
+/// also the physical LUT input width of the target fabric, so trained
+/// tables that map to single P-LUTs always qualify.
+pub const MAX_PLANE_SUPPORT: usize = 6;
+
+/// Raw address widths past this are never worth the support scan.
+const MAX_BUILD_ADDR_BITS: usize = 16;
+
+/// Below this many output words per layer, spawning threads costs more
+/// than it saves and the layer runs single-threaded.
+const PAR_MIN_WORK: usize = 1 << 12;
+
+/// Which kernel a layer was compiled to (introspection for benches and
+/// the server's startup log).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    Gather,
+    BitPlane,
 }
 
-impl BitslicedLayer {
-    /// Build if the layer qualifies (boolean signals, fan_in <= 6).
-    pub fn try_build(layer: &LayerSpec) -> Option<BitslicedLayer> {
-        if layer.in_bits != 1 || layer.out_bits != 1 || layer.fan_in > 6 {
+/// Simulator construction knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptions {
+    /// Compile qualifying layers to the bit-plane kernel (default true;
+    /// disable to measure the gather baseline).
+    pub bitplane: bool,
+    /// Worker threads per `eval_batch` call (1 = single-threaded).
+    /// Layers are chunked over unit ranges with scoped threads, spawned
+    /// per layer per call; `PAR_MIN_WORK` keeps small layers serial so
+    /// spawn cost cannot dominate.  A persistent pool is future work
+    /// (ROADMAP) for very high request rates with small batches.
+    pub threads: usize,
+    /// Smallest batch for which word packing amortizes; below it the
+    /// gather path runs even on bit-plane layers.
+    pub min_bitplane_batch: usize,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { bitplane: true, threads: 1, min_bitplane_batch: 32 }
+    }
+}
+
+/// Evaluate a packed truth table (entry `m` at bit `m`) over 64 samples
+/// at once via Shannon expansion: split on the highest input; cofactors
+/// are bit-ranges of the packed table.
+///
+/// The table must fit in the `u64`: at most [`MAX_PLANE_SUPPORT`] (6)
+/// inputs.  More inputs would need `table >> 64`, which is not a shift
+/// a `u64` can express — enforced unconditionally here (once per call,
+/// not per recursion step).
+#[inline(always)]
+pub fn eval_packed(table: u64, inputs: &[u64]) -> u64 {
+    assert!(inputs.len() <= MAX_PLANE_SUPPORT,
+            "packed table holds at most 2^6 entries");
+    eval_packed_rec(table, inputs)
+}
+
+#[inline(always)]
+fn eval_packed_rec(table: u64, inputs: &[u64]) -> u64 {
+    match inputs.len() {
+        0 => {
+            if table & 1 == 1 { !0u64 } else { 0u64 }
+        }
+        _ => {
+            let x = inputs[inputs.len() - 1];
+            let half = 1usize << (inputs.len() - 1);
+            let mask = (1u64 << half) - 1;
+            let f0 = table & mask;
+            let f1 = (table >> half) & mask;
+            let lo = eval_packed_rec(f0, &inputs[..inputs.len() - 1]);
+            let hi = eval_packed_rec(f1, &inputs[..inputs.len() - 1]);
+            (!x & lo) | (x & hi)
+        }
+    }
+}
+
+/// Precomputed bit-plane form of a layer: per (unit, output bit) a
+/// support-reduced packed table plus the input-plane indices it reads.
+/// Input planes are indexed `producer_signal * in_bits + bit`.
+#[derive(Clone, Debug)]
+pub struct BitPlaneLayer {
+    pub w: usize,
+    pub out_bits: usize,
+    /// per-plane reduced support size (<= MAX_PLANE_SUPPORT)
+    arity: Vec<u8>,
+    /// per-plane reduced truth table packed into a u64
+    tables: Vec<u64>,
+    /// per-plane offset into `srcs`
+    src_off: Vec<u32>,
+    /// concatenated input-plane indices, plane-major
+    srcs: Vec<u32>,
+}
+
+impl BitPlaneLayer {
+    /// Build if every output bit of every unit has reduced support
+    /// <= [`MAX_PLANE_SUPPORT`].  Dead address bits are pruned here, so a
+    /// layer with raw `addr_bits > 6` still qualifies when its trained
+    /// tables ignore enough inputs; constant output bits become
+    /// zero-arity planes.
+    pub fn try_build(layer: &LayerSpec) -> Option<BitPlaneLayer> {
+        if layer.in_bits * layer.fan_in > MAX_BUILD_ADDR_BITS {
             return None;
         }
-        let packed = (0..layer.w)
-            .map(|u| {
-                let t = layer.unit_table(u);
-                t.iter()
-                    .enumerate()
-                    .fold(0u64, |acc, (addr, &e)| acc | ((e as u64 & 1) << addr))
-            })
-            .collect();
-        Some(BitslicedLayer {
+        let planes = layer.w * layer.out_bits;
+        let mut arity = Vec::with_capacity(planes);
+        let mut tables = Vec::with_capacity(planes);
+        let mut src_off = Vec::with_capacity(planes);
+        let mut srcs = Vec::new();
+        for u in 0..layer.w {
+            let tt = layer.truth_table(u);
+            let conn = layer.unit_conn(u);
+            for b in 0..layer.out_bits {
+                let support = tt.bit_support(b);
+                if support.len() > MAX_PLANE_SUPPORT {
+                    return None;
+                }
+                src_off.push(srcs.len() as u32);
+                arity.push(support.len() as u8);
+                tables.push(tt.reduced_bit_table(b, &support));
+                for &v in &support {
+                    let f = v / layer.in_bits;
+                    let k = v % layer.in_bits;
+                    srcs.push(conn[f] * layer.in_bits as u32 + k as u32);
+                }
+            }
+        }
+        Some(BitPlaneLayer {
             w: layer.w,
-            fan_in: layer.fan_in,
-            conn: layer.conn.clone(),
-            packed,
+            out_bits: layer.out_bits,
+            arity,
+            tables,
+            src_off,
+            srcs,
         })
     }
 
-    /// Evaluate one unit's truth table over 64 samples at once via a
-    /// Shannon expansion on the packed table.
-    #[inline(always)]
-    fn eval_unit(table: u64, inputs: &[u64]) -> u64 {
-        // mux tree: split on the highest input; cofactors are bit-ranges
-        // of the packed table.  Iterative form: start with 2^F table
-        // "lanes" of 1 bit and combine.
-        match inputs.len() {
-            0 => {
-                if table & 1 == 1 { !0u64 } else { 0u64 }
-            }
-            _ => {
-                let x = inputs[inputs.len() - 1];
-                let half = 1usize << (inputs.len() - 1);
-                let mask = if half >= 64 { !0u64 } else { (1u64 << half) - 1 };
-                let f0 = table & mask;
-                let f1 = (table >> half) & mask;
-                let lo = Self::eval_unit(f0, &inputs[..inputs.len() - 1]);
-                let hi = Self::eval_unit(f1, &inputs[..inputs.len() - 1]);
-                (!x & lo) | (x & hi)
+    /// Number of output planes (`w * out_bits`).
+    pub fn planes(&self) -> usize {
+        self.w * self.out_bits
+    }
+
+    /// Mean reduced support per plane (introspection).
+    pub fn mean_support(&self) -> f64 {
+        if self.arity.is_empty() {
+            return 0.0;
+        }
+        self.arity.iter().map(|&a| a as usize).sum::<usize>() as f64
+            / self.arity.len() as f64
+    }
+
+    /// Evaluate planes of units `[u0, u1)`.  `prev` holds the producer
+    /// planes (plane-major, `nwords` words each); `out` covers exactly
+    /// this unit range so disjoint ranges can run on separate threads.
+    pub fn eval_units(&self, prev: &[u64], nwords: usize,
+                      u0: usize, u1: usize, out: &mut [u64]) {
+        debug_assert_eq!(out.len(), (u1 - u0) * self.out_bits * nwords);
+        let mut ins = [0u64; MAX_PLANE_SUPPORT];
+        let p0 = u0 * self.out_bits;
+        for p in p0..u1 * self.out_bits {
+            let a = self.arity[p] as usize;
+            let off = self.src_off[p] as usize;
+            let srcs = &self.srcs[off..off + a];
+            let table = self.tables[p];
+            let dst = &mut out[(p - p0) * nwords..(p - p0 + 1) * nwords];
+            for (wd, slot) in dst.iter_mut().enumerate() {
+                for (i, &s) in srcs.iter().enumerate() {
+                    ins[i] = prev[s as usize * nwords + wd];
+                }
+                // arity is capped at build time; skip the entry assert
+                *slot = eval_packed_rec(table, &ins[..a]);
             }
         }
     }
 
-    /// prev: signal-major packed words `[signal][word]`; out likewise.
+    /// Evaluate the whole layer single-threaded.
     pub fn eval(&self, prev: &[u64], nwords: usize, out: &mut [u64]) {
-        debug_assert_eq!(out.len(), self.w * nwords);
-        let mut ins = [0u64; 6];
-        for u in 0..self.w {
-            let conn = &self.conn[u * self.fan_in..(u + 1) * self.fan_in];
-            let table = self.packed[u];
-            for wd in 0..nwords {
-                for (f, &src) in conn.iter().enumerate() {
-                    ins[f] = prev[src as usize * nwords + wd];
-                }
-                out[u * nwords + wd] =
-                    Self::eval_unit(table, &ins[..self.fan_in]);
-            }
-        }
+        self.eval_units(prev, nwords, 0, self.w, out)
     }
 }
 
 enum LayerKernel {
     Gather,
-    Bitsliced(BitslicedLayer),
+    BitPlane(BitPlaneLayer),
+}
+
+/// Pack signal-major codes into bit-planes (64 samples/word):
+/// plane `s * bits + k` holds bit `k` of signal `s`.
+fn pack_planes(cur: &[u16], w: usize, bits: usize, batch: usize,
+               nwords: usize, out: &mut Vec<u64>) {
+    out.clear();
+    out.resize(w * bits * nwords, 0);
+    for s in 0..w {
+        let row = &cur[s * batch..(s + 1) * batch];
+        for (b, &c) in row.iter().enumerate() {
+            let (wd, sh) = (b / 64, b % 64);
+            for k in 0..bits {
+                out[(s * bits + k) * nwords + wd] |=
+                    (((c >> k) & 1) as u64) << sh;
+            }
+        }
+    }
+}
+
+/// Inverse of [`pack_planes`]: reassemble codes from bit-planes.
+fn unpack_planes(planes: &[u64], w: usize, bits: usize, batch: usize,
+                 nwords: usize, cur: &mut [u16]) {
+    for s in 0..w {
+        let row = &mut cur[s * batch..(s + 1) * batch];
+        for (b, slot) in row.iter_mut().enumerate() {
+            let (wd, sh) = (b / 64, b % 64);
+            let mut c = 0u16;
+            for k in 0..bits {
+                c |= (((planes[(s * bits + k) * nwords + wd] >> sh) & 1)
+                    as u16) << k;
+            }
+            *slot = c;
+        }
+    }
+}
+
+/// Gather-kernel evaluation of units `[u0, u1)`; `dst` covers exactly
+/// that unit range (unit-major, `batch` codes per unit).
+fn gather_units(layer: &LayerSpec, cur: &[u16], batch: usize,
+                u0: usize, u1: usize, dst: &mut [u16]) {
+    debug_assert_eq!(dst.len(), (u1 - u0) * batch);
+    let t = layer.entries_per_unit();
+    for u in u0..u1 {
+        let conn = layer.unit_conn(u);
+        let table = &layer.tables[u * t..(u + 1) * t];
+        let row = &mut dst[(u - u0) * batch..(u - u0 + 1) * batch];
+        for (b, slot) in row.iter_mut().enumerate() {
+            let mut addr = 0usize;
+            for (f, &src) in conn.iter().enumerate() {
+                addr |= (cur[src as usize * batch + b] as usize)
+                    << (layer.in_bits * f);
+            }
+            *slot = table[addr];
+        }
+    }
+}
+
+/// How many threads to actually use for a layer of `units` units with
+/// `work` output words/codes total.
+fn par_threads(requested: usize, units: usize, work: usize) -> usize {
+    if requested <= 1 || units < 2 || work < PAR_MIN_WORK {
+        1
+    } else {
+        requested.min(units)
+    }
+}
+
+/// Run `f(u0, u1, dst)` over unit ranges of a layer with `w` units whose
+/// output occupies `stride` elements per unit, fanning the disjoint
+/// `dst` chunks across up to `threads` scoped workers (serial when
+/// `threads <= 1`).  Both kernels share this scaffold so the chunk math
+/// lives in one place.
+fn chunked_units<T: Send, F>(out: &mut [T], w: usize, stride: usize,
+                             threads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(out.len(), w * stride);
+    if threads <= 1 {
+        f(0, w, out);
+        return;
+    }
+    let chunk = (w + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (i, dst) in out.chunks_mut(chunk * stride).enumerate() {
+            let u0 = i * chunk;
+            let u1 = (u0 + chunk).min(w);
+            let f = &f;
+            s.spawn(move || f(u0, u1, dst));
+        }
+    });
 }
 
 /// Reusable-buffer simulator bound to a netlist.
 pub struct Simulator<'a> {
     nl: &'a Netlist,
+    opts: SimOptions,
     kernels: Vec<LayerKernel>,
     /// scratch: signal-major u16 codes
     buf_a: Vec<u16>,
     buf_b: Vec<u16>,
-    /// scratch: packed boolean words
+    /// scratch: packed bit-plane words
     bits_a: Vec<u64>,
     bits_b: Vec<u64>,
 }
 
 impl<'a> Simulator<'a> {
     pub fn new(nl: &'a Netlist) -> Simulator<'a> {
+        Self::with_options(nl, SimOptions::default())
+    }
+
+    /// Build with explicit kernel/threading options (benches use this to
+    /// pin the gather baseline; the server plumbs `sim_threads` here).
+    pub fn with_options(nl: &'a Netlist, opts: SimOptions) -> Simulator<'a> {
         let kernels = nl
             .layers
             .iter()
-            .map(|l| match BitslicedLayer::try_build(l) {
-                Some(b) => LayerKernel::Bitsliced(b),
-                None => LayerKernel::Gather,
+            .map(|l| {
+                if !opts.bitplane {
+                    return LayerKernel::Gather;
+                }
+                match BitPlaneLayer::try_build(l) {
+                    Some(b) => LayerKernel::BitPlane(b),
+                    None => LayerKernel::Gather,
+                }
             })
             .collect();
-        Simulator { nl, kernels, buf_a: Vec::new(), buf_b: Vec::new(),
+        Simulator { nl, opts, kernels, buf_a: Vec::new(), buf_b: Vec::new(),
                     bits_a: Vec::new(), bits_b: Vec::new() }
     }
 
-    /// How many layers run the bitsliced kernel (introspection for benches).
-    pub fn bitsliced_layers(&self) -> usize {
+    /// Change the worker-thread count after construction.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.opts.threads = threads.max(1);
+    }
+
+    /// Per-layer kernel choice (introspection for benches/logs).
+    pub fn layer_kernels(&self) -> Vec<KernelChoice> {
         self.kernels
             .iter()
-            .filter(|k| matches!(k, LayerKernel::Bitsliced(_)))
+            .map(|k| match k {
+                LayerKernel::Gather => KernelChoice::Gather,
+                LayerKernel::BitPlane(_) => KernelChoice::BitPlane,
+            })
+            .collect()
+    }
+
+    /// How many layers compiled to the bit-plane kernel.
+    pub fn bitplane_layers(&self) -> usize {
+        self.kernels
+            .iter()
+            .filter(|k| matches!(k, LayerKernel::BitPlane(_)))
             .count()
+    }
+
+    /// Legacy name for [`Simulator::bitplane_layers`] (the v1 kernel only
+    /// handled boolean layers and was called "bitsliced").
+    pub fn bitsliced_layers(&self) -> usize {
+        self.bitplane_layers()
     }
 
     /// Row-major input codes -> row-major output codes.
     ///
-    /// Representation-aware execution (§Perf, EXPERIMENTS.md): signals stay
-    /// *packed* (64 samples/word) across consecutive bitsliced layers and
-    /// are only materialized as codes at gather-layer boundaries.  The
-    /// first version of this function re-packed/unpacked at every layer
-    /// and was slower than the naive per-sample loop; this one is ~10x
-    /// faster on boolean-dominated netlists.  Small batches skip the
-    /// bitsliced machinery entirely (word packing doesn't amortize).
+    /// Representation-aware execution (EXPERIMENTS.md §Hot path): signals
+    /// stay *packed* (one plane per signal bit, 64 samples/word) across
+    /// consecutive bit-plane layers — including multi-bit ones — and are
+    /// only materialized as codes at gather-layer boundaries.  Small
+    /// batches skip the packed machinery entirely (word packing doesn't
+    /// amortize).  With `opts.threads > 1`, each sufficiently large layer
+    /// is chunked over unit ranges onto scoped threads.
     pub fn eval_batch(&mut self, x: &[i32], batch: usize) -> Vec<i32> {
         assert_eq!(x.len(), batch * self.nl.n_in);
-        let use_bits = batch >= 32;
+        let use_bits = self.opts.bitplane
+            && batch >= self.opts.min_bitplane_batch;
         let max_w = self
             .nl
             .layers
@@ -163,66 +408,49 @@ impl<'a> Simulator<'a> {
         let mut bits_next = std::mem::take(&mut self.bits_b);
         let mut packed = false; // is the live value in bits_cur?
         for (l, layer) in self.nl.layers.iter().enumerate() {
-            let prev_w = if l == 0 { self.nl.n_in } else { self.nl.layers[l - 1].w };
+            let prev_w =
+                if l == 0 { self.nl.n_in } else { self.nl.layers[l - 1].w };
             match &self.kernels[l] {
-                LayerKernel::Bitsliced(bl) if use_bits => {
+                LayerKernel::BitPlane(bl) if use_bits => {
                     if !packed {
-                        // pack codes (0/1) into words once per boolean run
-                        bits_cur.clear();
-                        bits_cur.resize(prev_w * nwords, 0);
-                        for s in 0..prev_w {
-                            let row = &cur[s * batch..(s + 1) * batch];
-                            let dst = &mut bits_cur[s * nwords..(s + 1) * nwords];
-                            for (b, &c) in row.iter().enumerate() {
-                                dst[b / 64] |= ((c & 1) as u64) << (b % 64);
-                            }
-                        }
+                        pack_planes(&cur, prev_w, layer.in_bits, batch,
+                                    nwords, &mut bits_cur);
                         packed = true;
                     }
                     bits_next.clear();
-                    bits_next.resize(bl.w * nwords, 0);
-                    bl.eval(&bits_cur, nwords, &mut bits_next);
+                    bits_next.resize(bl.planes() * nwords, 0);
+                    let t = par_threads(self.opts.threads, bl.w,
+                                        bl.planes() * nwords);
+                    let prev: &[u64] = &bits_cur;
+                    chunked_units(
+                        &mut bits_next[..bl.planes() * nwords], bl.w,
+                        bl.out_bits * nwords, t,
+                        |u0, u1, dst| bl.eval_units(prev, nwords, u0, u1, dst),
+                    );
                     std::mem::swap(&mut bits_cur, &mut bits_next);
                 }
                 _ => {
                     if packed {
-                        // unpack the boolean run's output back to codes
-                        for s in 0..prev_w {
-                            let src = &bits_cur[s * nwords..(s + 1) * nwords];
-                            let row = &mut cur[s * batch..(s + 1) * batch];
-                            for (b, slot) in row.iter_mut().enumerate() {
-                                *slot = ((src[b / 64] >> (b % 64)) & 1) as u16;
-                            }
-                        }
+                        unpack_planes(&bits_cur, prev_w, layer.in_bits,
+                                      batch, nwords, &mut cur);
                         packed = false;
                     }
-                    let t = layer.entries_per_unit();
-                    for u in 0..layer.w {
-                        let conn = layer.unit_conn(u);
-                        let table = &layer.tables[u * t..(u + 1) * t];
-                        let dst = &mut next[u * batch..(u + 1) * batch];
-                        for b in 0..batch {
-                            let mut addr = 0usize;
-                            for (f, &src) in conn.iter().enumerate() {
-                                addr |= (cur[src as usize * batch + b] as usize)
-                                    << (layer.in_bits * f);
-                            }
-                            dst[b] = table[addr];
-                        }
-                    }
+                    let t = par_threads(self.opts.threads, layer.w,
+                                        layer.w * batch);
+                    let prev: &[u16] = &cur;
+                    chunked_units(
+                        &mut next[..layer.w * batch], layer.w, batch, t,
+                        |u0, u1, dst| gather_units(layer, prev, batch, u0, u1,
+                                                   dst),
+                    );
                     std::mem::swap(&mut cur, &mut next);
                 }
             }
         }
         let ow = self.nl.out_width();
         if packed {
-            for s in 0..ow {
-                let src = &bits_cur[s * nwords..(s + 1) * nwords];
-                let row = &mut cur[s * batch..(s + 1) * batch];
-                for (b, slot) in row.iter_mut().enumerate() {
-                    *slot = ((src[b / 64] >> (b % 64)) & 1) as u16;
-                }
-            }
+            unpack_planes(&bits_cur, ow, self.nl.out_bits(), batch, nwords,
+                          &mut cur);
         }
         // transpose back to row-major
         let mut out = vec![0i32; batch * ow];
@@ -244,8 +472,20 @@ mod tests {
     use super::super::testutil::*;
     use super::*;
 
+    fn assert_matches_eval_one(nl: &Netlist, sim: &mut Simulator,
+                               seed: u64, batch: usize) {
+        let x = random_inputs(seed, nl, batch);
+        let got = sim.eval_batch(&x, batch);
+        let ow = nl.out_width();
+        for b in 0..batch {
+            let one =
+                nl.eval_one(&x[b * nl.n_in..(b + 1) * nl.n_in]).unwrap();
+            assert_eq!(&got[b * ow..(b + 1) * ow], &one[..], "row {b}");
+        }
+    }
+
     #[test]
-    fn bitsliced_eval_unit_matches_table() {
+    fn eval_packed_matches_table() {
         // exhaustive over all 2^(2^3) 3-input functions is large; sample
         for seed in 0..32u64 {
             let table = seed.wrapping_mul(0x9E3779B97F4A7C15);
@@ -254,7 +494,7 @@ mod tests {
                 let ins: Vec<u64> = (0..3)
                     .map(|f| if (v >> f) & 1 == 1 { !0u64 } else { 0 })
                     .collect();
-                let got = BitslicedLayer::eval_unit(masked, &ins) & 1;
+                let got = eval_packed(masked, &ins) & 1;
                 let want = (masked >> v) & 1;
                 assert_eq!(got, want, "table {masked:08b} v {v}");
             }
@@ -262,35 +502,77 @@ mod tests {
     }
 
     #[test]
-    fn bitsliced_layer_matches_gather() {
-        // boolean netlist: bitsliced path must agree with eval_one
+    fn boolean_netlist_all_bitplane() {
         let nl = random_netlist(11, 32, 1, &[(16, 6, 1), (8, 2, 1), (4, 2, 1)]);
         let mut sim = Simulator::new(&nl);
-        assert_eq!(sim.bitsliced_layers(), 3);
-        let batch = 200; // not a multiple of 64: exercises tail handling
-        let x = random_inputs(11, &nl, batch);
-        let got = sim.eval_batch(&x, batch);
-        let ow = nl.out_width();
-        for b in 0..batch {
-            let one = nl.eval_one(&x[b * 32..(b + 1) * 32]).unwrap();
-            assert_eq!(&got[b * ow..(b + 1) * ow], &one[..], "row {b}");
-        }
+        assert_eq!(sim.bitplane_layers(), 3);
+        assert_eq!(sim.bitsliced_layers(), 3); // legacy alias
+        // batch not a multiple of 64: exercises tail handling
+        assert_matches_eval_one(&nl, &mut sim, 11, 200);
     }
 
     #[test]
-    fn mixed_width_netlist_uses_gather() {
+    fn mixed_width_netlist_uses_bitplane() {
+        // multi-bit signals, raw addr width 4 <= 6: every layer packs
         let nl = random_netlist(13, 16, 2, &[(8, 2, 2), (4, 2, 1), (2, 2, 1)]);
         let mut sim = Simulator::new(&nl);
-        // first two layers have multi-bit signals -> gather; last is boolean
-        // but fed by 1-bit outputs so it can bitslice
-        assert!(sim.bitsliced_layers() >= 1);
-        let x = random_inputs(13, &nl, 65);
-        let got = sim.eval_batch(&x, 65);
-        for b in 0..65 {
-            let one = nl.eval_one(&x[b * 16..(b + 1) * 16]).unwrap();
-            let ow = nl.out_width();
-            assert_eq!(&got[b * ow..(b + 1) * ow], &one[..]);
+        assert_eq!(sim.bitplane_layers(), 3);
+        assert_eq!(sim.layer_kernels(),
+                   vec![KernelChoice::BitPlane; 3]);
+        assert_matches_eval_one(&nl, &mut sim, 13, 65);
+    }
+
+    #[test]
+    fn wide_address_layer_qualifies_after_support_reduction() {
+        // raw addr width 4*2 = 8 > 6, but true support <= 6 per plane
+        let nl = random_reducible_netlist(
+            19, 12, 2, &[(8, 4, 2), (4, 4, 2), (2, 2, 2)], 6);
+        assert!(nl.layers[0].in_bits * nl.layers[0].fan_in > 6);
+        let mut sim = Simulator::new(&nl);
+        assert_eq!(sim.bitplane_layers(), 3);
+        assert_matches_eval_one(&nl, &mut sim, 19, 130);
+    }
+
+    #[test]
+    fn full_support_wide_layer_falls_back_to_gather() {
+        // random dense tables on 8 address bits: support reduction finds
+        // nothing, so the layer must stay on the gather kernel
+        let nl = random_netlist(23, 16, 4, &[(8, 2, 4), (4, 2, 4)]);
+        let mut sim = Simulator::new(&nl);
+        assert_eq!(sim.bitplane_layers(), 0);
+        assert_matches_eval_one(&nl, &mut sim, 23, 70);
+    }
+
+    #[test]
+    fn constant_output_bits_evaluate_correctly() {
+        // force a constant plane: all table entries share output bit 1
+        let mut nl = random_netlist(29, 8, 1, &[(4, 2, 2), (2, 2, 2)]);
+        for e in nl.layers[0].tables.iter_mut() {
+            *e |= 0b10;
         }
+        let mut sim = Simulator::new(&nl);
+        assert_eq!(sim.bitplane_layers(), 2);
+        assert_matches_eval_one(&nl, &mut sim, 29, 100);
+    }
+
+    #[test]
+    fn gather_only_option_matches() {
+        let nl = random_netlist(17, 16, 2, &[(8, 2, 2), (4, 2, 2)]);
+        let mut sim = Simulator::with_options(
+            &nl, SimOptions { bitplane: false, ..Default::default() });
+        assert_eq!(sim.bitplane_layers(), 0);
+        assert_matches_eval_one(&nl, &mut sim, 17, 96);
+    }
+
+    #[test]
+    fn threaded_eval_matches_serial() {
+        let nl = random_reducible_netlist(
+            37, 24, 2, &[(64, 3, 2), (48, 2, 3), (16, 2, 2)], 6);
+        let mut sim = Simulator::new(&nl);
+        sim.set_threads(4);
+        // batch large enough that PAR_MIN_WORK lets the big layers fan
+        // out, and not a multiple of 64 (tail words in every plane)
+        assert_matches_eval_one(&nl, &mut sim, 37, 2100);
     }
 
     #[test]
@@ -298,12 +580,40 @@ mod tests {
         let nl = random_netlist(17, 8, 1, &[(4, 3, 2), (2, 2, 3)]);
         let mut sim = nl.simulator();
         for (seed, batch) in [(1u64, 5usize), (2, 64), (3, 129)] {
-            let x = random_inputs(seed, &nl, batch);
-            let got = sim.eval_batch(&x, batch);
-            let ow = nl.out_width();
+            assert_matches_eval_one(&nl, &mut sim, seed, batch);
+        }
+    }
+
+    #[test]
+    fn bitplane_layer_direct_eval() {
+        // drive BitPlaneLayer::eval directly on a packed input
+        let nl = random_netlist(41, 6, 2, &[(3, 2, 2)]);
+        let bl = BitPlaneLayer::try_build(&nl.layers[0]).unwrap();
+        assert_eq!(bl.planes(), 6);
+        assert!(bl.mean_support() <= 4.0 + 1e-9);
+        let batch = 64;
+        let x = random_inputs(41, &nl, batch);
+        // pack input codes into planes by hand
+        let nwords = 1;
+        let mut planes = vec![0u64; 6 * 2 * nwords];
+        for s in 0..6 {
             for b in 0..batch {
-                let one = nl.eval_one(&x[b * 8..(b + 1) * 8]).unwrap();
-                assert_eq!(&got[b * ow..(b + 1) * ow], &one[..]);
+                let c = x[b * 6 + s] as u64;
+                for k in 0..2 {
+                    planes[(s * 2 + k) * nwords] |= ((c >> k) & 1) << b;
+                }
+            }
+        }
+        let mut out = vec![0u64; bl.planes() * nwords];
+        bl.eval(&planes, nwords, &mut out);
+        for b in 0..batch {
+            let one = nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap();
+            for u in 0..3 {
+                let mut c = 0i32;
+                for k in 0..2 {
+                    c |= (((out[(u * 2 + k) * nwords] >> b) & 1) as i32) << k;
+                }
+                assert_eq!(c, one[u], "unit {u} row {b}");
             }
         }
     }

@@ -16,8 +16,18 @@ use neuralut::rtl;
 use neuralut::runtime::Runtime;
 use neuralut::timing::{evaluate, DelayModel, Pipelining};
 
-fn meta() -> Meta {
-    Meta::load(Meta::default_dir()).expect("run `make artifacts` first")
+/// Load the compiled-artifact index, or `None` when `make artifacts`
+/// has not run (the suite then skips: these tests need the PJRT runtime
+/// and HLO files, which CI does not build).
+fn meta() -> Option<Meta> {
+    match Meta::load(Meta::default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping PJRT integration test: {e:#} \
+                       (run `make artifacts` first)");
+            None
+        }
+    }
 }
 
 fn small_gen() -> GenOpts {
@@ -25,8 +35,20 @@ fn small_gen() -> GenOpts {
 }
 
 #[test]
+fn artifacts_load_when_required() {
+    // Canary against vacuous green: the other tests skip when artifacts
+    // are absent, which would also silently mask a regression in
+    // `Meta::load` itself.  Artifact-equipped runners set
+    // NLA_REQUIRE_ARTIFACTS=1 to turn a load failure into a hard error.
+    if std::env::var("NLA_REQUIRE_ARTIFACTS").ok().as_deref() == Some("1") {
+        Meta::load(Meta::default_dir())
+            .expect("NLA_REQUIRE_ARTIFACTS=1 but artifacts failed to load");
+    }
+}
+
+#[test]
 fn meta_has_all_presets() {
-    let meta = meta();
+    let Some(meta) = meta() else { return };
     for cfg in ["mnist", "jsc_cb", "jsc_oml", "nid",
                 "fig5_opt1", "fig5_opt2", "fig5_opt3"] {
         let c = meta.config(cfg).unwrap();
@@ -43,7 +65,7 @@ fn meta_has_all_presets() {
 
 #[test]
 fn train_step_reduces_loss_via_pjrt() {
-    let meta = meta();
+    let Some(meta) = meta() else { return };
     let rt = Runtime::new().unwrap();
     let cfg = meta.config("nid").unwrap();
     let splits =
@@ -59,7 +81,7 @@ fn train_step_reduces_loss_via_pjrt() {
 #[test]
 fn netlist_is_bit_exact_with_pjrt_infer() {
     // the system-level keystone, on trained (non-random) weights
-    let meta = meta();
+    let Some(meta) = meta() else { return };
     let rt = Runtime::new().unwrap();
     let cfg = meta.config("nid").unwrap();
     let splits =
@@ -81,7 +103,7 @@ fn netlist_is_bit_exact_with_pjrt_infer() {
 fn pallas_infer_agrees_with_ref_infer() {
     // the L1 Pallas kernel path (infer_pallas artifact) must match the
     // pure-jnp path (infer artifact) on the same trained parameters
-    let meta = meta();
+    let Some(meta) = meta() else { return };
     let rt = Runtime::new().unwrap();
     let cfg = meta.config("nid").unwrap();
     let splits =
@@ -98,7 +120,7 @@ fn pallas_infer_agrees_with_ref_infer() {
 
 #[test]
 fn skip_ablation_changes_model_but_stays_bit_exact() {
-    let meta = meta();
+    let Some(meta) = meta() else { return };
     let rt = Runtime::new().unwrap();
     let cfg = meta.config("nid").unwrap();
     let splits =
@@ -116,7 +138,7 @@ fn skip_ablation_changes_model_but_stays_bit_exact() {
 
 #[test]
 fn full_flow_with_rtl_roundtrip() {
-    let meta = meta();
+    let Some(meta) = meta() else { return };
     let rt = Runtime::new().unwrap();
     let opts = FlowOptions {
         config: "fig5_opt1".into(),
@@ -141,7 +163,7 @@ fn full_flow_with_rtl_roundtrip() {
 
 #[test]
 fn learned_mappings_change_connectivity() {
-    let meta = meta();
+    let Some(meta) = meta() else { return };
     let rt = Runtime::new().unwrap();
     let cfg = meta.config("nid").unwrap();
     let splits =
@@ -169,7 +191,7 @@ fn learned_mappings_change_connectivity() {
 
 #[test]
 fn mapper_and_timing_on_trained_netlist() {
-    let meta = meta();
+    let Some(meta) = meta() else { return };
     let rt = Runtime::new().unwrap();
     let cfg = meta.config("nid").unwrap();
     let splits =

@@ -4,7 +4,9 @@
 
 use neuralut::luts::TruthTable;
 use neuralut::mapper::{map_netlist, plut_cost, plut_depth};
-use neuralut::netlist::testutil::{random_inputs, random_netlist};
+use neuralut::netlist::testutil::{random_inputs, random_netlist,
+                                  random_reducible_netlist};
+use neuralut::netlist::SimOptions;
 use neuralut::pruning;
 use neuralut::rtl;
 use neuralut::timing::{evaluate, DelayModel, Pipelining};
@@ -37,6 +39,86 @@ fn prop_eval_batch_equals_eval_one() {
         let batch = 1 + (seed % 90) as usize;
         let x = random_inputs(seed ^ 1, &nl, batch);
         let got = nl.eval_batch(&x, batch).map_err(|e| e.to_string())?;
+        let ow = nl.out_width();
+        for b in 0..batch {
+            let one = nl
+                .eval_one(&x[b * n_in..(b + 1) * n_in])
+                .map_err(|e| e.to_string())?;
+            if got[b * ow..(b + 1) * ow] != one[..] {
+                return Err(format!("row {b} differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Like `arb_shape` but with wide-address layers whose tables have true
+/// support <= 6 per output bit, so every layer qualifies for the
+/// bit-plane kernel even when `in_bits * fan_in > 6`.  Includes
+/// zero-support (constant) output bits by construction.
+fn arb_reducible(rng: &mut Rng)
+                 -> (u64, usize, usize, Vec<(usize, usize, usize)>) {
+    let seed = rng.next_u64();
+    let n_in = gen::usize_in(rng, 4, 20);
+    let in_bits = gen::usize_in(rng, 1, 3);
+    let n_layers = gen::usize_in(rng, 1, 4);
+    let mut shapes = Vec::new();
+    let mut bits = in_bits;
+    for _ in 0..n_layers {
+        // raw address width up to 9 bits — beyond a physical LUT
+        let fan_in = gen::usize_in(rng, 1, 3.min(9 / bits));
+        let out_bits = gen::usize_in(rng, 1, 3);
+        let w = gen::usize_in(rng, 1, 12);
+        shapes.push((w, fan_in, out_bits));
+        bits = out_bits;
+    }
+    (seed, n_in, in_bits, shapes)
+}
+
+#[test]
+fn prop_bitplane_matches_eval_one_mixed_width() {
+    // the v2 keystone: bit-plane evaluation is bit-exact with eval_one on
+    // random mixed-width netlists, for batches that are not multiples of
+    // 64, with constant output bits present
+    forall("bit-plane == eval_one (mixed width)", 0xB1, default_cases(),
+           arb_reducible, |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_reducible_netlist(seed, n_in, in_bits, shapes, 6);
+        let mut sim = nl.simulator_with(SimOptions {
+            min_bitplane_batch: 1, ..Default::default()
+        });
+        if sim.bitplane_layers() != nl.layers.len() {
+            return Err("a reducible layer fell back to gather".into());
+        }
+        let mut batch = 1 + (seed % 150) as usize;
+        if batch % 64 == 0 {
+            batch += 1;
+        }
+        let x = random_inputs(seed ^ 5, &nl, batch);
+        let got = sim.eval_batch(&x, batch);
+        let ow = nl.out_width();
+        for b in 0..batch {
+            let one = nl
+                .eval_one(&x[b * n_in..(b + 1) * n_in])
+                .map_err(|e| e.to_string())?;
+            if got[b * ow..(b + 1) * ow] != one[..] {
+                return Err(format!("row {b} differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitplane_threaded_matches_eval_one() {
+    forall("threaded bit-plane == eval_one", 0xB2, 24, arb_reducible,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_reducible_netlist(seed, n_in, in_bits, shapes, 6);
+        let mut sim = nl.simulator_with(SimOptions {
+            threads: 4, min_bitplane_batch: 1, ..Default::default()
+        });
+        let batch = 65 + (seed % 200) as usize;
+        let x = random_inputs(seed ^ 6, &nl, batch);
+        let got = sim.eval_batch(&x, batch);
         let ow = nl.out_width();
         for b in 0..batch {
             let one = nl
@@ -211,6 +293,7 @@ fn prop_server_answers_match_direct_eval_under_random_load() {
             max_batch: gen::usize_in(&mut rng, 1, 16),
             max_wait: Duration::from_micros(gen::usize_in(&mut rng, 10, 300) as u64),
             workers: gen::usize_in(&mut rng, 1, 3),
+            sim_threads: gen::usize_in(&mut rng, 1, 2),
         });
         let n = gen::usize_in(&mut rng, 1, 60);
         let rows: Vec<Vec<i32>> = (0..n)

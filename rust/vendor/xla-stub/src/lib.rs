@@ -1,0 +1,272 @@
+//! Offline stub of the `xla` PJRT bindings (the subset of xla-rs, pinned
+//! against xla_extension 0.5.1, that `neuralut::runtime` uses).
+//!
+//! [`Literal`] is a fully functional host tensor (f32/i32 arrays plus
+//! tuples), so everything that only moves data — `lit_f32`, `ParamStore`,
+//! snapshots — works unchanged.  Everything that needs the native
+//! xla_extension library (HLO parsing, compilation, execution) returns
+//! [`Error::unavailable`]; callers see a clean `anyhow` error chain
+//! ("xla_extension not available in this build") instead of a link
+//! failure, and the rest of the crate — simulator, mapper, timing, RTL,
+//! server — stays fully usable.  Point the `xla` dependency in the root
+//! Cargo.toml at the real bindings to enable the PJRT flow.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring xla-rs: displayable, `std::error::Error`, and
+/// convertible into `anyhow::Error` via `?`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: xla_extension not available in this build \
+             (vendored stub; see rust/vendor/xla-stub)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Array shape (dims in i64, xla convention).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Shape of a literal: array or tuple.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host tensor: element data plus dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Element types the stub ferries (the crate only uses f32 and i32).
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[f32]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[i32]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    /// Rank-1 literal.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Tuple literal (what executions return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { data: Data::Tuple(elems), dims: Vec::new() }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Same data, new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("reshape on a tuple literal".into()));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}", self.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out the elements (type must match the stored element type).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error("to_tuple on a non-tuple literal".into())),
+        }
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(match &self.data {
+            Data::Tuple(v) => Shape::Tuple(
+                v.iter()
+                    .map(|l| l.shape())
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            _ => Shape::Array(ArrayShape { dims: self.dims.clone() }),
+        })
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!(
+            "parsing HLO text {:?}", path.as_ref()
+        )))
+    }
+}
+
+/// Computation wrapper (constructible, but compilation always fails).
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device buffer handle returned by executions.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("fetching buffer"))
+    }
+}
+
+/// Compiled executable (never constructible in the stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("executing"))
+    }
+}
+
+/// PJRT client.  `cpu()` succeeds so hosts can construct a `Runtime` and
+/// report the (stubbed) platform; loading/compiling artifacts is what
+/// fails, with a message naming this stub.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (xla_extension unavailable)".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compiling"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        match r.shape().unwrap() {
+            Shape::Array(a) => assert_eq!(a.dims(), &[2, 2]),
+            _ => panic!("not an array"),
+        }
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::scalar(1i32),
+                                    Literal::scalar(2.0f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn native_paths_unavailable() {
+        assert!(HloModuleProto::from_text_file("/nope.hlo").is_err());
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+    }
+}
