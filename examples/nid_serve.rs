@@ -1,6 +1,10 @@
-//! Deployment scenario: network-intrusion detection behind the
-//! dynamic-batching inference server (the L3 request path — pure table
-//! lookups, python nowhere in sight).
+//! Deployment scenario: a production box serving *several* LUT networks
+//! at once — network-intrusion detection and jet classification behind
+//! one multi-model dynamic-batching inference server (the L3 request
+//! path — pure table lookups, python nowhere in sight).  Each model
+//! carries its own batching policy: the NID stream is latency-sensitive
+//! (small batches, short waits) while the jet stream favors throughput
+//! (large batches, longer waits).
 //!
 //!     cargo run --release --example nid_serve
 
@@ -9,72 +13,144 @@ use std::time::Duration;
 use anyhow::Result;
 
 use neuralut::config::Meta;
-use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer, ServerConfig};
+use neuralut::coordinator::{run_flow, BatchPolicy, FlowOptions,
+                            InferenceEngine, InferenceServer,
+                            ModelRegistry, ServerConfig};
 use neuralut::dataset::{self, GenOpts};
 use neuralut::metrics;
+use neuralut::netlist::Netlist;
 use neuralut::report::pct;
 use neuralut::runtime::Runtime;
 
-fn main() -> Result<()> {
-    let meta = Meta::load(Meta::default_dir())?;
-    let rt = Runtime::new()?;
-    let gen = GenOpts { n_train: 8000, n_test: 2000, ..Default::default() };
+/// One trained model plus the request stream and accuracy labels that
+/// drive it.
+struct Workload {
+    name: &'static str,
+    netlist: Netlist,
+    rows: Vec<Vec<i32>>,
+    labels: Vec<i32>,
+    /// binary threshold (NID) or None for argmax heads (jet)
+    binary_thr: Option<i32>,
+}
+
+fn train(rt: &Runtime, meta: &Meta, name: &'static str, dense: usize,
+         sparse: usize, gen: &GenOpts, n_req: usize) -> Result<Workload> {
     let opts = FlowOptions {
-        config: "nid".into(),
-        dense_steps: 300,
-        sparse_steps: 800,
+        config: name.into(),
+        dense_steps: dense,
+        sparse_steps: sparse,
         skip_scale: 1.0,
         seed: 7,
         gen: gen.clone(),
         emit_rtl: false,
         verify_bit_exact: false,
     };
-    let r = run_flow(&rt, &meta, &opts)?;
-    println!("trained NID netlist: {} L-LUTs, accuracy {}",
+    let r = run_flow(rt, meta, &opts)?;
+    println!("trained {name} netlist: {} L-LUTs, accuracy {}",
              r.netlist.total_units(), pct(r.netlist_acc));
     {
-        let sim = r.netlist.simulator();
-        println!("simulator kernels: {}/{} layers bit-plane",
-                 sim.bitplane_layers(), r.netlist.layers.len());
+        let mut sim = r.netlist.simulator();
+        use neuralut::coordinator::check_conformance;
+        check_conformance(&mut sim, &r.netlist, 7)?;
+        println!("  {}", sim.describe());
     }
-
-    // sweep batching policies: latency/throughput trade-off; the last
-    // rows add intra-batch parallelism (sim_threads) on top of batching
-    let top = &meta.config("nid")?.topology;
-    let splits = dataset::generate(&top.dataset, top.beta_in, &gen)?;
+    let top = &meta.config(name)?.topology;
+    let splits = dataset::generate(&top.dataset, top.beta_in, gen)?;
     let test = &splits.test;
-    println!("\n{:<32} {:>12} {:>12} {:>12} {:>10}",
-             "policy", "req/s", "mean us", "p99 us", "acc");
-    for (max_batch, wait_us, workers, sim_threads) in
-        [(1usize, 0u64, 1usize, 1usize), (16, 100, 2, 1), (64, 200, 2, 1),
-         (256, 500, 2, 1), (256, 500, 2, 4)]
-    {
+    let rows: Vec<Vec<i32>> =
+        (0..n_req).map(|i| test.row(i % test.n).to_vec()).collect();
+    let labels: Vec<i32> = (0..n_req).map(|i| test.y[i % test.n]).collect();
+    let binary_thr = if top.dataset == "nid" {
+        Some((1 << (top.beta.last().unwrap() - 1)) as i32)
+    } else {
+        None
+    };
+    Ok(Workload { name, netlist: r.netlist, rows, labels, binary_thr })
+}
+
+fn main() -> Result<()> {
+    let meta = Meta::load(Meta::default_dir())?;
+    let rt = Runtime::new()?;
+    let gen = GenOpts { n_train: 8000, n_test: 2000, ..Default::default() };
+    let n_req = 4000usize;
+    let nid = train(&rt, &meta, "nid", 300, 800, &gen, n_req)?;
+    let jet = train(&rt, &meta, "jsc_cb", 200, 500, &gen, n_req)?;
+
+    // sweep batching policies per model: the NID stream stays
+    // latency-tuned while the jet stream trades wait for occupancy
+    println!("\n{:<14} {:<26} {:>10} {:>9} {:>8} {:>8} {:>9} {:>8}",
+             "model", "policy", "req/s", "occupancy", "mean us", "p99 us",
+             "p999 us", "acc");
+    for (nid_pol, jet_pol, sim_threads) in [
+        (BatchPolicy { max_batch: 16,
+                       max_wait: Duration::from_micros(100) },
+         BatchPolicy { max_batch: 64,
+                       max_wait: Duration::from_micros(200) },
+         1usize),
+        (BatchPolicy { max_batch: 16,
+                       max_wait: Duration::from_micros(100) },
+         BatchPolicy { max_batch: 256,
+                       max_wait: Duration::from_micros(500) },
+         1),
+        (BatchPolicy { max_batch: 64,
+                       max_wait: Duration::from_micros(200) },
+         BatchPolicy { max_batch: 256,
+                       max_wait: Duration::from_micros(500) },
+         4),
+    ] {
+        let mut registry = ModelRegistry::new();
+        registry
+            .register_with(nid.name, nid.netlist.clone(), Some(nid_pol))
+            .register_with(jet.name, jet.netlist.clone(), Some(jet_pol));
         let server = InferenceServer::start(
-            r.netlist.clone(),
-            ServerConfig {
-                max_batch,
-                max_wait: Duration::from_micros(wait_us),
-                workers,
-                sim_threads,
-            },
+            registry,
+            ServerConfig { workers: 2, sim_threads,
+                           ..ServerConfig::default() },
         );
-        let n_req = 4000usize;
-        let rows: Vec<Vec<i32>> =
-            (0..n_req).map(|i| test.row(i % test.n).to_vec()).collect();
+        // both models' clients hammer the shared router concurrently
+        let nid_rows = nid.rows.clone();
+        let jet_rows = jet.rows.clone();
         let t = std::time::Instant::now();
-        let outs = server.infer_many(rows)?;
+        let (outs_nid, outs_jet) = std::thread::scope(|s| {
+            let h_nid = {
+                let server = &server;
+                s.spawn(move || server.infer_many(nid.name, nid_rows))
+            };
+            let h_jet = {
+                let server = &server;
+                s.spawn(move || server.infer_many(jet.name, jet_rows))
+            };
+            (h_nid.join().expect("nid client panicked"),
+             h_jet.join().expect("jet client panicked"))
+        });
         let secs = t.elapsed().as_secs_f64();
-        // accuracy of served answers
-        let thr = (1 << (top.beta.last().unwrap() - 1)) as i32;
-        let preds: Vec<i32> =
-            outs.iter().map(|row| (row[0] >= thr) as i32).collect();
-        let labels: Vec<i32> =
-            (0..n_req).map(|i| test.y[i % test.n]).collect();
-        let acc = metrics::accuracy(&preds, &labels);
-        let (_, _, mean, p99) = server.stats();
-        println!("{:<32} {:>12.0} {:>12.0} {:>12.0} {:>10}",
-                 format!("batch<={max_batch} wait {wait_us}us x{sim_threads}t"),
-                 n_req as f64 / secs, mean, p99, pct(acc));
+        let (outs_nid, outs_jet) = (outs_nid?, outs_jet?);
+        for w in [&nid, &jet] {
+            let outs = if w.binary_thr.is_some() { &outs_nid } else { &outs_jet };
+            let preds: Vec<i32> = match w.binary_thr {
+                Some(thr) => {
+                    outs.iter().map(|row| (row[0] >= thr) as i32).collect()
+                }
+                None => metrics::argmax_rows(&outs.concat(),
+                                             w.netlist.out_width()),
+            };
+            let acc = metrics::accuracy(&preds, &w.labels);
+            let st = server.model_stats(w.name)?;
+            let pol = if w.binary_thr.is_some() { nid_pol } else { jet_pol };
+            println!(
+                "{:<14} {:<26} {:>10.0} {:>9.1} {:>8.0} {:>8.0} {:>9.0} \
+                 {:>8}",
+                w.name,
+                format!("batch<={} wait {}us x{}t", pol.max_batch,
+                        pol.max_wait.as_micros(), sim_threads),
+                st.requests as f64 / secs,
+                st.mean_occupancy,
+                st.latency.mean,
+                st.latency.p99,
+                st.latency.p999,
+                pct(acc),
+            );
+        }
         server.shutdown();
     }
     Ok(())

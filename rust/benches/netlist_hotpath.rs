@@ -9,7 +9,7 @@ use std::time::Instant;
 use neuralut::coordinator::{InferenceServer, ServerConfig};
 use neuralut::netlist::testutil::{random_inputs, random_netlist,
                                   random_reducible_netlist};
-use neuralut::netlist::{Netlist, SimOptions};
+use neuralut::netlist::{Netlist, SimOptions, ThreadMode};
 use neuralut::report::Table;
 
 fn median(mut xs: Vec<f64>) -> f64 {
@@ -108,6 +108,41 @@ fn main() {
                 SimOptions { threads, ..Default::default() }, 4096);
     }
 
+    // persistent pool vs per-call scoped spawning.  Small batches are
+    // the regime the pool exists for: a scoped spawn never amortizes
+    // there (the scoped path stays serial below its work floor), while
+    // waking parked workers does.  At large batch both modes fan out
+    // identically and the pool only saves the per-layer spawn/join.
+    let pooled = |threads| SimOptions {
+        threads, mode: ThreadMode::Pooled, ..Default::default()
+    };
+    let scoped = |threads| SimOptions {
+        threads, mode: ThreadMode::Scoped, ..Default::default()
+    };
+    let mut small_batch_speedup = 0.0;
+    for batch in [16usize, 64] {
+        for threads in [2usize, 4] {
+            let ts = sim_row(
+                &mut table,
+                &format!("mnist-like scoped x{threads}t"),
+                &mnist_like, scoped(threads), batch);
+            let tp = sim_row(
+                &mut table,
+                &format!("mnist-like pooled x{threads}t"),
+                &mnist_like, pooled(threads), batch);
+            if batch == 64 && threads == 2 {
+                small_batch_speedup = ts / tp;
+            }
+        }
+    }
+    let big = cores.max(2);
+    let ts_large = sim_row(&mut table,
+                           &format!("mnist-like scoped x{big}t"),
+                           &mnist_like, scoped(big), 4096);
+    let tp_large = sim_row(&mut table,
+                           &format!("mnist-like pooled x{big}t"),
+                           &mnist_like, pooled(big), 4096);
+
     // per-sample eval_one (the naive baseline the batched path replaced)
     {
         let batch = 1024usize;
@@ -130,21 +165,24 @@ fn main() {
 
     // batching server end-to-end (threads + channels + sim)
     for sim_threads in [1usize, 2] {
-        let server = InferenceServer::start(
+        let server = InferenceServer::start_single(
             mnist_like.clone(),
             ServerConfig { sim_threads, ..Default::default() });
+        let model = server.default_model().to_string();
         let n = 4096usize;
         let rows: Vec<Vec<i32>> = {
             let x = random_inputs(11, &mnist_like, n);
             (0..n).map(|b| x[b * 784..(b + 1) * 784].to_vec()).collect()
         };
         let t = Instant::now();
-        server.infer_many(rows).unwrap();
+        server.infer_many(&model, rows).unwrap();
         let secs = t.elapsed().as_secs_f64();
-        let (_, batches, mean, p99) = server.stats();
+        let st = server.model_stats(&model).unwrap();
         table.row(&[
-            format!("server e2e x{sim_threads}t ({batches} batches, \
-                     mean {mean:.0}us p99 {p99:.0}us)"),
+            format!("server e2e x{sim_threads}t ({} batches, occ {:.0}, \
+                     mean {:.0}us p99 {:.0}us p999 {:.0}us)",
+                    st.batches, st.mean_occupancy, st.latency.mean,
+                    st.latency.p99, st.latency.p999),
             n.to_string(),
             format!("{:.1} ms", secs * 1e3),
             format!("{:.2} Msamples/s", n as f64 / secs / 1e6),
@@ -160,4 +198,14 @@ fn main() {
     // eval), so runner noise cannot plausibly eat a 3x cushion.
     assert!(speedup_256 >= 2.0,
             "bit-plane speedup {speedup_256:.2}x fell below the 2x floor");
+    println!("pooled vs scoped workers @ batch 64 x2t: \
+              {small_batch_speedup:.2}x (pool wakes where a spawn never \
+              amortizes)");
+    println!("pooled vs scoped workers @ batch 4096 x{big}t: {:.2}x",
+             ts_large / tp_large);
+    // the pool must never lose at large batch (identical chunking, no
+    // spawn/join); generous slack absorbs CI runner noise
+    assert!(tp_large <= ts_large * 1.25,
+            "pooled large-batch eval {:.1}us regressed past scoped {:.1}us",
+            tp_large * 1e6, ts_large * 1e6);
 }

@@ -1,0 +1,152 @@
+//! Backend-agnostic inference interface (the `Session` shape from
+//! deli-infer, specialized to LUT netlists): anything that can answer a
+//! batch of code-valued rows implements [`InferenceEngine`], so
+//! batching, pooling and multi-model routing compose behind one run
+//! interface instead of being welded to a concrete server.
+//!
+//! Implementations:
+//! * [`Simulator`] — the direct in-process path (serial, scoped-thread
+//!   or persistent-pool, per its `SimOptions`);
+//! * [`ModelEngine`] — one named model hosted by an
+//!   [`InferenceServer`](super::server::InferenceServer), routed through
+//!   the shared router/worker pipeline.
+//!
+//! [`check_conformance`] is the engine contract as executable code; the
+//! `engine` integration suite runs it against every backend.
+
+use anyhow::Result;
+
+use crate::netlist::{Netlist, Simulator};
+
+use super::server::InferenceServer;
+
+/// A backend that evaluates batches of netlist inputs.
+pub trait InferenceEngine {
+    /// Row-major input codes (`batch * n_in` values) to row-major output
+    /// codes (`batch * out_width` values).
+    fn run_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<i32>>;
+
+    /// Input width (codes per row).
+    fn n_in(&self) -> usize;
+
+    /// Output width (codes per row).
+    fn out_width(&self) -> usize;
+
+    /// Human-readable backend description for startup logs.
+    fn describe(&self) -> String;
+}
+
+impl InferenceEngine for Simulator<'_> {
+    fn run_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<i32>> {
+        let n_in = self.netlist().n_in;
+        anyhow::ensure!(x.len() == batch * n_in,
+                        "run_batch: input len {} != batch {batch} * n_in \
+                         {n_in}", x.len());
+        Ok(self.eval_batch(x, batch))
+    }
+
+    fn n_in(&self) -> usize {
+        self.netlist().n_in
+    }
+
+    fn out_width(&self) -> usize {
+        self.netlist().out_width()
+    }
+
+    fn describe(&self) -> String {
+        let opts = self.options();
+        format!("simulator[{}]: {}/{} layers bit-plane, {} threads ({:?})",
+                self.netlist().name, self.bitplane_layers(),
+                self.netlist().layers.len(), opts.threads, opts.mode)
+    }
+}
+
+/// One named model on a running [`InferenceServer`], viewed as an
+/// engine: `run_batch` fans the rows through the server's router (so
+/// they may be re-batched with concurrent traffic) and reassembles the
+/// answers in order.
+pub struct ModelEngine<'s> {
+    pub(crate) server: &'s InferenceServer,
+    pub(crate) model: String,
+    pub(crate) n_in: usize,
+    pub(crate) out_width: usize,
+}
+
+impl InferenceEngine for ModelEngine<'_> {
+    fn run_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<i32>> {
+        anyhow::ensure!(x.len() == batch * self.n_in,
+                        "run_batch: input len {} != batch {batch} * n_in {}",
+                        x.len(), self.n_in);
+        if batch == 0 {
+            return Ok(Vec::new());
+        }
+        let rows: Vec<Vec<i32>> =
+            x.chunks(self.n_in).map(|r| r.to_vec()).collect();
+        let outs = self.server.infer_many(&self.model, rows)?;
+        Ok(outs.concat())
+    }
+
+    fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    fn out_width(&self) -> usize {
+        self.out_width
+    }
+
+    fn describe(&self) -> String {
+        format!("server model '{}': n_in {}, out_width {}", self.model,
+                self.n_in, self.out_width)
+    }
+}
+
+/// Engine-conformance suite, shared by every backend's tests: shape
+/// agreement with the netlist, bit-exactness against `eval_one` across
+/// batch sizes (including sizes that are not multiples of 64),
+/// determinism across repeated calls, and input-width rejection.
+pub fn check_conformance(engine: &mut dyn InferenceEngine, nl: &Netlist,
+                         seed: u64) -> Result<()> {
+    use crate::netlist::testutil::random_inputs;
+
+    anyhow::ensure!(engine.n_in() == nl.n_in,
+                    "n_in {} != netlist {}", engine.n_in(), nl.n_in);
+    anyhow::ensure!(engine.out_width() == nl.out_width(),
+                    "out_width {} != netlist {}", engine.out_width(),
+                    nl.out_width());
+    anyhow::ensure!(!engine.describe().is_empty(), "empty describe()");
+    let ow = nl.out_width();
+    for (i, batch) in [1usize, 5, 64, 130].into_iter().enumerate() {
+        let x = random_inputs(seed.wrapping_add(i as u64), nl, batch);
+        let got = engine.run_batch(&x, batch)?;
+        anyhow::ensure!(got.len() == batch * ow,
+                        "batch {batch}: output len {} != {}", got.len(),
+                        batch * ow);
+        for b in 0..batch {
+            let want = nl.eval_one(&x[b * nl.n_in..(b + 1) * nl.n_in])?;
+            anyhow::ensure!(got[b * ow..(b + 1) * ow] == want[..],
+                            "batch {batch}: row {b} differs from eval_one");
+        }
+        let again = engine.run_batch(&x, batch)?;
+        anyhow::ensure!(again == got,
+                        "batch {batch}: repeated call not deterministic");
+    }
+    // wrong input length must be rejected, not mis-shaped
+    let x = random_inputs(seed ^ 0x77, nl, 2);
+    anyhow::ensure!(engine.run_batch(&x[..x.len() - 1], 2).is_err(),
+                    "short input accepted");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::testutil::random_netlist;
+
+    #[test]
+    fn direct_simulator_conforms() {
+        let nl = random_netlist(51, 10, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let mut sim = nl.simulator();
+        check_conformance(&mut sim, &nl, 51).unwrap();
+        assert!(sim.describe().contains("simulator"));
+    }
+}

@@ -7,14 +7,21 @@
 //!   sub-network → L-LUT conversion, netlist extraction + bit-exactness
 //!   verification, technology mapping, timing under both pipelining
 //!   strategies, and RTL emission.
-//! * [`server`] — a dynamic-batching inference server over the bit-exact
-//!   netlist simulator (the deployment-side story of an ultra-low-latency
-//!   NN: requests are answered by pure table lookups).
+//! * [`engine`] — the backend-agnostic [`InferenceEngine`] run
+//!   interface (direct simulator or a server-hosted model) plus the
+//!   conformance suite every backend must pass.
+//! * [`server`] — a multi-model dynamic-batching inference server over
+//!   the bit-exact netlist simulator (the deployment-side story of an
+//!   ultra-low-latency NN: named models behind shared router/worker
+//!   threads, answered by pure table lookups).
 
+pub mod engine;
 pub mod flow;
 pub mod server;
 mod session;
 
+pub use engine::{check_conformance, InferenceEngine, ModelEngine};
 pub use flow::{run_flow, FlowOptions, FlowResult};
-pub use server::{InferenceServer, ServerConfig};
+pub use server::{BatchPolicy, InferenceServer, ModelRegistry, ModelStats,
+                 ServerConfig};
 pub use session::Session;

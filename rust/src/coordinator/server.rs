@@ -1,21 +1,32 @@
-//! Dynamic-batching inference server over the bit-exact netlist simulator.
+//! Multi-model dynamic-batching inference server over the bit-exact
+//! netlist simulator.
 //!
-//! Deployment story of an ultra-low-latency LUT network: the "FPGA" (our
-//! simulator) answers classification requests.  A router thread collects
-//! requests into batches — dispatching either when `max_batch` is reached
-//! or when the oldest waiting request exceeds `max_wait`, the standard
-//! latency/throughput knob — and worker threads evaluate batches on their
-//! own simulator instances (each with `sim_threads` evaluation threads,
-//! so one big batch can fan out across cores).  Python is nowhere on this
-//! path.
+//! Deployment story of an always-on LUT-inference "FPGA": one server
+//! process hosts every deployed model — the paper family targets NID,
+//! jet classification and MNIST side by side — behind shared router and
+//! worker threads.  A [`ModelRegistry`] names the netlists; requests are
+//! routed by model name, batched *per model* (a batch never mixes
+//! models), and dispatched when a model's `max_batch` is reached or its
+//! oldest waiting request exceeds its `max_wait` — each model can carry
+//! its own [`BatchPolicy`].  Worker threads own one simulator per model
+//! (each with `sim_threads` evaluation threads on the persistent
+//! in-simulator worker pool, so one big batch fans out across cores)
+//! and publish per-model latency ([`LatencyStats`]) and batch-occupancy
+//! ([`BatchStats`]) statistics.  Python is nowhere on this path.
+//!
+//! The router blocks on the request channel with a timeout equal to the
+//! earliest pending batch deadline — no spin-waiting — so an idle or
+//! half-loaded server burns no CPU between dispatches.
 //!
 //! # Shutdown protocol
 //!
-//! [`InferenceServer::shutdown`] stops the pipeline in two tiers:
+//! [`InferenceServer::shutdown`] (idempotent, callable through a shared
+//! reference — e.g. an `Arc` handed to client threads) stops the
+//! pipeline in two tiers:
 //!
 //! 1. the request sender is dropped and the router is joined.  The
 //!    router observes the disconnect (setting the shared `stop` flag
-//!    itself), flushes any pending requests as a final batch, then exits
+//!    itself), flushes any pending requests as final batches, then exits
 //!    — dropping the batch sender.
 //! 2. the `stop` flag is raised and workers are joined.  Workers drain
 //!    the batch channel and exit when it disconnects (router gone) **or**
@@ -28,7 +39,8 @@
 //! In-flight requests are answered before their worker exits; requests
 //! submitted after shutdown fail with "server stopped".
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender,
                       TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -36,20 +48,34 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::metrics::LatencyStats;
-use crate::netlist::{Netlist, SimOptions};
+use crate::metrics::{BatchStats, LatencyStats, LatencySummary};
+use crate::netlist::{Netlist, SimOptions, WorkerPool};
 
-/// Server tuning knobs.
+use super::engine::ModelEngine;
+
+/// Per-model batching policy: dispatch when `max_batch` requests are
+/// waiting or the oldest has waited `max_wait` — the standard
+/// latency/throughput knob, now settable per model.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+/// Server tuning knobs.  `max_batch`/`max_wait` are the default
+/// [`BatchPolicy`] for models registered without an override; `workers`
+/// and `sim_threads` are shared by all models.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
-    /// Concurrent batch-evaluation workers (each owns a simulator).
+    /// Concurrent batch-evaluation workers (each owns one simulator per
+    /// registered model).
     pub workers: usize,
-    /// Evaluation threads *inside* each worker's simulator: large batches
-    /// are chunked over unit ranges (`SimOptions::threads`).  1 keeps the
-    /// v1 behavior; raise it when `max_batch` is large and cores outnumber
-    /// concurrent batches.
+    /// Evaluation threads *inside* each worker's simulators: large
+    /// batches are chunked over unit ranges (`SimOptions::threads`,
+    /// persistent-pool workers).  1 keeps the v1 behavior; raise it when
+    /// `max_batch` is large and cores outnumber concurrent batches.
     pub sim_threads: usize,
 }
 
@@ -64,151 +90,305 @@ impl Default for ServerConfig {
     }
 }
 
+impl ServerConfig {
+    fn default_policy(&self) -> BatchPolicy {
+        BatchPolicy { max_batch: self.max_batch.max(1),
+                      max_wait: self.max_wait }
+    }
+}
+
+/// One registered model awaiting server start.
+struct ModelSpec {
+    name: String,
+    nl: Netlist,
+    policy: Option<BatchPolicy>,
+}
+
+/// Named netlists for one [`InferenceServer`] to host.  Registration
+/// order is preserved (the first model is the default).
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: Vec<ModelSpec>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register `nl` under `name` with the server's default policy.
+    /// Panics on duplicate names (a registry is built once, at startup).
+    pub fn register(&mut self, name: &str, nl: Netlist) -> &mut Self {
+        self.register_with(name, nl, None)
+    }
+
+    /// Register with a model-specific batching policy.
+    pub fn register_with(&mut self, name: &str, nl: Netlist,
+                         policy: Option<BatchPolicy>) -> &mut Self {
+        assert!(!self.models.iter().any(|m| m.name == name),
+                "duplicate model name '{name}'");
+        self.models.push(ModelSpec { name: name.to_string(), nl, policy });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.name.clone()).collect()
+    }
+}
+
 /// How long an idle worker waits on the batch channel before re-checking
 /// the stop flag.
 const WORKER_POLL: Duration = Duration::from_millis(2);
 
+/// How long the idle router blocks for a first request before
+/// re-checking the stop flag.
+const ROUTER_IDLE_POLL: Duration = Duration::from_millis(5);
+
 struct Request {
+    /// index into the model table
+    model: usize,
     x: Vec<i32>,
     enqueued: Instant,
     reply: Sender<Vec<i32>>,
 }
 
-/// Handle to a running server.
-pub struct InferenceServer {
-    tx: Sender<Request>,
+struct BatchJob {
+    model: usize,
+    reqs: Vec<Request>,
+}
+
+/// Shared per-model serving state.
+struct ModelState {
+    name: String,
+    nl: Arc<Netlist>,
+    policy: BatchPolicy,
     n_in: usize,
     out_width: usize,
+    stats: Mutex<LatencyStats>,
+    batches: Mutex<BatchStats>,
+}
+
+/// Point-in-time per-model serving statistics.
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub model: String,
+    pub requests: u64,
+    pub batches: u64,
+    /// mean requests per dispatched batch
+    pub mean_occupancy: f64,
+    pub max_batch_seen: usize,
+    pub latency: LatencySummary,
+}
+
+/// Handle to a running server.
+pub struct InferenceServer {
+    /// `None` once shutdown has begun; taking it closes the request
+    /// channel (tier 1).
+    tx: Mutex<Option<Sender<Request>>>,
+    models: Vec<Arc<ModelState>>,
+    by_name: HashMap<String, usize>,
     stop: Arc<AtomicBool>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    stats: Arc<Mutex<LatencyStats>>,
-    batches: Arc<AtomicU64>,
-    requests: Arc<AtomicU64>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl InferenceServer {
-    /// Spawn the router + workers for a netlist.
-    pub fn start(nl: Netlist, cfg: ServerConfig) -> InferenceServer {
-        let n_in = nl.n_in;
-        let out_width = nl.out_width();
+    /// Spawn the shared router + workers for every registered model.
+    pub fn start(registry: ModelRegistry, cfg: ServerConfig)
+                 -> InferenceServer {
+        assert!(!registry.is_empty(), "registry holds no models");
+        let default_policy = cfg.default_policy();
+        let models: Vec<Arc<ModelState>> = registry
+            .models
+            .into_iter()
+            .map(|spec| {
+                let n_in = spec.nl.n_in;
+                let out_width = spec.nl.out_width();
+                let mut policy = spec.policy.unwrap_or(default_policy);
+                policy.max_batch = policy.max_batch.max(1);
+                Arc::new(ModelState {
+                    name: spec.name,
+                    nl: Arc::new(spec.nl),
+                    policy,
+                    n_in,
+                    out_width,
+                    stats: Mutex::new(LatencyStats::default()),
+                    batches: Mutex::new(BatchStats::default()),
+                })
+            })
+            .collect();
+        let by_name = models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.name.clone(), i))
+            .collect();
+
         let (tx, rx) = channel::<Request>();
         let stop = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(Mutex::new(LatencyStats::default()));
-        let batches = Arc::new(AtomicU64::new(0));
-        let requests = Arc::new(AtomicU64::new(0));
-
-        // router: batch assembly; workers: evaluation
-        let (btx, brx) = channel::<Vec<Request>>();
+        // router: per-model batch assembly; workers: evaluation
+        let (btx, brx) = channel::<BatchJob>();
         let brx = Arc::new(Mutex::new(brx));
         let mut handles = Vec::new();
 
         {
             let stop = stop.clone();
-            let cfg = cfg.clone();
-            let batches = batches.clone();
-            handles.push(std::thread::spawn(move || {
-                router_loop(rx, btx, &cfg, &stop, &batches);
-            }));
+            let models = models.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("nla-router".into())
+                    .spawn(move || router_loop(rx, btx, &models, &stop))
+                    .expect("spawn router"),
+            );
         }
-        let nl = Arc::new(nl);
         let sim_opts = SimOptions {
             threads: cfg.sim_threads.max(1),
             ..SimOptions::default()
         };
-        for _ in 0..cfg.workers.max(1) {
+        for w in 0..cfg.workers.max(1) {
             let brx = brx.clone();
-            let nl = nl.clone();
-            let stats = stats.clone();
-            let requests = requests.clone();
+            let models = models.clone();
             let stop = stop.clone();
-            handles.push(std::thread::spawn(move || {
-                let mut sim = nl.simulator_with(sim_opts);
-                loop {
-                    let batch = {
-                        let guard = brx.lock().unwrap();
-                        guard.recv_timeout(WORKER_POLL)
-                    };
-                    let batch = match batch {
-                        Ok(batch) => batch,
-                        Err(RecvTimeoutError::Timeout) => {
-                            // the stop-flag check keeps workers joinable
-                            // even if the router never closes the channel
-                            if stop.load(Ordering::SeqCst) {
-                                break;
-                            }
-                            continue;
-                        }
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    };
-                    let bsz = batch.len();
-                    let mut x = Vec::with_capacity(bsz * nl.n_in);
-                    for r in &batch {
-                        x.extend_from_slice(&r.x);
-                    }
-                    let out = sim.eval_batch(&x, bsz);
-                    let now = Instant::now();
-                    for (i, r) in batch.into_iter().enumerate() {
-                        let row =
-                            out[i * nl.out_width()..(i + 1) * nl.out_width()].to_vec();
-                        let lat = now.duration_since(r.enqueued).as_secs_f64() * 1e6;
-                        stats.lock().unwrap().record(lat);
-                        let _ = r.reply.send(row);
-                    }
-                    requests.fetch_add(bsz as u64, Ordering::Relaxed);
-                }
-            }));
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("nla-worker-{w}"))
+                    .spawn(move || worker_loop(&brx, &models, &stop, sim_opts))
+                    .expect("spawn worker"),
+            );
         }
 
-        InferenceServer { tx, n_in, out_width, stop, handles, stats, batches, requests }
+        InferenceServer {
+            tx: Mutex::new(Some(tx)),
+            models,
+            by_name,
+            stop,
+            handles: Mutex::new(handles),
+        }
     }
 
-    /// Synchronous request: submit one sample, wait for its output codes.
-    pub fn infer(&self, x: Vec<i32>) -> Result<Vec<i32>> {
-        anyhow::ensure!(x.len() == self.n_in, "bad input width");
+    /// Single-model convenience: a registry of one, named after the
+    /// netlist.
+    pub fn start_single(nl: Netlist, cfg: ServerConfig) -> InferenceServer {
+        let mut registry = ModelRegistry::new();
+        let name =
+            if nl.name.is_empty() { "default".into() } else { nl.name.clone() };
+        registry.register(&name, nl);
+        InferenceServer::start(registry, cfg)
+    }
+
+    /// Hosted model names, in registration order.
+    pub fn models(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// The first registered model (convenience for single-model use).
+    pub fn default_model(&self) -> &str {
+        &self.models[0].name
+    }
+
+    fn model(&self, name: &str) -> Result<(usize, &Arc<ModelState>)> {
+        match self.by_name.get(name) {
+            Some(&i) => Ok((i, &self.models[i])),
+            None => anyhow::bail!("unknown model '{name}'"),
+        }
+    }
+
+    fn sender(&self) -> Result<Sender<Request>> {
+        match self.tx.lock().unwrap().as_ref() {
+            Some(tx) => Ok(tx.clone()),
+            None => anyhow::bail!("server stopped"),
+        }
+    }
+
+    /// Input width / output width of a hosted model.
+    pub fn model_io(&self, model: &str) -> Result<(usize, usize)> {
+        let (_, m) = self.model(model)?;
+        Ok((m.n_in, m.out_width))
+    }
+
+    /// Synchronous request: submit one sample to `model`, wait for its
+    /// output codes.
+    pub fn infer(&self, model: &str, x: Vec<i32>) -> Result<Vec<i32>> {
+        let (idx, m) = self.model(model)?;
+        anyhow::ensure!(x.len() == m.n_in,
+                        "bad input width {} for model '{model}' (n_in {})",
+                        x.len(), m.n_in);
+        let tx = self.sender()?;
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Request { x, enqueued: Instant::now(), reply: rtx })
+        tx.send(Request { model: idx, x, enqueued: Instant::now(),
+                          reply: rtx })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rrx.recv()?)
     }
 
-    /// Fire-and-collect: submit many samples from this thread, waiting for
-    /// each (used by benches together with multiple client threads).
-    pub fn infer_many(&self, rows: Vec<Vec<i32>>) -> Result<Vec<Vec<i32>>> {
+    /// Fire-and-collect: submit many samples for `model` from this
+    /// thread, waiting for each (benches pair this with multiple client
+    /// threads — and multiple models).
+    pub fn infer_many(&self, model: &str, rows: Vec<Vec<i32>>)
+                      -> Result<Vec<Vec<i32>>> {
+        let (idx, m) = self.model(model)?;
+        let tx = self.sender()?;
         let mut replies = Vec::with_capacity(rows.len());
         for x in rows {
+            anyhow::ensure!(x.len() == m.n_in,
+                            "bad input width {} for model '{model}' (n_in {})",
+                            x.len(), m.n_in);
             let (rtx, rrx) = channel();
-            self.tx
-                .send(Request { x, enqueued: Instant::now(), reply: rtx })
+            tx.send(Request { model: idx, x, enqueued: Instant::now(),
+                              reply: rtx })
                 .map_err(|_| anyhow::anyhow!("server stopped"))?;
             replies.push(rrx);
         }
         replies.into_iter().map(|r| Ok(r.recv()?)).collect()
     }
 
-    pub fn out_width(&self) -> usize {
-        self.out_width
+    /// A [`ModelEngine`] view of one hosted model (implements
+    /// `InferenceEngine`, so the conformance suite runs against the
+    /// whole router/worker pipeline).
+    pub fn engine(&self, model: &str) -> Result<ModelEngine<'_>> {
+        let (_, m) = self.model(model)?;
+        Ok(ModelEngine {
+            server: self,
+            model: m.name.clone(),
+            n_in: m.n_in,
+            out_width: m.out_width,
+        })
     }
 
-    /// (requests served, batches dispatched, mean latency us, p99 us)
-    pub fn stats(&self) -> (u64, u64, f64, f64) {
-        let s = self.stats.lock().unwrap();
-        (
-            self.requests.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            s.mean(),
-            s.percentile(99.0),
-        )
+    /// Statistics snapshot for one model.
+    pub fn model_stats(&self, model: &str) -> Result<ModelStats> {
+        let (_, m) = self.model(model)?;
+        Ok(snapshot(m))
+    }
+
+    /// Statistics for every hosted model, in registration order.
+    pub fn all_stats(&self) -> Vec<ModelStats> {
+        self.models.iter().map(|m| snapshot(m)).collect()
     }
 
     /// Stop the server and join all threads (see the module doc for the
-    /// two-tier protocol).
-    pub fn shutdown(mut self) {
+    /// two-tier protocol).  Idempotent; takes `&self` so client threads
+    /// holding an `Arc<InferenceServer>` can keep submitting (and get
+    /// "server stopped" errors) while another thread shuts down.
+    pub fn shutdown(&self) {
         // tier 1: close the request channel; the router flushes pending
-        // requests as a final batch and exits, closing the batch channel
-        drop(self.tx);
-        let mut handles = self.handles.drain(..);
-        if let Some(router) = handles.next() {
+        // requests as final batches and exits, closing the batch channel
+        if let Ok(mut tx) = self.tx.lock() {
+            let _ = tx.take();
+        }
+        let handles = match self.handles.lock() {
+            Ok(mut h) => std::mem::take(&mut *h),
+            Err(_) => Vec::new(),
+        };
+        let mut it = handles.into_iter();
+        if let Some(router) = it.next() {
             let _ = router.join();
         }
         // tier 2: raise the stop flag only after the router has flushed,
@@ -216,29 +396,79 @@ impl InferenceServer {
         // drain the (now closed) batch channel, then observe either the
         // disconnect or the flag and terminate
         self.stop.store(true, Ordering::SeqCst);
-        for h in handles {
+        for h in it {
             let _ = h.join();
         }
     }
 }
 
-fn router_loop(rx: Receiver<Request>, btx: Sender<Vec<Request>>,
-               cfg: &ServerConfig, stop: &AtomicBool, batches: &AtomicU64) {
-    let mut pending: Vec<Request> = Vec::new();
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn snapshot(m: &ModelState) -> ModelStats {
+    // clone under the lock, sort/summarize outside it: summary() sorts
+    // the (up to 64Ki-sample) reservoir, and workers block on this same
+    // mutex to record batch latencies
+    let stats = m.stats.lock().unwrap().clone();
+    let latency = stats.summary();
+    let b = m.batches.lock().unwrap().clone();
+    ModelStats {
+        model: m.name.clone(),
+        requests: b.requests(),
+        batches: b.batches(),
+        mean_occupancy: b.mean_occupancy(),
+        max_batch_seen: b.max_size(),
+        latency,
+    }
+}
+
+/// Send every full-or-due batch (every non-empty one when `flush`).
+/// Returns false if the batch channel is closed (workers gone).
+fn dispatch_due(pending: &mut [Vec<Request>], n_pending: &mut usize,
+                models: &[Arc<ModelState>], btx: &Sender<BatchJob>,
+                flush: bool) -> bool {
+    let now = Instant::now();
+    for (m, q) in pending.iter_mut().enumerate() {
+        let pol = &models[m].policy;
+        while !q.is_empty() {
+            let full = q.len() >= pol.max_batch;
+            let due = now >= q[0].enqueued + pol.max_wait;
+            if !(full || due || flush) {
+                break;
+            }
+            let take = q.len().min(pol.max_batch);
+            let reqs: Vec<Request> = q.drain(..take).collect();
+            *n_pending -= take;
+            models[m].batches.lock().unwrap().record(take);
+            if btx.send(BatchJob { model: m, reqs }).is_err() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+fn router_loop(rx: Receiver<Request>, btx: Sender<BatchJob>,
+               models: &[Arc<ModelState>], stop: &AtomicBool) {
+    let mut pending: Vec<Vec<Request>> =
+        models.iter().map(|_| Vec::new()).collect();
+    let mut n_pending = 0usize;
     loop {
-        if stop.load(Ordering::SeqCst) && pending.is_empty() {
+        if stop.load(Ordering::SeqCst) && n_pending == 0 {
             break;
         }
-        let deadline = pending
-            .first()
-            .map(|r| r.enqueued + cfg.max_wait)
-            .unwrap_or_else(|| Instant::now() + Duration::from_millis(5));
-        // drain whatever is available
+        // drain whatever is available without blocking; stop early if a
+        // queue fills so heavy inflow cannot starve dispatch
         loop {
             match rx.try_recv() {
                 Ok(req) => {
-                    pending.push(req);
-                    if pending.len() >= cfg.max_batch {
+                    let m = req.model;
+                    pending[m].push(req);
+                    n_pending += 1;
+                    if pending[m].len() >= models[m].policy.max_batch {
                         break;
                     }
                 }
@@ -249,28 +479,101 @@ fn router_loop(rx: Receiver<Request>, btx: Sender<Vec<Request>>,
                 }
             }
         }
-        let now = Instant::now();
-        if !pending.is_empty() && (pending.len() >= cfg.max_batch || now >= deadline) {
-            let take = pending.len().min(cfg.max_batch);
-            let batch: Vec<Request> = pending.drain(..take).collect();
-            batches.fetch_add(1, Ordering::Relaxed);
-            if btx.send(batch).is_err() {
-                break;
+        let flush = stop.load(Ordering::SeqCst);
+        if !dispatch_due(&mut pending, &mut n_pending, models, &btx, flush) {
+            break;
+        }
+        if flush {
+            continue; // drain the channel tail, then exit at the top
+        }
+        // block until the next request or the earliest batch deadline —
+        // never spin: partial batches sleep exactly until they are due
+        let wait = pending
+            .iter()
+            .enumerate()
+            .filter_map(|(m, q)| {
+                q.first().map(|r| r.enqueued + models[m].policy.max_wait)
+            })
+            .min()
+            .map(|deadline| {
+                deadline.saturating_duration_since(Instant::now())
+            })
+            .unwrap_or(ROUTER_IDLE_POLL);
+        if wait.is_zero() {
+            continue; // already due; dispatch on the next pass
+        }
+        match rx.recv_timeout(wait) {
+            Ok(req) => {
+                let m = req.model;
+                pending[m].push(req);
+                n_pending += 1;
             }
-        } else if pending.is_empty() {
-            // block briefly for the next request
-            match rx.recv_timeout(Duration::from_millis(2)) {
-                Ok(req) => pending.push(req),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    stop.store(true, Ordering::SeqCst);
-                }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                stop.store(true, Ordering::SeqCst);
             }
-        } else {
-            std::thread::sleep(Duration::from_micros(20));
         }
     }
     // btx drops here; workers exit when the channel closes
+}
+
+fn worker_loop(brx: &Mutex<Receiver<BatchJob>>, models: &[Arc<ModelState>],
+               stop: &AtomicBool, sim_opts: SimOptions) {
+    // one simulator per hosted model, built once (persistent scratch
+    // buffers), sharing a single worker pool lent to whichever model's
+    // simulator is evaluating: this worker drives one batch at a time,
+    // so parked evaluation threads scale with `workers`, not
+    // `workers × models`
+    let nls: Vec<Arc<Netlist>> = models.iter().map(|m| m.nl.clone()).collect();
+    let mut sims: Vec<_> =
+        nls.iter().map(|nl| nl.simulator_with(sim_opts)).collect();
+    let mut lent = if sim_opts.threads > 1 {
+        Some(WorkerPool::new(sim_opts.threads - 1))
+    } else {
+        None
+    };
+    loop {
+        let job = {
+            let guard = brx.lock().unwrap();
+            guard.recv_timeout(WORKER_POLL)
+        };
+        let job = match job {
+            Ok(job) => job,
+            Err(RecvTimeoutError::Timeout) => {
+                // the stop-flag check keeps workers joinable even if a
+                // batch producer wedges with the channel open
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let state = &models[job.model];
+        let bsz = job.reqs.len();
+        let ow = state.out_width; // hoisted: one lookup per batch
+        let mut x = Vec::with_capacity(bsz * state.n_in);
+        for r in &job.reqs {
+            x.extend_from_slice(&r.x);
+        }
+        let sim = &mut sims[job.model];
+        let prev = sim.set_pool(lent.take());
+        debug_assert!(prev.is_none(), "model simulators own no pool");
+        let out = sim.eval_batch(&x, bsz);
+        lent = sim.set_pool(prev);
+        let now = Instant::now();
+        {
+            // the whole batch's latencies under one lock acquisition
+            let mut stats = state.stats.lock().unwrap();
+            for r in &job.reqs {
+                stats.record(
+                    now.duration_since(r.enqueued).as_secs_f64() * 1e6);
+            }
+        }
+        for (i, r) in job.reqs.into_iter().enumerate() {
+            let _ = r.reply.send(out[i * ow..(i + 1) * ow].to_vec());
+        }
+    }
 }
 
 #[cfg(test)]
@@ -282,22 +585,28 @@ mod tests {
     fn server_matches_direct_simulation() {
         let nl = random_netlist(31, 12, 1, &[(8, 3, 2), (4, 2, 2), (2, 2, 3)]);
         let direct = nl.clone();
-        let server = InferenceServer::start(
+        let server = InferenceServer::start_single(
             nl,
             ServerConfig { max_batch: 8, max_wait: Duration::from_micros(100),
                            workers: 2, sim_threads: 1 },
         );
+        let model = server.default_model().to_string();
         let x = random_inputs(31, &direct, 40);
-        let rows: Vec<Vec<i32>> = (0..40).map(|b| x[b * 12..(b + 1) * 12].to_vec()).collect();
-        let got = server.infer_many(rows.clone()).unwrap();
+        let rows: Vec<Vec<i32>> =
+            (0..40).map(|b| x[b * 12..(b + 1) * 12].to_vec()).collect();
+        let got = server.infer_many(&model, rows.clone()).unwrap();
         for (b, row) in rows.iter().enumerate() {
             let want = direct.eval_one(row).unwrap();
             assert_eq!(got[b], want, "row {b}");
         }
-        let (reqs, batches, mean, p99) = server.stats();
-        assert_eq!(reqs, 40);
-        assert!(batches >= 1 && batches <= 40);
-        assert!(mean > 0.0 && p99 >= mean * 0.5);
+        let st = server.model_stats(&model).unwrap();
+        assert_eq!(st.requests, 40);
+        assert!(st.batches >= 5 && st.batches <= 40); // max_batch 8
+        assert!(st.mean_occupancy >= 1.0 && st.mean_occupancy <= 8.0);
+        assert!(st.max_batch_seen <= 8);
+        assert!(st.latency.mean > 0.0);
+        assert!(st.latency.p50 <= st.latency.p99
+                && st.latency.p99 <= st.latency.p999);
         server.shutdown();
     }
 
@@ -305,34 +614,39 @@ mod tests {
     fn server_single_request() {
         let nl = random_netlist(32, 6, 2, &[(3, 2, 2)]);
         let direct = nl.clone();
-        let server = InferenceServer::start(nl, ServerConfig::default());
+        let server = InferenceServer::start_single(nl, ServerConfig::default());
         let x = random_inputs(9, &direct, 1);
-        let got = server.infer(x.clone()).unwrap();
+        let got = server.infer(server.default_model(), x.clone()).unwrap();
         assert_eq!(got, direct.eval_one(&x).unwrap());
         server.shutdown();
     }
 
     #[test]
-    fn shutdown_joins_cleanly() {
+    fn shutdown_joins_cleanly_and_is_idempotent() {
         let nl = random_netlist(33, 4, 1, &[(2, 2, 1)]);
-        let server = InferenceServer::start(nl, ServerConfig::default());
+        let server = InferenceServer::start_single(nl, ServerConfig::default());
         server.shutdown(); // no hang
+        server.shutdown(); // second call is a no-op
+        assert!(server
+            .infer(server.default_model(), vec![0, 0, 0, 0])
+            .is_err());
     }
 
     #[test]
     fn sim_threads_answers_match_direct_eval() {
         let nl = random_netlist(35, 16, 2, &[(12, 2, 2), (6, 2, 2), (3, 2, 2)]);
         let direct = nl.clone();
-        let server = InferenceServer::start(
+        let server = InferenceServer::start_single(
             nl,
             ServerConfig { max_batch: 128,
                            max_wait: Duration::from_micros(200),
                            workers: 1, sim_threads: 4 },
         );
+        let model = server.default_model().to_string();
         let x = random_inputs(35, &direct, 96);
         let rows: Vec<Vec<i32>> =
             (0..96).map(|b| x[b * 16..(b + 1) * 16].to_vec()).collect();
-        let got = server.infer_many(rows.clone()).unwrap();
+        let got = server.infer_many(&model, rows.clone()).unwrap();
         for (b, row) in rows.iter().enumerate() {
             assert_eq!(got[b], direct.eval_one(row).unwrap(), "row {b}");
         }
@@ -341,19 +655,61 @@ mod tests {
 
     #[test]
     fn workers_observe_stop_flag_without_channel_close() {
-        // drop the server handle fields by hand: set stop but keep the
-        // batch channel alive via a leaked router stand-in is internal;
-        // the observable contract is that shutdown() joins promptly even
-        // right after a burst of traffic
+        // the observable contract: shutdown() joins promptly even right
+        // after a burst of traffic
         let nl = random_netlist(36, 6, 1, &[(3, 2, 1)]);
         let direct = nl.clone();
-        let server = InferenceServer::start(nl, ServerConfig::default());
+        let server = InferenceServer::start_single(nl, ServerConfig::default());
+        let model = server.default_model().to_string();
         let x = random_inputs(36, &direct, 8);
         for b in 0..8 {
-            server.infer(x[b * 6..(b + 1) * 6].to_vec()).unwrap();
+            server.infer(&model, x[b * 6..(b + 1) * 6].to_vec()).unwrap();
         }
         let t = std::time::Instant::now();
         server.shutdown();
         assert!(t.elapsed() < Duration::from_secs(2), "shutdown hung");
+    }
+
+    #[test]
+    fn two_models_route_independently() {
+        // different widths so a misrouted request cannot silently pass
+        let a = random_netlist(41, 12, 1, &[(8, 3, 2), (4, 2, 2)]);
+        let b = random_netlist(42, 6, 2, &[(5, 2, 3), (3, 2, 2)]);
+        let (da, db) = (a.clone(), b.clone());
+        let mut registry = ModelRegistry::new();
+        registry.register("a", a).register_with(
+            "b",
+            b,
+            Some(BatchPolicy { max_batch: 4,
+                               max_wait: Duration::from_micros(50) }),
+        );
+        assert_eq!(registry.names(), vec!["a".to_string(), "b".to_string()]);
+        let server = InferenceServer::start(registry, ServerConfig::default());
+        assert_eq!(server.default_model(), "a");
+        assert_eq!(server.model_io("a").unwrap(), (12, 4));
+        assert_eq!(server.model_io("b").unwrap(), (6, 3));
+        let xa = random_inputs(1, &da, 30);
+        let xb = random_inputs(2, &db, 30);
+        // interleave the two models' traffic
+        for i in 0..30 {
+            let ra = server
+                .infer("a", xa[i * 12..(i + 1) * 12].to_vec())
+                .unwrap();
+            assert_eq!(ra, da.eval_one(&xa[i * 12..(i + 1) * 12]).unwrap(),
+                       "model a row {i}");
+            let rb = server
+                .infer("b", xb[i * 6..(i + 1) * 6].to_vec())
+                .unwrap();
+            assert_eq!(rb, db.eval_one(&xb[i * 6..(i + 1) * 6]).unwrap(),
+                       "model b row {i}");
+        }
+        let sa = server.model_stats("a").unwrap();
+        let sb = server.model_stats("b").unwrap();
+        assert_eq!(sa.requests, 30);
+        assert_eq!(sb.requests, 30);
+        assert!(sb.max_batch_seen <= 4, "model b's policy caps its batches");
+        assert!(server.infer("nope", vec![0; 12]).is_err());
+        assert!(server.infer("a", vec![0; 5]).is_err(), "width check");
+        server.shutdown();
     }
 }

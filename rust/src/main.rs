@@ -4,17 +4,20 @@
 //!   list                      show compiled configurations
 //!   flow   --config <name>    run the full toolflow (train → LUTs → timing)
 //!   rtl    --config <name>    run the flow and write Verilog
-//!   serve  --config <name>    train, extract netlist, run the batch server
+//!   serve  --config <a[,b..]> train the named configs, serve them all
+//!                             from one multi-model batch server
 //!
 //! Common flags: --steps N --dense-steps N --train N --test N --seed N
 //!               --no-skips --random-conn --augment --artifacts DIR
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use neuralut::config::Meta;
-use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer, ServerConfig};
+use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer,
+                            ModelRegistry, ServerConfig};
 use neuralut::report::{pct, sci, Table};
 use neuralut::runtime::Runtime;
 use neuralut::util::Stopwatch;
@@ -66,7 +69,13 @@ fn flow_options(args: &Args) -> Result<FlowOptions> {
         .get("config")
         .context("--config <name> is required")?
         .clone();
-    let mut opts = FlowOptions::quick(&config);
+    flow_options_named(args, &config)
+}
+
+/// Flow options for an explicit config name (`serve` hosts several
+/// configs from one `--config a,b,...` flag, each with its own flow).
+fn flow_options_named(args: &Args, config: &str) -> Result<FlowOptions> {
+    let mut opts = FlowOptions::quick(config);
     opts.dense_steps = args.usize_flag("dense-steps", opts.dense_steps)?;
     opts.sparse_steps = args.usize_flag("steps", opts.sparse_steps)?;
     opts.seed = args.usize_flag("seed", opts.seed as usize)? as u64;
@@ -210,40 +219,102 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Train every named config, register the netlists in one
+/// `ModelRegistry`, and serve them all concurrently from one process —
+/// per-model request streams, per-model latency/occupancy statistics.
 fn cmd_serve(args: &Args) -> Result<()> {
     let meta = meta_from(args)?;
     let rt = Runtime::new()?;
-    let opts = flow_options(args)?;
-    let n_req = args.usize_flag("requests", 2000)?;
-    let r = run_flow(&rt, &meta, &opts)?;
-    print_flow_result(&r);
-
-    let top = &meta.config(&opts.config)?.topology;
-    let splits = neuralut::dataset::generate(&top.dataset, top.beta_in, &opts.gen)?;
-    {
-        let sim = r.netlist.simulator();
-        println!("simulator kernels: {}/{} layers bit-plane",
-                 sim.bitplane_layers(), r.netlist.layers.len());
+    let configs: Vec<String> = args
+        .flags
+        .get("config")
+        .context("--config <name[,name...]> is required")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!configs.is_empty(), "--config needs at least one name");
+    // catch duplicates up front: the registry asserts on them, and by
+    // then each flow has already trained for minutes
+    let mut seen = std::collections::HashSet::new();
+    for name in &configs {
+        anyhow::ensure!(seen.insert(name.as_str()),
+                        "duplicate config '{name}' in --config");
     }
+    let n_req = args.usize_flag("requests", 2000)?;
+
+    let mut registry = ModelRegistry::new();
+    let mut model_rows: Vec<Vec<Vec<i32>>> = Vec::new();
+    for name in &configs {
+        let opts = flow_options_named(args, name)?;
+        let r = run_flow(&rt, &meta, &opts)?;
+        print_flow_result(&r);
+        {
+            let sim = r.netlist.simulator();
+            println!("{name}: {}/{} layers bit-plane",
+                     sim.bitplane_layers(), r.netlist.layers.len());
+        }
+        let top = &meta.config(name)?.topology;
+        let splits =
+            neuralut::dataset::generate(&top.dataset, top.beta_in, &opts.gen)?;
+        model_rows.push(
+            (0..n_req)
+                .map(|i| splits.test.row(i % splits.test.n).to_vec())
+                .collect(),
+        );
+        // last use of `r`: move the netlist (tables can be large)
+        registry.register(name, r.netlist);
+    }
+
     let cfg = ServerConfig {
         max_batch: args.usize_flag("max-batch", 64)?,
+        max_wait: Duration::from_micros(
+            args.usize_flag("max-wait-us", 200)? as u64),
         workers: args.usize_flag("workers", 2)?,
         sim_threads: args.usize_flag("sim-threads", 1)?,
-        ..ServerConfig::default()
     };
-    let server = InferenceServer::start(r.netlist.clone(), cfg);
+    let server = InferenceServer::start(registry, cfg);
     let sw = Stopwatch::start();
-    let rows: Vec<Vec<i32>> = (0..n_req)
-        .map(|i| splits.test.row(i % splits.test.n).to_vec())
-        .collect();
-    let _ = server.infer_many(rows)?;
+    // one client thread per model: the streams interleave in the router
+    std::thread::scope(|s| -> Result<()> {
+        let handles: Vec<_> = configs
+            .iter()
+            .zip(model_rows)
+            .map(|(name, rows)| {
+                let server = &server;
+                s.spawn(move || server.infer_many(name, rows).map(|_| ()))
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client thread panicked")?;
+        }
+        Ok(())
+    })?;
     let secs = sw.secs();
-    let (reqs, batches, mean, p99) = server.stats();
-    println!(
-        "\nserved {reqs} requests in {batches} batches: {:.0} req/s, \
-         latency mean {:.0}us p99 {:.0}us",
-        reqs as f64 / secs, mean, p99
+
+    let mut t = Table::new(
+        "serving statistics (per model)",
+        &["model", "requests", "batches", "occupancy", "mean us", "p50 us",
+          "p99 us", "p999 us"],
     );
+    let mut total = 0u64;
+    for st in server.all_stats() {
+        total += st.requests;
+        t.row(&[
+            st.model.clone(),
+            st.requests.to_string(),
+            st.batches.to_string(),
+            format!("{:.1}", st.mean_occupancy),
+            format!("{:.0}", st.latency.mean),
+            format!("{:.0}", st.latency.p50),
+            format!("{:.0}", st.latency.p99),
+            format!("{:.0}", st.latency.p999),
+        ]);
+    }
+    t.print();
+    println!("\nserved {total} requests across {} models in {:.2}s \
+              ({:.0} req/s)",
+             configs.len(), secs, total as f64 / secs);
     server.shutdown();
     Ok(())
 }
@@ -268,7 +339,15 @@ fn main() {
                  [--steps N] [--dense-steps N] [--train N] [--test N] \
                  [--seed N] [--no-skips] [--random-conn] [--augment] \
                  [--artifacts DIR] [--out FILE] [--requests N] \
-                 [--max-batch N] [--workers N] [--sim-threads N]"
+                 [--max-batch N] [--max-wait-us N] [--workers N] \
+                 [--sim-threads N]\n\n\
+                 serve hosts several configs at once: \
+                 --config nid,jsc_cb serves both from one process \
+                 (per-model batching policies and statistics). \
+                 --max-batch / --max-wait-us set the default dispatch \
+                 policy (batch fills or oldest request ages out); \
+                 --workers and --sim-threads size the shared evaluation \
+                 threads."
             );
             Ok(())
         }

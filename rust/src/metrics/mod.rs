@@ -45,26 +45,58 @@ pub fn confusion(pred: &[i32], labels: &[i32], k: usize) -> Vec<Vec<usize>> {
     m
 }
 
-/// Online latency statistics (microseconds) for the serving benches.
+/// Reservoir size for [`LatencyStats`]: percentiles beyond this many
+/// recorded samples are estimated from a uniform random subsample
+/// (Vitter's Algorithm R), so an always-on server's per-model stats
+/// stay bounded — ~512 KiB per model — instead of growing 8 bytes per
+/// request forever.  Mean and count stay exact (running sum).
+const LATENCY_RESERVOIR: usize = 1 << 16;
+
+/// Online latency statistics (microseconds) for the serving path.
+/// Bounded: exact mean/count, reservoir-sampled percentiles past
+/// [`LATENCY_RESERVOIR`] samples.
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
     samples: Vec<f64>,
+    count: u64,
+    sum: f64,
+    /// LCG state for reservoir replacement (deterministic, seeded 0)
+    rng: u64,
 }
 
 impl LatencyStats {
     pub fn record(&mut self, micros: f64) {
-        self.samples.push(micros);
+        self.count += 1;
+        self.sum += micros;
+        if self.samples.len() < LATENCY_RESERVOIR {
+            self.samples.push(micros);
+        } else {
+            // Algorithm R: keep each of the `count` samples in the
+            // reservoir with equal probability.  Lemire's widening
+            // multiply maps the full 64-bit state uniformly onto
+            // [0, count) — no modulo bias, no truncation to 31 bits.
+            self.rng = self
+                .rng
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let j = ((self.rng as u128 * self.count as u128) >> 64) as u64;
+            if (j as usize) < LATENCY_RESERVOIR {
+                self.samples[j as usize] = micros;
+            }
+        }
     }
 
+    /// Total samples recorded (exact, not capped by the reservoir).
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.count as usize
     }
 
+    /// Exact mean over every recorded sample.
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             return 0.0;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum / self.count as f64
     }
 
     pub fn percentile(&self, p: f64) -> f64 {
@@ -75,6 +107,76 @@ impl LatencyStats {
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
         s[idx.min(s.len() - 1)]
+    }
+
+    /// Point-in-time summary with the percentiles the serving path
+    /// reports (p50/p99/p999); one sort instead of three.
+    pub fn summary(&self) -> LatencySummary {
+        if self.samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let at = |p: f64| {
+            let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+            s[idx.min(s.len() - 1)]
+        };
+        LatencySummary {
+            count: self.count(),
+            mean: self.mean(),
+            p50: at(50.0),
+            p99: at(99.0),
+            p999: at(99.9),
+        }
+    }
+}
+
+/// Snapshot of a [`LatencyStats`] (microseconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub p999: f64,
+}
+
+/// Batch-occupancy statistics for the dynamic-batching server: how many
+/// batches were dispatched, how full they were, and the largest one —
+/// the signal for tuning `max_batch`/`max_wait` per model.
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    batches: u64,
+    requests: u64,
+    max_size: usize,
+}
+
+impl BatchStats {
+    /// Record one dispatched batch of `size` requests.
+    pub fn record(&mut self, size: usize) {
+        self.batches += 1;
+        self.requests += size as u64;
+        self.max_size = self.max_size.max(size);
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    pub fn max_size(&self) -> usize {
+        self.max_size
+    }
+
+    /// Mean requests per dispatched batch (0 when nothing dispatched).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
     }
 }
 
@@ -118,5 +220,56 @@ mod tests {
         assert_eq!(s.percentile(50.0), 51.0); // round(49.5) = 50 -> s[50]
         assert_eq!(s.percentile(99.0), 99.0);
         assert_eq!(s.count(), 100);
+    }
+
+    #[test]
+    fn latency_summary_matches_percentiles() {
+        let mut s = LatencyStats::default();
+        // record out of order; summary sorts internally
+        for i in (1..=1000).rev() {
+            s.record(i as f64);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.count, 1000);
+        assert!((sum.mean - s.mean()).abs() < 1e-9);
+        assert_eq!(sum.p50, s.percentile(50.0));
+        assert_eq!(sum.p99, s.percentile(99.0));
+        assert_eq!(sum.p999, s.percentile(99.9));
+        assert!(sum.p50 <= sum.p99 && sum.p99 <= sum.p999);
+        assert_eq!(LatencyStats::default().summary(),
+                   LatencySummary::default());
+    }
+
+    #[test]
+    fn latency_reservoir_bounds_memory_keeps_exact_mean() {
+        let mut s = LatencyStats::default();
+        let n = LATENCY_RESERVOIR + 5000;
+        for i in 0..n {
+            s.record((i % 1000) as f64);
+        }
+        assert_eq!(s.count(), n);
+        assert!(s.samples.len() <= LATENCY_RESERVOIR, "reservoir overflow");
+        let want =
+            (0..n).map(|i| (i % 1000) as f64).sum::<f64>() / n as f64;
+        assert!((s.mean() - want).abs() < 1e-6, "mean must stay exact");
+        let sum = s.summary();
+        assert_eq!(sum.count, n);
+        // percentiles are estimated from the reservoir but must stay
+        // inside the observed value range and ordered
+        assert!(sum.p50 >= 0.0 && sum.p999 <= 999.0);
+        assert!(sum.p50 <= sum.p99 && sum.p99 <= sum.p999);
+    }
+
+    #[test]
+    fn batch_occupancy() {
+        let mut b = BatchStats::default();
+        assert_eq!(b.mean_occupancy(), 0.0);
+        b.record(4);
+        b.record(8);
+        b.record(12);
+        assert_eq!(b.batches(), 3);
+        assert_eq!(b.requests(), 24);
+        assert_eq!(b.max_size(), 12);
+        assert!((b.mean_occupancy() - 8.0).abs() < 1e-9);
     }
 }

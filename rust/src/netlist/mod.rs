@@ -17,7 +17,7 @@
 mod sim;
 
 pub use sim::{eval_packed, BitPlaneLayer, KernelChoice, SimOptions,
-              Simulator, MAX_PLANE_SUPPORT};
+              Simulator, ThreadMode, WorkerPool, MAX_PLANE_SUPPORT};
 
 use anyhow::{bail, Context, Result};
 

@@ -21,6 +21,19 @@
 //! boolean-only bitsliced kernel), and evaluation can be chunked across
 //! worker threads per layer ([`SimOptions::threads`], plumbed from
 //! `ServerConfig::sim_threads` on the serving path).
+//!
+//! Threading comes in two flavors ([`ThreadMode`]): the original
+//! *scoped* path spawns `std::thread::scope` workers per layer per
+//! `eval_batch` call, while the default *pooled* path parks a persistent
+//! [`WorkerPool`] inside the `Simulator` and wakes it per layer.  Both
+//! chunk a layer over identical disjoint unit ranges, so they are
+//! bit-exact with each other; the pool merely replaces a spawn/join
+//! (~tens of µs) with a condvar wake (~µs), which lets much smaller
+//! layers parallelize profitably ([`PAR_MIN_WORK_POOLED`] vs
+//! [`PAR_MIN_WORK`]) — the regime of high request rates with small
+//! batches.
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use super::{LayerSpec, Netlist};
 
@@ -33,9 +46,21 @@ pub const MAX_PLANE_SUPPORT: usize = 6;
 /// Raw address widths past this are never worth the support scan.
 const MAX_BUILD_ADDR_BITS: usize = 16;
 
-/// Below this many output words per layer, spawning threads costs more
-/// than it saves and the layer runs single-threaded.
+/// Below this many output words/codes per layer, spawning scoped
+/// threads costs more than it saves and the layer runs single-threaded.
 const PAR_MIN_WORK: usize = 1 << 12;
+
+/// Pooled threshold for the bit-plane kernel, in packed output *words*
+/// (64 samples each, a Shannon-tree evaluation per word): waking a
+/// parked worker is ~µs, not the tens of µs a spawn/join costs, so far
+/// smaller layers amortize the handoff.
+const PAR_MIN_WORK_POOLED: usize = 1 << 8;
+
+/// Pooled threshold for the gather kernel, in output *codes*.  A code
+/// is a single table read — roughly an order of magnitude cheaper than
+/// a packed word — so the floor sits proportionally higher to keep
+/// tiny-batch layers from paying a wake for ~µs of work.
+const PAR_MIN_WORK_POOLED_GATHER: usize = 1 << 11;
 
 /// Which kernel a layer was compiled to (introspection for benches and
 /// the server's startup log).
@@ -45,6 +70,18 @@ pub enum KernelChoice {
     BitPlane,
 }
 
+/// How multi-threaded layers get their workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThreadMode {
+    /// Spawn `std::thread::scope` workers per layer per call (the v2
+    /// behavior; kept as the bit-exactness reference and for one-shot
+    /// simulators where a resident pool is not worth holding).
+    Scoped,
+    /// Wake a persistent [`WorkerPool`] owned by the `Simulator`
+    /// (default): no spawn/join on the request path.
+    Pooled,
+}
+
 /// Simulator construction knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct SimOptions {
@@ -52,11 +89,14 @@ pub struct SimOptions {
     /// disable to measure the gather baseline).
     pub bitplane: bool,
     /// Worker threads per `eval_batch` call (1 = single-threaded).
-    /// Layers are chunked over unit ranges with scoped threads, spawned
-    /// per layer per call; `PAR_MIN_WORK` keeps small layers serial so
-    /// spawn cost cannot dominate.  A persistent pool is future work
-    /// (ROADMAP) for very high request rates with small batches.
+    /// Layers are chunked over unit ranges; with [`ThreadMode::Pooled`]
+    /// the chunks run on `threads - 1` parked pool workers plus the
+    /// calling thread, with [`ThreadMode::Scoped`] on freshly spawned
+    /// scoped threads.  `PAR_MIN_WORK`/`PAR_MIN_WORK_POOLED` keep small
+    /// layers serial so handoff cost cannot dominate.
     pub threads: usize,
+    /// Scoped vs pooled workers (default pooled).
+    pub mode: ThreadMode,
     /// Smallest batch for which word packing amortizes; below it the
     /// gather path runs even on bit-plane layers.
     pub min_bitplane_batch: usize,
@@ -64,7 +104,252 @@ pub struct SimOptions {
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { bitplane: true, threads: 1, min_bitplane_batch: 32 }
+        SimOptions {
+            bitplane: true,
+            threads: 1,
+            mode: ThreadMode::Pooled,
+            min_bitplane_batch: 32,
+        }
+    }
+}
+
+/// A persistent pool of parked worker threads that cooperate with the
+/// calling thread on jobs of independent, indexed tasks.
+///
+/// `run(n, f)` posts a job of `n` tasks; pool workers and the caller
+/// claim indices from a shared cursor and each executes `f(i)`.  `run`
+/// returns only once every task has completed, which is what makes the
+/// internal lifetime erasure sound: no worker can still hold the closure
+/// after `run` returns.  Workers park on a condvar between jobs — waking
+/// them costs microseconds, versus tens of microseconds for a thread
+/// spawn/join, which is the entire point (ROADMAP: persistent pool for
+/// high request rates with small batches).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Lifetime-erased pointer to the job closure.  Valid only while the
+/// posting `run` call is blocked in its completion wait.
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+}
+
+// SAFETY: the pointee is `Sync` (shared calls are fine) and the posting
+// thread keeps it alive until `pending == 0`, enforced in `run`.
+unsafe impl Send for Job {}
+
+#[derive(Default)]
+struct PoolState {
+    job: Option<Job>,
+    /// next unclaimed task index
+    next: usize,
+    /// tasks claimed-or-unclaimed but not yet completed
+    pending: usize,
+    /// a worker's task panicked during the current job; `run` re-raises
+    /// after the drain so a broken kernel fails as loudly as the scoped
+    /// path (never silently serving unwritten output)
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// workers park here between jobs
+    work_cv: Condvar,
+    /// the posting caller parks here while workers finish the tail
+    done_cv: Condvar,
+}
+
+/// Lock that shrugs off poisoning: every critical section below only
+/// moves the counters between consistent states, so a panicked peer
+/// cannot leave `PoolState` torn.
+fn pool_lock(shared: &PoolShared) -> MutexGuard<'_, PoolState> {
+    shared.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn pool_claim(st: &mut PoolState) -> Option<usize> {
+    match &st.job {
+        Some(job) if st.next < job.n => {
+            let i = st.next;
+            st.next += 1;
+            Some(i)
+        }
+        _ => None,
+    }
+}
+
+/// Decrements `pending` on drop, clearing the job and waking the poster
+/// when the last task completes — *even if the task panicked*, so a
+/// buggy kernel cannot wedge the pool.
+struct FinishGuard<'p> {
+    shared: &'p PoolShared,
+}
+
+impl Drop for FinishGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = pool_lock(self.shared);
+        st.pending -= 1;
+        if st.pending == 0 {
+            st.job = None;
+            self.shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Blocks on drop until the current job has fully drained.  Held by
+/// `run` so that even a panic unwinding through it cannot free the
+/// erased closure (or the output buffer it writes) while a worker is
+/// still executing a task.
+struct DrainGuard<'p> {
+    shared: &'p PoolShared,
+}
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = pool_lock(self.shared);
+        while st.pending > 0 {
+            st = self
+                .shared
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+fn pool_worker_loop(shared: &PoolShared) {
+    let mut st = pool_lock(shared);
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if let Some(i) = pool_claim(&mut st) {
+            let fptr = st.job.as_ref().unwrap().f;
+            drop(st);
+            {
+                let _fin = FinishGuard { shared };
+                // SAFETY: the posting `run` call claims nothing beyond
+                // its `DrainGuard`, which keeps the closure and its
+                // captures alive until `pending == 0`; we claimed this
+                // task before that could happen.
+                let f = unsafe { &*fptr };
+                // catch task panics so the worker thread survives (the
+                // pool must not shrink) and the flag is raised *before*
+                // `_fin` drops — the poster observes it no later than
+                // the final pending decrement
+                if std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| f(i)))
+                    .is_err()
+                {
+                    pool_lock(shared).panicked = true;
+                }
+            }
+            st = pool_lock(shared);
+        } else {
+            st = shared
+                .work_cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Pool with `workers` parked threads; `run` adds the caller, so a
+    /// pool built for `SimOptions::threads = t` holds `t - 1` workers.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState::default()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("sim-pool-{i}"))
+                    .spawn(move || pool_worker_loop(&shared))
+                    .expect("spawn simulator pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of parked worker threads (excluding the caller).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Execute `f(0) .. f(n-1)` across the pool plus the calling thread;
+    /// returns once every index has completed.  Tasks must be
+    /// independent (they run concurrently in arbitrary order).  Takes
+    /// `&mut self`: jobs must never overlap (the internal lifetime
+    /// erasure depends on it), and the exclusive borrow makes that a
+    /// compile-time guarantee rather than a protocol.
+    // a plain `as` cast cannot widen the trait object's lifetime bound,
+    // so the transmute below is not expressible as a pointer cast
+    #[allow(clippy::useless_transmute,
+            clippy::transmutes_expressible_as_ptr_casts)]
+    pub fn run<F: Fn(usize) + Sync>(&mut self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime erasure only; the `DrainGuard` below keeps
+        // this frame (and therefore `f` and its captures) alive until
+        // every worker has finished with the pointer.
+        let f_erased: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        {
+            let mut st = pool_lock(&self.shared);
+            debug_assert!(st.job.is_none(), "pool jobs must not overlap");
+            st.job = Some(Job { f: f_erased, n });
+            st.next = 0;
+            st.pending = n;
+            st.panicked = false;
+        }
+        self.shared.work_cv.notify_all();
+        let _drain = DrainGuard { shared: &self.shared };
+        let mut st = pool_lock(&self.shared);
+        loop {
+            if let Some(i) = pool_claim(&mut st) {
+                drop(st);
+                {
+                    let _fin = FinishGuard { shared: &self.shared };
+                    f(i);
+                }
+                st = pool_lock(&self.shared);
+            } else if st.pending > 0 {
+                st = self
+                    .shared
+                    .done_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            } else {
+                break;
+            }
+        }
+        let panicked = std::mem::take(&mut st.panicked);
+        drop(st);
+        if panicked {
+            // fail as loudly as the scoped path would: a worker's task
+            // panicked, so this job's output cannot be trusted
+            panic!("simulator pool worker task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // pool_lock, not .lock(): a poisoned mutex must still deliver
+        // the shutdown flag or the joins below would hang forever
+        pool_lock(&self.shared).shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -268,22 +553,37 @@ fn gather_units(layer: &LayerSpec, cur: &[u16], batch: usize,
 }
 
 /// How many threads to actually use for a layer of `units` units with
-/// `work` output words/codes total.
-fn par_threads(requested: usize, units: usize, work: usize) -> usize {
-    if requested <= 1 || units < 2 || work < PAR_MIN_WORK {
+/// `work` output words/codes total, given the kernel/mode-specific
+/// profitability `floor`: waking a parked pool worker amortizes at much
+/// smaller layers than spawning a scoped thread does.
+fn par_threads(requested: usize, units: usize, work: usize,
+               floor: usize) -> usize {
+    if requested <= 1 || units < 2 || work < floor {
         1
     } else {
         requested.min(units)
     }
 }
 
+/// Raw-pointer wrapper so disjoint chunk slices of one output buffer can
+/// be reconstructed on pool workers.
+struct SendPtr<T>(*mut T);
+
+// SAFETY: access is restricted to disjoint index ranges per task, and
+// the buffer outlives the pool job (`WorkerPool::run` blocks).
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 /// Run `f(u0, u1, dst)` over unit ranges of a layer with `w` units whose
 /// output occupies `stride` elements per unit, fanning the disjoint
-/// `dst` chunks across up to `threads` scoped workers (serial when
-/// `threads <= 1`).  Both kernels share this scaffold so the chunk math
-/// lives in one place.
+/// `dst` chunks across up to `threads` workers — the persistent `pool`
+/// when one is provided, scoped spawn-per-call threads otherwise
+/// (serial when `threads <= 1`).  Chunk boundaries are identical in
+/// every mode, and each mode hands each worker exactly one disjoint
+/// range, so all three execution paths are bit-exact by construction.
 fn chunked_units<T: Send, F>(out: &mut [T], w: usize, stride: usize,
-                             threads: usize, f: F)
+                             threads: usize, pool: Option<&mut WorkerPool>,
+                             f: F)
 where
     F: Fn(usize, usize, &mut [T]) + Sync,
 {
@@ -292,15 +592,35 @@ where
         f(0, w, out);
         return;
     }
-    let chunk = (w + threads - 1) / threads;
-    std::thread::scope(|s| {
-        for (i, dst) in out.chunks_mut(chunk * stride).enumerate() {
-            let u0 = i * chunk;
-            let u1 = (u0 + chunk).min(w);
+    let chunk = w.div_ceil(threads);
+    match pool {
+        Some(pool) => {
+            let n_chunks = w.div_ceil(chunk);
+            let base = SendPtr(out.as_mut_ptr());
             let f = &f;
-            s.spawn(move || f(u0, u1, dst));
+            pool.run(n_chunks, move |i| {
+                let u0 = i * chunk;
+                let u1 = (u0 + chunk).min(w);
+                // SAFETY: tasks receive disjoint `[u0, u1)` ranges and
+                // `out` outlives the blocking `run` call.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        base.0.add(u0 * stride), (u1 - u0) * stride)
+                };
+                f(u0, u1, dst);
+            });
         }
-    });
+        None => {
+            std::thread::scope(|s| {
+                for (i, dst) in out.chunks_mut(chunk * stride).enumerate() {
+                    let u0 = i * chunk;
+                    let u1 = (u0 + chunk).min(w);
+                    let f = &f;
+                    s.spawn(move || f(u0, u1, dst));
+                }
+            });
+        }
+    }
 }
 
 /// Reusable-buffer simulator bound to a netlist.
@@ -308,6 +628,8 @@ pub struct Simulator<'a> {
     nl: &'a Netlist,
     opts: SimOptions,
     kernels: Vec<LayerKernel>,
+    /// persistent workers ([`ThreadMode::Pooled`] with `threads > 1`)
+    pool: Option<WorkerPool>,
     /// scratch: signal-major u16 codes
     buf_a: Vec<u16>,
     buf_b: Vec<u16>,
@@ -337,13 +659,66 @@ impl<'a> Simulator<'a> {
                 }
             })
             .collect();
-        Simulator { nl, opts, kernels, buf_a: Vec::new(), buf_b: Vec::new(),
+        // the pool is created lazily on first parallel use (or lent in
+        // via `set_pool`), so construction never spawns threads
+        Simulator { nl, opts, kernels, pool: None,
+                    buf_a: Vec::new(), buf_b: Vec::new(),
                     bits_a: Vec::new(), bits_b: Vec::new() }
     }
 
-    /// Change the worker-thread count after construction.
+    /// The pool this simulator should hold for its current options, or
+    /// 0 workers when serial or scoped.
+    fn wanted_pool_workers(&self) -> usize {
+        match self.opts.mode {
+            ThreadMode::Pooled if self.opts.threads > 1 => {
+                self.opts.threads - 1
+            }
+            _ => 0,
+        }
+    }
+
+    /// Create the persistent pool on first parallel use if pooled mode
+    /// wants one and none is resident (and none was lent in).
+    fn ensure_pool(&mut self) {
+        if self.pool.is_none() {
+            let want = self.wanted_pool_workers();
+            if want > 0 {
+                self.pool = Some(WorkerPool::new(want));
+            }
+        }
+    }
+
+    /// Change the worker-thread count after construction.  A resident
+    /// pool of the wrong size is dropped and lazily recreated on next
+    /// use.
     pub fn set_threads(&mut self, threads: usize) {
         self.opts.threads = threads.max(1);
+        let want = self.wanted_pool_workers();
+        let have = self.pool.as_ref().map(|p| p.workers()).unwrap_or(0);
+        if self.pool.is_some() && want != have {
+            self.pool = None;
+        }
+    }
+
+    /// Lend a pool in (or take the resident one out), returning the
+    /// previous one.  Lets one thread share a single `WorkerPool`
+    /// across several simulators it drives one-at-a-time — the server's
+    /// workers do this per batch, so parked threads scale with workers,
+    /// not workers × models.  A lent pool is used as-is regardless of
+    /// size; `None` restores lazy self-creation.
+    pub fn set_pool(&mut self, pool: Option<WorkerPool>)
+                    -> Option<WorkerPool> {
+        std::mem::replace(&mut self.pool, pool)
+    }
+
+    /// The netlist this simulator is bound to.
+    pub fn netlist(&self) -> &'a Netlist {
+        self.nl
+    }
+
+    /// The options this simulator was built with.
+    pub fn options(&self) -> SimOptions {
+        self.opts
     }
 
     /// Per-layer kernel choice (introspection for benches/logs).
@@ -382,6 +757,7 @@ impl<'a> Simulator<'a> {
     /// is chunked over unit ranges onto scoped threads.
     pub fn eval_batch(&mut self, x: &[i32], batch: usize) -> Vec<i32> {
         assert_eq!(x.len(), batch * self.nl.n_in);
+        self.ensure_pool();
         let use_bits = self.opts.bitplane
             && batch >= self.opts.min_bitplane_batch;
         let max_w = self
@@ -400,7 +776,7 @@ impl<'a> Simulator<'a> {
                 self.buf_a[s * batch + b] = x[b * self.nl.n_in + s] as u16;
             }
         }
-        let nwords = (batch + 63) / 64;
+        let nwords = batch.div_ceil(64);
         // own the ping-pong buffers locally to keep borrows disjoint
         let mut cur = std::mem::take(&mut self.buf_a);
         let mut next = std::mem::take(&mut self.buf_b);
@@ -419,12 +795,17 @@ impl<'a> Simulator<'a> {
                     }
                     bits_next.clear();
                     bits_next.resize(bl.planes() * nwords, 0);
+                    let floor = if self.pool.is_some() {
+                        PAR_MIN_WORK_POOLED
+                    } else {
+                        PAR_MIN_WORK
+                    };
                     let t = par_threads(self.opts.threads, bl.w,
-                                        bl.planes() * nwords);
+                                        bl.planes() * nwords, floor);
                     let prev: &[u64] = &bits_cur;
                     chunked_units(
                         &mut bits_next[..bl.planes() * nwords], bl.w,
-                        bl.out_bits * nwords, t,
+                        bl.out_bits * nwords, t, self.pool.as_mut(),
                         |u0, u1, dst| bl.eval_units(prev, nwords, u0, u1, dst),
                     );
                     std::mem::swap(&mut bits_cur, &mut bits_next);
@@ -435,11 +816,17 @@ impl<'a> Simulator<'a> {
                                       batch, nwords, &mut cur);
                         packed = false;
                     }
+                    let floor = if self.pool.is_some() {
+                        PAR_MIN_WORK_POOLED_GATHER
+                    } else {
+                        PAR_MIN_WORK
+                    };
                     let t = par_threads(self.opts.threads, layer.w,
-                                        layer.w * batch);
+                                        layer.w * batch, floor);
                     let prev: &[u16] = &cur;
                     chunked_units(
                         &mut next[..layer.w * batch], layer.w, batch, t,
+                        self.pool.as_mut(),
                         |u0, u1, dst| gather_units(layer, prev, batch, u0, u1,
                                                    dst),
                     );
@@ -570,9 +957,92 @@ mod tests {
             37, 24, 2, &[(64, 3, 2), (48, 2, 3), (16, 2, 2)], 6);
         let mut sim = Simulator::new(&nl);
         sim.set_threads(4);
-        // batch large enough that PAR_MIN_WORK lets the big layers fan
+        // batch large enough that the work floors let the big layers fan
         // out, and not a multiple of 64 (tail words in every plane)
         assert_matches_eval_one(&nl, &mut sim, 37, 2100);
+    }
+
+    #[test]
+    fn pooled_and_scoped_threads_are_bit_exact() {
+        let nl = random_reducible_netlist(
+            43, 24, 2, &[(64, 3, 2), (48, 2, 3), (16, 2, 2)], 6);
+        let mut scoped = Simulator::with_options(
+            &nl,
+            SimOptions { threads: 4, mode: ThreadMode::Scoped,
+                         ..Default::default() },
+        );
+        let mut pooled = Simulator::with_options(
+            &nl,
+            SimOptions { threads: 4, mode: ThreadMode::Pooled,
+                         ..Default::default() },
+        );
+        // small batches stay serial, large ones fan out; every size must
+        // agree across modes (and with eval_one via the scoped suite)
+        for (seed, batch) in [(1u64, 33usize), (2, 600), (3, 2100)] {
+            let x = random_inputs(seed, &nl, batch);
+            assert_eq!(scoped.eval_batch(&x, batch),
+                       pooled.eval_batch(&x, batch), "batch {batch}");
+        }
+        assert_matches_eval_one(&nl, &mut pooled, 9, 130);
+    }
+
+    #[test]
+    fn worker_pool_runs_every_task_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mut pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        for n in [0usize, 1, 2, 7, 64] {
+            let hits: Vec<AtomicUsize> =
+                (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits
+                .iter()
+                .all(|h| h.load(Ordering::Relaxed) == 1), "n = {n}");
+        }
+        // rapid job reuse: workers park and wake cleanly between jobs
+        let total = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(5, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn worker_pool_propagates_task_panics_and_survives() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mut pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run(8, |i| {
+                    if i == 3 {
+                        panic!("injected task panic");
+                    }
+                });
+            }));
+        assert!(res.is_err(), "a task panic must propagate from run()");
+        // the pool must remain fully functional: no dead workers, no
+        // stale job state, no sticky panic flag
+        let total = AtomicUsize::new(0);
+        pool.run(16, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn set_threads_resizes_pool() {
+        let nl = random_netlist(17, 8, 1, &[(4, 3, 2), (2, 2, 3)]);
+        let mut sim = nl.simulator();
+        assert_matches_eval_one(&nl, &mut sim, 1, 64);
+        sim.set_threads(4);
+        assert_matches_eval_one(&nl, &mut sim, 2, 300);
+        sim.set_threads(1);
+        assert_matches_eval_one(&nl, &mut sim, 3, 100);
+        assert_eq!(sim.options().threads, 1);
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub use rng::Rng;
 
 /// ceil(a / b) for positive integers.
 pub fn ceil_div(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// log2 of the next power of two (>= 1 input).

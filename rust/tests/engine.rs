@@ -1,0 +1,189 @@
+//! Engine-conformance suite: every `InferenceEngine` backend — direct
+//! simulator (serial / pooled / scoped threads), the batching server,
+//! and the multi-model registry — must pass the same contract
+//! (`check_conformance`: shape, bit-exactness vs `eval_one`,
+//! determinism, width rejection).  Plus serving stress tests: shutdown
+//! under concurrent client load must join promptly without dropping
+//! in-flight answers.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use neuralut::coordinator::{check_conformance, BatchPolicy,
+                            InferenceEngine, InferenceServer,
+                            ModelRegistry, ServerConfig};
+use neuralut::netlist::testutil::{random_inputs, random_netlist,
+                                  random_reducible_netlist};
+use neuralut::netlist::{SimOptions, ThreadMode};
+
+#[test]
+fn conformance_direct_simulator() {
+    let nl = random_netlist(61, 14, 1, &[(10, 3, 2), (5, 2, 2), (3, 2, 3)]);
+    let mut sim = nl.simulator();
+    check_conformance(&mut sim, &nl, 61).unwrap();
+}
+
+#[test]
+fn conformance_pooled_threads_simulator() {
+    let nl = random_reducible_netlist(
+        62, 20, 2, &[(48, 3, 2), (32, 2, 2), (8, 2, 2)], 6);
+    let mut sim = nl.simulator_with(SimOptions {
+        threads: 4,
+        mode: ThreadMode::Pooled,
+        min_bitplane_batch: 1,
+        ..Default::default()
+    });
+    check_conformance(&mut sim, &nl, 62).unwrap();
+    assert!(sim.describe().contains("Pooled"));
+}
+
+#[test]
+fn conformance_scoped_threads_simulator() {
+    let nl = random_reducible_netlist(
+        63, 20, 2, &[(48, 3, 2), (32, 2, 2), (8, 2, 2)], 6);
+    let mut sim = nl.simulator_with(SimOptions {
+        threads: 4,
+        mode: ThreadMode::Scoped,
+        min_bitplane_batch: 1,
+        ..Default::default()
+    });
+    check_conformance(&mut sim, &nl, 63).unwrap();
+    assert!(sim.describe().contains("Scoped"));
+}
+
+#[test]
+fn conformance_batching_server() {
+    let nl = random_netlist(64, 9, 1, &[(6, 3, 2), (3, 2, 2)]);
+    let server = InferenceServer::start_single(
+        nl.clone(),
+        ServerConfig { max_batch: 16, max_wait: Duration::from_micros(100),
+                       workers: 2, sim_threads: 1 },
+    );
+    let mut engine = server.engine(server.default_model()).unwrap();
+    check_conformance(&mut engine, &nl, 64).unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn conformance_multi_model_registry() {
+    // three models with distinct shapes behind one server: each hosted
+    // engine must satisfy the same contract as a dedicated process, and
+    // the per-model statistics must stay independent
+    let nls = [
+        random_netlist(71, 12, 1, &[(8, 3, 2), (4, 2, 2)]),
+        random_netlist(72, 6, 2, &[(5, 2, 3), (3, 2, 2)]),
+        random_reducible_netlist(73, 16, 2, &[(24, 3, 2), (8, 2, 2)], 6),
+    ];
+    let names = ["alpha", "beta", "gamma"];
+    let mut registry = ModelRegistry::new();
+    for (name, nl) in names.iter().zip(nls.iter()) {
+        registry.register_with(
+            name,
+            nl.clone(),
+            Some(BatchPolicy { max_batch: 8,
+                               max_wait: Duration::from_micros(80) }),
+        );
+    }
+    let server = InferenceServer::start(
+        registry,
+        ServerConfig { workers: 2, sim_threads: 2,
+                       ..ServerConfig::default() },
+    );
+    assert_eq!(server.models(), names.iter().map(|s| s.to_string())
+                                     .collect::<Vec<_>>());
+    for (i, (name, nl)) in names.iter().zip(nls.iter()).enumerate() {
+        let mut engine = server.engine(name).unwrap();
+        check_conformance(&mut engine, nl, 80 + i as u64).unwrap();
+    }
+    // conformance drove 1+5+64+130 (+2 deterministic re-runs of each)
+    // requests per model; stats must be per-model, not pooled
+    let per_model = (1 + 5 + 64 + 130) * 2;
+    for name in names {
+        let st = server.model_stats(name).unwrap();
+        assert_eq!(st.requests, per_model as u64, "model {name}");
+        assert!(st.batches > 0 && st.max_batch_seen <= 8, "model {name}");
+        assert!(st.latency.p50 <= st.latency.p99
+                && st.latency.p99 <= st.latency.p999, "model {name}");
+    }
+    assert!(server.engine("delta").is_err(), "unknown model must error");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_under_concurrent_load() {
+    // clients hammer the server from several threads while the main
+    // thread shuts it down: every accepted request must be answered
+    // correctly, every rejected one must fail with an error (never hang,
+    // never a wrong answer), and shutdown must join promptly
+    let nl = random_netlist(91, 8, 1, &[(6, 3, 2), (3, 2, 2)]);
+    let direct = nl.clone();
+    let server = Arc::new(InferenceServer::start_single(
+        nl,
+        ServerConfig { max_batch: 8, max_wait: Duration::from_micros(100),
+                       workers: 3, sim_threads: 1 },
+    ));
+    let model = server.default_model().to_string();
+    let n_clients = 4;
+    let per_client = 400;
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let server = server.clone();
+        let model = model.clone();
+        let direct = direct.clone();
+        clients.push(std::thread::spawn(move || {
+            let x = random_inputs(91 + c as u64, &direct, per_client);
+            let mut answered = 0usize;
+            let mut rejected = 0usize;
+            for i in 0..per_client {
+                let row = x[i * 8..(i + 1) * 8].to_vec();
+                match server.infer(&model, row.clone()) {
+                    Ok(got) => {
+                        assert_eq!(got, direct.eval_one(&row).unwrap(),
+                                   "client {c} request {i}");
+                        answered += 1;
+                    }
+                    Err(_) => rejected += 1,
+                }
+            }
+            (answered, rejected)
+        }));
+    }
+    // let traffic build up, then pull the plug mid-stream
+    std::thread::sleep(Duration::from_millis(20));
+    let t = Instant::now();
+    server.shutdown();
+    assert!(t.elapsed() < Duration::from_secs(5), "shutdown hung");
+    let mut answered = 0;
+    let mut rejected = 0;
+    for h in clients {
+        let (a, r) = h.join().expect("client panicked");
+        answered += a;
+        rejected += r;
+    }
+    assert_eq!(answered + rejected, n_clients * per_client);
+    assert!(answered > 0, "no request was served before shutdown");
+    // post-shutdown submissions must be rejected, not hang
+    assert!(server.infer(&model, vec![0; 8]).is_err());
+}
+
+#[test]
+fn server_requests_after_engine_use_still_route() {
+    // an engine view and direct infer calls share the same router
+    let nl = random_netlist(95, 6, 1, &[(4, 2, 2), (2, 2, 2)]);
+    let direct = nl.clone();
+    let server = InferenceServer::start_single(nl, ServerConfig::default());
+    let model = server.default_model().to_string();
+    let x = random_inputs(95, &direct, 12);
+    let mut engine = server.engine(&model).unwrap();
+    let got = engine.run_batch(&x, 12).unwrap();
+    let ow = engine.out_width();
+    for b in 0..12 {
+        let want = direct.eval_one(&x[b * 6..(b + 1) * 6]).unwrap();
+        assert_eq!(&got[b * ow..(b + 1) * ow], &want[..], "row {b}");
+        let one = server
+            .infer(&model, x[b * 6..(b + 1) * 6].to_vec())
+            .unwrap();
+        assert_eq!(one, want, "direct infer row {b}");
+    }
+    server.shutdown();
+}

@@ -6,7 +6,7 @@ use neuralut::luts::TruthTable;
 use neuralut::mapper::{map_netlist, plut_cost, plut_depth};
 use neuralut::netlist::testutil::{random_inputs, random_netlist,
                                   random_reducible_netlist};
-use neuralut::netlist::SimOptions;
+use neuralut::netlist::{SimOptions, ThreadMode};
 use neuralut::pruning;
 use neuralut::rtl;
 use neuralut::timing::{evaluate, DelayModel, Pipelining};
@@ -126,6 +126,50 @@ fn prop_bitplane_threaded_matches_eval_one() {
                 .map_err(|e| e.to_string())?;
             if got[b * ow..(b + 1) * ow] != one[..] {
                 return Err(format!("row {b} differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pooled_workers_match_scoped_and_eval_one() {
+    // the persistent-pool refactor keystone: the pooled simulator is
+    // bit-exact with the scoped-thread path (identical chunking, so any
+    // divergence is a pool bug) and with eval_one, across batch sizes
+    // spanning serial, gather and packed regimes
+    forall("pooled == scoped == eval_one", 0xC1, 24, arb_reducible,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_reducible_netlist(seed, n_in, in_bits, shapes, 6);
+        let mut pooled = nl.simulator_with(SimOptions {
+            threads: 2 + (seed % 3) as usize,
+            mode: ThreadMode::Pooled,
+            min_bitplane_batch: 1,
+            ..Default::default()
+        });
+        let mut scoped = nl.simulator_with(SimOptions {
+            threads: 2 + (seed % 3) as usize,
+            mode: ThreadMode::Scoped,
+            min_bitplane_batch: 1,
+            ..Default::default()
+        });
+        let ow = nl.out_width();
+        for batch in [1usize, 17 + (seed % 80) as usize,
+                      301 + (seed % 700) as usize] {
+            let x = random_inputs(seed ^ batch as u64, &nl, batch);
+            let got_p = pooled.eval_batch(&x, batch);
+            let got_s = scoped.eval_batch(&x, batch);
+            if got_p != got_s {
+                return Err(format!("batch {batch}: pooled != scoped"));
+            }
+            for b in 0..batch {
+                let one = nl
+                    .eval_one(&x[b * n_in..(b + 1) * n_in])
+                    .map_err(|e| e.to_string())?;
+                if got_p[b * ow..(b + 1) * ow] != one[..] {
+                    return Err(format!("batch {batch}: row {b} differs \
+                                        from eval_one"));
+                }
             }
         }
         Ok(())
@@ -289,20 +333,20 @@ fn prop_server_answers_match_direct_eval_under_random_load() {
         let nl = random_netlist(seed, n_in, in_bits, shapes);
         let direct = nl.clone();
         let mut rng = Rng::new(seed ^ 9);
-        let server = InferenceServer::start(nl, ServerConfig {
+        let server = InferenceServer::start_single(nl, ServerConfig {
             max_batch: gen::usize_in(&mut rng, 1, 16),
             max_wait: Duration::from_micros(gen::usize_in(&mut rng, 10, 300) as u64),
             workers: gen::usize_in(&mut rng, 1, 3),
             sim_threads: gen::usize_in(&mut rng, 1, 2),
         });
+        let model = server.default_model().to_string();
         let n = gen::usize_in(&mut rng, 1, 60);
         let rows: Vec<Vec<i32>> = (0..n)
-            .map(|i| {
-                let x = random_inputs(seed ^ (100 + i as u64), &direct, 1);
-                x
-            })
+            .map(|i| random_inputs(seed ^ (100 + i as u64), &direct, 1))
             .collect();
-        let got = server.infer_many(rows.clone()).map_err(|e| e.to_string())?;
+        let got = server
+            .infer_many(&model, rows.clone())
+            .map_err(|e| e.to_string())?;
         server.shutdown();
         for (i, row) in rows.iter().enumerate() {
             let want = direct.eval_one(row).map_err(|e| e.to_string())?;
