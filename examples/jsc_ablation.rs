@@ -23,6 +23,7 @@ fn opts(config: &str, dense: usize, skip: f32) -> FlowOptions {
         gen: GenOpts { n_train: 5000, n_test: 1200, ..Default::default() },
         emit_rtl: false,
         verify_bit_exact: false,
+        opt_level: neuralut::netlist::OptLevel::Full,
     }
 }
 

@@ -43,6 +43,7 @@ fn main() -> Result<()> {
             },
             emit_rtl: false,
             verify_bit_exact: true,
+            opt_level: neuralut::netlist::OptLevel::Full,
         };
         let t0 = std::time::Instant::now();
         let r = run_flow(&rt, &meta, &opts)?;

@@ -18,7 +18,7 @@ use neuralut::coordinator::{run_flow, BatchPolicy, FlowOptions,
                             ModelRegistry, ServerConfig};
 use neuralut::dataset::{self, GenOpts};
 use neuralut::metrics;
-use neuralut::netlist::Netlist;
+use neuralut::netlist::{Netlist, OptLevel};
 use neuralut::report::pct;
 use neuralut::runtime::Runtime;
 
@@ -44,6 +44,7 @@ fn train(rt: &Runtime, meta: &Meta, name: &'static str, dense: usize,
         gen: gen.clone(),
         emit_rtl: false,
         verify_bit_exact: false,
+        opt_level: OptLevel::Full,
     };
     let r = run_flow(rt, meta, &opts)?;
     println!("trained {name} netlist: {} L-LUTs, accuracy {}",
@@ -81,7 +82,7 @@ fn main() -> Result<()> {
     println!("\n{:<14} {:<26} {:>10} {:>9} {:>8} {:>8} {:>9} {:>8}",
              "model", "policy", "req/s", "occupancy", "mean us", "p99 us",
              "p999 us", "acc");
-    for (nid_pol, jet_pol, sim_threads) in [
+    for (round, (nid_pol, jet_pol, sim_threads)) in [
         (BatchPolicy { max_batch: 16,
                        max_wait: Duration::from_micros(100) },
          BatchPolicy { max_batch: 64,
@@ -97,16 +98,27 @@ fn main() -> Result<()> {
          BatchPolicy { max_batch: 256,
                        max_wait: Duration::from_micros(500) },
          4),
-    ] {
+    ]
+    .into_iter()
+    .enumerate()
+    {
         let mut registry = ModelRegistry::new();
         registry
             .register_with(nid.name, nid.netlist.clone(), Some(nid_pol))
             .register_with(jet.name, jet.netlist.clone(), Some(jet_pol));
+        // every served model is optimized at registration
+        // (ServerConfig::opt_level, default O2)
         let server = InferenceServer::start(
             registry,
             ServerConfig { workers: 2, sim_threads,
+                           opt_level: OptLevel::Full,
                            ..ServerConfig::default() },
         );
+        if round == 0 {
+            for name in [nid.name, jet.name] {
+                println!("{name}: {}", server.opt_report(name)?.summary());
+            }
+        }
         // both models' clients hammer the shared router concurrently
         let nid_rows = nid.rows.clone();
         let jet_rows = jet.rows.clone();

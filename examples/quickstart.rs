@@ -13,6 +13,7 @@ use anyhow::Result;
 use neuralut::config::Meta;
 use neuralut::coordinator::{run_flow, FlowOptions};
 use neuralut::dataset::GenOpts;
+use neuralut::netlist::OptLevel;
 use neuralut::report::{pct, sci};
 use neuralut::runtime::Runtime;
 
@@ -29,6 +30,7 @@ fn main() -> Result<()> {
         gen: GenOpts { n_train: 8000, n_test: 1500, ..Default::default() },
         emit_rtl: true,
         verify_bit_exact: true,
+        opt_level: OptLevel::Full,
     };
     let r = run_flow(&rt, &meta, &opts)?;
 
@@ -36,8 +38,10 @@ fn main() -> Result<()> {
     println!("QAT accuracy:            {}", pct(r.qat_acc));
     println!("netlist accuracy:        {}", pct(r.netlist_acc));
     println!("netlist == PJRT forward: {:?} (bit-exact)", r.bit_exact);
-    println!("L-LUTs: {}   mapped P-LUTs: {}",
-             r.netlist.total_units(), r.mapped.total_luts());
+    println!("optimizer:               {}", r.opt_report.summary());
+    println!("L-LUTs: {} -> {}   mapped P-LUTs: {} (raw {})",
+             r.netlist.total_units(), r.netlist_opt.total_units(),
+             r.mapped.total_luts(), r.mapped_raw.total_luts());
     for (name, rep) in &r.reports {
         println!(
             "{name}: Fmax {:.0} MHz, latency {:.2} ns, {} FFs, ADP {}",

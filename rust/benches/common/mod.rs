@@ -9,6 +9,7 @@
 use neuralut::config::Meta;
 use neuralut::coordinator::{run_flow, FlowOptions, FlowResult};
 use neuralut::dataset::GenOpts;
+use neuralut::netlist::OptLevel;
 use neuralut::runtime::Runtime;
 
 pub fn scale() -> usize {
@@ -45,6 +46,7 @@ pub fn options(config: &str, seed: u64) -> FlowOptions {
         gen: GenOpts { n_train, n_test, seed: 0xDA7A, augment: false },
         emit_rtl: false,
         verify_bit_exact: false,
+        opt_level: OptLevel::Full,
     }
 }
 

@@ -7,9 +7,11 @@
 use std::time::Instant;
 
 use neuralut::coordinator::{InferenceServer, ServerConfig};
+use neuralut::mapper::map_netlist;
 use neuralut::netlist::testutil::{random_inputs, random_netlist,
                                   random_reducible_netlist};
-use neuralut::netlist::{Netlist, SimOptions, ThreadMode};
+use neuralut::netlist::{optimize, Netlist, OptLevel, SimOptions,
+                        ThreadMode};
 use neuralut::report::Table;
 
 fn median(mut xs: Vec<f64>) -> f64 {
@@ -94,6 +96,41 @@ fn main() {
             speedup_256 = tg / tb;
         }
     }
+    // raw vs optimized: the netlist optimizer (const-fold, dead-logic,
+    // CSE) runs once at load time; the simulator then compiles fewer
+    // units and planes.  The mapper must agree that the optimized
+    // netlist is a strictly smaller design on this reducible netlist
+    // (dead units and constant-fed address bits are common in it, as in
+    // trained tables), and the optimized hot path must never be slower.
+    let (jsc_opt, opt_report) = optimize(&jsc_reduc, OptLevel::Full);
+    println!("optimizer on jsc-like reducible: {}", opt_report.summary());
+    let raw_pluts = map_netlist(&jsc_reduc, true).total_luts();
+    let opt_pluts = map_netlist(&jsc_opt, true).total_luts();
+    println!("mapped P-LUTs: raw {raw_pluts} -> optimized {opt_pluts}");
+    assert!(opt_pluts < raw_pluts,
+            "optimized netlist must map strictly smaller: \
+             {opt_pluts} !< {raw_pluts}");
+    let mut t_raw_1024 = 0.0;
+    let mut t_opt_1024 = 0.0;
+    for batch in [256usize, 1024] {
+        let tr = sim_row(&mut table, "jsc-like reducible (raw netlist)",
+                         &jsc_reduc, default_opts, batch);
+        let to = sim_row(&mut table, "jsc-like reducible (optimized)",
+                         &jsc_opt, default_opts, batch);
+        if batch == 1024 {
+            t_raw_1024 = tr;
+            t_opt_1024 = to;
+        }
+    }
+    println!("optimized vs raw simulator @ batch 1024: {:.2}x",
+             t_raw_1024 / t_opt_1024);
+    // enforced, not just printed: serving an optimized netlist must
+    // never cost throughput (generous slack absorbs runner noise; the
+    // expected direction is a clear win — fewer units and planes)
+    assert!(t_opt_1024 <= t_raw_1024 * 1.15,
+            "optimized eval {:.1}us regressed past raw {:.1}us",
+            t_opt_1024 * 1e6, t_raw_1024 * 1e6);
+
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);

@@ -17,7 +17,7 @@ use crate::coordinator::session::{predictions, Session};
 use crate::dataset::{self, GenOpts, Splits};
 use crate::mapper::{map_netlist, MappedNetlist};
 use crate::metrics;
-use crate::netlist::Netlist;
+use crate::netlist::{optimize, Netlist, OptLevel, OptReport};
 use crate::pruning;
 use crate::rtl;
 use crate::runtime::Runtime;
@@ -39,6 +39,9 @@ pub struct FlowOptions {
     pub emit_rtl: bool,
     /// verify netlist == PJRT quantized forward on the test set
     pub verify_bit_exact: bool,
+    /// netlist optimizer level applied before mapping / timing / RTL
+    /// (the raw netlist is still mapped for the worst-case comparison)
+    pub opt_level: OptLevel,
 }
 
 impl FlowOptions {
@@ -52,6 +55,7 @@ impl FlowOptions {
             gen: GenOpts::default(),
             emit_rtl: false,
             verify_bit_exact: true,
+            opt_level: OptLevel::Full,
         }
     }
 }
@@ -65,8 +69,19 @@ pub struct FlowResult {
     pub netlist_acc: f64,
     /// netlist output == PJRT output on every test row?
     pub bit_exact: Option<bool>,
+    /// the raw extracted netlist (the PJRT bit-exactness reference and
+    /// the worst-case mapping input)
     pub netlist: Netlist,
+    /// the optimizer's output — what mapping, timing, RTL emission and
+    /// serving consume (bit-exact with `netlist` by contract, checked
+    /// on the test set during the flow)
+    pub netlist_opt: Netlist,
+    /// what each optimizer pass removed
+    pub opt_report: OptReport,
+    /// mapping of the *optimized* netlist (the real design point)
     pub mapped: MappedNetlist,
+    /// mapping of the raw netlist (ablation / worst-case comparison)
+    pub mapped_raw: MappedNetlist,
     /// (strategy name, report) for both pipelining strategies
     pub reports: Vec<(String, TimingReport)>,
     pub losses: Vec<f32>,
@@ -153,8 +168,19 @@ pub fn run_flow(rt: &Runtime, meta: &Meta, opts: &FlowOptions) -> Result<FlowRes
         None
     };
 
-    // ---- phase 5: map + time ----
-    let mapped = map_netlist(&netlist, true);
+    // ---- phase 5: optimize -> map + time ----
+    // The optimizer's contract is bit-exact observable outputs; the
+    // property suite proves it on random netlists, and this enforces it
+    // on the actual trained tables before anything downstream consumes
+    // the optimized artifact.
+    let (netlist_opt, opt_report) = optimize(&netlist, opts.opt_level);
+    let opt_out = netlist_opt.eval_batch(&test.x, test.n)?;
+    anyhow::ensure!(opt_out == net_out,
+                    "netlist optimizer broke bit-exactness on '{}'",
+                    opts.config);
+    log::info!("[{}] optimizer: {}", top.name, opt_report.summary());
+    let mapped = map_netlist(&netlist_opt, true);
+    let mapped_raw = map_netlist(&netlist, true);
     let dm = DelayModel::default();
     let reports = vec![
         ("pipeline-1".to_string(),
@@ -163,14 +189,14 @@ pub fn run_flow(rt: &Runtime, meta: &Meta, opts: &FlowOptions) -> Result<FlowRes
          time_evaluate(&mapped, Pipelining::EveryK(3), &dm)),
     ];
 
-    // ---- phase 6: RTL ----
+    // ---- phase 6: RTL (of the optimized netlist — what would ship) ----
     let rtl_text = if opts.emit_rtl {
         let cuts = reports[1].1.cuts.clone();
-        let text = rtl::emit(&netlist, &rtl::RtlOptions {
+        let text = rtl::emit(&netlist_opt, &rtl::RtlOptions {
             cuts,
             module_name: format!("neuralut_{}", top.name),
         });
-        rtl::verify_roundtrip(&text, &netlist)?;
+        rtl::verify_roundtrip(&text, &netlist_opt)?;
         Some(text)
     } else {
         None
@@ -182,7 +208,10 @@ pub fn run_flow(rt: &Runtime, meta: &Meta, opts: &FlowOptions) -> Result<FlowRes
         netlist_acc,
         bit_exact,
         netlist,
+        netlist_opt,
+        opt_report,
         mapped,
+        mapped_raw,
         reports,
         losses,
         rtl_text,

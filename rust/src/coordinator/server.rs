@@ -49,7 +49,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::metrics::{BatchStats, LatencyStats, LatencySummary};
-use crate::netlist::{Netlist, SimOptions, WorkerPool};
+use crate::netlist::{optimize, Netlist, OptLevel, OptReport, SimOptions,
+                     WorkerPool};
 
 use super::engine::ModelEngine;
 
@@ -77,6 +78,13 @@ pub struct ServerConfig {
     /// persistent-pool workers).  1 keeps the v1 behavior; raise it when
     /// `max_batch` is large and cores outnumber concurrent batches.
     pub sim_threads: usize,
+    /// Netlist optimizer level applied to every model at registration,
+    /// before the workers' simulators are built — fewer units and
+    /// planes for every batch the server ever evaluates.  The optimizer
+    /// contract is bit-exact outputs, so the default is the full
+    /// pipeline; models can override it per registration
+    /// ([`ModelRegistry::register_with_opt`]).
+    pub opt_level: OptLevel,
 }
 
 impl Default for ServerConfig {
@@ -86,6 +94,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_micros(200),
             workers: 2,
             sim_threads: 1,
+            opt_level: OptLevel::Full,
         }
     }
 }
@@ -102,6 +111,7 @@ struct ModelSpec {
     name: String,
     nl: Netlist,
     policy: Option<BatchPolicy>,
+    opt_level: Option<OptLevel>,
 }
 
 /// Named netlists for one [`InferenceServer`] to host.  Registration
@@ -125,9 +135,18 @@ impl ModelRegistry {
     /// Register with a model-specific batching policy.
     pub fn register_with(&mut self, name: &str, nl: Netlist,
                          policy: Option<BatchPolicy>) -> &mut Self {
+        self.register_with_opt(name, nl, policy, None)
+    }
+
+    /// Register with batching-policy and optimizer-level overrides
+    /// (`None` inherits the server defaults from [`ServerConfig`]).
+    pub fn register_with_opt(&mut self, name: &str, nl: Netlist,
+                             policy: Option<BatchPolicy>,
+                             opt_level: Option<OptLevel>) -> &mut Self {
         assert!(!self.models.iter().any(|m| m.name == name),
                 "duplicate model name '{name}'");
-        self.models.push(ModelSpec { name: name.to_string(), nl, policy });
+        self.models.push(ModelSpec { name: name.to_string(), nl, policy,
+                                     opt_level });
         self
     }
 
@@ -169,10 +188,13 @@ struct BatchJob {
 /// Shared per-model serving state.
 struct ModelState {
     name: String,
+    /// the *optimized* netlist (what every worker simulator compiles)
     nl: Arc<Netlist>,
     policy: BatchPolicy,
     n_in: usize,
     out_width: usize,
+    /// what the optimizer removed at registration
+    opt_report: OptReport,
     stats: Mutex<LatencyStats>,
     batches: Mutex<BatchStats>,
 }
@@ -210,16 +232,24 @@ impl InferenceServer {
             .models
             .into_iter()
             .map(|spec| {
-                let n_in = spec.nl.n_in;
-                let out_width = spec.nl.out_width();
+                // optimize at registration: bit-exact by contract, so
+                // n_in / out_width are unchanged and every batch this
+                // server ever evaluates runs on the smaller netlist
+                let level = spec.opt_level.unwrap_or(cfg.opt_level);
+                let (nl, opt_report) = optimize(&spec.nl, level);
+                log::info!("model '{}' optimizer: {}", spec.name,
+                           opt_report.summary());
+                let n_in = nl.n_in;
+                let out_width = nl.out_width();
                 let mut policy = spec.policy.unwrap_or(default_policy);
                 policy.max_batch = policy.max_batch.max(1);
                 Arc::new(ModelState {
                     name: spec.name,
-                    nl: Arc::new(spec.nl),
+                    nl: Arc::new(nl),
                     policy,
                     n_in,
                     out_width,
+                    opt_report,
                     stats: Mutex::new(LatencyStats::default()),
                     batches: Mutex::new(BatchStats::default()),
                 })
@@ -360,6 +390,13 @@ impl InferenceServer {
             n_in: m.n_in,
             out_width: m.out_width,
         })
+    }
+
+    /// The optimizer report recorded when `model` was registered (what
+    /// the pass pipeline removed from its netlist).
+    pub fn opt_report(&self, model: &str) -> Result<OptReport> {
+        let (_, m) = self.model(model)?;
+        Ok(m.opt_report.clone())
     }
 
     /// Statistics snapshot for one model.
@@ -579,7 +616,8 @@ fn worker_loop(brx: &Mutex<Receiver<BatchJob>>, models: &[Arc<ModelState>],
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::netlist::testutil::{random_inputs, random_netlist};
+    use crate::netlist::testutil::{random_inputs, random_netlist,
+                                   random_reducible_netlist};
 
     #[test]
     fn server_matches_direct_simulation() {
@@ -588,7 +626,8 @@ mod tests {
         let server = InferenceServer::start_single(
             nl,
             ServerConfig { max_batch: 8, max_wait: Duration::from_micros(100),
-                           workers: 2, sim_threads: 1 },
+                           workers: 2, sim_threads: 1,
+                           ..Default::default() },
         );
         let model = server.default_model().to_string();
         let x = random_inputs(31, &direct, 40);
@@ -640,7 +679,8 @@ mod tests {
             nl,
             ServerConfig { max_batch: 128,
                            max_wait: Duration::from_micros(200),
-                           workers: 1, sim_threads: 4 },
+                           workers: 1, sim_threads: 4,
+                           ..Default::default() },
         );
         let model = server.default_model().to_string();
         let x = random_inputs(35, &direct, 96);
@@ -668,6 +708,39 @@ mod tests {
         let t = std::time::Instant::now();
         server.shutdown();
         assert!(t.elapsed() < Duration::from_secs(2), "shutdown hung");
+    }
+
+    #[test]
+    fn opt_level_knob_is_bit_exact_and_recorded() {
+        // the same netlist served optimized and raw side by side: both
+        // must answer exactly like the raw eval_one reference, and the
+        // per-model opt reports must reflect the level actually applied
+        let nl = random_reducible_netlist(
+            44, 16, 2, &[(24, 3, 2), (12, 2, 2), (4, 2, 2)], 6);
+        let direct = nl.clone();
+        let mut registry = ModelRegistry::new();
+        registry
+            .register_with_opt("optimized", nl.clone(), None,
+                               Some(OptLevel::Full))
+            .register_with_opt("raw", nl, None, Some(OptLevel::None));
+        let server = InferenceServer::start(registry,
+                                            ServerConfig::default());
+        let ro = server.opt_report("optimized").unwrap();
+        let rr = server.opt_report("raw").unwrap();
+        assert_eq!(rr.units_removed(), 0, "O0 must not touch the model");
+        assert!(ro.units_after <= ro.units_before);
+        assert!(ro.summary().starts_with("O2:"));
+        let x = random_inputs(44, &direct, 24);
+        for b in 0..24 {
+            let row = x[b * 16..(b + 1) * 16].to_vec();
+            let want = direct.eval_one(&row).unwrap();
+            assert_eq!(server.infer("optimized", row.clone()).unwrap(),
+                       want, "optimized row {b}");
+            assert_eq!(server.infer("raw", row).unwrap(), want,
+                       "raw row {b}");
+        }
+        assert!(server.opt_report("nope").is_err());
+        server.shutdown();
     }
 
     #[test]

@@ -18,6 +18,7 @@ use anyhow::{bail, Context, Result};
 use neuralut::config::Meta;
 use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer,
                             ModelRegistry, ServerConfig};
+use neuralut::netlist::OptLevel;
 use neuralut::report::{pct, sci, Table};
 use neuralut::runtime::Runtime;
 use neuralut::util::Stopwatch;
@@ -61,6 +62,14 @@ impl Args {
     fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+
+    /// `--opt-level 0|1|2` (default: the full pass pipeline).
+    fn opt_level(&self) -> Result<OptLevel> {
+        match self.flags.get("opt-level") {
+            Some(v) => v.parse(),
+            None => Ok(OptLevel::Full),
+        }
+    }
 }
 
 fn flow_options(args: &Args) -> Result<FlowOptions> {
@@ -88,6 +97,7 @@ fn flow_options_named(args: &Args, config: &str) -> Result<FlowOptions> {
     if args.has("random-conn") {
         opts.dense_steps = 0;
     }
+    opts.opt_level = args.opt_level()?;
     Ok(opts)
 }
 
@@ -129,8 +139,13 @@ fn print_flow_result(r: &neuralut::coordinator::FlowResult) {
     if let Some(be) = r.bit_exact {
         t.row(&["netlist == PJRT (bit-exact)".into(), be.to_string()]);
     }
-    t.row(&["L-LUTs".into(), r.netlist.total_units().to_string()]);
+    t.row(&["L-LUTs (raw)".into(), r.netlist.total_units().to_string()]);
+    t.row(&["L-LUTs (optimized)".into(),
+            r.netlist_opt.total_units().to_string()]);
     t.row(&["P-LUTs (mapped)".into(), r.mapped.total_luts().to_string()]);
+    t.row(&["P-LUTs (raw mapping)".into(),
+            r.mapped_raw.total_luts().to_string()]);
+    t.row(&["optimizer".into(), r.opt_report.summary()]);
     for (name, rep) in &r.reports {
         t.row(&[format!("{name} Fmax"), format!("{:.0} MHz", rep.fmax_mhz)]);
         t.row(&[format!("{name} latency"), format!("{:.2} ns", rep.latency_ns)]);
@@ -210,12 +225,16 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             format!("{:.2}", support_sum as f64 / bits.max(1) as f64),
             consts.to_string(),
             dups.to_string(),
-            r.mapped.layers[l].luts.to_string(),
+            r.mapped_raw.layers[l].luts.to_string(),
         ]);
     }
     t.print();
-    println!("\ntotal P-LUTs {} (worst case {})",
-             r.mapped.total_luts(), r.mapped.total_luts_worst_case());
+    println!("\ntotal P-LUTs {} raw (worst case {}) -> {} after the \
+              netlist optimizer",
+             r.mapped_raw.total_luts(),
+             r.mapped_raw.total_luts_worst_case(),
+             r.mapped.total_luts());
+    println!("optimizer: {}", r.opt_report.summary());
     Ok(())
 }
 
@@ -250,9 +269,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let r = run_flow(&rt, &meta, &opts)?;
         print_flow_result(&r);
         {
-            let sim = r.netlist.simulator();
-            println!("{name}: {}/{} layers bit-plane",
-                     sim.bitplane_layers(), r.netlist.layers.len());
+            // what the server will actually compile per worker (the
+            // registry netlist is optimized again at registration)
+            let sim = r.netlist_opt.simulator();
+            println!("{name}: {}/{} layers bit-plane after optimization",
+                     sim.bitplane_layers(), r.netlist_opt.layers.len());
         }
         let top = &meta.config(name)?.topology;
         let splits =
@@ -272,8 +293,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.usize_flag("max-wait-us", 200)? as u64),
         workers: args.usize_flag("workers", 2)?,
         sim_threads: args.usize_flag("sim-threads", 1)?,
+        opt_level: args.opt_level()?,
     };
     let server = InferenceServer::start(registry, cfg);
+    for name in &configs {
+        println!("{name}: optimizer {}",
+                 server.opt_report(name)?.summary());
+    }
     let sw = Stopwatch::start();
     // one client thread per model: the streams interleave in the router
     std::thread::scope(|s| -> Result<()> {
@@ -340,14 +366,17 @@ fn main() {
                  [--seed N] [--no-skips] [--random-conn] [--augment] \
                  [--artifacts DIR] [--out FILE] [--requests N] \
                  [--max-batch N] [--max-wait-us N] [--workers N] \
-                 [--sim-threads N]\n\n\
+                 [--sim-threads N] [--opt-level 0|1|2]\n\n\
                  serve hosts several configs at once: \
                  --config nid,jsc_cb serves both from one process \
                  (per-model batching policies and statistics). \
                  --max-batch / --max-wait-us set the default dispatch \
                  policy (batch fills or oldest request ages out); \
                  --workers and --sim-threads size the shared evaluation \
-                 threads."
+                 threads. --opt-level picks the netlist optimizer \
+                 pipeline (0 none, 1 const-fold+dead-logic, 2 +CSE; \
+                 default 2) applied before mapping, RTL and serving; \
+                 per-model OptReport stats are printed at startup."
             );
             Ok(())
         }

@@ -14,14 +14,24 @@
 //! bit support fits a physical LUT — boolean *and* multi-bit — 64 samples
 //! per word, optionally chunked across worker threads.
 
+mod opt;
 mod sim;
 
+pub use opt::{optimize, ConstantFold, Cse, DeadLogic, OptLevel,
+              OptReport, Pass, PassDelta, PassManager};
 pub use sim::{eval_packed, BitPlaneLayer, KernelChoice, SimOptions,
               Simulator, ThreadMode, WorkerPool, MAX_PLANE_SUPPORT};
 
 use anyhow::{bail, Context, Result};
 
 use crate::luts::TruthTable;
+
+/// Upper bound on a unit's address width (`in_bits * fan_in`).  Real
+/// designs stay far below it (a 2^24-entry table is already 32 MiB);
+/// the cap exists so corrupt or adversarial inputs fail validation with
+/// a clear error instead of overflowing the `1 << addr_bits` shift in
+/// [`LayerSpec::entries_per_unit`].
+pub const MAX_ADDR_BITS: usize = 24;
 
 /// One layer of the netlist.
 #[derive(Clone, Debug)]
@@ -72,6 +82,20 @@ impl Netlist {
         let mut prev_w = self.n_in;
         let mut prev_bits = self.in_bits;
         for (l, layer) in self.layers.iter().enumerate() {
+            // bound the address width *before* anything shifts by it:
+            // entries_per_unit computes 1 << (in_bits * fan_in), which
+            // overflows usize on adversarial/corrupt inputs
+            let addr_bits = layer.in_bits.saturating_mul(layer.fan_in);
+            if addr_bits > MAX_ADDR_BITS {
+                bail!("layer {l}: address width {addr_bits} bits \
+                       (in_bits {} * fan_in {}) exceeds the \
+                       {MAX_ADDR_BITS}-bit cap",
+                      layer.in_bits, layer.fan_in);
+            }
+            if layer.out_bits == 0 || layer.out_bits > 16 {
+                bail!("layer {l}: out_bits {} outside 1..=16 \
+                       (tables store u16 codes)", layer.out_bits);
+            }
             if layer.conn.len() != layer.w * layer.fan_in {
                 bail!("layer {l}: conn len mismatch");
             }
@@ -151,7 +175,6 @@ impl Netlist {
 
     /// Build a netlist from per-layer (conn, tables) data plus widths —
     /// the bridge from the enumeration artifacts.
-    #[allow(clippy::too_many_arguments)]
     pub fn from_parts(
         name: &str,
         n_in: usize,
@@ -298,6 +321,53 @@ mod tests {
         let mut nl2 = random_netlist(2, 8, 1, &[(4, 2, 2)]);
         nl2.layers[0].tables[3] = 7; // > 2 bits
         assert!(nl2.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_overflowing_address_width() {
+        // in_bits * fan_in = 64 would overflow `1usize << addr_bits`
+        // inside entries_per_unit; validation must bail first
+        let layer = LayerSpec {
+            w: 1,
+            fan_in: 16,
+            in_bits: 4,
+            out_bits: 1,
+            conn: vec![0; 16],
+            tables: vec![],
+        };
+        let nl = Netlist { name: "bad".into(), n_in: 1, in_bits: 4,
+                           layers: vec![layer] };
+        let err = nl.validate().unwrap_err().to_string();
+        assert!(err.contains("address width"), "unexpected error: {err}");
+        // just over the cap fails; at the cap the shift itself is fine
+        let mut nl2 = Netlist { name: "edge".into(), n_in: 1, in_bits: 1,
+                                layers: vec![LayerSpec {
+                                    w: 0,
+                                    fan_in: MAX_ADDR_BITS + 1,
+                                    in_bits: 1,
+                                    out_bits: 1,
+                                    conn: vec![],
+                                    tables: vec![],
+                                }] };
+        assert!(nl2.validate().is_err());
+        nl2.layers[0].fan_in = MAX_ADDR_BITS;
+        nl2.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_out_bits() {
+        let layer = LayerSpec {
+            w: 1,
+            fan_in: 1,
+            in_bits: 1,
+            out_bits: 17,
+            conn: vec![0],
+            tables: vec![0, 0],
+        };
+        let nl = Netlist { name: "bad".into(), n_in: 1, in_bits: 1,
+                           layers: vec![layer] };
+        let err = nl.validate().unwrap_err().to_string();
+        assert!(err.contains("out_bits"), "unexpected error: {err}");
     }
 
     #[test]

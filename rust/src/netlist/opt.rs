@@ -1,0 +1,818 @@
+//! Netlist optimizer: a shared, semantics-preserving pass pipeline.
+//!
+//! Trained L-LUT tables are heavily structured — pruned supports,
+//! constant bits, duplicated sub-functions — and before this module
+//! every consumer rediscovered that structure independently (the
+//! bit-plane kernel through support reduction, the mapper through its
+//! own constant/duplicate analysis) while the netlist itself stayed raw
+//! everywhere else: the RTL emitter wrote dead units, timing priced
+//! them, the server simulated them on every request.  The optimizer
+//! turns that observation into an IR transform performed **once**:
+//! `optimize(&netlist, level)` returns a smaller netlist whose
+//! *observable outputs are bit-exact* with the input for every possible
+//! input vector, plus an [`OptReport`] of what each pass removed.
+//! Mapping, timing, RTL emission and serving all consume the optimized
+//! artifact (the raw netlist is kept around only as the worst-case /
+//! ablation reference).
+//!
+//! Pass set (applied in pipeline order by [`PassManager::for_level`]):
+//!
+//! * **constant folding** ([`ConstantFold`]) — a forward sweep pins
+//!   every consumer address bit that is fed by a constant producer bit
+//!   (projecting the consumer table so the bit becomes a don't-care),
+//!   then deletes units whose outputs are entirely constant: their
+//!   consumers no longer read them.
+//! * **dead-logic elimination** ([`DeadLogic`]) — duplicate-producer
+//!   slots within a unit are merged (two slots wired to the same
+//!   producer always carry equal fields, so the higher slot can mirror
+//!   the lower and fall out of the support), unused slots are
+//!   canonically repointed at producer 0, backward liveness from the
+//!   primary outputs drops every unit no live consumer truly reads,
+//!   and address slots dead across a whole layer are pruned with table
+//!   projection (shrinking `fan_in` and the table size `2^(in_bits *
+//!   fan_in)`).
+//! * **common-subexpression elimination** ([`Cse`]) — units within a
+//!   layer are hash-consed on `(conn, table)`; consumers of duplicates
+//!   are rewired to the representative.  The canonical wiring produced
+//!   by `DeadLogic` feeds this, which is why the full pipeline runs
+//!   `DeadLogic` both before and after `Cse`.
+//!
+//! Soundness notes live on each helper: every rewrite is a table
+//! projection that is the identity on all *reachable* addresses, a
+//! deletion of units no consumer can observe, or an index remap.  The
+//! output layer is never restructured (its width and unit order are the
+//! observable interface), layers are never emptied (an anchor unit is
+//! kept so the `LayerSpec` chain stays valid), and `fan_in` never
+//! reaches zero (downstream emitters index address vectors).  The
+//! property suite (`rust/tests/properties.rs`) proves bit-exactness
+//! against `eval_one`/`eval_batch` on random reducible netlists across
+//! seeds, levels and batch sizes.
+
+use std::collections::HashMap;
+
+use anyhow::bail;
+
+use super::{LayerSpec, Netlist};
+
+/// How aggressively to optimize.  Levels are cumulative.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    /// no passes; the netlist is returned unchanged (ablation baseline)
+    None,
+    /// constant folding + dead-logic elimination
+    Basic,
+    /// `Basic` + CSE (with a second dead-logic sweep after rewiring)
+    #[default]
+    Full,
+}
+
+impl std::fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            OptLevel::None => "O0",
+            OptLevel::Basic => "O1",
+            OptLevel::Full => "O2",
+        })
+    }
+}
+
+impl std::str::FromStr for OptLevel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<OptLevel> {
+        match s {
+            "0" | "none" | "O0" | "o0" => Ok(OptLevel::None),
+            "1" | "basic" | "O1" | "o1" => Ok(OptLevel::Basic),
+            "2" | "full" | "O2" | "o2" => Ok(OptLevel::Full),
+            other => bail!("unknown opt level '{other}' (use 0|1|2)"),
+        }
+    }
+}
+
+/// One netlist-to-netlist rewrite whose contract is bit-exact
+/// observable outputs for every input vector.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+
+    /// Rewrite the netlist.  The result must validate and must evaluate
+    /// identically to `nl` on every input.
+    fn run(&self, nl: &Netlist) -> Netlist;
+}
+
+/// What one pass changed, in netlist-size terms (units are L-LUTs;
+/// table entries are the stored `u16` codes — the memory the simulator
+/// walks and the ROM bits the RTL emits).  Mapped P-LUT deltas are the
+/// mapper's to report: consumers compare `map_netlist` on the raw and
+/// optimized netlists (the flow and CLI print both).
+#[derive(Clone, Debug)]
+pub struct PassDelta {
+    pub pass: &'static str,
+    pub units_before: usize,
+    pub units_after: usize,
+    pub table_entries_before: usize,
+    pub table_entries_after: usize,
+}
+
+/// Aggregate record of one [`optimize`] run.
+#[derive(Clone, Debug)]
+pub struct OptReport {
+    pub level: OptLevel,
+    pub passes: Vec<PassDelta>,
+    pub units_before: usize,
+    pub units_after: usize,
+    pub table_entries_before: usize,
+    pub table_entries_after: usize,
+}
+
+impl OptReport {
+    pub fn units_removed(&self) -> usize {
+        self.units_before.saturating_sub(self.units_after)
+    }
+
+    pub fn table_entries_removed(&self) -> usize {
+        self.table_entries_before
+            .saturating_sub(self.table_entries_after)
+    }
+
+    /// One-line human summary for logs and CLI tables.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{}: {} -> {} L-LUTs, {} -> {} table entries",
+            self.level, self.units_before, self.units_after,
+            self.table_entries_before, self.table_entries_after
+        );
+        if !self.passes.is_empty() {
+            let parts: Vec<String> = self
+                .passes
+                .iter()
+                .map(|d| {
+                    format!(
+                        "{} -{}u/-{}e",
+                        d.pass,
+                        d.units_before.saturating_sub(d.units_after),
+                        d.table_entries_before
+                            .saturating_sub(d.table_entries_after)
+                    )
+                })
+                .collect();
+            s.push_str(&format!(" ({})", parts.join(", ")));
+        }
+        s
+    }
+}
+
+/// An ordered pass pipeline.  [`PassManager::for_level`] builds the
+/// standard pipelines; custom pipelines can be assembled from the
+/// exported passes.
+pub struct PassManager {
+    level: OptLevel,
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    /// The standard pipeline for an optimization level.
+    pub fn for_level(level: OptLevel) -> PassManager {
+        let mut passes: Vec<Box<dyn Pass>> = Vec::new();
+        if level >= OptLevel::Basic {
+            passes.push(Box::new(ConstantFold));
+            passes.push(Box::new(DeadLogic));
+        }
+        if level >= OptLevel::Full {
+            passes.push(Box::new(Cse));
+            passes.push(Box::new(DeadLogic));
+        }
+        PassManager { level, passes }
+    }
+
+    /// A custom pipeline (reported under the given level label).
+    pub fn new(level: OptLevel, passes: Vec<Box<dyn Pass>>) -> PassManager {
+        PassManager { level, passes }
+    }
+
+    pub fn pass_names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    /// Run the pipeline, recording per-pass size deltas.
+    pub fn run(&self, nl: &Netlist) -> (Netlist, OptReport) {
+        let mut cur = nl.clone();
+        let mut passes = Vec::with_capacity(self.passes.len());
+        if !nl.layers.is_empty() {
+            for p in &self.passes {
+                let units_before = cur.total_units();
+                let table_entries_before = table_entries(&cur);
+                cur = p.run(&cur);
+                debug_assert!(
+                    cur.validate().is_ok(),
+                    "pass '{}' broke netlist invariants",
+                    p.name()
+                );
+                passes.push(PassDelta {
+                    pass: p.name(),
+                    units_before,
+                    units_after: cur.total_units(),
+                    table_entries_before,
+                    table_entries_after: table_entries(&cur),
+                });
+            }
+        }
+        let report = OptReport {
+            level: self.level,
+            passes,
+            units_before: nl.total_units(),
+            units_after: cur.total_units(),
+            table_entries_before: table_entries(nl),
+            table_entries_after: table_entries(&cur),
+        };
+        (cur, report)
+    }
+}
+
+/// Optimize a netlist at the given level.  The returned netlist is
+/// bit-exact with `nl` on every input; the report records what each
+/// pass removed.
+pub fn optimize(nl: &Netlist, level: OptLevel) -> (Netlist, OptReport) {
+    PassManager::for_level(level).run(nl)
+}
+
+fn table_entries(nl: &Netlist) -> usize {
+    nl.layers.iter().map(|l| l.tables.len()).sum()
+}
+
+fn rebuilt(nl: &Netlist, layers: Vec<LayerSpec>) -> Netlist {
+    Netlist {
+        name: nl.name.clone(),
+        n_in: nl.n_in,
+        in_bits: nl.in_bits,
+        layers,
+    }
+}
+
+/// Make address bit `a` of one unit's table a don't-care by copying the
+/// cofactor where bit `a` equals `v` over the other cofactor.  Sound
+/// when bit `a` can only ever carry `v` at run time (its producer bit
+/// is constant): every reachable address keeps its old value.
+fn fix_addr_bit(table: &mut [u16], a: usize, v: bool) {
+    let stride = 1usize << a;
+    for base in 0..table.len() {
+        if base & stride == 0 {
+            let keep = if v { table[base | stride] } else { table[base] };
+            table[base] = keep;
+            table[base | stride] = keep;
+        }
+    }
+}
+
+/// Project a unit's table so address slot `f2` becomes a don't-care by
+/// reading the value at the address where slot `f2`'s field is replaced
+/// with slot `f1`'s.  Sound when both slots are wired to the same
+/// producer: their fields are always equal at run time, so reachable
+/// addresses (field(f1) == field(f2)) keep their old value.
+fn merge_dup_slot(table: &mut [u16], in_bits: usize, f1: usize, f2: usize) {
+    let mask = (1usize << in_bits) - 1;
+    let old = table.to_vec();
+    for (addr, slot) in table.iter_mut().enumerate() {
+        let v1 = (addr >> (in_bits * f1)) & mask;
+        let src = (addr & !(mask << (in_bits * f2))) | (v1 << (in_bits * f2));
+        *slot = old[src];
+    }
+}
+
+/// Which address slots unit `u`'s table actually depends on (union of
+/// the per-output-bit true supports, folded onto slots).
+fn used_slots(layer: &LayerSpec, u: usize) -> Vec<bool> {
+    let tt = layer.truth_table(u);
+    let mut used = vec![false; layer.fan_in];
+    for b in 0..layer.out_bits {
+        for v in tt.bit_support(b) {
+            used[v / layer.in_bits] = true;
+        }
+    }
+    used
+}
+
+/// Drop the units of layer `l` whose `keep` flag is false and rewire
+/// the consumer layer.  Callers guarantee that every consumer reference
+/// to a dropped unit is either a don't-care slot (the consumer's table
+/// ignores the slot's address bits) or has a kept replacement in
+/// `redirect` (CSE: a representative computing the identical function).
+/// A layer is never emptied: if nothing survives, unit 0 is kept as an
+/// anchor so the `LayerSpec` chain stays structurally valid.
+fn retain_units(layers: &mut [LayerSpec], l: usize, keep: &[bool],
+                redirect: &HashMap<u32, u32>) {
+    if keep.is_empty() {
+        return;
+    }
+    let mut keep = keep.to_vec();
+    if !keep.iter().any(|&k| k) {
+        keep[0] = true;
+    }
+    if keep.iter().all(|&k| k) {
+        return;
+    }
+    let mut new_idx = vec![u32::MAX; keep.len()];
+    let mut n = 0u32;
+    for (u, &k) in keep.iter().enumerate() {
+        if k {
+            new_idx[u] = n;
+            n += 1;
+        }
+    }
+    let first_kept = keep.iter().position(|&k| k).unwrap();
+    {
+        let layer = &mut layers[l];
+        let epu = layer.entries_per_unit();
+        let fan_in = layer.fan_in;
+        let mut conn = Vec::with_capacity(n as usize * fan_in);
+        let mut tables = Vec::with_capacity(n as usize * epu);
+        for u in 0..layer.w {
+            if keep[u] {
+                conn.extend_from_slice(
+                    &layer.conn[u * fan_in..(u + 1) * fan_in]);
+                tables.extend_from_slice(
+                    &layer.tables[u * epu..(u + 1) * epu]);
+            }
+        }
+        layer.w = n as usize;
+        layer.conn = conn;
+        layer.tables = tables;
+    }
+    if l + 1 < layers.len() {
+        for c in layers[l + 1].conn.iter_mut() {
+            let mut p = *c as usize;
+            if !keep[p] {
+                p = match redirect.get(&(p as u32)) {
+                    Some(&r) if keep[r as usize] => r as usize,
+                    _ => first_kept,
+                };
+            }
+            *c = new_idx[p];
+        }
+    }
+}
+
+/// Drop address slots no unit in the layer depends on, projecting every
+/// table onto the surviving slots (dropped fields fixed to 0 — they are
+/// don't-cares for every unit, so any fixing is sound).  At least one
+/// slot is kept so `fan_in` never reaches zero.
+fn prune_dead_slots(layer: &mut LayerSpec) {
+    if layer.fan_in <= 1 || layer.w == 0 {
+        return;
+    }
+    let mut keep = vec![false; layer.fan_in];
+    for u in 0..layer.w {
+        for (f, used) in used_slots(layer, u).into_iter().enumerate() {
+            if used {
+                keep[f] = true;
+            }
+        }
+        if keep.iter().all(|&k| k) {
+            return;
+        }
+    }
+    if !keep.iter().any(|&k| k) {
+        keep[0] = true;
+    }
+    let in_bits = layer.in_bits;
+    let old_fan = layer.fan_in;
+    let new_fan = keep.iter().filter(|&&k| k).count();
+    let old_epu = layer.entries_per_unit();
+    let new_epu = 1usize << (in_bits * new_fan);
+    let mask = (1usize << in_bits) - 1;
+    let mut conn = Vec::with_capacity(layer.w * new_fan);
+    let mut tables = Vec::with_capacity(layer.w * new_epu);
+    for u in 0..layer.w {
+        let old_t = &layer.tables[u * old_epu..(u + 1) * old_epu];
+        for addr in 0..new_epu {
+            let mut old_addr = 0usize;
+            let mut g = 0usize;
+            for f in 0..old_fan {
+                if keep[f] {
+                    old_addr |=
+                        ((addr >> (in_bits * g)) & mask) << (in_bits * f);
+                    g += 1;
+                }
+            }
+            tables.push(old_t[old_addr]);
+        }
+        for f in 0..old_fan {
+            if keep[f] {
+                conn.push(layer.conn[u * old_fan + f]);
+            }
+        }
+    }
+    layer.fan_in = new_fan;
+    layer.conn = conn;
+    layer.tables = tables;
+}
+
+/// Constant folding: pin consumer address bits fed by constant producer
+/// bits (zero-support output bits are thereby hardwired into every
+/// consumer), then delete units whose outputs are entirely constant —
+/// after the pinning sweep no consumer table reads any of their bits.
+pub struct ConstantFold;
+
+impl Pass for ConstantFold {
+    fn name(&self) -> &'static str {
+        "const-fold"
+    }
+
+    fn run(&self, nl: &Netlist) -> Netlist {
+        let mut layers = nl.layers.to_vec();
+        let n = layers.len();
+        // forward sweep: prev_const[s * in_bits + k] records whether bit
+        // k of producer signal s is constant (inputs never are)
+        let mut prev_const: Vec<Option<bool>> =
+            vec![None; nl.n_in * nl.in_bits];
+        let mut unit_const: Vec<Vec<bool>> = Vec::with_capacity(n);
+        for layer in layers.iter_mut() {
+            let epu = layer.entries_per_unit();
+            let fan_in = layer.fan_in;
+            let in_bits = layer.in_bits;
+            for u in 0..layer.w {
+                for f in 0..fan_in {
+                    let src = layer.conn[u * fan_in + f] as usize;
+                    for k in 0..in_bits {
+                        if let Some(v) = prev_const[src * in_bits + k] {
+                            fix_addr_bit(
+                                &mut layer.tables
+                                    [u * epu..(u + 1) * epu],
+                                f * in_bits + k,
+                                v,
+                            );
+                        }
+                    }
+                }
+            }
+            let mut consts = vec![None; layer.w * layer.out_bits];
+            let mut all_const = vec![true; layer.w];
+            for u in 0..layer.w {
+                let tt = layer.truth_table(u);
+                for b in 0..layer.out_bits {
+                    let c = tt.bit_constant(b);
+                    if c.is_none() {
+                        all_const[u] = false;
+                    }
+                    consts[u * layer.out_bits + b] = c;
+                }
+            }
+            prev_const = consts;
+            unit_const.push(all_const);
+        }
+        // deletion sweep: fully-constant units (never the output layer —
+        // constant primary outputs are observable and stay)
+        for l in 0..n.saturating_sub(1) {
+            let keep: Vec<bool> =
+                unit_const[l].iter().map(|&c| !c).collect();
+            retain_units(&mut layers, l, &keep, &HashMap::new());
+        }
+        rebuilt(nl, layers)
+    }
+}
+
+/// Dead-logic elimination: duplicate-producer slot merging, backward
+/// liveness from the primary outputs, canonical rewiring of unused
+/// slots, and layer-wide dead address-slot pruning.
+pub struct DeadLogic;
+
+impl Pass for DeadLogic {
+    fn name(&self) -> &'static str {
+        "dead-logic"
+    }
+
+    fn run(&self, nl: &Netlist) -> Netlist {
+        let mut layers = nl.layers.to_vec();
+        let n = layers.len();
+        if n == 0 {
+            return rebuilt(nl, layers);
+        }
+        // 1. merge duplicate-producer slots so the higher slot leaves
+        //    the support
+        for layer in layers.iter_mut() {
+            let fan_in = layer.fan_in;
+            let in_bits = layer.in_bits;
+            let epu = layer.entries_per_unit();
+            for u in 0..layer.w {
+                for f2 in 1..fan_in {
+                    let src2 = layer.conn[u * fan_in + f2];
+                    if let Some(f1) = (0..f2)
+                        .find(|&f1| layer.conn[u * fan_in + f1] == src2)
+                    {
+                        merge_dup_slot(
+                            &mut layer.tables[u * epu..(u + 1) * epu],
+                            in_bits, f1, f2,
+                        );
+                    }
+                }
+            }
+        }
+        // 2. backward liveness; unused slots repointed at producer 0 on
+        //    the way (their values cannot matter, and uniform wiring
+        //    gives the CSE pass more hash-cons hits)
+        let mut live: Vec<Vec<bool>> =
+            layers.iter().map(|l| vec![false; l.w]).collect();
+        for x in live[n - 1].iter_mut() {
+            *x = true;
+        }
+        for l in (0..n).rev() {
+            let layer = &mut layers[l];
+            let fan_in = layer.fan_in;
+            let mut used: Vec<Vec<bool>> = Vec::with_capacity(layer.w);
+            for u in 0..layer.w {
+                used.push(used_slots(layer, u));
+            }
+            for u in 0..layer.w {
+                for f in 0..fan_in {
+                    if !used[u][f] {
+                        layer.conn[u * fan_in + f] = 0;
+                    }
+                }
+            }
+            if l > 0 {
+                for u in 0..layer.w {
+                    if !live[l][u] {
+                        continue;
+                    }
+                    for f in 0..fan_in {
+                        if used[u][f] {
+                            let src =
+                                layer.conn[u * fan_in + f] as usize;
+                            live[l - 1][src] = true;
+                        }
+                    }
+                }
+            }
+        }
+        // 3. drop dead units (consumer references to them are unused
+        //    slots, so the fallback rewiring in retain_units is sound)
+        for l in 0..n.saturating_sub(1) {
+            let keep = live[l].clone();
+            retain_units(&mut layers, l, &keep, &HashMap::new());
+        }
+        // 4. prune address slots dead across each whole layer
+        for layer in layers.iter_mut() {
+            prune_dead_slots(layer);
+        }
+        rebuilt(nl, layers)
+    }
+}
+
+/// Common-subexpression elimination: hash-cons units within a layer on
+/// `(conn, table)` and rewire consumers of duplicates onto the
+/// representative.  The output layer is skipped — its units are the
+/// observable interface even when two compute the same function.
+pub struct Cse;
+
+impl Pass for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, nl: &Netlist) -> Netlist {
+        let mut layers = nl.layers.to_vec();
+        let n = layers.len();
+        for l in 0..n.saturating_sub(1) {
+            let (keep, redirect) = {
+                let layer = &layers[l];
+                let mut seen: HashMap<(Vec<u32>, Vec<u16>), u32> =
+                    HashMap::new();
+                let mut keep = vec![true; layer.w];
+                let mut redirect: HashMap<u32, u32> = HashMap::new();
+                for u in 0..layer.w {
+                    let key = (layer.unit_conn(u).to_vec(),
+                               layer.unit_table(u).to_vec());
+                    match seen.entry(key) {
+                        std::collections::hash_map::Entry::Occupied(e) => {
+                            keep[u] = false;
+                            redirect.insert(u as u32, *e.get());
+                        }
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            e.insert(u as u32);
+                        }
+                    }
+                }
+                (keep, redirect)
+            };
+            if !keep.iter().all(|&k| k) {
+                retain_units(&mut layers, l, &keep, &redirect);
+            }
+        }
+        rebuilt(nl, layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{random_inputs,
+                                 random_reducible_netlist};
+    use super::*;
+
+    fn assert_bit_exact(raw: &Netlist, opt: &Netlist, seed: u64,
+                        batch: usize) {
+        assert_eq!(opt.n_in, raw.n_in);
+        assert_eq!(opt.out_width(), raw.out_width());
+        opt.validate().unwrap();
+        let x = random_inputs(seed, raw, batch);
+        for b in 0..batch {
+            let row = &x[b * raw.n_in..(b + 1) * raw.n_in];
+            assert_eq!(opt.eval_one(row).unwrap(),
+                       raw.eval_one(row).unwrap(), "row {b}");
+        }
+    }
+
+    #[test]
+    fn constant_producer_is_absorbed_and_deleted() {
+        // layer 0: unit 0 constant-1, unit 1 identity; layer 1: AND
+        let l0 = LayerSpec {
+            w: 2, fan_in: 1, in_bits: 1, out_bits: 1,
+            conn: vec![0, 1],
+            tables: vec![1, 1, 0, 1],
+        };
+        let l1 = LayerSpec {
+            w: 1, fan_in: 2, in_bits: 1, out_bits: 1,
+            conn: vec![0, 1],
+            tables: vec![0, 0, 0, 1],
+        };
+        let nl = Netlist { name: "cf".into(), n_in: 2, in_bits: 1,
+                           layers: vec![l0, l1] };
+        nl.validate().unwrap();
+        let (opt, report) = optimize(&nl, OptLevel::Full);
+        assert_bit_exact(&nl, &opt, 1, 4);
+        // the constant unit is gone; the AND collapsed to a wire whose
+        // dead slot was pruned away
+        assert_eq!(opt.total_units(), 2);
+        assert_eq!(opt.layers[0].w, 1);
+        assert_eq!(opt.layers[1].fan_in, 1);
+        assert_eq!(report.units_removed(), 1);
+        assert!(report.table_entries_removed() > 0);
+    }
+
+    #[test]
+    fn dead_units_are_dropped_by_liveness() {
+        // layer 0 has 3 units; only unit 2 is read by the output
+        let l0 = LayerSpec {
+            w: 3, fan_in: 1, in_bits: 1, out_bits: 1,
+            conn: vec![0, 1, 0],
+            tables: vec![0, 1, 1, 0, 0, 1],
+        };
+        let l1 = LayerSpec {
+            w: 1, fan_in: 1, in_bits: 1, out_bits: 1,
+            conn: vec![2],
+            tables: vec![1, 0],
+        };
+        let nl = Netlist { name: "dce".into(), n_in: 2, in_bits: 1,
+                           layers: vec![l0, l1] };
+        nl.validate().unwrap();
+        let (opt, report) = optimize(&nl, OptLevel::Basic);
+        assert_bit_exact(&nl, &opt, 2, 4);
+        assert_eq!(opt.layers[0].w, 1);
+        assert_eq!(report.units_removed(), 2);
+    }
+
+    #[test]
+    fn duplicate_units_are_hash_consed() {
+        // two identical XOR units + one OR, all live: the consumer
+        // computes a ^ (b & c) over units (0, 1, 2)
+        let xor = vec![0u16, 1, 1, 0];
+        let or = vec![0u16, 1, 1, 1];
+        let l0 = LayerSpec {
+            w: 3, fan_in: 2, in_bits: 1, out_bits: 1,
+            conn: vec![0, 1, 0, 1, 0, 1],
+            tables: [xor.clone(), xor.clone(), or].concat(),
+        };
+        let l1 = LayerSpec {
+            w: 1, fan_in: 3, in_bits: 1, out_bits: 1,
+            conn: vec![0, 1, 2],
+            tables: vec![0, 1, 0, 1, 0, 1, 1, 0],
+        };
+        let nl = Netlist { name: "cse".into(), n_in: 2, in_bits: 1,
+                           layers: vec![l0, l1] };
+        nl.validate().unwrap();
+        let (opt, _) = optimize(&nl, OptLevel::Full);
+        assert_bit_exact(&nl, &opt, 3, 4);
+        assert_eq!(opt.layers[0].w, 2, "duplicate XOR must be shared");
+        // the consumer's two XOR slots merged, so one was pruned away
+        assert_eq!(opt.layers[1].fan_in, 2);
+        // Basic has no CSE: all three units stay (all are live)
+        let (basic, _) = optimize(&nl, OptLevel::Basic);
+        assert_eq!(basic.layers[0].w, 3);
+        assert_eq!(basic.layers[1].fan_in, 3);
+    }
+
+    #[test]
+    fn duplicate_producer_slots_merge_and_prune() {
+        // one unit reading input 0 twice: XOR(x, x) == 0, but the
+        // rewrite must stay sound for any table — use f(a,b) = a
+        let l0 = LayerSpec {
+            w: 1, fan_in: 2, in_bits: 1, out_bits: 1,
+            conn: vec![0, 0],
+            tables: vec![0, 1, 0, 1],
+        };
+        let nl = Netlist { name: "dup".into(), n_in: 1, in_bits: 1,
+                           layers: vec![l0] };
+        nl.validate().unwrap();
+        let (opt, _) = optimize(&nl, OptLevel::Basic);
+        assert_bit_exact(&nl, &opt, 4, 2);
+        assert_eq!(opt.layers[0].fan_in, 1, "dead slot must be pruned");
+        assert_eq!(opt.layers[0].tables, vec![0, 1]);
+    }
+
+    #[test]
+    fn all_constant_cascade_keeps_anchors() {
+        // every unit in layers 0/1 collapses to a constant; anchors
+        // keep the layer chain valid and the output is preserved
+        let l0 = LayerSpec {
+            w: 2, fan_in: 1, in_bits: 1, out_bits: 1,
+            conn: vec![0, 1],
+            tables: vec![1, 1, 0, 0],
+        };
+        let l1 = LayerSpec {
+            w: 2, fan_in: 2, in_bits: 1, out_bits: 2,
+            conn: vec![0, 1, 1, 0],
+            tables: vec![3, 2, 1, 0, 3, 2, 1, 0],
+        };
+        let l2 = LayerSpec {
+            w: 1, fan_in: 1, in_bits: 2, out_bits: 2,
+            conn: vec![1],
+            tables: vec![0, 1, 2, 3],
+        };
+        let nl = Netlist { name: "anchor".into(), n_in: 2, in_bits: 1,
+                           layers: vec![l0, l1, l2] };
+        nl.validate().unwrap();
+        for level in [OptLevel::Basic, OptLevel::Full] {
+            let (opt, _) = optimize(&nl, level);
+            assert_bit_exact(&nl, &opt, 5, 4);
+            assert!(opt.layers.iter().all(|l| l.w >= 1 && l.fan_in >= 1));
+        }
+    }
+
+    #[test]
+    fn level_none_is_identity() {
+        let nl = random_reducible_netlist(
+            71, 10, 2, &[(8, 2, 2), (4, 2, 2)], 6);
+        let (opt, report) = optimize(&nl, OptLevel::None);
+        assert!(report.passes.is_empty());
+        assert_eq!(report.units_removed(), 0);
+        assert_eq!(opt.layers.len(), nl.layers.len());
+        for (a, b) in opt.layers.iter().zip(nl.layers.iter()) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.conn, b.conn);
+            assert_eq!(a.tables, b.tables);
+        }
+    }
+
+    #[test]
+    fn reducible_netlist_shrinks_and_stays_exact() {
+        let nl = random_reducible_netlist(
+            73, 16, 2, &[(24, 3, 2), (12, 2, 2), (4, 2, 2)], 6);
+        let (opt, report) = optimize(&nl, OptLevel::Full);
+        assert_bit_exact(&nl, &opt, 6, 64);
+        assert!(report.units_after <= report.units_before);
+        assert!(report.table_entries_after
+                <= report.table_entries_before);
+        // per-pass accounting chains: each pass starts where the
+        // previous ended, and the ends match the aggregate
+        for w in report.passes.windows(2) {
+            assert_eq!(w[0].units_after, w[1].units_before);
+        }
+        assert_eq!(report.passes.first().unwrap().units_before,
+                   report.units_before);
+        assert_eq!(report.passes.last().unwrap().units_after,
+                   report.units_after);
+    }
+
+    #[test]
+    fn pipeline_for_levels() {
+        assert!(PassManager::for_level(OptLevel::None)
+            .pass_names().is_empty());
+        assert_eq!(PassManager::for_level(OptLevel::Basic).pass_names(),
+                   vec!["const-fold", "dead-logic"]);
+        assert_eq!(PassManager::for_level(OptLevel::Full).pass_names(),
+                   vec!["const-fold", "dead-logic", "cse", "dead-logic"]);
+    }
+
+    #[test]
+    fn opt_level_parse_and_display() {
+        for (s, want) in [("0", OptLevel::None), ("none", OptLevel::None),
+                          ("1", OptLevel::Basic), ("basic", OptLevel::Basic),
+                          ("2", OptLevel::Full), ("full", OptLevel::Full),
+                          ("O2", OptLevel::Full)] {
+            assert_eq!(s.parse::<OptLevel>().unwrap(), want, "{s}");
+        }
+        assert!("3".parse::<OptLevel>().is_err());
+        assert_eq!(OptLevel::Full.to_string(), "O2");
+        assert_eq!(OptLevel::default(), OptLevel::Full);
+        assert!(OptLevel::None < OptLevel::Basic);
+        assert!(OptLevel::Basic < OptLevel::Full);
+    }
+
+    #[test]
+    fn summary_mentions_level_and_passes() {
+        let nl = random_reducible_netlist(
+            77, 12, 1, &[(10, 3, 1), (4, 2, 1)], 4);
+        let (_, report) = optimize(&nl, OptLevel::Full);
+        let s = report.summary();
+        assert!(s.starts_with("O2:"), "{s}");
+        assert!(s.contains("const-fold") && s.contains("cse"), "{s}");
+    }
+}

@@ -14,7 +14,7 @@ use neuralut::coordinator::{check_conformance, BatchPolicy,
                             ModelRegistry, ServerConfig};
 use neuralut::netlist::testutil::{random_inputs, random_netlist,
                                   random_reducible_netlist};
-use neuralut::netlist::{SimOptions, ThreadMode};
+use neuralut::netlist::{optimize, OptLevel, SimOptions, ThreadMode};
 
 #[test]
 fn conformance_direct_simulator() {
@@ -52,12 +52,38 @@ fn conformance_scoped_threads_simulator() {
 }
 
 #[test]
+fn conformance_optimized_netlist_simulator() {
+    // the serving path compiles *optimized* netlists: the simulator on
+    // optimizer output must satisfy the full engine contract, and must
+    // still agree with the raw netlist's reference evaluation
+    let nl = random_reducible_netlist(
+        66, 20, 2, &[(40, 3, 2), (24, 2, 2), (6, 2, 2)], 6);
+    let (opt, report) = optimize(&nl, OptLevel::Full);
+    assert!(report.units_after <= report.units_before);
+    let mut sim = opt.simulator_with(SimOptions {
+        threads: 2,
+        min_bitplane_batch: 1,
+        ..Default::default()
+    });
+    check_conformance(&mut sim, &opt, 66).unwrap();
+    let batch = 97;
+    let x = random_inputs(67, &nl, batch);
+    let got = sim.eval_batch(&x, batch);
+    let ow = nl.out_width();
+    for b in 0..batch {
+        let want = nl.eval_one(&x[b * 20..(b + 1) * 20]).unwrap();
+        assert_eq!(&got[b * ow..(b + 1) * ow], &want[..], "row {b}");
+    }
+}
+
+#[test]
 fn conformance_batching_server() {
     let nl = random_netlist(64, 9, 1, &[(6, 3, 2), (3, 2, 2)]);
     let server = InferenceServer::start_single(
         nl.clone(),
         ServerConfig { max_batch: 16, max_wait: Duration::from_micros(100),
-                       workers: 2, sim_threads: 1 },
+                       workers: 2, sim_threads: 1,
+                       ..ServerConfig::default() },
     );
     let mut engine = server.engine(server.default_model()).unwrap();
     check_conformance(&mut engine, &nl, 64).unwrap();
@@ -120,7 +146,8 @@ fn shutdown_under_concurrent_load() {
     let server = Arc::new(InferenceServer::start_single(
         nl,
         ServerConfig { max_batch: 8, max_wait: Duration::from_micros(100),
-                       workers: 3, sim_threads: 1 },
+                       workers: 3, sim_threads: 1,
+                       ..ServerConfig::default() },
     ));
     let model = server.default_model().to_string();
     let n_clients = 4;

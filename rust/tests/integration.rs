@@ -12,6 +12,7 @@ use neuralut::config::{Meta, TrainConfig};
 use neuralut::coordinator::{run_flow, FlowOptions, Session};
 use neuralut::dataset::{self, GenOpts};
 use neuralut::mapper::map_netlist;
+use neuralut::netlist::{optimize, OptLevel};
 use neuralut::rtl;
 use neuralut::runtime::Runtime;
 use neuralut::timing::{evaluate, DelayModel, Pipelining};
@@ -149,13 +150,17 @@ fn full_flow_with_rtl_roundtrip() {
         gen: small_gen(),
         emit_rtl: true,
         verify_bit_exact: true,
+        opt_level: OptLevel::Full,
     };
     let r = run_flow(&rt, &meta, &opts).unwrap();
     assert_eq!(r.bit_exact, Some(true));
+    // the RTL is emitted from the optimized netlist (what would ship)
     let text = r.rtl_text.unwrap();
-    rtl::verify_roundtrip(&text, &r.netlist).unwrap();
-    // mapping + timing sanity
+    rtl::verify_roundtrip(&text, &r.netlist_opt).unwrap();
+    // mapping + timing sanity; the optimizer can only shrink the design
     assert!(r.mapped.total_luts() > 0);
+    assert!(r.mapped.total_luts() <= r.mapped_raw.total_luts());
+    assert!(r.netlist_opt.total_units() <= r.netlist.total_units());
     for (_, rep) in &r.reports {
         assert!(rep.fmax_mhz > 50.0 && rep.latency_ns > 0.1);
     }
@@ -208,4 +213,15 @@ fn mapper_and_timing_on_trained_netlist() {
     let p3 = evaluate(&mapped, Pipelining::EveryK(3), &dm);
     assert!(p3.ffs <= p1.ffs);
     assert!(p3.stages <= p1.stages);
+    // the netlist optimizer on *trained* tables: bit-exact on a test
+    // batch and never a larger mapped design
+    let (opt, report) = optimize(&nl, OptLevel::Full);
+    assert!(report.units_after <= report.units_before);
+    let idx: Vec<usize> = (0..cfg.topology.batch.min(splits.test.n))
+        .collect();
+    let (x, _) = splits.test.batch(&idx, cfg.topology.batch);
+    assert_eq!(opt.eval_batch(&x, cfg.topology.batch).unwrap(),
+               nl.eval_batch(&x, cfg.topology.batch).unwrap());
+    let mapped_opt = map_netlist(&opt, true);
+    assert!(mapped_opt.total_luts() <= mapped.total_luts());
 }

@@ -6,7 +6,8 @@ use neuralut::luts::TruthTable;
 use neuralut::mapper::{map_netlist, plut_cost, plut_depth};
 use neuralut::netlist::testutil::{random_inputs, random_netlist,
                                   random_reducible_netlist};
-use neuralut::netlist::{SimOptions, ThreadMode};
+use neuralut::netlist::{optimize, Netlist, OptLevel, SimOptions,
+                        ThreadMode};
 use neuralut::pruning;
 use neuralut::rtl;
 use neuralut::timing::{evaluate, DelayModel, Pipelining};
@@ -176,6 +177,128 @@ fn prop_pooled_workers_match_scoped_and_eval_one() {
     });
 }
 
+/// Check `optimize(nl, level)` at every level against the *raw*
+/// netlist's `eval_one`, via both `eval_batch` and a packed-kernel
+/// simulator, on a batch size derived from the seed.
+fn check_optimize_bit_exact(nl: &Netlist, seed: u64)
+                            -> Result<(), String> {
+    let ow = nl.out_width();
+    for level in [OptLevel::None, OptLevel::Basic, OptLevel::Full] {
+        let (opt, report) = optimize(nl, level);
+        opt.validate().map_err(|e| e.to_string())?;
+        if report.units_after > report.units_before {
+            return Err(format!("{level}: optimizer grew the netlist"));
+        }
+        let mut batch = 1 + (seed % 120) as usize;
+        if batch % 64 == 0 {
+            batch += 1; // exercise packed tail words
+        }
+        let x = random_inputs(seed ^ 0xD1, nl, batch);
+        let got = opt.eval_batch(&x, batch).map_err(|e| e.to_string())?;
+        for b in 0..batch {
+            let one = nl
+                .eval_one(&x[b * nl.n_in..(b + 1) * nl.n_in])
+                .map_err(|e| e.to_string())?;
+            if got[b * ow..(b + 1) * ow] != one[..] {
+                return Err(format!("{level}: row {b} differs"));
+            }
+        }
+        // force the packed bit-plane machinery even at small batches
+        let mut sim = opt.simulator_with(SimOptions {
+            min_bitplane_batch: 1, ..Default::default()
+        });
+        if sim.eval_batch(&x, batch) != got {
+            return Err(format!("{level}: packed simulator differs"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_optimize_is_bit_exact_on_reducible_netlists() {
+    // the optimizer keystone: for trained-like tables (pruned supports,
+    // constant bits — the structure const-fold/dead-logic/CSE exploit)
+    // the optimized netlist is bit-exact with the raw one at every
+    // level, across seeds and batch sizes
+    forall("optimize == eval_one (reducible)", 0xD1, default_cases(),
+           arb_reducible, |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_reducible_netlist(seed, n_in, in_bits, shapes, 6);
+        check_optimize_bit_exact(&nl, seed)
+    });
+}
+
+#[test]
+fn prop_optimize_is_bit_exact_on_dense_netlists() {
+    // dense random tables leave little to fold, but dead units and
+    // duplicate wiring still occur; bit-exactness must hold regardless
+    forall("optimize == eval_one (dense)", 0xD2, default_cases(),
+           arb_shape, |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_netlist(seed, n_in, in_bits, shapes);
+        check_optimize_bit_exact(&nl, seed)
+    });
+}
+
+#[test]
+fn prop_optimize_never_grows_the_mapped_design() {
+    // the mapper on the optimized netlist can only get smaller: every
+    // pass deletes units or projects tables (supports never grow)
+    forall("mapper: optimized <= raw netlist", 0xD3, 32, arb_reducible,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_reducible_netlist(seed, n_in, in_bits, shapes, 6);
+        let (opt, _) = optimize(&nl, OptLevel::Full);
+        let a = map_netlist(&opt, true).total_luts();
+        let b = map_netlist(&nl, true).total_luts();
+        if a <= b {
+            Ok(())
+        } else {
+            Err(format!("optimized {a} > raw {b}"))
+        }
+    });
+}
+
+#[test]
+fn prop_optimized_timing_never_worse() {
+    // the optimized mapping feeds the timing model: LUTs and registered
+    // bits shrink pointwise per layer, so the reports can only improve
+    forall("timing: optimized <= raw netlist", 0xD4, 24, arb_reducible,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_reducible_netlist(seed, n_in, in_bits, shapes, 6);
+        let (opt, _) = optimize(&nl, OptLevel::Full);
+        let m_raw = map_netlist(&nl, true);
+        let m_opt = map_netlist(&opt, true);
+        let dm = DelayModel::default();
+        for strat in [Pipelining::EveryLayer, Pipelining::EveryK(3)] {
+            let r = evaluate(&m_raw, strat, &dm);
+            let o = evaluate(&m_opt, strat, &dm);
+            if o.luts > r.luts {
+                return Err(format!("{strat:?}: luts {} > {}", o.luts,
+                                   r.luts));
+            }
+            if o.ffs > r.ffs {
+                return Err(format!("{strat:?}: ffs {} > {}", o.ffs,
+                                   r.ffs));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimized_rtl_roundtrip() {
+    // the RTL emitter consumes the optimized netlist in the flow; the
+    // parse-back check must hold on optimizer output too
+    forall("rtl roundtrip on optimized netlists", 0xD5, 16,
+           arb_reducible, |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_reducible_netlist(seed, n_in, in_bits, shapes, 6);
+        let (opt, _) = optimize(&nl, OptLevel::Full);
+        let text = rtl::emit(&opt, &rtl::RtlOptions {
+            cuts: vec![],
+            module_name: "opt_top".into(),
+        });
+        rtl::verify_roundtrip(&text, &opt).map_err(|e| e.to_string())
+    });
+}
+
 #[test]
 fn prop_simulator_outputs_in_code_range() {
     forall("outputs within out_bits", 0xA2, default_cases(), arb_shape,
@@ -338,6 +461,7 @@ fn prop_server_answers_match_direct_eval_under_random_load() {
             max_wait: Duration::from_micros(gen::usize_in(&mut rng, 10, 300) as u64),
             workers: gen::usize_in(&mut rng, 1, 3),
             sim_threads: gen::usize_in(&mut rng, 1, 2),
+            ..ServerConfig::default()
         });
         let model = server.default_model().to_string();
         let n = gen::usize_in(&mut rng, 1, 60);
