@@ -6,7 +6,11 @@
 //!
 //! Implementations:
 //! * [`Simulator`] — the direct in-process path (serial, scoped-thread
-//!   or persistent-pool, per its `SimOptions`);
+//!   or persistent-pool, per its `SimOptions`; executes a compiled
+//!   `ExecPlan` by default);
+//! * [`PlanExecutor`] — a compiled execution plan with private scratch,
+//!   the form server workers run (plans are compiled once per model and
+//!   shared immutably);
 //! * [`ModelEngine`] — one named model hosted by an
 //!   [`InferenceServer`](super::server::InferenceServer), routed through
 //!   the shared router/worker pipeline.
@@ -16,7 +20,7 @@
 
 use anyhow::Result;
 
-use crate::netlist::{Netlist, Simulator};
+use crate::netlist::{Netlist, PlanExecutor, Simulator};
 
 use super::server::InferenceServer;
 
@@ -55,9 +59,36 @@ impl InferenceEngine for Simulator<'_> {
 
     fn describe(&self) -> String {
         let opts = self.options();
-        format!("simulator[{}]: {}/{} layers bit-plane, {} threads ({:?})",
+        format!("simulator[{}]: {}/{} layers bit-plane, {} threads \
+                 ({:?}), {}",
                 self.netlist().name, self.bitplane_layers(),
-                self.netlist().layers.len(), opts.threads, opts.mode)
+                self.netlist().layers.len(), opts.threads, opts.mode,
+                if opts.compiled { "compiled plan" } else { "interpreted" })
+    }
+}
+
+impl InferenceEngine for PlanExecutor {
+    fn run_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<i32>> {
+        let n_in = self.plan().n_in();
+        anyhow::ensure!(x.len() == batch * n_in,
+                        "run_batch: input len {} != batch {batch} * n_in \
+                         {n_in}", x.len());
+        Ok(self.eval_batch(x, batch))
+    }
+
+    fn n_in(&self) -> usize {
+        self.plan().n_in()
+    }
+
+    fn out_width(&self) -> usize {
+        self.plan().out_width()
+    }
+
+    fn describe(&self) -> String {
+        let opts = self.options();
+        let st = self.plan().stats();
+        format!("plan[{}]: {}, {} threads ({:?})", self.plan().name(),
+                st.summary(), opts.threads, opts.mode)
     }
 }
 
@@ -148,5 +179,17 @@ mod tests {
         let mut sim = nl.simulator();
         check_conformance(&mut sim, &nl, 51).unwrap();
         assert!(sim.describe().contains("simulator"));
+        assert!(sim.describe().contains("compiled plan"));
+    }
+
+    #[test]
+    fn plan_executor_conforms() {
+        use crate::netlist::{PlanExecutor, PlanOptions};
+        use std::sync::Arc;
+        let nl = random_netlist(52, 10, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let plan = Arc::new(nl.compile_plan(PlanOptions::default()));
+        let mut ex = PlanExecutor::new(plan);
+        check_conformance(&mut ex, &nl, 52).unwrap();
+        assert!(ex.describe().starts_with("plan["));
     }
 }

@@ -10,6 +10,8 @@
 //! 5. technology mapping and timing under both pipelining strategies;
 //! 6. Verilog RTL emission with a parse-back round-trip check.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::{ConfigMeta, Meta, TrainConfig};
@@ -17,7 +19,8 @@ use crate::coordinator::session::{predictions, Session};
 use crate::dataset::{self, GenOpts, Splits};
 use crate::mapper::{map_netlist, MappedNetlist};
 use crate::metrics;
-use crate::netlist::{optimize, Netlist, OptLevel, OptReport};
+use crate::netlist::{optimize, ExecPlan, Netlist, OptLevel, OptReport,
+                     PlanExecutor, PlanOptions, SimOptions};
 use crate::pruning;
 use crate::rtl;
 use crate::runtime::Runtime;
@@ -76,6 +79,10 @@ pub struct FlowResult {
     /// serving consume (bit-exact with `netlist` by contract, checked
     /// on the test set during the flow)
     pub netlist_opt: Netlist,
+    /// the compiled execution plan of `netlist_opt` — the artifact the
+    /// serving path actually runs (bit-exactness re-checked on the test
+    /// set during the flow); shareable across executors as-is
+    pub plan: Arc<ExecPlan>,
     /// what each optimizer pass removed
     pub opt_report: OptReport,
     /// mapping of the *optimized* netlist (the real design point)
@@ -158,7 +165,17 @@ pub fn run_flow(rt: &Runtime, meta: &Meta, opts: &FlowOptions) -> Result<FlowRes
     // ---- phase 3/4: enumerate -> netlist -> verify ----
     let netlist = sess.to_netlist()?;
     let test = &splits.test;
-    let net_out = netlist.eval_batch(&test.x, test.n)?;
+    // the *interpreted* object-graph walk is the reference every
+    // downstream check compares against: the default eval_batch now
+    // executes a compiled plan itself, so using it here would make the
+    // optimizer and plan bit-exactness checks below compiled-vs-compiled
+    let net_out = {
+        let mut reference = netlist.simulator_with(SimOptions {
+            compiled: false,
+            ..SimOptions::default()
+        });
+        reference.eval_batch(&test.x, test.n)
+    };
     let net_preds = predictions(&top, &net_out);
     let netlist_acc = metrics::accuracy(&net_preds, &test.y);
 
@@ -179,6 +196,17 @@ pub fn run_flow(rt: &Runtime, meta: &Meta, opts: &FlowOptions) -> Result<FlowRes
                     "netlist optimizer broke bit-exactness on '{}'",
                     opts.config);
     log::info!("[{}] optimizer: {}", top.name, opt_report.summary());
+
+    // compile the serving artifact and prove it on the same test set:
+    // the plan is what the server's workers will execute, so the flow
+    // checks the whole chain raw -> optimized -> compiled end to end
+    let plan = Arc::new(netlist_opt.compile_plan(PlanOptions::default()));
+    let mut plan_exec = PlanExecutor::new(plan.clone());
+    let plan_out = plan_exec.eval_batch(&test.x, test.n);
+    anyhow::ensure!(plan_out == net_out,
+                    "compiled execution plan broke bit-exactness on '{}'",
+                    opts.config);
+    log::info!("[{}] plan: {}", top.name, plan.stats().summary());
     let mapped = map_netlist(&netlist_opt, true);
     let mapped_raw = map_netlist(&netlist, true);
     let dm = DelayModel::default();
@@ -209,6 +237,7 @@ pub fn run_flow(rt: &Runtime, meta: &Meta, opts: &FlowOptions) -> Result<FlowRes
         bit_exact,
         netlist,
         netlist_opt,
+        plan,
         opt_report,
         mapped,
         mapped_raw,

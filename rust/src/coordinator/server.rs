@@ -8,10 +8,14 @@
 //! routed by model name, batched *per model* (a batch never mixes
 //! models), and dispatched when a model's `max_batch` is reached or its
 //! oldest waiting request exceeds its `max_wait` — each model can carry
-//! its own [`BatchPolicy`].  Worker threads own one simulator per model
-//! (each with `sim_threads` evaluation threads on the persistent
-//! in-simulator worker pool, so one big batch fans out across cores)
-//! and publish per-model latency ([`LatencyStats`]) and batch-occupancy
+//! its own [`BatchPolicy`].  Every model is compiled **once** at
+//! registration into an arena-backed execution plan (`netlist::plan`)
+//! through a per-server [`PlanCache`] keyed by netlist content hash —
+//! content-identical models share one plan — and worker threads own
+//! one [`PlanExecutor`] (private scratch over the shared immutable
+//! plan) per model, each with `sim_threads` evaluation threads on a
+//! lent worker pool, so one big batch fans out across cores.  Workers
+//! publish per-model latency ([`LatencyStats`]) and batch-occupancy
 //! ([`BatchStats`]) statistics.  Python is nowhere on this path.
 //!
 //! The router blocks on the request channel with a timeout equal to the
@@ -49,8 +53,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::metrics::{BatchStats, LatencyStats, LatencySummary};
-use crate::netlist::{optimize, Netlist, OptLevel, OptReport, SimOptions,
-                     WorkerPool};
+use crate::netlist::{optimize, ExecPlan, Netlist, OptLevel, OptReport,
+                     PlanCache, PlanExecutor, PlanOptions, PlanStats,
+                     SimOptions, WorkerPool};
 
 use super::engine::ModelEngine;
 
@@ -188,8 +193,11 @@ struct BatchJob {
 /// Shared per-model serving state.
 struct ModelState {
     name: String,
-    /// the *optimized* netlist (what every worker simulator compiles)
-    nl: Arc<Netlist>,
+    /// the compiled execution plan of the *optimized* netlist —
+    /// compiled once at registration (through the server's [`PlanCache`],
+    /// so identically-structured models share one plan) and executed by
+    /// every worker with private scratch
+    plan: Arc<ExecPlan>,
     policy: BatchPolicy,
     n_in: usize,
     out_width: usize,
@@ -218,6 +226,9 @@ pub struct InferenceServer {
     tx: Mutex<Option<Sender<Request>>>,
     models: Vec<Arc<ModelState>>,
     by_name: HashMap<String, usize>,
+    /// registration-time plan cache: content-identical models compile
+    /// once and share one immutable plan across all workers
+    plans: PlanCache,
     stop: Arc<AtomicBool>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
@@ -228,6 +239,7 @@ impl InferenceServer {
                  -> InferenceServer {
         assert!(!registry.is_empty(), "registry holds no models");
         let default_policy = cfg.default_policy();
+        let plans = PlanCache::new();
         let models: Vec<Arc<ModelState>> = registry
             .models
             .into_iter()
@@ -239,13 +251,21 @@ impl InferenceServer {
                 let (nl, opt_report) = optimize(&spec.nl, level);
                 log::info!("model '{}' optimizer: {}", spec.name,
                            opt_report.summary());
-                let n_in = nl.n_in;
-                let out_width = nl.out_width();
+                // compile once, through the cache: workers execute the
+                // shared immutable plan with private scratch, and
+                // content-identical models (same netlist registered
+                // under several names) share one plan outright
+                let plan =
+                    plans.get_or_compile(&nl, PlanOptions::default());
+                log::info!("model '{}' plan: {}", spec.name,
+                           plan.stats().summary());
+                let n_in = plan.n_in();
+                let out_width = plan.out_width();
                 let mut policy = spec.policy.unwrap_or(default_policy);
                 policy.max_batch = policy.max_batch.max(1);
                 Arc::new(ModelState {
                     name: spec.name,
-                    nl: Arc::new(nl),
+                    plan,
                     policy,
                     n_in,
                     out_width,
@@ -298,6 +318,7 @@ impl InferenceServer {
             tx: Mutex::new(Some(tx)),
             models,
             by_name,
+            plans,
             stop,
             handles: Mutex::new(handles),
         }
@@ -397,6 +418,25 @@ impl InferenceServer {
     pub fn opt_report(&self, model: &str) -> Result<OptReport> {
         let (_, m) = self.model(model)?;
         Ok(m.opt_report.clone())
+    }
+
+    /// The compiled execution plan `model`'s workers run (shared,
+    /// immutable; content-identical models return the same `Arc`).
+    pub fn model_plan(&self, model: &str) -> Result<Arc<ExecPlan>> {
+        let (_, m) = self.model(model)?;
+        Ok(m.plan.clone())
+    }
+
+    /// Arena/dedup statistics of `model`'s compiled plan.
+    pub fn plan_stats(&self, model: &str) -> Result<PlanStats> {
+        let (_, m) = self.model(model)?;
+        Ok(m.plan.stats())
+    }
+
+    /// (distinct plans compiled, cache hits) across all registrations —
+    /// hits mean several models shared one compilation.
+    pub fn plan_cache_counts(&self) -> (usize, u64) {
+        (self.plans.len(), self.plans.hits())
     }
 
     /// Statistics snapshot for one model.
@@ -556,19 +596,25 @@ fn router_loop(rx: Receiver<Request>, btx: Sender<BatchJob>,
 
 fn worker_loop(brx: &Mutex<Receiver<BatchJob>>, models: &[Arc<ModelState>],
                stop: &AtomicBool, sim_opts: SimOptions) {
-    // one simulator per hosted model, built once (persistent scratch
-    // buffers), sharing a single worker pool lent to whichever model's
-    // simulator is evaluating: this worker drives one batch at a time,
-    // so parked evaluation threads scale with `workers`, not
-    // `workers × models`
-    let nls: Vec<Arc<Netlist>> = models.iter().map(|m| m.nl.clone()).collect();
-    let mut sims: Vec<_> =
-        nls.iter().map(|nl| nl.simulator_with(sim_opts)).collect();
+    // one plan executor per hosted model: the *plan* (tables, wiring,
+    // schedule) is the registration-time compile shared by every worker;
+    // only the scratch buffers here are private.  A single worker pool
+    // is lent to whichever model's executor is evaluating: this worker
+    // drives one batch at a time, so parked evaluation threads scale
+    // with `workers`, not `workers × models`.
+    let mut exs: Vec<PlanExecutor> = models
+        .iter()
+        .map(|m| PlanExecutor::with_options(m.plan.clone(), sim_opts))
+        .collect();
     let mut lent = if sim_opts.threads > 1 {
         Some(WorkerPool::new(sim_opts.threads - 1))
     } else {
         None
     };
+    // reused across batches: steady-state serving allocates only the
+    // per-request reply vectors
+    let mut x: Vec<i32> = Vec::new();
+    let mut out: Vec<i32> = Vec::new();
     loop {
         let job = {
             let guard = brx.lock().unwrap();
@@ -589,15 +635,15 @@ fn worker_loop(brx: &Mutex<Receiver<BatchJob>>, models: &[Arc<ModelState>],
         let state = &models[job.model];
         let bsz = job.reqs.len();
         let ow = state.out_width; // hoisted: one lookup per batch
-        let mut x = Vec::with_capacity(bsz * state.n_in);
+        x.clear();
         for r in &job.reqs {
             x.extend_from_slice(&r.x);
         }
-        let sim = &mut sims[job.model];
-        let prev = sim.set_pool(lent.take());
-        debug_assert!(prev.is_none(), "model simulators own no pool");
-        let out = sim.eval_batch(&x, bsz);
-        lent = sim.set_pool(prev);
+        let ex = &mut exs[job.model];
+        let prev = ex.set_pool(lent.take());
+        debug_assert!(prev.is_none(), "model executors own no pool");
+        ex.eval_batch_into(&x, bsz, &mut out);
+        lent = ex.set_pool(prev);
         let now = Instant::now();
         {
             // the whole batch's latencies under one lock acquisition
@@ -740,6 +786,41 @@ mod tests {
                        "raw row {b}");
         }
         assert!(server.opt_report("nope").is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn identical_models_share_one_compiled_plan() {
+        // the same netlist registered twice: the plan cache must compile
+        // once, both models answer correctly, and a distinct third model
+        // gets its own plan
+        let nl = random_netlist(46, 10, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let other = random_netlist(47, 10, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let direct = nl.clone();
+        let mut registry = ModelRegistry::new();
+        registry
+            .register("twin-a", nl.clone())
+            .register("twin-b", nl)
+            .register("solo", other);
+        let server = InferenceServer::start(registry,
+                                            ServerConfig::default());
+        let pa = server.model_plan("twin-a").unwrap();
+        let pb = server.model_plan("twin-b").unwrap();
+        let pc = server.model_plan("solo").unwrap();
+        assert!(Arc::ptr_eq(&pa, &pb), "identical content must share");
+        assert!(!Arc::ptr_eq(&pa, &pc));
+        let (compiled, hits) = server.plan_cache_counts();
+        assert_eq!(compiled, 2, "two distinct plans for three models");
+        assert_eq!(hits, 1);
+        assert!(server.plan_stats("twin-a").unwrap().layers == 2);
+        let x = random_inputs(46, &direct, 12);
+        for b in 0..12 {
+            let row = x[b * 10..(b + 1) * 10].to_vec();
+            let want = direct.eval_one(&row).unwrap();
+            assert_eq!(server.infer("twin-a", row.clone()).unwrap(), want);
+            assert_eq!(server.infer("twin-b", row).unwrap(), want);
+        }
+        assert!(server.plan_stats("nope").is_err());
         server.shutdown();
     }
 

@@ -37,7 +37,8 @@ fn parse_args() -> Result<Args> {
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
             match name {
-                "no-skips" | "random-conn" | "augment" | "verify" | "quiet" => {
+                "no-skips" | "random-conn" | "augment" | "verify" | "quiet"
+                | "plan" => {
                     switches.push(name.to_string());
                 }
                 _ => {
@@ -129,6 +130,27 @@ fn cmd_list(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--plan`: the compiled execution plan's arena/dedup statistics —
+/// what the serving path actually ships.
+fn print_plan_stats(r: &neuralut::coordinator::FlowResult) {
+    let st = r.plan.stats();
+    let mut t = Table::new(
+        &format!("execution plan: {} (key {:016x})", r.config,
+                 r.plan.key()),
+        &["metric", "value"],
+    );
+    t.row(&["layers (bit-plane)".into(),
+            format!("{} ({})", st.layers, st.bitplane_layers)]);
+    t.row(&["planes".into(), st.planes.to_string()]);
+    t.row(&["tables compiled".into(), st.tables_total.to_string()]);
+    t.row(&["tables unique (dedup)".into(),
+            st.tables_unique.to_string()]);
+    t.row(&["table arena words".into(), st.table_words.to_string()]);
+    t.row(&["conn arena entries".into(), st.conn_entries.to_string()]);
+    t.row(&["arena bytes".into(), st.arena_bytes.to_string()]);
+    t.print();
+}
+
 fn print_flow_result(r: &neuralut::coordinator::FlowResult) {
     let mut t = Table::new(
         &format!("toolflow result: {}", r.config),
@@ -162,6 +184,9 @@ fn cmd_flow(args: &Args) -> Result<()> {
     let sw = Stopwatch::start();
     let r = run_flow(&rt, &meta, &opts)?;
     print_flow_result(&r);
+    if args.has("plan") {
+        print_plan_stats(&r);
+    }
     println!("\nflow completed in {:.1}s", sw.secs());
     Ok(())
 }
@@ -235,6 +260,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
              r.mapped_raw.total_luts_worst_case(),
              r.mapped.total_luts());
     println!("optimizer: {}", r.opt_report.summary());
+    if args.has("plan") {
+        print_plan_stats(&r);
+    }
     Ok(())
 }
 
@@ -268,13 +296,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let opts = flow_options_named(args, name)?;
         let r = run_flow(&rt, &meta, &opts)?;
         print_flow_result(&r);
-        {
-            // what the server will actually compile per worker (the
-            // registry netlist is optimized again at registration)
-            let sim = r.netlist_opt.simulator();
-            println!("{name}: {}/{} layers bit-plane after optimization",
-                     sim.bitplane_layers(), r.netlist_opt.layers.len());
-        }
+        // what the server will actually execute (the registry netlist
+        // is optimized and plan-compiled again at registration, hitting
+        // the server's plan cache for identical content)
+        println!("{name}: {}/{} layers bit-plane after optimization \
+                  (plan key {:016x})",
+                 r.plan.bitplane_layers(), r.netlist_opt.layers.len(),
+                 r.plan.key());
         let top = &meta.config(name)?.topology;
         let splits =
             neuralut::dataset::generate(&top.dataset, top.beta_in, &opts.gen)?;
@@ -299,6 +327,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for name in &configs {
         println!("{name}: optimizer {}",
                  server.opt_report(name)?.summary());
+        println!("{name}: plan {}", server.plan_stats(name)?.summary());
+    }
+    {
+        let (compiled, hits) = server.plan_cache_counts();
+        println!("plan cache: {compiled} plans compiled, {hits} \
+                  registration hits");
     }
     let sw = Stopwatch::start();
     // one client thread per model: the streams interleave in the router
@@ -366,7 +400,7 @@ fn main() {
                  [--seed N] [--no-skips] [--random-conn] [--augment] \
                  [--artifacts DIR] [--out FILE] [--requests N] \
                  [--max-batch N] [--max-wait-us N] [--workers N] \
-                 [--sim-threads N] [--opt-level 0|1|2]\n\n\
+                 [--sim-threads N] [--opt-level 0|1|2] [--plan]\n\n\
                  serve hosts several configs at once: \
                  --config nid,jsc_cb serves both from one process \
                  (per-model batching policies and statistics). \
@@ -376,7 +410,12 @@ fn main() {
                  threads. --opt-level picks the netlist optimizer \
                  pipeline (0 none, 1 const-fold+dead-logic, 2 +CSE; \
                  default 2) applied before mapping, RTL and serving; \
-                 per-model OptReport stats are printed at startup."
+                 per-model OptReport stats are printed at startup. \
+                 Serving executes compiled plans (netlists flattened \
+                 into deduplicated arenas, compiled once per content \
+                 hash); --plan prints the plan's arena/dedup statistics \
+                 on flow/inspect, and serve logs per-model plan stats \
+                 plus plan-cache hit counts."
             );
             Ok(())
         }

@@ -12,13 +12,21 @@
 //! and EXPERIMENTS.md §Hot path): `eval_batch` uses precomputed address
 //! strides, and a bit-plane kernel evaluates every layer whose per-output-
 //! bit support fits a physical LUT — boolean *and* multi-bit — 64 samples
-//! per word, optionally chunked across worker threads.
+//! per word, optionally chunked across worker threads.  Because the
+//! structure is static, the default execution model goes one step
+//! further: [`compile`] flattens a netlist into an arena-backed
+//! [`ExecPlan`] (shared tables deduplicated, CSR connections, static
+//! schedule) that [`PlanExecutor`]s run with zero steady-state
+//! allocation, cached across consumers by content hash ([`PlanCache`]).
 
 mod opt;
+mod plan;
 mod sim;
 
 pub use opt::{optimize, ConstantFold, Cse, DeadLogic, OptLevel,
               OptReport, Pass, PassDelta, PassManager};
+pub use plan::{compile, ExecPlan, PlanCache, PlanExecutor, PlanOptions,
+               PlanStats};
 pub use sim::{eval_packed, BitPlaneLayer, KernelChoice, SimOptions,
               Simulator, ThreadMode, WorkerPool, MAX_PLANE_SUPPORT};
 
@@ -132,6 +140,44 @@ impl Netlist {
         self.layers.iter().map(|l| l.w).sum()
     }
 
+    /// Structural content hash (FNV-1a over widths, wiring and tables;
+    /// the `name` is deliberately excluded so identically-structured
+    /// models hash alike).  This is the [`PlanCache`] key: equal content
+    /// means the compiled [`ExecPlan`] is identical, so a cached plan
+    /// can be shared.
+    pub fn content_hash(&self) -> u64 {
+        // FNV-1a, 64-bit
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+        }
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        h = mix(h, self.n_in as u64);
+        h = mix(h, self.in_bits as u64);
+        h = mix(h, self.layers.len() as u64);
+        for layer in &self.layers {
+            h = mix(h, layer.w as u64);
+            h = mix(h, layer.fan_in as u64);
+            h = mix(h, layer.in_bits as u64);
+            h = mix(h, layer.out_bits as u64);
+            for &c in &layer.conn {
+                h = mix(h, c as u64);
+            }
+            // separate the streams so conn/table boundaries cannot alias
+            h = mix(h, 0xC0DE_5EA1);
+            for &t in &layer.tables {
+                h = mix(h, t as u64);
+            }
+            h = mix(h, 0x7AB1_E5E9);
+        }
+        h
+    }
+
+    /// Lower this netlist into a compiled execution plan (see
+    /// [`compile`] / `netlist::plan`).
+    pub fn compile_plan(&self, opts: PlanOptions) -> ExecPlan {
+        plan::compile(self, opts)
+    }
+
     /// Evaluate one sample (codes) -> output codes. Reference-simple path.
     pub fn eval_one(&self, x: &[i32]) -> Result<Vec<i32>> {
         if x.len() != self.n_in {
@@ -158,6 +204,11 @@ impl Netlist {
     pub fn eval_batch(&self, x: &[i32], batch: usize) -> Result<Vec<i32>> {
         if x.len() != batch * self.n_in {
             bail!("batch input len mismatch");
+        }
+        // empty batch: skip simulator construction (which compiles an
+        // execution plan) entirely
+        if batch == 0 {
+            return Ok(Vec::new());
         }
         let mut sim = sim::Simulator::new(self);
         Ok(sim.eval_batch(x, batch))

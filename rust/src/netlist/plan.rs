@@ -1,0 +1,1145 @@
+//! Compiled execution plans — the netlist flattened into arena-backed
+//! programs.
+//!
+//! The paper's core bet is that LUT networks are cheap *because their
+//! structure is static*: NeuraLUT-Assemble fixes fan-in and topology at
+//! training time, so everything about how a netlist executes — gather
+//! strides, table locations, per-plane reduced supports, the layer
+//! schedule — is a constant of the artifact, not of the request.  The
+//! interpreted simulator ([`super::sim`]) still pays dynamic-structure
+//! costs the hardware never would: it walks `Vec<LutUnit>`-shaped layers,
+//! chases per-unit `conn`/`table` slices and re-derives offsets per call.
+//! [`compile`] lowers a (typically optimizer-output) netlist **once**
+//! into an [`ExecPlan`]:
+//!
+//! * all truth tables live in one shared `Vec<u64>` **word arena**,
+//!   deduplicated by content — gather tables are packed four u16 codes
+//!   per word, bit-plane reduced tables are one word each, and units or
+//!   planes with identical tables share storage (trained netlists repeat
+//!   small functions constantly);
+//! * all connections live in one flat **conn arena** addressed CSR-style
+//!   (a per-layer `conn_off` for the fixed-fan-in gather side, per-plane
+//!   `src_off` for the variable-arity plane side);
+//! * per-layer gather strides and support-reduced plane tables are
+//!   precomputed at compile time (the work `sim.rs` redoes per
+//!   `Simulator`), and the layer schedule is static;
+//! * a [`PlanExecutor`] owns double-buffered, pre-sized activation
+//!   planes, so steady-state `eval_batch` performs **zero heap
+//!   allocation** (observable via [`PlanExecutor::buffer_grows`]).
+//!
+//! A plan is immutable and shareable (`Arc<ExecPlan>`): the server
+//! compiles each model once at registration through a [`PlanCache`]
+//! keyed by [`Netlist::content_hash`] and every router worker executes
+//! the same plan with private scratch.  Execution is bit-exact with the
+//! interpreted walk by construction — same tables, same address
+//! assembly, same Shannon evaluation — and the property suite
+//! (`prop_compiled_plan_*`) enforces it across seeds, optimizer levels,
+//! thread modes and batch sizes.
+//!
+//! The executor additionally fuses the row-major input boundary into the
+//! first layer (gathering straight from the request buffer, or packing
+//! bit-planes straight from it) and runs a transpose-free single-sample
+//! path at batch 1 — which is where interpretation overhead dominates
+//! and the compiled path wins outright (`netlist_hotpath`
+//! compiled-vs-interpreted rows).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::sim::{chunked_units, eval_packed_rec, par_threads,
+                 KernelChoice, SimOptions, ThreadMode, WorkerPool,
+                 MAX_BUILD_ADDR_BITS, MAX_PLANE_SUPPORT, PAR_MIN_WORK,
+                 PAR_MIN_WORK_POOLED, PAR_MIN_WORK_POOLED_GATHER};
+use super::{LayerSpec, Netlist};
+
+/// Compilation knobs.  Execution-time knobs (threads, mode, the packed
+/// batch floor) stay in [`SimOptions`]; only what changes the compiled
+/// artifact lives here, because it is part of the [`PlanCache`] key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanOptions {
+    /// Build bit-plane steps for qualifying layers (default true;
+    /// disable to compile a gather-only plan, the measurement baseline).
+    pub bitplane: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { bitplane: true }
+    }
+}
+
+/// The gather side of one compiled layer: fixed fan-in, so connections
+/// are a dense `w * fan_in` block at `conn_off` in the plan's conn arena
+/// and only the per-unit table offsets vary.  Every layer has one (it is
+/// the any-layer fallback and the small-batch kernel); tables are packed
+/// four u16 codes per arena word.
+struct GatherStep {
+    w: usize,
+    fan_in: usize,
+    in_bits: usize,
+    out_bits: usize,
+    /// producer width (n_in for layer 0)
+    prev_w: usize,
+    /// start of this layer's `w * fan_in` conn block
+    conn_off: usize,
+    /// per-unit word offset into the table arena
+    table_off: Vec<u32>,
+    /// per-slot address shift `in_bits * f` — the gather stride,
+    /// precomputed instead of re-derived per (unit, sample)
+    shifts: Vec<u32>,
+}
+
+/// The bit-plane side of one compiled layer: per (unit, output bit) a
+/// support-reduced single-word table plus a CSR run of input-plane
+/// indices in the conn arena (`src_off[p] .. src_off[p] + arity[p]`).
+struct BitPlaneStep {
+    w: usize,
+    out_bits: usize,
+    /// per-plane reduced support size (<= [`MAX_PLANE_SUPPORT`])
+    arity: Vec<u8>,
+    /// per-plane word offset into the table arena (one word per plane)
+    table_off: Vec<u32>,
+    /// per-plane absolute offset into the conn arena
+    src_off: Vec<u32>,
+}
+
+struct PlanLayer {
+    gather: GatherStep,
+    /// present iff every plane's reduced support fits a packed word
+    bitplane: Option<BitPlaneStep>,
+}
+
+/// A netlist lowered to arena-backed form: immutable, `Send + Sync`,
+/// shared across executors via `Arc`.  See the module doc for layout.
+pub struct ExecPlan {
+    name: String,
+    n_in: usize,
+    in_bits: usize,
+    out_width: usize,
+    out_bits: usize,
+    /// cache key this plan was compiled under ([`Netlist::content_hash`]
+    /// mixed with [`PlanOptions`])
+    key: u64,
+    /// shared truth-table word arena (deduplicated)
+    words: Vec<u64>,
+    /// shared connection / plane-source arena
+    conn: Vec<u32>,
+    layers: Vec<PlanLayer>,
+    /// widest signal plane (incl. the input), for code-buffer sizing
+    max_w: usize,
+    /// most bit-planes live at once (incl. the input planes)
+    max_planes: usize,
+    /// logical tables compiled (gather tables + plane tables)
+    tables_total: usize,
+    /// distinct arena entries after dedup
+    tables_unique: usize,
+}
+
+/// Point-in-time plan statistics (CLI `--plan`, server startup logs).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanStats {
+    pub layers: usize,
+    pub bitplane_layers: usize,
+    /// bit-planes across all compiled bit-plane steps
+    pub planes: usize,
+    /// logical tables compiled (units + planes)
+    pub tables_total: usize,
+    /// distinct tables after arena dedup
+    pub tables_unique: usize,
+    /// table arena length in u64 words
+    pub table_words: usize,
+    /// conn arena length in u32 entries
+    pub conn_entries: usize,
+    /// arena footprint (tables + connections), bytes
+    pub arena_bytes: usize,
+}
+
+impl PlanStats {
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!("{}/{} layers bit-plane ({} planes), {} tables -> {} \
+                 unique ({} words), {} conn entries, {} arena bytes",
+                self.bitplane_layers, self.layers, self.planes,
+                self.tables_total, self.tables_unique, self.table_words,
+                self.conn_entries, self.arena_bytes)
+    }
+}
+
+impl ExecPlan {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    pub fn in_bits(&self) -> usize {
+        self.in_bits
+    }
+
+    pub fn out_width(&self) -> usize {
+        self.out_width
+    }
+
+    pub fn out_bits(&self) -> usize {
+        self.out_bits
+    }
+
+    /// The cache key this plan was compiled under.
+    pub fn key(&self) -> u64 {
+        self.key
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// How many layers carry a bit-plane step.
+    pub fn bitplane_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.bitplane.is_some()).count()
+    }
+
+    /// Per-layer kernel availability, mirroring
+    /// `Simulator::layer_kernels` (a layer with a bit-plane step still
+    /// runs gather below the packed batch floor).
+    pub fn layer_kernels(&self) -> Vec<KernelChoice> {
+        self.layers
+            .iter()
+            .map(|l| {
+                if l.bitplane.is_some() {
+                    KernelChoice::BitPlane
+                } else {
+                    KernelChoice::Gather
+                }
+            })
+            .collect()
+    }
+
+    /// Was this plan compiled from exactly `nl`'s content?  Full
+    /// structural comparison — dimensions, wiring and every table entry
+    /// (read back through the packed arena) — so a content-hash
+    /// collision can never smuggle the wrong plan past the cache.  Only
+    /// called on cache hits (registration time), never on the hot path.
+    fn matches(&self, nl: &Netlist) -> bool {
+        if self.n_in != nl.n_in
+            || self.in_bits != nl.in_bits
+            || self.layers.len() != nl.layers.len()
+        {
+            return false;
+        }
+        for (pl, layer) in self.layers.iter().zip(&nl.layers) {
+            let g = &pl.gather;
+            if g.w != layer.w
+                || g.fan_in != layer.fan_in
+                || g.in_bits != layer.in_bits
+                || g.out_bits != layer.out_bits
+            {
+                return false;
+            }
+            let c0 = g.conn_off;
+            if self.conn[c0..c0 + layer.w * layer.fan_in] != layer.conn[..] {
+                return false;
+            }
+            let entries = layer.entries_per_unit();
+            for u in 0..layer.w {
+                let toff = g.table_off[u] as usize;
+                let table = layer.unit_table(u);
+                for (i, &want) in table.iter().enumerate() {
+                    if table_read(&self.words, toff, i) != want {
+                        return false;
+                    }
+                }
+                debug_assert_eq!(table.len(), entries);
+            }
+        }
+        true
+    }
+
+    pub fn stats(&self) -> PlanStats {
+        PlanStats {
+            layers: self.layers.len(),
+            bitplane_layers: self.bitplane_layers(),
+            planes: self
+                .layers
+                .iter()
+                .filter_map(|l| l.bitplane.as_ref())
+                .map(|b| b.w * b.out_bits)
+                .sum(),
+            tables_total: self.tables_total,
+            tables_unique: self.tables_unique,
+            table_words: self.words.len(),
+            conn_entries: self.conn.len(),
+            arena_bytes: self.words.len() * 8 + self.conn.len() * 4,
+        }
+    }
+}
+
+/// Append `packed` to the arena unless identical content is already
+/// interned; returns the word offset either way.
+fn intern(words: &mut Vec<u64>, dedup: &mut HashMap<Vec<u64>, u32>,
+          packed: Vec<u64>) -> u32 {
+    if let Some(&off) = dedup.get(&packed) {
+        return off;
+    }
+    let off = words.len() as u32;
+    words.extend_from_slice(&packed);
+    dedup.insert(packed, off);
+    off
+}
+
+/// Support-reduce `layer` into plane form, or `None` if any plane's true
+/// support exceeds [`MAX_PLANE_SUPPORT`] (same qualification rule as the
+/// interpreted `BitPlaneLayer::try_build`).  Returned `srcs` runs are
+/// plane-major with `arity[p]` entries each.
+fn reduce_planes(layer: &LayerSpec)
+                 -> Option<(Vec<u8>, Vec<u64>, Vec<u32>)> {
+    if layer.in_bits * layer.fan_in > MAX_BUILD_ADDR_BITS {
+        return None;
+    }
+    let planes = layer.w * layer.out_bits;
+    let mut arity = Vec::with_capacity(planes);
+    let mut tables = Vec::with_capacity(planes);
+    let mut srcs = Vec::new();
+    for u in 0..layer.w {
+        let tt = layer.truth_table(u);
+        let conn = layer.unit_conn(u);
+        for b in 0..layer.out_bits {
+            let support = tt.bit_support(b);
+            if support.len() > MAX_PLANE_SUPPORT {
+                return None;
+            }
+            arity.push(support.len() as u8);
+            tables.push(tt.reduced_bit_table(b, &support));
+            for &v in &support {
+                let f = v / layer.in_bits;
+                let k = v % layer.in_bits;
+                srcs.push(conn[f] * layer.in_bits as u32 + k as u32);
+            }
+        }
+    }
+    Some((arity, tables, srcs))
+}
+
+/// Lower `nl` into an [`ExecPlan`].  Pure function of the netlist and
+/// the options — compiling the same content twice yields plans with
+/// identical arenas, which is what makes [`PlanCache`] sound.
+pub fn compile(nl: &Netlist, opts: PlanOptions) -> ExecPlan {
+    let mut words: Vec<u64> = Vec::new();
+    let mut conn: Vec<u32> = Vec::new();
+    let mut dedup: HashMap<Vec<u64>, u32> = HashMap::new();
+    let mut tables_total = 0usize;
+    let mut layers = Vec::with_capacity(nl.layers.len());
+    let mut prev_w = nl.n_in;
+    for layer in &nl.layers {
+        let entries = layer.entries_per_unit();
+        let twords = entries.div_ceil(4);
+        let conn_off = conn.len();
+        conn.extend_from_slice(&layer.conn);
+        let mut table_off = Vec::with_capacity(layer.w);
+        for u in 0..layer.w {
+            let mut packed = vec![0u64; twords];
+            for (i, &c) in layer.unit_table(u).iter().enumerate() {
+                packed[i >> 2] |= (c as u64) << ((i & 3) << 4);
+            }
+            tables_total += 1;
+            table_off.push(intern(&mut words, &mut dedup, packed));
+        }
+        let shifts: Vec<u32> =
+            (0..layer.fan_in).map(|f| (layer.in_bits * f) as u32).collect();
+        let gather = GatherStep {
+            w: layer.w,
+            fan_in: layer.fan_in,
+            in_bits: layer.in_bits,
+            out_bits: layer.out_bits,
+            prev_w,
+            conn_off,
+            table_off,
+            shifts,
+        };
+        let bitplane = if opts.bitplane {
+            reduce_planes(layer).map(|(arity, tables, srcs)| {
+                let mut table_off = Vec::with_capacity(tables.len());
+                for &t in &tables {
+                    tables_total += 1;
+                    table_off.push(intern(&mut words, &mut dedup, vec![t]));
+                }
+                let mut src_off = Vec::with_capacity(arity.len());
+                let mut run = 0usize;
+                for &a in &arity {
+                    src_off.push((conn.len() + run) as u32);
+                    run += a as usize;
+                }
+                conn.extend_from_slice(&srcs);
+                BitPlaneStep { w: layer.w, out_bits: layer.out_bits,
+                               arity, table_off, src_off }
+            })
+        } else {
+            None
+        };
+        layers.push(PlanLayer { gather, bitplane });
+        prev_w = layer.w;
+    }
+    let max_w = layers
+        .iter()
+        .map(|l| l.gather.w)
+        .max()
+        .unwrap_or(0)
+        .max(nl.n_in);
+    let max_planes = layers
+        .iter()
+        .map(|l| l.gather.w * l.gather.out_bits)
+        .max()
+        .unwrap_or(0)
+        .max(nl.n_in * nl.in_bits);
+    let tables_unique = dedup.len();
+    ExecPlan {
+        name: nl.name.clone(),
+        n_in: nl.n_in,
+        in_bits: nl.in_bits,
+        out_width: nl.out_width(),
+        out_bits: nl.out_bits(),
+        key: plan_key(nl, opts),
+        words,
+        conn,
+        layers,
+        max_w,
+        max_planes,
+        tables_total,
+        tables_unique,
+    }
+}
+
+/// Read one code out of a four-codes-per-word packed gather table.
+#[inline(always)]
+fn table_read(words: &[u64], toff: usize, addr: usize) -> u16 {
+    ((words[toff + (addr >> 2)] >> ((addr & 3) << 4)) & 0xFFFF) as u16
+}
+
+/// Gather-kernel evaluation of units `[u0, u1)` from signal-major
+/// producer codes; `dst` covers exactly that unit range.
+fn gather_units(plan: &ExecPlan, g: &GatherStep, prev: &[u16],
+                batch: usize, u0: usize, u1: usize, dst: &mut [u16]) {
+    debug_assert_eq!(dst.len(), (u1 - u0) * batch);
+    for u in u0..u1 {
+        let c0 = g.conn_off + u * g.fan_in;
+        let conn = &plan.conn[c0..c0 + g.fan_in];
+        let toff = g.table_off[u] as usize;
+        let row = &mut dst[(u - u0) * batch..(u - u0 + 1) * batch];
+        for (b, slot) in row.iter_mut().enumerate() {
+            let mut addr = 0usize;
+            for (f, &src) in conn.iter().enumerate() {
+                addr |= (prev[src as usize * batch + b] as usize)
+                    << g.shifts[f];
+            }
+            *slot = table_read(&plan.words, toff, addr);
+        }
+    }
+}
+
+/// Layer-0 gather fused with the input boundary: reads the request's
+/// row-major codes directly (`x[b * n_in + src]`), skipping the
+/// signal-major transpose the interpreted path pays.
+fn gather_units_rowmajor(plan: &ExecPlan, g: &GatherStep, x: &[i32],
+                         batch: usize, u0: usize, u1: usize,
+                         dst: &mut [u16]) {
+    debug_assert_eq!(dst.len(), (u1 - u0) * batch);
+    let n_in = g.prev_w;
+    for u in u0..u1 {
+        let c0 = g.conn_off + u * g.fan_in;
+        let conn = &plan.conn[c0..c0 + g.fan_in];
+        let toff = g.table_off[u] as usize;
+        let row = &mut dst[(u - u0) * batch..(u - u0 + 1) * batch];
+        for (b, slot) in row.iter_mut().enumerate() {
+            let mut addr = 0usize;
+            for (f, &src) in conn.iter().enumerate() {
+                addr |= (x[b * n_in + src as usize] as usize)
+                    << g.shifts[f];
+            }
+            *slot = table_read(&plan.words, toff, addr);
+        }
+    }
+}
+
+/// Bit-plane evaluation of units `[u0, u1)`; `out` covers exactly that
+/// unit range (plane-major, `nwords` words per plane).
+fn bitplane_units(plan: &ExecPlan, s: &BitPlaneStep, prev: &[u64],
+                  nwords: usize, u0: usize, u1: usize, out: &mut [u64]) {
+    debug_assert_eq!(out.len(), (u1 - u0) * s.out_bits * nwords);
+    let mut ins = [0u64; MAX_PLANE_SUPPORT];
+    let p0 = u0 * s.out_bits;
+    for p in p0..u1 * s.out_bits {
+        let a = s.arity[p] as usize;
+        let off = s.src_off[p] as usize;
+        let srcs = &plan.conn[off..off + a];
+        let table = plan.words[s.table_off[p] as usize];
+        let dst = &mut out[(p - p0) * nwords..(p - p0 + 1) * nwords];
+        for (wd, slot) in dst.iter_mut().enumerate() {
+            for (i, &src) in srcs.iter().enumerate() {
+                ins[i] = prev[src as usize * nwords + wd];
+            }
+            *slot = eval_packed_rec(table, &ins[..a]);
+        }
+    }
+}
+
+/// Pack signal-major codes into bit-planes (64 samples/word).  The
+/// target region must be pre-zeroed.
+fn pack_codes(cur: &[u16], w: usize, bits: usize, batch: usize,
+              nwords: usize, out: &mut [u64]) {
+    for s in 0..w {
+        let row = &cur[s * batch..(s + 1) * batch];
+        for (b, &c) in row.iter().enumerate() {
+            let (wd, sh) = (b / 64, b % 64);
+            for k in 0..bits {
+                out[(s * bits + k) * nwords + wd] |=
+                    (((c >> k) & 1) as u64) << sh;
+            }
+        }
+    }
+}
+
+/// Pack the request's row-major codes straight into bit-planes, fusing
+/// the input transpose with the packing pass.  The target region must
+/// be pre-zeroed.
+fn pack_rowmajor(x: &[i32], w: usize, bits: usize, batch: usize,
+                 nwords: usize, out: &mut [u64]) {
+    for b in 0..batch {
+        let (wd, sh) = (b / 64, b % 64);
+        let row = &x[b * w..(b + 1) * w];
+        for (s, &c) in row.iter().enumerate() {
+            let c = c as u64;
+            for k in 0..bits {
+                out[(s * bits + k) * nwords + wd] |= ((c >> k) & 1) << sh;
+            }
+        }
+    }
+}
+
+/// Inverse of [`pack_codes`]: reassemble signal-major codes.
+fn unpack_codes(planes: &[u64], w: usize, bits: usize, batch: usize,
+                nwords: usize, cur: &mut [u16]) {
+    for s in 0..w {
+        let row = &mut cur[s * batch..(s + 1) * batch];
+        for (b, slot) in row.iter_mut().enumerate() {
+            let (wd, sh) = (b / 64, b % 64);
+            let mut c = 0u16;
+            for k in 0..bits {
+                c |= (((planes[(s * bits + k) * nwords + wd] >> sh) & 1)
+                    as u16) << k;
+            }
+            *slot = c;
+        }
+    }
+}
+
+/// Executes an [`ExecPlan`] with private, reusable scratch.  One
+/// executor per thread; the plan itself is shared and immutable.
+///
+/// Threading mirrors the interpreted simulator exactly — same chunk
+/// math, same profitability floors, scoped or pooled per
+/// [`SimOptions::mode`] — so every mode is bit-exact with every other.
+pub struct PlanExecutor {
+    plan: Arc<ExecPlan>,
+    opts: SimOptions,
+    pool: Option<WorkerPool>,
+    /// scratch: signal-major u16 codes (double-buffered)
+    cur: Vec<u16>,
+    nxt: Vec<u16>,
+    /// scratch: packed bit-plane words (double-buffered)
+    bits_cur: Vec<u64>,
+    bits_nxt: Vec<u64>,
+    /// scratch for the single-sample path
+    one_a: Vec<u16>,
+    one_b: Vec<u16>,
+    /// times any scratch buffer had to grow (steady-state eval keeps
+    /// this flat — the observable form of the zero-allocation contract)
+    grows: usize,
+}
+
+impl PlanExecutor {
+    pub fn new(plan: Arc<ExecPlan>) -> PlanExecutor {
+        Self::with_options(plan, SimOptions::default())
+    }
+
+    pub fn with_options(plan: Arc<ExecPlan>, opts: SimOptions)
+                        -> PlanExecutor {
+        PlanExecutor {
+            plan,
+            opts,
+            pool: None,
+            cur: Vec::new(),
+            nxt: Vec::new(),
+            bits_cur: Vec::new(),
+            bits_nxt: Vec::new(),
+            one_a: Vec::new(),
+            one_b: Vec::new(),
+            grows: 0,
+        }
+    }
+
+    /// The plan this executor runs.
+    pub fn plan(&self) -> &Arc<ExecPlan> {
+        &self.plan
+    }
+
+    /// The options this executor was built with.
+    pub fn options(&self) -> SimOptions {
+        self.opts
+    }
+
+    /// How many times a scratch buffer had to (re)allocate.  Flat across
+    /// steady-state same-shape calls.
+    pub fn buffer_grows(&self) -> usize {
+        self.grows
+    }
+
+    fn wanted_pool_workers(&self) -> usize {
+        match self.opts.mode {
+            ThreadMode::Pooled if self.opts.threads > 1 => {
+                self.opts.threads - 1
+            }
+            _ => 0,
+        }
+    }
+
+    fn ensure_pool(&mut self) {
+        if self.pool.is_none() {
+            let want = self.wanted_pool_workers();
+            if want > 0 {
+                self.pool = Some(WorkerPool::new(want));
+            }
+        }
+    }
+
+    /// Change the worker-thread count; a resident pool of the wrong size
+    /// is dropped and lazily recreated.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.opts.threads = threads.max(1);
+        let want = self.wanted_pool_workers();
+        let have = self.pool.as_ref().map(|p| p.workers()).unwrap_or(0);
+        if self.pool.is_some() && want != have {
+            self.pool = None;
+        }
+    }
+
+    /// Lend a pool in (or take the resident one out) — the same sharing
+    /// protocol as `Simulator::set_pool`, used by server workers to run
+    /// several models' executors on one set of parked threads.
+    pub fn set_pool(&mut self, pool: Option<WorkerPool>)
+                    -> Option<WorkerPool> {
+        std::mem::replace(&mut self.pool, pool)
+    }
+
+    /// Row-major input codes -> row-major output codes (allocating
+    /// convenience wrapper around [`PlanExecutor::eval_batch_into`]).
+    pub fn eval_batch(&mut self, x: &[i32], batch: usize) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.eval_batch_into(x, batch, &mut out);
+        out
+    }
+
+    /// Row-major input codes -> row-major output codes, written into
+    /// `out` (cleared first).  With a capacity-retaining `out` and a
+    /// stable batch shape this performs no heap allocation.
+    pub fn eval_batch_into(&mut self, x: &[i32], batch: usize,
+                           out: &mut Vec<i32>) {
+        let plan = self.plan.clone();
+        assert_eq!(x.len(), batch * plan.n_in,
+                   "input len {} != batch {batch} * n_in {}", x.len(),
+                   plan.n_in);
+        out.clear();
+        // empty batch: nothing to pack, no pool to wake
+        if batch == 0 {
+            return;
+        }
+        if plan.layers.is_empty() {
+            out.extend_from_slice(x);
+            return;
+        }
+        if batch == 1 {
+            // transpose-free single-sample path
+            self.eval_one_into(x, out);
+            return;
+        }
+        self.ensure_pool();
+        let nwords = batch.div_ceil(64);
+        let use_bits = batch >= self.opts.min_bitplane_batch
+            && plan.layers.iter().any(|l| l.bitplane.is_some());
+        let cap_before = self.scratch_capacity();
+        let mut cur = std::mem::take(&mut self.cur);
+        let mut nxt = std::mem::take(&mut self.nxt);
+        let mut bits_cur = std::mem::take(&mut self.bits_cur);
+        let mut bits_nxt = std::mem::take(&mut self.bits_nxt);
+        cur.resize(plan.max_w * batch, 0);
+        nxt.resize(plan.max_w * batch, 0);
+        if use_bits {
+            bits_cur.resize(plan.max_planes * nwords, 0);
+            bits_nxt.resize(plan.max_planes * nwords, 0);
+        }
+        let mut packed = false;
+        for (l, pl) in plan.layers.iter().enumerate() {
+            let g = &pl.gather;
+            match &pl.bitplane {
+                Some(bp) if use_bits => {
+                    if !packed {
+                        let n = g.prev_w * g.in_bits * nwords;
+                        bits_cur[..n].fill(0);
+                        if l == 0 {
+                            pack_rowmajor(x, g.prev_w, g.in_bits, batch,
+                                          nwords, &mut bits_cur[..n]);
+                        } else {
+                            pack_codes(&cur, g.prev_w, g.in_bits, batch,
+                                       nwords, &mut bits_cur[..n]);
+                        }
+                        packed = true;
+                    }
+                    let planes = bp.w * bp.out_bits;
+                    let floor = if self.pool.is_some() {
+                        PAR_MIN_WORK_POOLED
+                    } else {
+                        PAR_MIN_WORK
+                    };
+                    let t = par_threads(self.opts.threads, bp.w,
+                                        planes * nwords, floor);
+                    let prev: &[u64] = &bits_cur;
+                    let p: &ExecPlan = &plan;
+                    chunked_units(
+                        &mut bits_nxt[..planes * nwords], bp.w,
+                        bp.out_bits * nwords, t, self.pool.as_mut(),
+                        |u0, u1, dst| {
+                            bitplane_units(p, bp, prev, nwords, u0, u1, dst)
+                        },
+                    );
+                    std::mem::swap(&mut bits_cur, &mut bits_nxt);
+                }
+                _ => {
+                    if packed {
+                        unpack_codes(&bits_cur, g.prev_w, g.in_bits, batch,
+                                     nwords, &mut cur[..g.prev_w * batch]);
+                        packed = false;
+                    }
+                    let floor = if self.pool.is_some() {
+                        PAR_MIN_WORK_POOLED_GATHER
+                    } else {
+                        PAR_MIN_WORK
+                    };
+                    let t = par_threads(self.opts.threads, g.w,
+                                        g.w * batch, floor);
+                    let p: &ExecPlan = &plan;
+                    if l == 0 {
+                        chunked_units(
+                            &mut nxt[..g.w * batch], g.w, batch, t,
+                            self.pool.as_mut(),
+                            |u0, u1, dst| {
+                                gather_units_rowmajor(p, g, x, batch, u0,
+                                                      u1, dst)
+                            },
+                        );
+                    } else {
+                        let prev: &[u16] = &cur;
+                        chunked_units(
+                            &mut nxt[..g.w * batch], g.w, batch, t,
+                            self.pool.as_mut(),
+                            |u0, u1, dst| {
+                                gather_units(p, g, prev, batch, u0, u1, dst)
+                            },
+                        );
+                    }
+                    std::mem::swap(&mut cur, &mut nxt);
+                }
+            }
+        }
+        let ow = plan.out_width;
+        if packed {
+            unpack_codes(&bits_cur, ow, plan.out_bits, batch, nwords,
+                         &mut cur[..ow * batch]);
+        }
+        out.resize(batch * ow, 0);
+        for u in 0..ow {
+            let row = &cur[u * batch..(u + 1) * batch];
+            for (b, &c) in row.iter().enumerate() {
+                out[b * ow + u] = c as i32;
+            }
+        }
+        self.cur = cur;
+        self.nxt = nxt;
+        self.bits_cur = bits_cur;
+        self.bits_nxt = bits_nxt;
+        if self.scratch_capacity() > cap_before {
+            self.grows += 1;
+        }
+    }
+
+    /// Single-sample evaluation through the compiled gather program —
+    /// no transpose, no packing, scratch reused across calls.
+    pub fn eval_one_into(&mut self, x: &[i32], out: &mut Vec<i32>) {
+        let plan = self.plan.clone();
+        assert_eq!(x.len(), plan.n_in, "input len {} != n_in {}", x.len(),
+                   plan.n_in);
+        let cap_before =
+            self.one_a.capacity() + self.one_b.capacity();
+        let mut cur = std::mem::take(&mut self.one_a);
+        let mut nxt = std::mem::take(&mut self.one_b);
+        cur.clear();
+        cur.extend(x.iter().map(|&c| c as u16));
+        for pl in &plan.layers {
+            let g = &pl.gather;
+            nxt.clear();
+            nxt.resize(g.w, 0);
+            for (u, slot) in nxt.iter_mut().enumerate() {
+                let c0 = g.conn_off + u * g.fan_in;
+                let conn = &plan.conn[c0..c0 + g.fan_in];
+                let mut addr = 0usize;
+                for (f, &src) in conn.iter().enumerate() {
+                    addr |= (cur[src as usize] as usize) << g.shifts[f];
+                }
+                *slot = table_read(&plan.words, g.table_off[u] as usize,
+                                   addr);
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        out.clear();
+        out.extend(cur.iter().map(|&c| c as i32));
+        self.one_a = cur;
+        self.one_b = nxt;
+        if self.one_a.capacity() + self.one_b.capacity() > cap_before {
+            self.grows += 1;
+        }
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`PlanExecutor::eval_one_into`].
+    pub fn eval_one(&mut self, x: &[i32]) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.eval_one_into(x, &mut out);
+        out
+    }
+
+    fn scratch_capacity(&self) -> usize {
+        self.cur.capacity() + self.nxt.capacity()
+            + self.bits_cur.capacity() + self.bits_nxt.capacity()
+    }
+}
+
+/// Cache key: structural content hash mixed with the compile options.
+fn plan_key(nl: &Netlist, opts: PlanOptions) -> u64 {
+    let h = nl.content_hash();
+    if opts.bitplane {
+        h
+    } else {
+        h ^ 0x9E37_79B9_7F4A_7C15
+    }
+}
+
+/// Content-addressed cache of compiled plans, shared across threads.
+///
+/// Keyed by [`Netlist::content_hash`] (structure only — the name is
+/// excluded, so two identically-structured models share one plan) mixed
+/// with [`PlanOptions`].  The server holds one per process: model
+/// registration compiles once and every router worker executes the same
+/// immutable `Arc<ExecPlan>`.  Compilation runs outside the map lock;
+/// concurrent racers may both compile, the last insert wins (plans for
+/// equal content are identical, so either result is correct).
+#[derive(Default)]
+pub struct PlanCache {
+    inner: Mutex<HashMap<u64, Arc<ExecPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The plan for `nl`, compiled on first sight of its content.
+    pub fn get_or_compile(&self, nl: &Netlist, opts: PlanOptions)
+                          -> Arc<ExecPlan> {
+        let key = plan_key(nl, opts);
+        let hit = self.inner.lock().unwrap().get(&key).cloned();
+        if let Some(p) = hit {
+            // 64-bit keys can collide in principle; the hit is reused
+            // only after a full content comparison (dims, wiring, every
+            // table entry), so a collision degrades to a fresh compile,
+            // never a wrong plan.  The cached entry is left alone.
+            if p.matches(nl) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return p;
+            }
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(compile(nl, opts));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(compile(nl, opts));
+        self.inner.lock().unwrap().insert(key, plan.clone());
+        plan
+    }
+
+    /// Distinct plans resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that compiled.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    fn assert_plan_matches_eval_one(nl: &Netlist, ex: &mut PlanExecutor,
+                                    seed: u64, batch: usize) {
+        let x = random_inputs(seed, nl, batch);
+        let got = ex.eval_batch(&x, batch);
+        let ow = nl.out_width();
+        assert_eq!(got.len(), batch * ow);
+        for b in 0..batch {
+            let one =
+                nl.eval_one(&x[b * nl.n_in..(b + 1) * nl.n_in]).unwrap();
+            assert_eq!(&got[b * ow..(b + 1) * ow], &one[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn compiled_plan_matches_reference_walk() {
+        let nl = random_netlist(7, 16, 2, &[(12, 3, 2), (6, 2, 1), (3, 2, 4)]);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        assert_eq!(plan.n_in(), 16);
+        assert_eq!(plan.out_width(), 3);
+        let mut ex = PlanExecutor::new(plan);
+        // batch 1 (single-sample path), a gather-regime batch, a packed
+        // batch that is not a multiple of 64
+        for (seed, batch) in [(1u64, 1usize), (2, 9), (3, 130)] {
+            assert_plan_matches_eval_one(&nl, &mut ex, seed, batch);
+        }
+    }
+
+    #[test]
+    fn compiled_plan_matches_on_reducible_netlists() {
+        // wide raw address, reduced support: the bit-plane steps engage
+        let nl = random_reducible_netlist(
+            19, 12, 2, &[(8, 4, 2), (4, 4, 2), (2, 2, 2)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        assert_eq!(plan.bitplane_layers(), 3);
+        assert_eq!(plan.layer_kernels(),
+                   vec![KernelChoice::BitPlane; 3]);
+        let mut ex = PlanExecutor::new(plan);
+        for (seed, batch) in [(4u64, 1usize), (5, 31), (6, 64), (7, 200)] {
+            assert_plan_matches_eval_one(&nl, &mut ex, seed, batch);
+        }
+    }
+
+    #[test]
+    fn gather_only_plan_matches() {
+        let nl = random_reducible_netlist(
+            23, 10, 2, &[(8, 3, 2), (4, 2, 2)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions { bitplane: false }));
+        assert_eq!(plan.bitplane_layers(), 0);
+        let mut ex = PlanExecutor::new(plan);
+        for (seed, batch) in [(8u64, 1usize), (9, 100)] {
+            assert_plan_matches_eval_one(&nl, &mut ex, seed, batch);
+        }
+    }
+
+    #[test]
+    fn threaded_executors_are_bit_exact() {
+        let nl = random_reducible_netlist(
+            37, 24, 2, &[(64, 3, 2), (48, 2, 3), (16, 2, 2)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let mut pooled = PlanExecutor::with_options(
+            plan.clone(),
+            SimOptions { threads: 4, mode: ThreadMode::Pooled,
+                         ..Default::default() },
+        );
+        let mut scoped = PlanExecutor::with_options(
+            plan,
+            SimOptions { threads: 4, mode: ThreadMode::Scoped,
+                         ..Default::default() },
+        );
+        for (seed, batch) in [(1u64, 33usize), (2, 600), (3, 2100)] {
+            let x = random_inputs(seed, &nl, batch);
+            assert_eq!(pooled.eval_batch(&x, batch),
+                       scoped.eval_batch(&x, batch), "batch {batch}");
+        }
+        assert_plan_matches_eval_one(&nl, &mut pooled, 9, 2100);
+    }
+
+    #[test]
+    fn table_arena_dedup_shares_identical_tables() {
+        // four units, all the same XOR table, two distinct wirings; one
+        // second-layer unit reusing XOR again.  Gather tables pack into
+        // one arena word, every plane table reduces to the same word —
+        // so the arena holds exactly two distinct entries.
+        let xor = vec![0u16, 1, 1, 0];
+        let l0 = LayerSpec {
+            w: 4, fan_in: 2, in_bits: 1, out_bits: 1,
+            conn: vec![0, 1, 2, 3, 0, 2, 1, 3],
+            tables: [xor.clone(), xor.clone(), xor.clone(), xor.clone()]
+                .concat(),
+        };
+        let l1 = LayerSpec {
+            w: 1, fan_in: 2, in_bits: 1, out_bits: 1,
+            conn: vec![0, 3],
+            tables: xor,
+        };
+        let nl = Netlist { name: "sharing".into(), n_in: 4, in_bits: 1,
+                           layers: vec![l0, l1] };
+        nl.validate().unwrap();
+        let plan = compile(&nl, PlanOptions::default());
+        let st = plan.stats();
+        // 5 gather tables + 5 plane tables compiled...
+        assert_eq!(st.tables_total, 10);
+        // ...but only one distinct gather word and one distinct plane
+        // word survive dedup
+        assert_eq!(st.tables_unique, 2, "stats: {}", st.summary());
+        assert_eq!(st.table_words, 2);
+        assert_eq!(st.planes, 5);
+        // and the shared-table plan still evaluates correctly
+        let mut ex = PlanExecutor::new(Arc::new(plan));
+        assert_plan_matches_eval_one(&nl, &mut ex, 11, 70);
+    }
+
+    #[test]
+    fn dedup_keeps_distinct_tables_distinct() {
+        let nl = random_netlist(29, 8, 1, &[(4, 2, 2), (2, 2, 2)]);
+        let plan = compile(&nl, PlanOptions::default());
+        let st = plan.stats();
+        assert!(st.tables_unique <= st.tables_total);
+        assert!(st.tables_unique >= 1);
+        // unique count is bounded below by the number of distinct
+        // gather-table contents
+        let mut distinct = std::collections::HashSet::new();
+        for layer in &nl.layers {
+            for u in 0..layer.w {
+                distinct.insert(layer.unit_table(u).to_vec());
+            }
+        }
+        assert!(st.tables_unique >= distinct.len());
+    }
+
+    #[test]
+    fn empty_batch_returns_empty_without_work() {
+        let nl = random_netlist(31, 6, 2, &[(4, 2, 2)]);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        // threads > 1: the early return must fire before any pool is
+        // created or woken
+        let mut ex = PlanExecutor::with_options(
+            plan, SimOptions { threads: 4, ..Default::default() });
+        assert!(ex.eval_batch(&[], 0).is_empty());
+        let mut out = vec![1, 2, 3];
+        ex.eval_batch_into(&[], 0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn layerless_netlist_is_identity() {
+        let nl = Netlist { name: "empty".into(), n_in: 3, in_bits: 2,
+                           layers: vec![] };
+        nl.validate().unwrap();
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        assert_eq!(plan.out_width(), 3);
+        let mut ex = PlanExecutor::new(plan);
+        let x = vec![1, 2, 3, 0, 1, 2];
+        assert_eq!(ex.eval_batch(&x, 2), x);
+        assert_eq!(ex.eval_one(&[3, 1, 0]), vec![3, 1, 0]);
+    }
+
+    #[test]
+    fn steady_state_eval_does_not_grow_buffers() {
+        let nl = random_reducible_netlist(
+            41, 16, 2, &[(24, 3, 2), (12, 2, 2), (4, 2, 2)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let mut ex = PlanExecutor::new(plan);
+        let mut out = Vec::new();
+        for batch in [1usize, 64, 200] {
+            let x = random_inputs(batch as u64, &nl, batch);
+            ex.eval_batch_into(&x, batch, &mut out);
+            let after_first = ex.buffer_grows();
+            for rep in 0..5 {
+                ex.eval_batch_into(&x, batch, &mut out);
+                assert_eq!(ex.buffer_grows(), after_first,
+                           "batch {batch} rep {rep} reallocated scratch");
+            }
+        }
+        // smaller batches after the largest: capacity already covers
+        // them, so no growth at all
+        let before = ex.buffer_grows();
+        for batch in [1usize, 64, 200] {
+            let x = random_inputs(batch as u64, &nl, batch);
+            ex.eval_batch_into(&x, batch, &mut out);
+        }
+        assert_eq!(ex.buffer_grows(), before);
+    }
+
+    #[test]
+    fn plan_cache_shares_and_counts() {
+        let cache = PlanCache::new();
+        let nl = random_netlist(43, 8, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let a = cache.get_or_compile(&nl, PlanOptions::default());
+        let b = cache.get_or_compile(&nl, PlanOptions::default());
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit");
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+        // same structure under a different name still hits (the name is
+        // not part of the content hash)
+        let mut renamed = nl.clone();
+        renamed.name = "other".into();
+        let c = cache.get_or_compile(&renamed, PlanOptions::default());
+        assert!(Arc::ptr_eq(&a, &c));
+        // different options compile a different plan
+        let d = cache.get_or_compile(&nl, PlanOptions { bitplane: false });
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_eq!(cache.len(), 2);
+        // different content compiles a different plan
+        let nl2 = random_netlist(44, 8, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let e = cache.get_or_compile(&nl2, PlanOptions::default());
+        assert!(!Arc::ptr_eq(&a, &e));
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn content_hash_tracks_structure_not_name() {
+        let nl = random_netlist(47, 8, 1, &[(4, 2, 2)]);
+        let mut renamed = nl.clone();
+        renamed.name = "x".into();
+        assert_eq!(nl.content_hash(), renamed.content_hash());
+        let mut touched = nl.clone();
+        touched.layers[0].tables[1] ^= 1;
+        assert_ne!(nl.content_hash(), touched.content_hash());
+        let mut rewired = nl.clone();
+        rewired.layers[0].conn[0] ^= 1;
+        assert_ne!(nl.content_hash(), rewired.content_hash());
+    }
+
+    #[test]
+    fn set_threads_and_pool_lending() {
+        let nl = random_reducible_netlist(
+            53, 24, 2, &[(64, 3, 2), (32, 2, 2)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let mut ex = PlanExecutor::new(plan);
+        assert_plan_matches_eval_one(&nl, &mut ex, 1, 64);
+        ex.set_threads(4);
+        assert_plan_matches_eval_one(&nl, &mut ex, 2, 2100);
+        // lend an external pool, as server workers do
+        let prev = ex.set_pool(Some(WorkerPool::new(2)));
+        assert_plan_matches_eval_one(&nl, &mut ex, 3, 2100);
+        let lent = ex.set_pool(prev);
+        assert!(lent.is_some());
+        ex.set_threads(1);
+        assert_plan_matches_eval_one(&nl, &mut ex, 4, 100);
+    }
+}

@@ -32,9 +32,18 @@
 //! layers parallelize profitably ([`PAR_MIN_WORK_POOLED`] vs
 //! [`PAR_MIN_WORK`]) — the regime of high request rates with small
 //! batches.
+//!
+//! By default ([`SimOptions::compiled`]) the hot loops do not run the
+//! object-graph walk below at all: construction lowers the netlist into
+//! an arena-backed [`ExecPlan`] (`netlist::plan`) and `eval_batch` /
+//! `eval_one` execute the compiled program.  The interpreted walk is
+//! kept behind `compiled: false` as the bit-exactness reference; the
+//! two are compared by the `prop_compiled_plan_*` property suite and
+//! raced by the `netlist_hotpath` compiled-vs-interpreted rows.
 
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
+use super::plan::{self, ExecPlan, PlanExecutor, PlanOptions};
 use super::{LayerSpec, Netlist};
 
 /// Widest reduced support a plane may have and still use the packed
@@ -44,23 +53,25 @@ use super::{LayerSpec, Netlist};
 pub const MAX_PLANE_SUPPORT: usize = 6;
 
 /// Raw address widths past this are never worth the support scan.
-const MAX_BUILD_ADDR_BITS: usize = 16;
+/// Shared with the plan compiler, which applies the same qualification
+/// rule (`netlist::plan`).
+pub(super) const MAX_BUILD_ADDR_BITS: usize = 16;
 
 /// Below this many output words/codes per layer, spawning scoped
 /// threads costs more than it saves and the layer runs single-threaded.
-const PAR_MIN_WORK: usize = 1 << 12;
+pub(super) const PAR_MIN_WORK: usize = 1 << 12;
 
 /// Pooled threshold for the bit-plane kernel, in packed output *words*
 /// (64 samples each, a Shannon-tree evaluation per word): waking a
 /// parked worker is ~µs, not the tens of µs a spawn/join costs, so far
 /// smaller layers amortize the handoff.
-const PAR_MIN_WORK_POOLED: usize = 1 << 8;
+pub(super) const PAR_MIN_WORK_POOLED: usize = 1 << 8;
 
 /// Pooled threshold for the gather kernel, in output *codes*.  A code
 /// is a single table read — roughly an order of magnitude cheaper than
 /// a packed word — so the floor sits proportionally higher to keep
 /// tiny-batch layers from paying a wake for ~µs of work.
-const PAR_MIN_WORK_POOLED_GATHER: usize = 1 << 11;
+pub(super) const PAR_MIN_WORK_POOLED_GATHER: usize = 1 << 11;
 
 /// Which kernel a layer was compiled to (introspection for benches and
 /// the server's startup log).
@@ -100,6 +111,13 @@ pub struct SimOptions {
     /// Smallest batch for which word packing amortizes; below it the
     /// gather path runs even on bit-plane layers.
     pub min_bitplane_batch: usize,
+    /// Execute through a compiled [`ExecPlan`] (default true): the
+    /// netlist is lowered once at construction into arena-backed form
+    /// (`netlist::plan`) and the hot loops run the plan.  `false` keeps
+    /// the original object-graph walk — the bit-exactness reference and
+    /// the interpreted baseline the `netlist_hotpath` bench compares
+    /// against.
+    pub compiled: bool,
 }
 
 impl Default for SimOptions {
@@ -109,6 +127,7 @@ impl Default for SimOptions {
             threads: 1,
             mode: ThreadMode::Pooled,
             min_bitplane_batch: 32,
+            compiled: true,
         }
     }
 }
@@ -369,7 +388,7 @@ pub fn eval_packed(table: u64, inputs: &[u64]) -> u64 {
 }
 
 #[inline(always)]
-fn eval_packed_rec(table: u64, inputs: &[u64]) -> u64 {
+pub(super) fn eval_packed_rec(table: u64, inputs: &[u64]) -> u64 {
     match inputs.len() {
         0 => {
             if table & 1 == 1 { !0u64 } else { 0u64 }
@@ -556,8 +575,8 @@ fn gather_units(layer: &LayerSpec, cur: &[u16], batch: usize,
 /// `work` output words/codes total, given the kernel/mode-specific
 /// profitability `floor`: waking a parked pool worker amortizes at much
 /// smaller layers than spawning a scoped thread does.
-fn par_threads(requested: usize, units: usize, work: usize,
-               floor: usize) -> usize {
+pub(super) fn par_threads(requested: usize, units: usize, work: usize,
+                          floor: usize) -> usize {
     if requested <= 1 || units < 2 || work < floor {
         1
     } else {
@@ -581,9 +600,10 @@ unsafe impl<T: Send> Sync for SendPtr<T> {}
 /// (serial when `threads <= 1`).  Chunk boundaries are identical in
 /// every mode, and each mode hands each worker exactly one disjoint
 /// range, so all three execution paths are bit-exact by construction.
-fn chunked_units<T: Send, F>(out: &mut [T], w: usize, stride: usize,
-                             threads: usize, pool: Option<&mut WorkerPool>,
-                             f: F)
+pub(super) fn chunked_units<T: Send, F>(out: &mut [T], w: usize,
+                                        stride: usize, threads: usize,
+                                        pool: Option<&mut WorkerPool>,
+                                        f: F)
 where
     F: Fn(usize, usize, &mut [T]) + Sync,
 {
@@ -624,11 +644,20 @@ where
 }
 
 /// Reusable-buffer simulator bound to a netlist.
+///
+/// By default ([`SimOptions::compiled`]) construction lowers the netlist
+/// into an [`ExecPlan`] and every hot loop runs the compiled program; the
+/// original interpreted walk is kept behind `compiled: false` as the
+/// bit-exactness reference.
 pub struct Simulator<'a> {
     nl: &'a Netlist,
     opts: SimOptions,
+    /// interpreted per-layer kernels (empty when compiled)
     kernels: Vec<LayerKernel>,
-    /// persistent workers ([`ThreadMode::Pooled`] with `threads > 1`)
+    /// compiled execution ([`SimOptions::compiled`], the default)
+    plan_exec: Option<PlanExecutor>,
+    /// persistent workers ([`ThreadMode::Pooled`] with `threads > 1`);
+    /// lives inside `plan_exec` when compiled
     pool: Option<WorkerPool>,
     /// scratch: signal-major u16 codes
     buf_a: Vec<u16>,
@@ -646,22 +675,29 @@ impl<'a> Simulator<'a> {
     /// Build with explicit kernel/threading options (benches use this to
     /// pin the gather baseline; the server plumbs `sim_threads` here).
     pub fn with_options(nl: &'a Netlist, opts: SimOptions) -> Simulator<'a> {
-        let kernels = nl
-            .layers
-            .iter()
-            .map(|l| {
-                if !opts.bitplane {
-                    return LayerKernel::Gather;
-                }
-                match BitPlaneLayer::try_build(l) {
-                    Some(b) => LayerKernel::BitPlane(b),
-                    None => LayerKernel::Gather,
-                }
-            })
-            .collect();
+        let (kernels, plan_exec) = if opts.compiled {
+            let p = Arc::new(plan::compile(
+                nl, PlanOptions { bitplane: opts.bitplane }));
+            (Vec::new(), Some(PlanExecutor::with_options(p, opts)))
+        } else {
+            let kernels = nl
+                .layers
+                .iter()
+                .map(|l| {
+                    if !opts.bitplane {
+                        return LayerKernel::Gather;
+                    }
+                    match BitPlaneLayer::try_build(l) {
+                        Some(b) => LayerKernel::BitPlane(b),
+                        None => LayerKernel::Gather,
+                    }
+                })
+                .collect();
+            (kernels, None)
+        };
         // the pool is created lazily on first parallel use (or lent in
         // via `set_pool`), so construction never spawns threads
-        Simulator { nl, opts, kernels, pool: None,
+        Simulator { nl, opts, kernels, plan_exec, pool: None,
                     buf_a: Vec::new(), buf_b: Vec::new(),
                     bits_a: Vec::new(), bits_b: Vec::new() }
     }
@@ -693,6 +729,10 @@ impl<'a> Simulator<'a> {
     /// use.
     pub fn set_threads(&mut self, threads: usize) {
         self.opts.threads = threads.max(1);
+        if let Some(pe) = &mut self.plan_exec {
+            pe.set_threads(threads);
+            return;
+        }
         let want = self.wanted_pool_workers();
         let have = self.pool.as_ref().map(|p| p.workers()).unwrap_or(0);
         if self.pool.is_some() && want != have {
@@ -708,6 +748,9 @@ impl<'a> Simulator<'a> {
     /// size; `None` restores lazy self-creation.
     pub fn set_pool(&mut self, pool: Option<WorkerPool>)
                     -> Option<WorkerPool> {
+        if let Some(pe) = &mut self.plan_exec {
+            return pe.set_pool(pool);
+        }
         std::mem::replace(&mut self.pool, pool)
     }
 
@@ -721,8 +764,17 @@ impl<'a> Simulator<'a> {
         self.opts
     }
 
+    /// The compiled plan, when this simulator executes one
+    /// ([`SimOptions::compiled`]).
+    pub fn plan(&self) -> Option<&Arc<ExecPlan>> {
+        self.plan_exec.as_ref().map(|pe| pe.plan())
+    }
+
     /// Per-layer kernel choice (introspection for benches/logs).
     pub fn layer_kernels(&self) -> Vec<KernelChoice> {
+        if let Some(pe) = &self.plan_exec {
+            return pe.plan().layer_kernels();
+        }
         self.kernels
             .iter()
             .map(|k| match k {
@@ -734,6 +786,9 @@ impl<'a> Simulator<'a> {
 
     /// How many layers compiled to the bit-plane kernel.
     pub fn bitplane_layers(&self) -> usize {
+        if let Some(pe) = &self.plan_exec {
+            return pe.plan().bitplane_layers();
+        }
         self.kernels
             .iter()
             .filter(|k| matches!(k, LayerKernel::BitPlane(_)))
@@ -757,6 +812,14 @@ impl<'a> Simulator<'a> {
     /// is chunked over unit ranges onto scoped threads.
     pub fn eval_batch(&mut self, x: &[i32], batch: usize) -> Vec<i32> {
         assert_eq!(x.len(), batch * self.nl.n_in);
+        // empty batch: nothing to transpose or pack, and no pool to
+        // create or wake
+        if batch == 0 {
+            return Vec::new();
+        }
+        if let Some(pe) = &mut self.plan_exec {
+            return pe.eval_batch(x, batch);
+        }
         self.ensure_pool();
         let use_bits = self.opts.bitplane
             && batch >= self.opts.min_bitplane_batch;
@@ -851,6 +914,20 @@ impl<'a> Simulator<'a> {
         self.bits_a = bits_cur;
         self.bits_b = bits_next;
         out
+    }
+
+    /// Single-sample evaluation: the compiled plan's transpose-free
+    /// gather program when this simulator carries one, the reference
+    /// object walk otherwise.
+    pub fn eval_one(&mut self, x: &[i32]) -> Vec<i32> {
+        assert_eq!(x.len(), self.nl.n_in);
+        match &mut self.plan_exec {
+            Some(pe) => pe.eval_one(x),
+            None => self
+                .nl
+                .eval_one(x)
+                .expect("input width checked above"),
+        }
     }
 }
 
@@ -1043,6 +1120,68 @@ mod tests {
         sim.set_threads(1);
         assert_matches_eval_one(&nl, &mut sim, 3, 100);
         assert_eq!(sim.options().threads, 1);
+    }
+
+    #[test]
+    fn empty_batch_early_returns() {
+        let nl = random_netlist(59, 8, 1, &[(4, 3, 2), (2, 2, 3)]);
+        // every execution mode must return an empty batch without
+        // packing planes or waking (or even creating) a worker pool
+        for opts in [
+            SimOptions::default(),
+            SimOptions { compiled: false, ..Default::default() },
+            SimOptions { threads: 4, ..Default::default() },
+            SimOptions { threads: 4, mode: ThreadMode::Scoped,
+                         compiled: false, ..Default::default() },
+        ] {
+            let mut sim = nl.simulator_with(opts);
+            assert!(sim.eval_batch(&[], 0).is_empty());
+            // and a normal batch still works afterwards
+            assert_matches_eval_one(&nl, &mut sim, 59, 7);
+        }
+        assert!(nl.eval_batch(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn interpreted_walk_still_bit_exact() {
+        // `compiled: false` keeps the original object-graph walk as the
+        // reference; it must keep passing the same suite as the plan
+        let nl = random_reducible_netlist(
+            47, 24, 2, &[(64, 3, 2), (48, 2, 3), (16, 2, 2)], 6);
+        for opts in [
+            SimOptions { compiled: false, ..Default::default() },
+            SimOptions { compiled: false, bitplane: false,
+                         ..Default::default() },
+            SimOptions { compiled: false, threads: 4,
+                         ..Default::default() },
+            SimOptions { compiled: false, threads: 4,
+                         mode: ThreadMode::Scoped, ..Default::default() },
+        ] {
+            let mut sim = nl.simulator_with(opts);
+            for (seed, batch) in [(1u64, 1usize), (2, 33), (3, 2100)] {
+                assert_matches_eval_one(&nl, &mut sim, seed, batch);
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_and_interpreted_agree_exactly() {
+        let nl = random_reducible_netlist(
+            49, 20, 2, &[(48, 3, 2), (32, 2, 2), (8, 2, 2)], 6);
+        let mut compiled = nl.simulator();
+        let mut interp = nl.simulator_with(SimOptions {
+            compiled: false, ..Default::default()
+        });
+        assert!(compiled.plan().is_some());
+        assert!(interp.plan().is_none());
+        assert_eq!(compiled.layer_kernels(), interp.layer_kernels());
+        for (seed, batch) in [(1u64, 1usize), (2, 17), (3, 64), (4, 321)] {
+            let x = random_inputs(seed, &nl, batch);
+            assert_eq!(compiled.eval_batch(&x, batch),
+                       interp.eval_batch(&x, batch), "batch {batch}");
+        }
+        let x = random_inputs(5, &nl, 1);
+        assert_eq!(compiled.eval_one(&x), interp.eval_one(&x));
     }
 
     #[test]

@@ -14,7 +14,8 @@ use neuralut::coordinator::{check_conformance, BatchPolicy,
                             ModelRegistry, ServerConfig};
 use neuralut::netlist::testutil::{random_inputs, random_netlist,
                                   random_reducible_netlist};
-use neuralut::netlist::{optimize, OptLevel, SimOptions, ThreadMode};
+use neuralut::netlist::{optimize, OptLevel, PlanCache, PlanExecutor,
+                        PlanOptions, SimOptions, ThreadMode};
 
 #[test]
 fn conformance_direct_simulator() {
@@ -49,6 +50,68 @@ fn conformance_scoped_threads_simulator() {
     });
     check_conformance(&mut sim, &nl, 63).unwrap();
     assert!(sim.describe().contains("Scoped"));
+}
+
+#[test]
+fn conformance_interpreted_simulator() {
+    // the reference walk stays a first-class backend
+    let nl = random_reducible_netlist(
+        68, 20, 2, &[(48, 3, 2), (32, 2, 2), (8, 2, 2)], 6);
+    let mut sim = nl.simulator_with(SimOptions {
+        compiled: false,
+        ..Default::default()
+    });
+    check_conformance(&mut sim, &nl, 68).unwrap();
+    assert!(sim.describe().contains("interpreted"));
+}
+
+#[test]
+fn conformance_plan_executor_serial_and_threaded() {
+    // the compiled plan is the serving execution model: a shared plan
+    // driven by serial, pooled and scoped executors must all satisfy
+    // the engine contract
+    let nl = random_reducible_netlist(
+        69, 20, 2, &[(48, 3, 2), (32, 2, 2), (8, 2, 2)], 6);
+    let cache = PlanCache::new();
+    let plan = cache.get_or_compile(&nl, PlanOptions::default());
+    let mut serial = PlanExecutor::new(plan.clone());
+    check_conformance(&mut serial, &nl, 69).unwrap();
+    let mut pooled = PlanExecutor::with_options(plan.clone(), SimOptions {
+        threads: 4,
+        mode: ThreadMode::Pooled,
+        min_bitplane_batch: 1,
+        ..Default::default()
+    });
+    check_conformance(&mut pooled, &nl, 70).unwrap();
+    let mut scoped = PlanExecutor::with_options(plan, SimOptions {
+        threads: 4,
+        mode: ThreadMode::Scoped,
+        min_bitplane_batch: 1,
+        ..Default::default()
+    });
+    check_conformance(&mut scoped, &nl, 71).unwrap();
+    // all three executors ran the same compiled artifact
+    assert_eq!(cache.len(), 1);
+}
+
+#[test]
+fn conformance_plan_of_optimized_netlist() {
+    // the exact serving chain: optimize, compile, execute — conformance
+    // against the optimized netlist and bit-exactness against the raw
+    let nl = random_reducible_netlist(
+        74, 20, 2, &[(40, 3, 2), (24, 2, 2), (6, 2, 2)], 6);
+    let (opt, _) = optimize(&nl, OptLevel::Full);
+    let plan = std::sync::Arc::new(opt.compile_plan(PlanOptions::default()));
+    let mut ex = PlanExecutor::new(plan);
+    check_conformance(&mut ex, &opt, 74).unwrap();
+    let batch = 97;
+    let x = random_inputs(75, &nl, batch);
+    let got = ex.eval_batch(&x, batch);
+    let ow = nl.out_width();
+    for b in 0..batch {
+        let want = nl.eval_one(&x[b * 20..(b + 1) * 20]).unwrap();
+        assert_eq!(&got[b * ow..(b + 1) * ow], &want[..], "row {b}");
+    }
 }
 
 #[test]

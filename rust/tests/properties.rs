@@ -2,11 +2,14 @@
 //! needed — these run on randomly generated netlists/tables, 64 cases per
 //! property by default, `NLA_PROP_CASES` to widen).
 
+use std::sync::Arc;
+
 use neuralut::luts::TruthTable;
 use neuralut::mapper::{map_netlist, plut_cost, plut_depth};
 use neuralut::netlist::testutil::{random_inputs, random_netlist,
                                   random_reducible_netlist};
-use neuralut::netlist::{optimize, Netlist, OptLevel, SimOptions,
+use neuralut::netlist::{compile, optimize, Netlist, OptLevel, PlanCache,
+                        PlanExecutor, PlanOptions, SimOptions,
                         ThreadMode};
 use neuralut::pruning;
 use neuralut::rtl;
@@ -212,6 +215,110 @@ fn check_optimize_bit_exact(nl: &Netlist, seed: u64)
         }
     }
     Ok(())
+}
+
+/// Check `compile(optimize(nl, level))` at every level against the
+/// *raw* netlist's `eval_one` and `eval_batch`, across thread modes and
+/// batch sizes that are not multiples of 64 — the compiled-plan
+/// keystone: the whole raw -> optimized -> compiled chain is bit-exact.
+fn check_compiled_plan_bit_exact(nl: &Netlist, seed: u64)
+                                 -> Result<(), String> {
+    let ow = nl.out_width();
+    for level in [OptLevel::None, OptLevel::Basic, OptLevel::Full] {
+        let (opt, _) = optimize(nl, level);
+        let plan = Arc::new(compile(&opt, PlanOptions::default()));
+        let threads = 2 + (seed % 3) as usize;
+        let mut execs = [
+            PlanExecutor::new(plan.clone()),
+            PlanExecutor::with_options(plan.clone(), SimOptions {
+                threads, mode: ThreadMode::Pooled,
+                min_bitplane_batch: 1, ..Default::default()
+            }),
+            PlanExecutor::with_options(plan.clone(), SimOptions {
+                threads, mode: ThreadMode::Scoped,
+                min_bitplane_batch: 1, ..Default::default()
+            }),
+        ];
+        let mut batch = 1 + (seed % 150) as usize;
+        if batch % 64 == 0 {
+            batch += 1; // exercise packed tail words
+        }
+        // the reference is the *interpreted* object-graph walk of the
+        // *raw* netlist (`compiled: false`) — comparing the plan against
+        // the default `eval_batch` would be circular now that it
+        // compiles a plan itself
+        let mut reference = nl.simulator_with(SimOptions {
+            compiled: false, ..Default::default()
+        });
+        for batch in [1usize, batch, 301 + (seed % 700) as usize] {
+            let x = random_inputs(seed ^ batch as u64, nl, batch);
+            let want = reference.eval_batch(&x, batch);
+            for (i, ex) in execs.iter_mut().enumerate() {
+                let got = ex.eval_batch(&x, batch);
+                if got != want {
+                    return Err(format!(
+                        "{level}: executor {i} differs at batch {batch}"));
+                }
+            }
+            for b in 0..batch.min(8) {
+                let one = nl
+                    .eval_one(&x[b * nl.n_in..(b + 1) * nl.n_in])
+                    .map_err(|e| e.to_string())?;
+                if want[b * ow..(b + 1) * ow] != one[..] {
+                    return Err(format!(
+                        "{level}: row {b} differs from eval_one"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_compiled_plan_is_bit_exact_on_reducible_netlists() {
+    forall("compile(optimize(n)) == eval_one (reducible)", 0xE1, 20,
+           arb_reducible, |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_reducible_netlist(seed, n_in, in_bits, shapes, 6);
+        check_compiled_plan_bit_exact(&nl, seed)
+    });
+}
+
+#[test]
+fn prop_compiled_plan_is_bit_exact_on_dense_netlists() {
+    forall("compile(optimize(n)) == eval_one (dense)", 0xE2, 20,
+           arb_shape, |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_netlist(seed, n_in, in_bits, shapes);
+        check_compiled_plan_bit_exact(&nl, seed)
+    });
+}
+
+#[test]
+fn prop_plan_cache_hit_is_equivalent_to_fresh_compile() {
+    // a cached plan must answer exactly like a freshly compiled one,
+    // and content-equal netlists (regardless of name) must share it
+    let cache = PlanCache::new();
+    forall("plan cache == fresh compile", 0xE3, 16, arb_shape,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let nl = random_netlist(seed, n_in, in_bits, shapes);
+        let cached = cache.get_or_compile(&nl, PlanOptions::default());
+        let mut renamed = nl.clone();
+        renamed.name = format!("alias{seed}");
+        let alias = cache.get_or_compile(&renamed, PlanOptions::default());
+        if !Arc::ptr_eq(&cached, &alias) {
+            return Err("renamed content-equal netlist missed".into());
+        }
+        let fresh = Arc::new(compile(&nl, PlanOptions::default()));
+        let batch = 1 + (seed % 70) as usize;
+        let x = random_inputs(seed ^ 0xE3, &nl, batch);
+        let mut ex_cached = PlanExecutor::new(cached);
+        let mut ex_fresh = PlanExecutor::new(fresh);
+        let a = ex_cached.eval_batch(&x, batch);
+        let b = ex_fresh.eval_batch(&x, batch);
+        if a != b {
+            return Err("cached plan diverged from fresh compile".into());
+        }
+        Ok(())
+    });
 }
 
 #[test]
