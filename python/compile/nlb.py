@@ -1,0 +1,295 @@
+"""`.nlb` — the versioned on-disk netlist artifact, python writer/reader.
+
+Byte-for-byte mirror of ``rust/src/netlist/format.rs`` (netlist section;
+the optional compiled-plan image is rust-only — a python-exported file
+sets no flag bits and the rust server compiles a plan at registration,
+or serves it through its persistent plan cache).  The golden-file
+integration test on the rust side loads artifacts written by this module
+and proves the two implementations agree to the byte.
+
+Wire layout (all integers little-endian)::
+
+    offset  size  field
+    0       4     magic "NLBF"
+    4       2     version (currently 1)
+    6       2     flags (bit 0: compiled-plan image present; never set here)
+    8       8     content hash (structural FNV-1a, see Netlist.content_hash)
+    16      8     payload length (== file length - 32)
+    24      8     payload checksum (FNV-1a over the payload bytes)
+    32      ..    payload:
+      name            u32 length + UTF-8 bytes
+      n_in            u32
+      in_bits         u32
+      n_layers        u32
+      per layer:
+        w, fan_in, in_bits, out_bits            4 x u32
+        conn     w * fan_in             x u32   (unit-major)
+        tables   w * 2^(in_bits*fan_in) x u16   (unit-major)
+
+The version bumps on any layout change; readers accept exactly the
+versions they know and reject the rest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+from typing import Dict, List, Sequence
+
+from .topology import Topology
+
+NLB_MAGIC = b"NLBF"
+NLB_VERSION = 1
+FLAG_PLAN = 1            # rust-only section; this writer never sets it
+MAX_ADDR_BITS = 24       # same cap as rust/src/netlist (2^24 u16 entries)
+
+_MASK64 = (1 << 64) - 1
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+
+
+def fnv1a(data: bytes) -> int:
+    """64-bit FNV-1a over raw bytes (the payload checksum)."""
+    h = _FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * _FNV_PRIME) & _MASK64
+    return h
+
+
+def _mix(h: int, v: int) -> int:
+    return ((h ^ v) * _FNV_PRIME) & _MASK64
+
+
+@dataclasses.dataclass
+class Layer:
+    """One L-LUT layer: wiring + enumerated truth tables (unit-major)."""
+
+    w: int
+    fan_in: int
+    in_bits: int
+    out_bits: int
+    conn: List[int]      # w * fan_in producer indices
+    tables: List[int]    # w * 2^(in_bits*fan_in) output codes (u16)
+
+    @property
+    def entries_per_unit(self) -> int:
+        return 1 << (self.in_bits * self.fan_in)
+
+
+@dataclasses.dataclass
+class Netlist:
+    """The artifact payload — mirrors ``rust::netlist::Netlist``."""
+
+    name: str
+    n_in: int
+    in_bits: int
+    layers: List[Layer]
+
+    @property
+    def out_width(self) -> int:
+        return self.layers[-1].w if self.layers else self.n_in
+
+    def total_units(self) -> int:
+        return sum(l.w for l in self.layers)
+
+    def content_hash(self) -> int:
+        """Structural FNV-1a (name excluded) — must match the rust
+        ``Netlist::content_hash`` on the same structure."""
+        h = _FNV_OFFSET
+        h = _mix(h, self.n_in)
+        h = _mix(h, self.in_bits)
+        h = _mix(h, len(self.layers))
+        for layer in self.layers:
+            h = _mix(h, layer.w)
+            h = _mix(h, layer.fan_in)
+            h = _mix(h, layer.in_bits)
+            h = _mix(h, layer.out_bits)
+            for c in layer.conn:
+                h = _mix(h, c)
+            h = _mix(h, 0xC0DE5EA1)
+            for t in layer.tables:
+                h = _mix(h, t)
+            h = _mix(h, 0x7AB1E5E9)
+        return h
+
+    def validate(self) -> None:
+        """Same structural checks as the rust loader (a file we write
+        must always load there)."""
+        prev_w, prev_bits = self.n_in, self.in_bits
+        for l, layer in enumerate(self.layers):
+            addr = layer.in_bits * layer.fan_in
+            if addr > MAX_ADDR_BITS:
+                raise ValueError(
+                    f"layer {l}: address width {addr} exceeds cap "
+                    f"{MAX_ADDR_BITS}")
+            if not 1 <= layer.out_bits <= 16:
+                raise ValueError(
+                    f"layer {l}: out_bits {layer.out_bits} outside 1..=16")
+            if len(layer.conn) != layer.w * layer.fan_in:
+                raise ValueError(f"layer {l}: conn len mismatch")
+            if len(layer.tables) != layer.w * layer.entries_per_unit:
+                raise ValueError(f"layer {l}: tables len mismatch")
+            if layer.in_bits != prev_bits:
+                raise ValueError(
+                    f"layer {l}: in_bits {layer.in_bits} != producer "
+                    f"bits {prev_bits}")
+            if any(c < 0 or c >= prev_w for c in layer.conn):
+                raise ValueError(f"layer {l}: conn index out of range")
+            limit = (1 << layer.out_bits) - 1
+            if any(t < 0 or t > limit for t in layer.tables):
+                raise ValueError(
+                    f"layer {l}: table entry exceeds out_bits")
+            prev_w, prev_bits = layer.w, layer.out_bits
+
+    def eval_one(self, x: Sequence[int]) -> List[int]:
+        """Pure-python reference evaluation (mirrors ``eval_one``)."""
+        if len(x) != self.n_in:
+            raise ValueError(f"input width {len(x)} != {self.n_in}")
+        prev = [c & 0xFFFF for c in x]
+        for layer in self.layers:
+            t = layer.entries_per_unit
+            nxt = []
+            for u in range(layer.w):
+                addr = 0
+                for f in range(layer.fan_in):
+                    src = layer.conn[u * layer.fan_in + f]
+                    addr |= prev[src] << (layer.in_bits * f)
+                nxt.append(layer.tables[u * t + addr])
+            prev = nxt
+        return prev
+
+
+def from_session(top: Topology, tables: Dict[str, object],
+                 conn: Dict[str, object], name: str = "") -> Netlist:
+    """Assemble a :class:`Netlist` from a trained session's enumerated
+    truth tables and connection indices.
+
+    ``tables[f"l{l}_tables"]`` is an int array ``[w[l], T_l]`` (the
+    output of ``model.enum_layer``); ``conn[f"l{l}_conn"]`` is an int
+    array ``[w[l], F[l]]``.  Both are flattened unit-major, exactly the
+    order ``lut_infer`` indexes them in.
+    """
+    layers = []
+    for l in range(top.n_layers):
+        tab = tables[f"l{l}_tables"]
+        idx = conn[f"l{l}_conn"]
+        flat_tab = [int(v) for row in tab for v in row]
+        flat_conn = [int(v) for row in idx for v in row]
+        layers.append(Layer(
+            w=top.w[l], fan_in=top.F[l], in_bits=top.in_bits(l),
+            out_bits=top.beta[l], conn=flat_conn, tables=flat_tab,
+        ))
+    nl = Netlist(name=name or top.name, n_in=top.n_in,
+                 in_bits=top.beta_in, layers=layers)
+    nl.validate()
+    return nl
+
+
+def write_nlb_bytes(nl: Netlist) -> bytes:
+    """Serialize to `.nlb` bytes (netlist section only, flags=0)."""
+    nl.validate()
+    parts = [struct.pack("<I", len(nl.name.encode())),
+             nl.name.encode(),
+             struct.pack("<III", nl.n_in, nl.in_bits, len(nl.layers))]
+    for layer in nl.layers:
+        parts.append(struct.pack("<IIII", layer.w, layer.fan_in,
+                                 layer.in_bits, layer.out_bits))
+        parts.append(struct.pack(f"<{len(layer.conn)}I", *layer.conn))
+        parts.append(struct.pack(f"<{len(layer.tables)}H", *layer.tables))
+    payload = b"".join(parts)
+    header = NLB_MAGIC + struct.pack(
+        "<HHQQQ", NLB_VERSION, 0, nl.content_hash(), len(payload),
+        fnv1a(payload))
+    return header + payload
+
+
+def read_nlb_bytes(data: bytes) -> Netlist:
+    """Parse and validate `.nlb` bytes (netlist section).
+
+    Rejects files carrying a compiled-plan image: the image encodes
+    rust ``ExecPlan`` arenas this side has no use for — re-export
+    without a plan, or load it on the rust side.
+    """
+    if len(data) < 32:
+        raise ValueError(f"truncated header: {len(data)} bytes, need 32")
+    if data[:4] != NLB_MAGIC:
+        raise ValueError(f"bad magic {data[:4]!r} (not an .nlb file)")
+    version, flags, content_hash, payload_len, payload_hash = \
+        struct.unpack_from("<HHQQQ", data, 4)
+    if version != NLB_VERSION:
+        raise ValueError(
+            f"unsupported format version {version} (this reader "
+            f"handles version {NLB_VERSION})")
+    if flags & ~FLAG_PLAN:
+        raise ValueError(f"unknown flag bits {flags & ~FLAG_PLAN:#06x}")
+    payload = data[32:]
+    if len(payload) != payload_len:
+        raise ValueError(
+            f"payload is {len(payload)} bytes but the header declares "
+            f"{payload_len}")
+    if fnv1a(payload) != payload_hash:
+        raise ValueError("payload checksum mismatch (file corrupt)")
+
+    pos = 0
+
+    def take(n: int, what: str) -> bytes:
+        nonlocal pos
+        if len(payload) - pos < n:
+            raise ValueError(
+                f"truncated: {what} needs {n} bytes at offset {pos}")
+        s = payload[pos:pos + n]
+        pos += n
+        return s
+
+    def u32(what: str) -> int:
+        return struct.unpack("<I", take(4, what))[0]
+
+    name = take(u32("name length"), "name").decode("utf-8")
+    n_in, in_bits, n_layers = u32("n_in"), u32("in_bits"), u32("layers")
+    layers = []
+    for l in range(n_layers):
+        w, fan_in = u32("w"), u32("fan_in")
+        l_bits, out_bits = u32("in_bits"), u32("out_bits")
+        addr = l_bits * fan_in
+        if addr > MAX_ADDR_BITS:
+            raise ValueError(
+                f"layer {l}: address width {addr} exceeds cap")
+        conn = list(struct.unpack(
+            f"<{w * fan_in}I", take(4 * w * fan_in, "conn")))
+        n_tab = w * (1 << addr)
+        tabs = list(struct.unpack(
+            f"<{n_tab}H", take(2 * n_tab, "tables")))
+        layers.append(Layer(w=w, fan_in=fan_in, in_bits=l_bits,
+                            out_bits=out_bits, conn=conn, tables=tabs))
+    nl = Netlist(name=name, n_in=n_in, in_bits=in_bits, layers=layers)
+    nl.validate()
+    if nl.content_hash() != content_hash:
+        raise ValueError(
+            f"content hash mismatch: header says {content_hash:016x}, "
+            f"payload hashes to {nl.content_hash():016x}")
+    if flags & FLAG_PLAN:
+        raise ValueError(
+            "artifact carries a compiled-plan image (rust-only section)")
+    if pos != len(payload):
+        raise ValueError(
+            f"{len(payload) - pos} trailing bytes after the last section")
+    return nl
+
+
+def save_nlb(path: str, nl: Netlist) -> None:
+    """Atomic write (temp + rename), like the rust exporter."""
+    data = write_nlb_bytes(nl)
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    try:
+        os.replace(tmp, path)
+    except OSError:
+        os.unlink(tmp)
+        raise
+
+
+def load_nlb(path: str) -> Netlist:
+    with open(path, "rb") as f:
+        return read_nlb_bytes(f.read())

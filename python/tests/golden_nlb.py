@@ -1,0 +1,92 @@
+"""Deterministic golden `.nlb` models shared by the python and rust suites.
+
+The committed files under ``rust/tests/golden/`` are produced by this
+module (``python -m tests.golden_nlb`` from ``python/``, or just rerun
+``write_goldens``).  ``test_nlb.py`` asserts the committed bytes still
+match what the current writer produces; the rust integration suite loads
+the same files, replays the recorded inputs, and must reproduce the
+recorded outputs bit-exactly — that pair of tests is the cross-language
+format contract.
+
+Everything is seeded ``random.Random`` — no jax, no trained weights —
+so regeneration is reproducible anywhere.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+from typing import List, Tuple
+
+from compile import nlb
+
+
+def _layer(rng: random.Random, prev_w: int, w: int, fan_in: int,
+           in_bits: int, out_bits: int) -> nlb.Layer:
+    conn = [rng.randrange(prev_w) for _ in range(w * fan_in)]
+    entries = 1 << (in_bits * fan_in)
+    tables = [rng.randrange(1 << out_bits) for _ in range(w * entries)]
+    return nlb.Layer(w=w, fan_in=fan_in, in_bits=in_bits,
+                     out_bits=out_bits, conn=conn, tables=tables)
+
+
+def golden_models() -> List[Tuple[nlb.Netlist, List[List[int]],
+                                  List[List[int]]]]:
+    """(netlist, input rows, expected output rows) triples."""
+    out = []
+
+    rng = random.Random(0x61)
+    mix = nlb.Netlist(
+        name="golden_mix", n_in=6, in_bits=2,
+        layers=[_layer(rng, 6, 5, 2, 2, 2), _layer(rng, 5, 3, 2, 2, 1)])
+    out.append(mix)
+
+    rng = random.Random(0x62)
+    deep = nlb.Netlist(
+        name="golden_deep", n_in=4, in_bits=1,
+        layers=[_layer(rng, 4, 6, 3, 1, 2), _layer(rng, 6, 4, 2, 2, 3),
+                _layer(rng, 4, 2, 2, 3, 8)])
+    out.append(deep)
+
+    triples = []
+    for nl in out:
+        nl.validate()
+        rng = random.Random(nl.content_hash() & 0xFFFF)
+        rows = [[rng.randrange(1 << nl.in_bits) for _ in range(nl.n_in)]
+                for _ in range(8)]
+        triples.append((nl, rows, [nl.eval_one(r) for r in rows]))
+    return triples
+
+
+def write_goldens(out_dir: str) -> List[str]:
+    """Write ``<name>.nlb`` per model plus ``golden_io.json``."""
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    manifest = []
+    for nl, rows, outs in golden_models():
+        path = os.path.join(out_dir, f"{nl.name}.nlb")
+        nlb.save_nlb(path, nl)
+        written.append(path)
+        manifest.append({
+            "model": nl.name,
+            "file": f"{nl.name}.nlb",
+            "content_hash": f"{nl.content_hash():016x}",
+            "inputs": rows,
+            "outputs": outs,
+        })
+    io_path = os.path.join(out_dir, "golden_io.json")
+    with open(io_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.write("\n")
+    written.append(io_path)
+    return written
+
+
+if __name__ == "__main__":
+    import sys
+
+    target = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "golden")
+    for p in write_goldens(os.path.normpath(target)):
+        print(p)

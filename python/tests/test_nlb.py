@@ -1,0 +1,158 @@
+"""`.nlb` artifact format tests: canonical round-trips, rejection of
+malformed files, session export, and the committed golden files staying
+in sync with the writer (the rust integration suite holds the other end
+of that contract)."""
+
+import dataclasses
+import os
+import random
+import struct
+
+import pytest
+
+from compile import model as M
+from compile import nlb
+from compile.topology import Topology
+
+import golden_nlb
+
+
+def _random_netlist(seed: int) -> nlb.Netlist:
+    rng = random.Random(seed)
+    return nlb.Netlist(
+        name=f"t{seed}", n_in=5, in_bits=2,
+        layers=[golden_nlb._layer(rng, 5, 4, 2, 2, 2),
+                golden_nlb._layer(rng, 4, 2, 2, 2, 1)])
+
+
+def test_roundtrip_is_canonical():
+    nl = _random_netlist(3)
+    data = nlb.write_nlb_bytes(nl)
+    back = nlb.read_nlb_bytes(data)
+    assert back == nl
+    # re-encoding the decoded model is byte-identical
+    assert nlb.write_nlb_bytes(back) == data
+
+
+def test_content_hash_excludes_name():
+    nl = _random_netlist(5)
+    renamed = dataclasses.replace(nl, name="other")
+    assert renamed.content_hash() == nl.content_hash()
+    changed = dataclasses.replace(nl, n_in=nl.n_in + 1)
+    assert changed.content_hash() != nl.content_hash()
+
+
+def test_zero_layer_netlist_roundtrips():
+    nl = nlb.Netlist(name="empty", n_in=3, in_bits=2, layers=[])
+    back = nlb.read_nlb_bytes(nlb.write_nlb_bytes(nl))
+    assert back == nl
+    assert back.eval_one([1, 2, 3]) == [1, 2, 3]
+
+
+def test_rejects_truncation_at_every_length():
+    data = nlb.write_nlb_bytes(_random_netlist(7))
+    for n in range(len(data)):
+        with pytest.raises(ValueError):
+            nlb.read_nlb_bytes(data[:n])
+
+
+@pytest.mark.parametrize("patch,needle", [
+    ((0, b"X"), "magic"),
+    ((4, struct.pack("<H", nlb.NLB_VERSION + 1)), "version"),
+    ((6, b"\x80"), "flag"),
+    ((8, None), "content hash"),   # None => xor the byte
+    ((-1, None), "checksum"),
+])
+def test_rejects_corrupt_headers(patch, needle):
+    data = bytearray(nlb.write_nlb_bytes(_random_netlist(11)))
+    off, val = patch
+    if val is None:
+        data[off] ^= 0x01 if off >= 0 else 0xFF
+    else:
+        data[off:off + len(val)] = val
+    with pytest.raises(ValueError, match=needle):
+        nlb.read_nlb_bytes(bytes(data))
+
+
+def test_rejects_trailing_garbage():
+    data = nlb.write_nlb_bytes(_random_netlist(13)) + b"\x00"
+    with pytest.raises(ValueError):
+        nlb.read_nlb_bytes(data)
+
+
+def test_save_load_roundtrip(tmp_path):
+    nl = _random_netlist(17)
+    path = str(tmp_path / "model.nlb")
+    nlb.save_nlb(path, nl)
+    assert nlb.load_nlb(path) == nl
+
+
+def _tiny_topology() -> Topology:
+    top = Topology(
+        name="tiny", n_in=4, beta_in=2,
+        w=[6, 3], a=[0, 1], F=[2, 2], beta=[2, 2],
+        L_sub=1, N=4, S=1, n_classes=3, dataset="jsc_cernbox")
+    top.validate()
+    return top
+
+
+def _session_arrays(top: Topology, seed: int):
+    """Synthetic (tables, conn) dicts in the trained-session layout."""
+    rng = random.Random(seed)
+    tables, conn = {}, {}
+    for l in range(top.n_layers):
+        t = top.table_entries(l)
+        tables[f"l{l}_tables"] = [
+            [rng.randrange(1 << top.beta[l]) for _ in range(t)]
+            for _ in range(top.w[l])]
+        if top.a[l]:
+            conn[f"l{l}_conn"] = top.fixed_connections(l)
+        else:
+            conn[f"l{l}_conn"] = [
+                [rng.randrange(top.in_width(l)) for _ in range(top.F[l])]
+                for _ in range(top.w[l])]
+    return tables, conn
+
+
+def test_from_session_matches_lut_infer():
+    """The exported netlist must evaluate exactly like the session it
+    came from: nlb.eval_one vs model.lut_infer on the same tables."""
+    jnp = pytest.importorskip("jax.numpy")
+    top = _tiny_topology()
+    tables, conn = _session_arrays(top, 23)
+    nl = nlb.from_session(top, tables, conn)
+    assert nl.name == top.name
+    assert nl.n_in == top.n_in and nl.in_bits == top.beta_in
+
+    rng = random.Random(29)
+    rows = [[rng.randrange(1 << top.beta_in) for _ in range(top.n_in)]
+            for _ in range(16)]
+    jt = {k: jnp.asarray(v, dtype=jnp.int32) for k, v in tables.items()}
+    jc = {k: jnp.asarray(v, dtype=jnp.int32) for k, v in conn.items()}
+    want = M.lut_infer(top, jt, jc, jnp.asarray(rows, dtype=jnp.int32),
+                       use_pallas=False)
+    got = [nl.eval_one(r) for r in rows]
+    assert got == [list(map(int, row)) for row in want]
+
+
+def test_from_session_survives_format_roundtrip():
+    top = _tiny_topology()
+    tables, conn = _session_arrays(top, 31)
+    nl = nlb.from_session(top, tables, conn)
+    assert nlb.read_nlb_bytes(nlb.write_nlb_bytes(nl)) == nl
+
+
+GOLDEN_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "golden"))
+
+
+def test_committed_goldens_match_writer():
+    """The committed artifacts must be exactly what this writer emits —
+    if the format changes, regenerate them (python -m tests.golden_nlb)
+    AND bump NLB_VERSION."""
+    for nl, rows, outs in golden_nlb.golden_models():
+        path = os.path.join(GOLDEN_DIR, f"{nl.name}.nlb")
+        with open(path, "rb") as f:
+            committed = f.read()
+        assert committed == nlb.write_nlb_bytes(nl), nl.name
+        assert [nl.eval_one(r) for r in rows] == outs

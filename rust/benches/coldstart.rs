@@ -1,0 +1,215 @@
+//! Cold-start bench: what does it cost to get N models *runnable* in a
+//! fresh process?  Three paths, same netlists (EXPERIMENTS.md §Cold
+//! start):
+//!
+//! * **recompile** — the pre-artifact world: plans compiled from the
+//!   in-memory netlists (bit-plane decomposition, support extraction,
+//!   table interning — all redone every process start);
+//! * **plan image** — `load_nlb` on exported `.nlb` artifacts carrying
+//!   compiled-plan images (read + checksum + full validation, no
+//!   compilation);
+//! * **plan cache** — a fresh `PlanCache::persistent` instance over a
+//!   warm cache directory (the restarted-server path; must serve every
+//!   plan from disk, asserted via `disk_hits`).
+//!
+//! Every artifact-loaded plan is also run through the engine
+//! `check_conformance` suite against its own netlist — the bench
+//! doubles as the CI cold-start smoke (`-- --quick` skips the timing
+//! floors, never the conformance).  Writes `BENCH_coldstart.json`.
+//! (`cargo bench --bench coldstart`)
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use neuralut::coordinator::check_conformance;
+use neuralut::netlist::testutil::random_reducible_netlist;
+use neuralut::netlist::{compile, load_nlb, save_nlb, Netlist, PlanCache,
+                        PlanExecutor, PlanOptions};
+use neuralut::report::Table;
+use neuralut::util::Json;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn bench<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    median(times)
+}
+
+/// N structurally distinct jsc-shaped reducible netlists (per-bit
+/// support <= 6, the structure trained tables have) with unique
+/// content hashes.
+fn model_fleet(n: usize) -> Vec<Netlist> {
+    (0..n)
+        .map(|i| {
+            let mut nl = random_reducible_netlist(
+                1000 + i as u64, 16, 4,
+                &[(80, 2, 4), (40, 2, 4), (20, 2, 4), (10, 2, 4),
+                  (5, 2, 8)],
+                6);
+            nl.name = format!("fleet{i}");
+            nl
+        })
+        .collect()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("nla_coldstart_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 2 } else { 7 };
+    if quick {
+        println!("--quick: minimal reps, timing floors skipped \
+                  (conformance still enforced)");
+    }
+    let n_total = 16usize;
+    let fleet = model_fleet(n_total);
+    let opts = PlanOptions::default();
+
+    // export the whole fleet once: .nlb with plan images
+    let art_dir = temp_dir("artifacts");
+    let paths: Vec<PathBuf> = fleet
+        .iter()
+        .map(|nl| {
+            let p = art_dir.join(format!("{}.nlb", nl.name));
+            let plan = compile(nl, opts);
+            save_nlb(&p, nl, Some(&plan)).unwrap();
+            p
+        })
+        .collect();
+
+    // warm plan-cache directory (what a prior server run leaves behind)
+    let cache_dir = temp_dir("plancache");
+    {
+        let warm = PlanCache::persistent(&cache_dir);
+        for nl in &fleet {
+            warm.get_or_compile(nl, opts);
+        }
+        assert_eq!(warm.misses(), n_total as u64,
+                   "warming must compile every model once");
+    }
+
+    let mut table = Table::new(
+        "cold start: N models runnable in a fresh process",
+        &["path", "N", "median total", "per model"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut record = |table: &mut Table, rows: &mut Vec<Json>, case: &str,
+                      n: usize, secs: f64| {
+        table.row(&[
+            case.into(),
+            n.to_string(),
+            format!("{:.2} ms", secs * 1e3),
+            format!("{:.1} us", secs * 1e6 / n as f64),
+        ]);
+        let mut obj = BTreeMap::new();
+        obj.insert("case".into(), Json::Str(case.into()));
+        obj.insert("n_models".into(), Json::Num(n as f64));
+        obj.insert("ms".into(), Json::Num(secs * 1e3));
+        obj.insert("us_per_model".into(),
+                   Json::Num(secs * 1e6 / n as f64));
+        rows.push(Json::Obj(obj));
+    };
+
+    let mut compile_at = BTreeMap::new();
+    let mut load_at = BTreeMap::new();
+    let mut cache_at = BTreeMap::new();
+    for n in [1usize, 8, n_total] {
+        let t_compile = bench(reps, || {
+            for nl in &fleet[..n] {
+                std::hint::black_box(compile(nl, opts));
+            }
+        });
+        record(&mut table, &mut rows, "recompile from netlist", n,
+               t_compile);
+        let t_load = bench(reps, || {
+            for p in &paths[..n] {
+                let m = load_nlb(p).unwrap();
+                assert!(m.plan.is_some());
+                std::hint::black_box(&m);
+            }
+        });
+        record(&mut table, &mut rows, "load .nlb plan image", n, t_load);
+        let t_cache = bench(reps, || {
+            let cache = PlanCache::persistent(&cache_dir);
+            for nl in &fleet[..n] {
+                std::hint::black_box(cache.get_or_compile(nl, opts));
+            }
+            assert_eq!(cache.disk_hits(), n as u64,
+                       "every plan must come from the warm disk cache");
+        });
+        record(&mut table, &mut rows, "persistent plan cache (warm)", n,
+               t_cache);
+        compile_at.insert(n, t_compile);
+        load_at.insert(n, t_load);
+        cache_at.insert(n, t_cache);
+    }
+
+    // conformance: every artifact-loaded plan must satisfy the engine
+    // contract against its own netlist — this is the CI smoke payload
+    for (i, p) in paths.iter().enumerate() {
+        let m = load_nlb(p).unwrap();
+        let plan = m.plan.clone().expect("artifact carries a plan image");
+        let mut ex = PlanExecutor::new(plan);
+        check_conformance(&mut ex, &m.netlist, 0xC0 + i as u64)
+            .unwrap_or_else(|e| panic!("model {i}: {e:#}"));
+    }
+    println!("conformance: {} artifact-loaded plans pass the engine \
+              contract", paths.len());
+
+    table.print();
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("coldstart".into()));
+    root.insert("quick".into(), Json::Bool(quick));
+    root.insert("reps".into(), Json::Num(reps as f64));
+    root.insert("n_models".into(), Json::Num(n_total as f64));
+    root.insert("rows".into(), Json::Arr(rows));
+    let path = "BENCH_coldstart.json";
+    match std::fs::write(path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    for n in [8usize, n_total] {
+        println!("@ {n} models: plan-image load {:.2}x vs recompile, \
+                  warm cache {:.2}x vs recompile",
+                 compile_at[&n] / load_at[&n],
+                 compile_at[&n] / cache_at[&n]);
+    }
+
+    let _ = std::fs::remove_dir_all(&art_dir);
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    if quick {
+        println!("(--quick: timing floors not enforced this run)");
+        return;
+    }
+    // the acceptance floor: at >= 8 registered models both artifact
+    // paths must beat recompilation outright — skipping bit-plane
+    // decomposition and table interning is an algorithmic win, not a
+    // constant-factor one, so no noise slack is granted
+    for n in [8usize, n_total] {
+        assert!(load_at[&n] < compile_at[&n],
+                "@ {n} models: plan-image load {:.2}ms not faster than \
+                 recompile {:.2}ms",
+                load_at[&n] * 1e3, compile_at[&n] * 1e3);
+        assert!(cache_at[&n] < compile_at[&n],
+                "@ {n} models: warm plan cache {:.2}ms not faster than \
+                 recompile {:.2}ms",
+                cache_at[&n] * 1e3, compile_at[&n] * 1e3);
+    }
+}

@@ -10,7 +10,9 @@
 //!   `ExecPlan` by default);
 //! * [`PlanExecutor`] — a compiled execution plan with private scratch,
 //!   the form server workers run (plans are compiled once per model and
-//!   shared immutably);
+//!   shared immutably; the plan may equally come from an `.nlb`
+//!   artifact's plan image — the engine contract does not care which
+//!   producer built it);
 //! * [`ModelEngine`] — one named model hosted by an
 //!   [`InferenceServer`](super::server::InferenceServer), routed through
 //!   the shared router/worker pipeline.
@@ -191,5 +193,25 @@ mod tests {
         let mut ex = PlanExecutor::new(plan);
         check_conformance(&mut ex, &nl, 52).unwrap();
         assert!(ex.describe().starts_with("plan["));
+    }
+
+    /// A plan revived from an `.nlb` artifact's plan image must satisfy
+    /// the same contract as a freshly compiled one — this is the load
+    /// path the cold-start CI smoke job exercises.
+    #[test]
+    fn artifact_loaded_plan_conforms() {
+        use crate::netlist::{load_nlb, save_nlb, PlanExecutor, PlanOptions};
+        let nl = random_netlist(53, 10, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let plan = nl.compile_plan(PlanOptions::default());
+        let path = std::env::temp_dir().join(format!(
+            "nid_engine_artifact_{}.nlb", std::process::id()));
+        save_nlb(&path, &nl, Some(&plan)).unwrap();
+        let model = load_nlb(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let image = model.plan.clone().expect("artifact carries a plan image");
+        let mut ex = PlanExecutor::new(image);
+        check_conformance(&mut ex, &model.netlist, 53).unwrap();
+        // and the netlist that rode along is the one we exported
+        assert_eq!(model.netlist.content_hash(), nl.content_hash());
     }
 }

@@ -19,8 +19,8 @@ use crate::coordinator::session::{predictions, Session};
 use crate::dataset::{self, GenOpts, Splits};
 use crate::mapper::{map_netlist, MappedNetlist};
 use crate::metrics;
-use crate::netlist::{optimize, ExecPlan, Netlist, OptLevel, OptReport,
-                     PlanExecutor, PlanOptions, SimOptions};
+use crate::netlist::{optimize, save_nlb, ExecPlan, Netlist, OptLevel,
+                     OptReport, PlanExecutor, PlanOptions, SimOptions};
 use crate::pruning;
 use crate::rtl;
 use crate::runtime::Runtime;
@@ -95,6 +95,19 @@ pub struct FlowResult {
     /// learned-mapping hit quality on NID (fraction of selected inputs
     /// that are informative), when measurable
     pub rtl_text: Option<String>,
+}
+
+impl FlowResult {
+    /// Export the serving artifact as an `.nlb` file: the *optimized*
+    /// netlist (what mapping, RTL and serving consume — bit-exactness
+    /// with the raw extraction was proven on the test set during the
+    /// flow) together with its compiled plan image, so a server loads
+    /// this file instead of re-running the config flow.  This is the
+    /// `nid export` path.
+    pub fn export_nlb(&self, path: impl AsRef<std::path::Path>)
+                      -> Result<()> {
+        save_nlb(path, &self.netlist_opt, Some(&self.plan))
+    }
 }
 
 /// Run the complete toolflow for one configuration.

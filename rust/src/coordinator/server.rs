@@ -44,6 +44,7 @@
 //! submitted after shutdown fail with "server stopped".
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender,
                       TryRecvError};
@@ -53,9 +54,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::metrics::{BatchStats, LatencyStats, LatencySummary};
-use crate::netlist::{optimize, ExecPlan, Netlist, OptLevel, OptReport,
-                     PlanCache, PlanExecutor, PlanOptions, PlanStats,
-                     SimOptions, WorkerPool};
+use crate::netlist::{load_nlb, optimize, ExecPlan, Netlist, NlbModel,
+                     OptLevel, OptReport, PlanCache, PlanExecutor,
+                     PlanOptions, PlanStats, SimOptions, WorkerPool};
 
 use super::engine::ModelEngine;
 
@@ -88,8 +89,16 @@ pub struct ServerConfig {
     /// planes for every batch the server ever evaluates.  The optimizer
     /// contract is bit-exact outputs, so the default is the full
     /// pipeline; models can override it per registration
-    /// ([`ModelRegistry::register_with_opt`]).
+    /// ([`ModelRegistry::register_with_opt`]).  Artifacts
+    /// ([`ModelRegistry::register_artifact`]) are served verbatim and
+    /// never pass through the optimizer.
     pub opt_level: OptLevel,
+    /// Directory for the persistent plan cache.  With a directory set,
+    /// every plan compiled at registration is written as a plan image
+    /// and a restarted server loads images instead of recompiling —
+    /// the cold-start path (`benches/coldstart`).  `None` keeps the
+    /// cache in-memory only.
+    pub plan_cache_dir: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -100,6 +109,7 @@ impl Default for ServerConfig {
             workers: 2,
             sim_threads: 1,
             opt_level: OptLevel::Full,
+            plan_cache_dir: None,
         }
     }
 }
@@ -111,12 +121,23 @@ impl ServerConfig {
     }
 }
 
+/// Where a registered model's netlist came from — the two producers of
+/// "a runnable model".
+enum ModelSource {
+    /// Synthesized in-process (config/training flow): optimized at
+    /// registration, then compiled through the plan cache.
+    Config { nl: Netlist, opt_level: Option<OptLevel> },
+    /// Loaded from an `.nlb` artifact: served verbatim (no optimizer
+    /// pass — the producer already shipped the netlist it wants
+    /// served), reusing the artifact's plan image when it carries one.
+    Artifact(NlbModel),
+}
+
 /// One registered model awaiting server start.
 struct ModelSpec {
     name: String,
-    nl: Netlist,
+    source: ModelSource,
     policy: Option<BatchPolicy>,
-    opt_level: Option<OptLevel>,
 }
 
 /// Named netlists for one [`InferenceServer`] to host.  Registration
@@ -148,10 +169,47 @@ impl ModelRegistry {
     pub fn register_with_opt(&mut self, name: &str, nl: Netlist,
                              policy: Option<BatchPolicy>,
                              opt_level: Option<OptLevel>) -> &mut Self {
-        assert!(!self.models.iter().any(|m| m.name == name),
-                "duplicate model name '{name}'");
-        self.models.push(ModelSpec { name: name.to_string(), nl, policy,
-                                     opt_level });
+        self.push(ModelSpec {
+            name: name.to_string(),
+            source: ModelSource::Config { nl, opt_level },
+            policy,
+        })
+    }
+
+    /// Register a loaded `.nlb` artifact under `name`.  Artifacts are
+    /// the deliverable of the train → export pipeline and are served
+    /// verbatim: the optimizer does not run, and if the artifact
+    /// carries a compiled-plan image that plan is admitted into the
+    /// server's cache instead of being recompiled.
+    pub fn register_artifact(&mut self, name: &str, model: NlbModel)
+                             -> &mut Self {
+        self.register_artifact_with(name, model, None)
+    }
+
+    /// [`ModelRegistry::register_artifact`] with a batching policy.
+    pub fn register_artifact_with(&mut self, name: &str, model: NlbModel,
+                                  policy: Option<BatchPolicy>)
+                                  -> &mut Self {
+        self.push(ModelSpec {
+            name: name.to_string(),
+            source: ModelSource::Artifact(model),
+            policy,
+        })
+    }
+
+    /// Load an `.nlb` file and register it — the `nid serve --model
+    /// foo.nlb` path.  Fails on any malformed artifact (see
+    /// `netlist::format` for the validation pass).
+    pub fn register_file(&mut self, name: &str, path: impl AsRef<Path>)
+                         -> Result<&mut Self> {
+        let model = load_nlb(path)?;
+        Ok(self.register_artifact(name, model))
+    }
+
+    fn push(&mut self, spec: ModelSpec) -> &mut Self {
+        assert!(!self.models.iter().any(|m| m.name == spec.name),
+                "duplicate model name '{}'", spec.name);
+        self.models.push(spec);
         self
     }
 
@@ -239,24 +297,71 @@ impl InferenceServer {
                  -> InferenceServer {
         assert!(!registry.is_empty(), "registry holds no models");
         let default_policy = cfg.default_policy();
-        let plans = PlanCache::new();
+        let plans = match &cfg.plan_cache_dir {
+            Some(dir) => PlanCache::persistent(dir),
+            None => PlanCache::new(),
+        };
         let models: Vec<Arc<ModelState>> = registry
             .models
             .into_iter()
             .map(|spec| {
-                // optimize at registration: bit-exact by contract, so
-                // n_in / out_width are unchanged and every batch this
-                // server ever evaluates runs on the smaller netlist
-                let level = spec.opt_level.unwrap_or(cfg.opt_level);
-                let (nl, opt_report) = optimize(&spec.nl, level);
-                log::info!("model '{}' optimizer: {}", spec.name,
-                           opt_report.summary());
-                // compile once, through the cache: workers execute the
-                // shared immutable plan with private scratch, and
-                // content-identical models (same netlist registered
-                // under several names) share one plan outright
-                let plan =
-                    plans.get_or_compile(&nl, PlanOptions::default());
+                let (opt_report, plan) = match spec.source {
+                    ModelSource::Config { nl, opt_level } => {
+                        // optimize at registration: bit-exact by
+                        // contract, so n_in / out_width are unchanged
+                        // and every batch this server ever evaluates
+                        // runs on the smaller netlist
+                        let level = opt_level.unwrap_or(cfg.opt_level);
+                        let (nl, opt_report) = optimize(&nl, level);
+                        log::info!("model '{}' optimizer: {}", spec.name,
+                                   opt_report.summary());
+                        // compile once, through the cache: workers
+                        // execute the shared immutable plan with
+                        // private scratch; content-identical models
+                        // share one plan outright, and a persistent
+                        // cache answers from disk before compiling
+                        let plan = plans
+                            .get_or_compile(&nl, PlanOptions::default());
+                        (opt_report, plan)
+                    }
+                    ModelSource::Artifact(m) => {
+                        let NlbModel { netlist, plan } = m;
+                        let plan = match plan {
+                            // the artifact shipped its compiled plan:
+                            // admit it (cache-shared, re-verified)
+                            // rather than recompiling
+                            Some(p) => plans
+                                .admit(&netlist, p)
+                                .unwrap_or_else(|e| {
+                                    log::warn!(
+                                        "model '{}': artifact plan \
+                                         rejected ({e:#}), recompiling",
+                                        spec.name);
+                                    plans.get_or_compile(
+                                        &netlist,
+                                        PlanOptions::default())
+                                }),
+                            None => plans.get_or_compile(
+                                &netlist, PlanOptions::default()),
+                        };
+                        // served verbatim: the report records that no
+                        // pass ran on the artifact
+                        let entries: usize = netlist
+                            .layers
+                            .iter()
+                            .map(|l| l.tables.len())
+                            .sum();
+                        let opt_report = OptReport {
+                            level: OptLevel::None,
+                            passes: Vec::new(),
+                            units_before: netlist.total_units(),
+                            units_after: netlist.total_units(),
+                            table_entries_before: entries,
+                            table_entries_after: entries,
+                        };
+                        (opt_report, plan)
+                    }
+                };
                 log::info!("model '{}' plan: {}", spec.name,
                            plan.stats().summary());
                 let n_in = plan.n_in();
@@ -437,6 +542,13 @@ impl InferenceServer {
     /// hits mean several models shared one compilation.
     pub fn plan_cache_counts(&self) -> (usize, u64) {
         (self.plans.len(), self.plans.hits())
+    }
+
+    /// Registrations answered by loading a plan image from the
+    /// persistent cache directory instead of compiling (always 0
+    /// without [`ServerConfig::plan_cache_dir`]).
+    pub fn plan_cache_disk_hits(&self) -> u64 {
+        self.plans.disk_hits()
     }
 
     /// Statistics snapshot for one model.
@@ -865,5 +977,118 @@ mod tests {
         assert!(server.infer("nope", vec![0; 12]).is_err());
         assert!(server.infer("a", vec![0; 5]).is_err(), "width check");
         server.shutdown();
+    }
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("nid_server_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn artifact_serving_is_bit_exact_with_config_serving() {
+        use crate::netlist::{compile, save_nlb};
+        // the export → serve round trip: optimize + compile a model,
+        // save it as an .nlb with its plan image, and serve the file
+        // next to the config-built registration of the same netlist
+        let nl = random_reducible_netlist(
+            55, 12, 2, &[(16, 3, 2), (8, 2, 2), (4, 2, 2)], 6);
+        let direct = nl.clone();
+        let (opt_nl, _) = optimize(&nl, OptLevel::Full);
+        let plan = Arc::new(compile(&opt_nl, PlanOptions::default()));
+        let path = temp_path("artifact.nlb");
+        save_nlb(&path, &opt_nl, Some(&plan)).unwrap();
+
+        let mut registry = ModelRegistry::new();
+        registry.register("config", nl);
+        registry.register_file("artifact", &path).unwrap();
+        let server =
+            InferenceServer::start(registry, ServerConfig::default());
+        // the artifact's plan image was admitted, not recompiled: the
+        // config model compiled once and the artifact shared it (same
+        // optimized content), so exactly one plan is resident
+        let (compiled, _) = server.plan_cache_counts();
+        assert_eq!(compiled, 1);
+        assert!(Arc::ptr_eq(&server.model_plan("config").unwrap(),
+                            &server.model_plan("artifact").unwrap()));
+        // artifacts skip the optimizer: the report records no passes
+        let report = server.opt_report("artifact").unwrap();
+        assert!(report.passes.is_empty());
+        assert_eq!(report.units_removed(), 0);
+        let x = random_inputs(55, &direct, 24);
+        for b in 0..24 {
+            let row = x[b * 12..(b + 1) * 12].to_vec();
+            let want = direct.eval_one(&row).unwrap();
+            assert_eq!(server.infer("config", row.clone()).unwrap(),
+                       want, "config row {b}");
+            assert_eq!(server.infer("artifact", row).unwrap(), want,
+                       "artifact row {b}");
+        }
+        server.shutdown();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn artifact_without_plan_image_compiles_on_registration() {
+        use crate::netlist::save_nlb;
+        let nl = random_netlist(56, 8, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let direct = nl.clone();
+        let path = temp_path("plain.nlb");
+        save_nlb(&path, &nl, None).unwrap();
+        let mut registry = ModelRegistry::new();
+        registry.register_file("m", &path).unwrap();
+        let server =
+            InferenceServer::start(registry, ServerConfig::default());
+        let x = random_inputs(56, &direct, 8);
+        for b in 0..8 {
+            let row = x[b * 8..(b + 1) * 8].to_vec();
+            assert_eq!(server.infer("m", row.clone()).unwrap(),
+                       direct.eval_one(&row).unwrap());
+        }
+        server.shutdown();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn register_file_rejects_corrupt_artifacts() {
+        let path = temp_path("bad.nlb");
+        std::fs::write(&path, b"not an artifact").unwrap();
+        let mut registry = ModelRegistry::new();
+        assert!(registry.register_file("m", &path).is_err());
+        let _ = std::fs::remove_file(&path);
+        assert!(registry
+            .register_file("m", temp_path("missing.nlb"))
+            .is_err());
+    }
+
+    #[test]
+    fn restarted_server_cold_loads_plans_from_cache_dir() {
+        let dir = temp_path("plan_cache");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ServerConfig {
+            plan_cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let nl = random_reducible_netlist(
+            57, 10, 2, &[(8, 3, 2), (4, 2, 2)], 6);
+        let direct = nl.clone();
+        {
+            let server = InferenceServer::start_single(nl.clone(),
+                                                       cfg.clone());
+            assert_eq!(server.plan_cache_disk_hits(), 0);
+            server.shutdown();
+        }
+        // same registration in a "new process": the plan comes off
+        // disk, and the served answers are still bit-exact
+        let server = InferenceServer::start_single(nl, cfg);
+        assert_eq!(server.plan_cache_disk_hits(), 1);
+        let model = server.default_model().to_string();
+        let x = random_inputs(57, &direct, 16);
+        for b in 0..16 {
+            let row = x[b * 10..(b + 1) * 10].to_vec();
+            assert_eq!(server.infer(&model, row.clone()).unwrap(),
+                       direct.eval_one(&row).unwrap(), "row {b}");
+        }
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -4,11 +4,16 @@
 //!   list                      show compiled configurations
 //!   flow   --config <name>    run the full toolflow (train → LUTs → timing)
 //!   rtl    --config <name>    run the flow and write Verilog
+//!   export --config <name>    run the flow and write a versioned `.nlb`
+//!                             artifact (optimized netlist + plan image)
 //!   serve  --config <a[,b..]> train the named configs, serve them all
 //!                             from one multi-model batch server
+//!   serve  --model <f.nlb,..> serve exported artifacts without training
+//!   inspect --model <f.nlb>   inspect an artifact without a runtime
 //!
 //! Common flags: --steps N --dense-steps N --train N --test N --seed N
 //!               --no-skips --random-conn --augment --artifacts DIR
+//!               --plan-cache DIR (persistent compiled-plan cache)
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -18,7 +23,8 @@ use anyhow::{bail, Context, Result};
 use neuralut::config::Meta;
 use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer,
                             ModelRegistry, ServerConfig};
-use neuralut::netlist::OptLevel;
+use neuralut::mapper::{map_netlist, MappedNetlist};
+use neuralut::netlist::{load_nlb, ExecPlan, Netlist, OptLevel};
 use neuralut::report::{pct, sci, Table};
 use neuralut::runtime::Runtime;
 use neuralut::util::Stopwatch;
@@ -131,12 +137,12 @@ fn cmd_list(args: &Args) -> Result<()> {
 }
 
 /// `--plan`: the compiled execution plan's arena/dedup statistics —
-/// what the serving path actually ships.
-fn print_plan_stats(r: &neuralut::coordinator::FlowResult) {
-    let st = r.plan.stats();
+/// what the serving path actually ships (whether freshly compiled or
+/// revived from an `.nlb` artifact's plan image).
+fn print_plan_stats(name: &str, plan: &ExecPlan) {
+    let st = plan.stats();
     let mut t = Table::new(
-        &format!("execution plan: {} (key {:016x})", r.config,
-                 r.plan.key()),
+        &format!("execution plan: {} (key {:016x})", name, plan.key()),
         &["metric", "value"],
     );
     t.row(&["layers (bit-plane)".into(),
@@ -185,9 +191,32 @@ fn cmd_flow(args: &Args) -> Result<()> {
     let r = run_flow(&rt, &meta, &opts)?;
     print_flow_result(&r);
     if args.has("plan") {
-        print_plan_stats(&r);
+        print_plan_stats(&r.config, &r.plan);
     }
     println!("\nflow completed in {:.1}s", sw.secs());
+    Ok(())
+}
+
+/// Run the flow, then write the optimized netlist and its compiled plan
+/// to a versioned `.nlb` artifact — the deliverable `serve --model` and
+/// `inspect --model` map back in without retraining or recompiling.
+fn cmd_export(args: &Args) -> Result<()> {
+    let meta = meta_from(args)?;
+    let rt = Runtime::new()?;
+    let opts = flow_options(args)?;
+    let out = args
+        .flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("{}.nlb", opts.config));
+    let sw = Stopwatch::start();
+    let r = run_flow(&rt, &meta, &opts)?;
+    print_flow_result(&r);
+    r.export_nlb(&out)?;
+    let bytes = std::fs::metadata(&out)?.len();
+    println!("\nwrote {out}: {bytes} bytes, netlist content hash {:016x}, \
+              plan image key {:016x} ({:.1}s total)",
+             r.netlist_opt.content_hash(), r.plan.key(), sw.secs());
     Ok(())
 }
 
@@ -209,20 +238,18 @@ fn cmd_rtl(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Run the flow, then print netlist-level statistics: per-layer support
-/// histograms, constant/duplicate units — the signals the mapper's
-/// synthesis-style optimizations exploit.
-fn cmd_inspect(args: &Args) -> Result<()> {
-    let meta = meta_from(args)?;
-    let rt = Runtime::new()?;
-    let opts = flow_options(args)?;
-    let r = run_flow(&rt, &meta, &opts)?;
+/// Per-layer netlist statistics table: support histograms,
+/// constant/duplicate units — the signals the mapper's synthesis-style
+/// optimizations exploit. Shared by the config path (flow-produced
+/// netlist) and the artifact path (`--model foo.nlb`).
+fn print_netlist_inspection(title: &str, nl: &Netlist,
+                            mapped_raw: &MappedNetlist) {
     let mut t = Table::new(
-        &format!("netlist inspection: {}", r.config),
+        &format!("netlist inspection: {title}"),
         &["layer", "units", "addr bits", "avg support", "const bits",
           "dup units", "P-LUTs"],
     );
-    for (l, layer) in r.netlist.layers.iter().enumerate() {
+    for (l, layer) in nl.layers.iter().enumerate() {
         let mut support_sum = 0usize;
         let mut bits = 0usize;
         let mut consts = 0usize;
@@ -250,10 +277,48 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             format!("{:.2}", support_sum as f64 / bits.max(1) as f64),
             consts.to_string(),
             dups.to_string(),
-            r.mapped_raw.layers[l].luts.to_string(),
+            mapped_raw.layers[l].luts.to_string(),
         ]);
     }
     t.print();
+}
+
+/// Inspect an exported `.nlb` artifact without a runtime: validate and
+/// map it, print the same per-layer table as the config path, and
+/// describe the embedded plan image (if any).
+fn inspect_artifact(args: &Args, path: &str) -> Result<()> {
+    let model = load_nlb(path)?;
+    let nl = &model.netlist;
+    let mapped_raw = map_netlist(nl, false);
+    print_netlist_inspection(&format!("{} ({path})", nl.name), nl,
+                             &mapped_raw);
+    println!("\ntotal P-LUTs {} raw (worst case {}); content hash {:016x}",
+             mapped_raw.total_luts(), mapped_raw.total_luts_worst_case(),
+             nl.content_hash());
+    match &model.plan {
+        Some(plan) => {
+            println!("plan image: {}", plan.stats().summary());
+            if args.has("plan") {
+                print_plan_stats(&nl.name, plan);
+            }
+        }
+        None => println!("plan image: none (serve will compile at \
+                          registration)"),
+    }
+    Ok(())
+}
+
+/// Print netlist-level statistics — for a trained config (runs the
+/// flow) or, with `--model foo.nlb`, for an exported artifact.
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if let Some(path) = args.flags.get("model") {
+        return inspect_artifact(args, path);
+    }
+    let meta = meta_from(args)?;
+    let rt = Runtime::new()?;
+    let opts = flow_options(args)?;
+    let r = run_flow(&rt, &meta, &opts)?;
+    print_netlist_inspection(&r.config, &r.netlist, &r.mapped_raw);
     println!("\ntotal P-LUTs {} raw (worst case {}) -> {} after the \
               netlist optimizer",
              r.mapped_raw.total_luts(),
@@ -261,60 +326,111 @@ fn cmd_inspect(args: &Args) -> Result<()> {
              r.mapped.total_luts());
     println!("optimizer: {}", r.opt_report.summary());
     if args.has("plan") {
-        print_plan_stats(&r);
+        print_plan_stats(&r.config, &r.plan);
     }
     Ok(())
 }
 
-/// Train every named config, register the netlists in one
-/// `ModelRegistry`, and serve them all concurrently from one process —
-/// per-model request streams, per-model latency/occupancy statistics.
+/// Comma-separated multi-value flag (`--config a,b` / `--model x,y`).
+fn list_flag(args: &Args, name: &str) -> Vec<String> {
+    args.flags
+        .get(name)
+        .map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Train every named config and/or map every named `.nlb` artifact,
+/// register them in one `ModelRegistry`, and serve them all
+/// concurrently from one process — per-model request streams, per-model
+/// latency/occupancy statistics. Artifacts skip training, the
+/// optimizer, and (when they carry a plan image) plan compilation
+/// entirely; `--plan-cache DIR` additionally persists compiled plans
+/// across server processes.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let meta = meta_from(args)?;
-    let rt = Runtime::new()?;
-    let configs: Vec<String> = args
-        .flags
-        .get("config")
-        .context("--config <name[,name...]> is required")?
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
-    anyhow::ensure!(!configs.is_empty(), "--config needs at least one name");
+    let configs = list_flag(args, "config");
+    let model_files = list_flag(args, "model");
+    anyhow::ensure!(!configs.is_empty() || !model_files.is_empty(),
+                    "--config <name[,name...]> or --model \
+                     <file.nlb[,file.nlb...]> is required");
     // catch duplicates up front: the registry asserts on them, and by
     // then each flow has already trained for minutes
     let mut seen = std::collections::HashSet::new();
     for name in &configs {
-        anyhow::ensure!(seen.insert(name.as_str()),
+        anyhow::ensure!(seen.insert(name.clone()),
                         "duplicate config '{name}' in --config");
     }
     let n_req = args.usize_flag("requests", 2000)?;
 
     let mut registry = ModelRegistry::new();
+    let mut served: Vec<String> = Vec::new();
     let mut model_rows: Vec<Vec<Vec<i32>>> = Vec::new();
-    for name in &configs {
-        let opts = flow_options_named(args, name)?;
-        let r = run_flow(&rt, &meta, &opts)?;
-        print_flow_result(&r);
-        // what the server will actually execute (the registry netlist
-        // is optimized and plan-compiled again at registration, hitting
-        // the server's plan cache for identical content)
-        println!("{name}: {}/{} layers bit-plane after optimization \
-                  (plan key {:016x})",
-                 r.plan.bitplane_layers(), r.netlist_opt.layers.len(),
-                 r.plan.key());
-        let top = &meta.config(name)?.topology;
-        let splits =
-            neuralut::dataset::generate(&top.dataset, top.beta_in, &opts.gen)?;
-        model_rows.push(
-            (0..n_req)
-                .map(|i| splits.test.row(i % splits.test.n).to_vec())
-                .collect(),
-        );
-        // last use of `r`: move the netlist (tables can be large)
-        registry.register(name, r.netlist);
+    if !configs.is_empty() {
+        let meta = meta_from(args)?;
+        let rt = Runtime::new()?;
+        for name in &configs {
+            let opts = flow_options_named(args, name)?;
+            let r = run_flow(&rt, &meta, &opts)?;
+            print_flow_result(&r);
+            // what the server will actually execute (the registry
+            // netlist is optimized and plan-compiled again at
+            // registration, hitting the server's plan cache for
+            // identical content)
+            println!("{name}: {}/{} layers bit-plane after optimization \
+                      (plan key {:016x})",
+                     r.plan.bitplane_layers(), r.netlist_opt.layers.len(),
+                     r.plan.key());
+            let top = &meta.config(name)?.topology;
+            let splits = neuralut::dataset::generate(&top.dataset,
+                                                     top.beta_in,
+                                                     &opts.gen)?;
+            model_rows.push(
+                (0..n_req)
+                    .map(|i| splits.test.row(i % splits.test.n).to_vec())
+                    .collect(),
+            );
+            served.push(name.clone());
+            // last use of `r`: move the netlist (tables can be large)
+            registry.register(name, r.netlist);
+        }
+    }
+    for path in &model_files {
+        let model = load_nlb(path)
+            .with_context(|| format!("loading artifact '{path}'"))?;
+        let name = if model.netlist.name.is_empty() {
+            std::path::Path::new(path)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| path.clone())
+        } else {
+            model.netlist.name.clone()
+        };
+        anyhow::ensure!(seen.insert(name.clone()),
+                        "artifact '{path}' duplicates model name '{name}'");
+        println!("{name}: artifact {path} ({} layers, {} L-LUTs, \
+                  content hash {:016x}, plan image: {})",
+                 model.netlist.layers.len(), model.netlist.total_units(),
+                 model.netlist.content_hash(),
+                 if model.plan.is_some() { "yes" } else { "no" });
+        // artifacts ship no dataset: drive them with random (but valid
+        // and reproducible) input codes
+        let seed = args.usize_flag("seed", 7)? as u64;
+        let flat = neuralut::netlist::testutil::random_inputs(
+            seed ^ model.netlist.content_hash(), &model.netlist, n_req);
+        model_rows.push(flat
+            .chunks(model.netlist.n_in.max(1))
+            .map(|r| r.to_vec())
+            .collect());
+        served.push(name.clone());
+        registry.register_artifact(&name, model);
     }
 
+    let plan_cache_dir =
+        args.flags.get("plan-cache").map(std::path::PathBuf::from);
     let cfg = ServerConfig {
         max_batch: args.usize_flag("max-batch", 64)?,
         max_wait: Duration::from_micros(
@@ -322,8 +438,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.usize_flag("workers", 2)?,
         sim_threads: args.usize_flag("sim-threads", 1)?,
         opt_level: args.opt_level()?,
+        plan_cache_dir: plan_cache_dir.clone(),
     };
     let server = InferenceServer::start(registry, cfg);
+    let configs = served;
     for name in &configs {
         println!("{name}: optimizer {}",
                  server.opt_report(name)?.summary());
@@ -331,8 +449,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     {
         let (compiled, hits) = server.plan_cache_counts();
-        println!("plan cache: {compiled} plans compiled, {hits} \
-                  registration hits");
+        if plan_cache_dir.is_some() {
+            println!("plan cache: {compiled} plans compiled, {hits} \
+                      registration hits, {} loaded from disk",
+                     server.plan_cache_disk_hits());
+        } else {
+            println!("plan cache: {compiled} plans compiled, {hits} \
+                      registration hits");
+        }
     }
     let sw = Stopwatch::start();
     // one client thread per model: the streams interleave in the router
@@ -391,16 +515,19 @@ fn main() {
         "list" => cmd_list(&args),
         "flow" => cmd_flow(&args),
         "rtl" => cmd_rtl(&args),
+        "export" => cmd_export(&args),
         "serve" => cmd_serve(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             println!(
-                "neuralut <list|flow|rtl|serve|inspect> --config <name> \
+                "neuralut <list|flow|rtl|export|serve|inspect> \
+                 --config <name> \
                  [--steps N] [--dense-steps N] [--train N] [--test N] \
                  [--seed N] [--no-skips] [--random-conn] [--augment] \
                  [--artifacts DIR] [--out FILE] [--requests N] \
                  [--max-batch N] [--max-wait-us N] [--workers N] \
-                 [--sim-threads N] [--opt-level 0|1|2] [--plan]\n\n\
+                 [--sim-threads N] [--opt-level 0|1|2] [--plan] \
+                 [--model FILE.nlb[,FILE.nlb...]] [--plan-cache DIR]\n\n\
                  serve hosts several configs at once: \
                  --config nid,jsc_cb serves both from one process \
                  (per-model batching policies and statistics). \
@@ -415,7 +542,15 @@ fn main() {
                  into deduplicated arenas, compiled once per content \
                  hash); --plan prints the plan's arena/dedup statistics \
                  on flow/inspect, and serve logs per-model plan stats \
-                 plus plan-cache hit counts."
+                 plus plan-cache hit counts.\n\n\
+                 export writes a versioned .nlb artifact (optimized \
+                 netlist + compiled-plan image, default <config>.nlb, \
+                 override with --out). serve --model and inspect \
+                 --model map such artifacts back in: serving skips \
+                 training/optimizer/compile, inspect needs no runtime. \
+                 --plan-cache DIR keeps compiled plans on disk keyed by \
+                 content hash so a restarted server cold-loads instead \
+                 of recompiling."
             );
             Ok(())
         }

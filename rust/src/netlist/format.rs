@@ -1,0 +1,627 @@
+//! `.nlb` — the versioned on-disk artifact format for trained netlists.
+//!
+//! The paper's deliverable is a *trained LUT network*: a concrete
+//! artifact, not a config.  Before this module every consumer
+//! re-synthesized netlists from config and recompiled plans on every
+//! process start; `.nlb` inverts that dependency, making config-driven
+//! synthesis one *producer* of artifacts rather than the only entry
+//! point.  The python training side writes the identical byte layout
+//! (`python/compile/nlb.py`), proven bit-exact by the golden-file
+//! integration test, so a session trained under JAX loads into the rust
+//! server unchanged.
+//!
+//! ## Wire layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "NLBF"
+//! 4       2     version (currently 1)
+//! 6       2     flags (bit 0: compiled-plan image section present)
+//! 8       8     content hash (Netlist::content_hash of the payload)
+//! 16      8     payload length (must equal file length - 32)
+//! 24      8     payload checksum (FNV-1a over the payload bytes)
+//! 32      ..    payload:
+//!   name            u32 length + UTF-8 bytes
+//!   n_in            u32
+//!   in_bits         u32
+//!   n_layers        u32
+//!   per layer:
+//!     w, fan_in, in_bits, out_bits          4 x u32
+//!     conn     w * fan_in            x u32  (unit-major)
+//!     tables   w * 2^(in_bits*fan_in) x u16 (unit-major)
+//!   plan image  (iff flags bit 0 — the ExecPlan arenas verbatim;
+//!                layout documented at `ExecPlan::write_image`)
+//! ```
+//!
+//! ## Versioning policy
+//!
+//! The version bumps on any layout change; readers accept exactly the
+//! versions they know (currently: 1) and reject the rest with a
+//! descriptive error — an old binary must never misparse a new file.
+//! New optional sections get a flag bit, and readers reject unknown
+//! flag bits for the same reason.
+//!
+//! ## Validation & threat model
+//!
+//! [`read_nlb`] is total: any byte string either parses into a
+//! validated model or returns an error — it never panics and never
+//! allocates more than the input length can justify.  The checks, in
+//! order: header shape (magic, version, known flags, exact length),
+//! payload checksum, structural netlist validation
+//! ([`Netlist::validate`]), content-hash integrity, and — when a plan
+//! image is present — full arena bounds validation plus a structural
+//! cross-check of the plan against the netlist it claims to accelerate.
+//! This authenticates *integrity* (truncation, bit rot, a mismatched
+//! netlist/plan pair), not *malice*: a hand-crafted file with a
+//! self-consistent checksum could still carry a bit-plane table that
+//! disagrees with its own netlist section.  For untrusted artifacts,
+//! run `check_conformance` after loading (the cold-start CI job does)
+//! or ignore the plan image and recompile.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::plan::{compile, plan_key, ExecPlan, PlanOptions};
+use super::{LayerSpec, Netlist, MAX_ADDR_BITS};
+
+pub const NLB_MAGIC: [u8; 4] = *b"NLBF";
+pub const NLB_VERSION: u16 = 1;
+
+/// Flag bit 0: a compiled-plan image section follows the netlist.
+const FLAG_PLAN: u16 = 1;
+
+/// FNV-1a over raw bytes — the payload checksum.  (The *content* hash
+/// is [`Netlist::content_hash`], an FNV-1a over the decoded structure;
+/// this one detects corruption anywhere in the encoded payload,
+/// including the plan image, before any of it is parsed.)
+pub(super) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+pub(super) fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub(super) fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(super) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(super) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian cursor.  Every take verifies the
+/// remaining length first, so array reads are bounded by the input
+/// size — an adversarial count fails fast instead of allocating.
+pub(super) struct ByteReader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub(super) fn new(b: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { b, pos: 0 }
+    }
+
+    pub(super) fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    pub(super) fn take(&mut self, n: usize, what: &str)
+                       -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("truncated: {what} needs {n} bytes at offset {}, only \
+                   {} left", self.pos, self.remaining());
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(super) fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub(super) fn u16(&mut self, what: &str) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    pub(super) fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub(super) fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub(super) fn usize32(&mut self, what: &str) -> Result<usize> {
+        Ok(self.u32(what)? as usize)
+    }
+
+    pub(super) fn u8s(&mut self, count: usize, what: &str)
+                      -> Result<Vec<u8>> {
+        Ok(self.take(count, what)?.to_vec())
+    }
+
+    pub(super) fn u16s(&mut self, count: usize, what: &str)
+                       -> Result<Vec<u16>> {
+        let n = count.checked_mul(2)
+            .with_context(|| format!("{what}: count overflow"))?;
+        Ok(self.take(n, what)?
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub(super) fn u32s(&mut self, count: usize, what: &str)
+                       -> Result<Vec<u32>> {
+        let n = count.checked_mul(4)
+            .with_context(|| format!("{what}: count overflow"))?;
+        Ok(self.take(n, what)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub(super) fn u64s(&mut self, count: usize, what: &str)
+                       -> Result<Vec<u64>> {
+        let n = count.checked_mul(8)
+            .with_context(|| format!("{what}: count overflow"))?;
+        Ok(self.take(n, what)?
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// A loaded `.nlb` artifact: the validated netlist plus, if the file
+/// carried one, its compiled plan (already cross-checked against the
+/// netlist at load time).
+pub struct NlbModel {
+    pub netlist: Netlist,
+    pub plan: Option<Arc<ExecPlan>>,
+}
+
+impl NlbModel {
+    /// The artifact's plan if it was exported compiled under `opts`,
+    /// otherwise a fresh compile of the netlist.
+    pub fn plan_or_compile(&self, opts: PlanOptions) -> Arc<ExecPlan> {
+        match &self.plan {
+            Some(p) if p.key() == plan_key(&self.netlist, opts) => {
+                p.clone()
+            }
+            _ => Arc::new(compile(&self.netlist, opts)),
+        }
+    }
+}
+
+/// Serialize `nl` (and optionally a plan compiled from it) to `.nlb`
+/// bytes.  Refuses invalid netlists and plans that were not compiled
+/// from this exact content — a file we write always loads.
+pub fn write_nlb(nl: &Netlist, plan: Option<&ExecPlan>)
+                 -> Result<Vec<u8>> {
+    nl.validate().context("refusing to serialize an invalid netlist")?;
+    if let Some(p) = plan {
+        let ok = [true, false].iter().any(|&b| {
+            p.key() == plan_key(nl, PlanOptions { bitplane: b })
+        });
+        if !ok {
+            bail!("plan (key {:016x}) was not compiled from this \
+                   netlist (content hash {:016x})",
+                  p.key(), nl.content_hash());
+        }
+    }
+    let mut payload = Vec::new();
+    put_u32(&mut payload, nl.name.len() as u32);
+    payload.extend_from_slice(nl.name.as_bytes());
+    put_u32(&mut payload, nl.n_in as u32);
+    put_u32(&mut payload, nl.in_bits as u32);
+    put_u32(&mut payload, nl.layers.len() as u32);
+    for layer in &nl.layers {
+        put_u32(&mut payload, layer.w as u32);
+        put_u32(&mut payload, layer.fan_in as u32);
+        put_u32(&mut payload, layer.in_bits as u32);
+        put_u32(&mut payload, layer.out_bits as u32);
+        for &c in &layer.conn {
+            put_u32(&mut payload, c);
+        }
+        for &t in &layer.tables {
+            put_u16(&mut payload, t);
+        }
+    }
+    let mut flags = 0u16;
+    if let Some(p) = plan {
+        flags |= FLAG_PLAN;
+        p.write_image(&mut payload);
+    }
+    let mut out = Vec::with_capacity(32 + payload.len());
+    out.extend_from_slice(&NLB_MAGIC);
+    put_u16(&mut out, NLB_VERSION);
+    put_u16(&mut out, flags);
+    put_u64(&mut out, nl.content_hash());
+    put_u64(&mut out, payload.len() as u64);
+    put_u64(&mut out, fnv1a(&payload));
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Parse and validate `.nlb` bytes.  Total: returns a descriptive
+/// error on any malformed input, never panics (see the module doc for
+/// the check order).
+pub fn read_nlb(bytes: &[u8]) -> Result<NlbModel> {
+    if bytes.len() < 32 {
+        bail!("truncated header: {} bytes, need 32", bytes.len());
+    }
+    let mut h = ByteReader::new(&bytes[..32]);
+    let magic = h.take(4, "magic")?;
+    if magic != NLB_MAGIC {
+        bail!("bad magic {magic:02x?} (expected \"NLBF\" — not an .nlb \
+               file)");
+    }
+    let version = h.u16("version")?;
+    if version != NLB_VERSION {
+        bail!("unsupported format version {version} (this build reads \
+               version {NLB_VERSION})");
+    }
+    let flags = h.u16("flags")?;
+    if flags & !FLAG_PLAN != 0 {
+        bail!("unknown flag bits {:#06x} (written by a newer tool?)",
+              flags & !FLAG_PLAN);
+    }
+    let content_hash = h.u64("content hash")?;
+    let payload_len = h.u64("payload length")?;
+    let payload_hash = h.u64("payload checksum")?;
+    let payload = &bytes[32..];
+    if payload.len() as u64 != payload_len {
+        bail!("payload is {} bytes but the header declares {} \
+               (truncated file or trailing garbage)",
+              payload.len(), payload_len);
+    }
+    if fnv1a(payload) != payload_hash {
+        bail!("payload checksum mismatch (file corrupt)");
+    }
+    let mut r = ByteReader::new(payload);
+    let name_len = r.usize32("name length")?;
+    let name = String::from_utf8(r.take(name_len, "name")?.to_vec())
+        .context("model name is not UTF-8")?;
+    let n_in = r.usize32("n_in")?;
+    let in_bits = r.usize32("in_bits")?;
+    let n_layers = r.usize32("layer count")?;
+    let mut layers = Vec::new();
+    for l in 0..n_layers {
+        let w = r.usize32("layer w")?;
+        let fan_in = r.usize32("layer fan_in")?;
+        let l_in_bits = r.usize32("layer in_bits")?;
+        let out_bits = r.usize32("layer out_bits")?;
+        // bound the address width before `1 << addr_bits` (the same
+        // first check Netlist::validate makes, needed here because the
+        // shift happens while sizing the table read)
+        let addr_bits = l_in_bits.saturating_mul(fan_in);
+        if addr_bits > MAX_ADDR_BITS {
+            bail!("layer {l}: address width {addr_bits} bits exceeds \
+                   the {MAX_ADDR_BITS}-bit cap");
+        }
+        let conn_len = w.checked_mul(fan_in)
+            .with_context(|| format!("layer {l}: conn size overflow"))?;
+        let conn = r.u32s(conn_len, "layer conn")?;
+        let table_len = w.checked_mul(1usize << addr_bits)
+            .with_context(|| format!("layer {l}: table size overflow"))?;
+        let tables = r.u16s(table_len, "layer tables")?;
+        layers.push(LayerSpec {
+            w,
+            fan_in,
+            in_bits: l_in_bits,
+            out_bits,
+            conn,
+            tables,
+        });
+    }
+    let nl = Netlist { name, n_in, in_bits, layers };
+    nl.validate().context("netlist section failed validation")?;
+    if nl.content_hash() != content_hash {
+        bail!("content hash mismatch: header says {content_hash:016x}, \
+               payload hashes to {:016x}", nl.content_hash());
+    }
+    let plan = if flags & FLAG_PLAN != 0 {
+        let p = ExecPlan::read_image(&mut r, &nl)
+            .context("plan image section")?;
+        Some(Arc::new(p))
+    } else {
+        None
+    };
+    if r.remaining() != 0 {
+        bail!("{} trailing bytes after the last section", r.remaining());
+    }
+    Ok(NlbModel { netlist: nl, plan })
+}
+
+/// Write an `.nlb` artifact atomically (temp file + rename, so a
+/// crashed export never leaves a half-written model behind).
+pub fn save_nlb(path: impl AsRef<Path>, nl: &Netlist,
+                plan: Option<&ExecPlan>) -> Result<()> {
+    let path = path.as_ref();
+    let bytes = write_nlb(nl, plan)?;
+    write_atomic(path, &bytes)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load and validate an `.nlb` artifact from disk.
+pub fn load_nlb(path: impl AsRef<Path>) -> Result<NlbModel> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    read_nlb(&bytes)
+        .with_context(|| format!("loading {}", path.display()))
+}
+
+/// Temp-file-then-rename write; the temp name carries the pid so
+/// concurrent writers (e.g. two servers sharing a plan-cache dir)
+/// cannot clobber each other's in-flight file.
+pub(super) fn write_atomic(path: &Path, bytes: &[u8])
+                           -> std::io::Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(".{}.tmp", std::process::id()));
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{PlanExecutor, PlanOptions};
+    use super::*;
+
+    fn assert_same_netlist(a: &Netlist, b: &Netlist) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.n_in, b.n_in);
+        assert_eq!(a.in_bits, b.in_bits);
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!((la.w, la.fan_in, la.in_bits, la.out_bits),
+                       (lb.w, lb.fan_in, lb.in_bits, lb.out_bits));
+            assert_eq!(la.conn, lb.conn);
+            assert_eq!(la.tables, lb.tables);
+        }
+    }
+
+    #[test]
+    fn roundtrip_without_plan() {
+        let nl = random_netlist(3, 10, 2, &[(8, 3, 2), (4, 2, 1)]);
+        let bytes = write_nlb(&nl, None).unwrap();
+        let m = read_nlb(&bytes).unwrap();
+        assert_same_netlist(&nl, &m.netlist);
+        assert!(m.plan.is_none());
+        // writing the loaded netlist again is byte-identical (the
+        // encoding is canonical)
+        assert_eq!(write_nlb(&m.netlist, None).unwrap(), bytes);
+    }
+
+    #[test]
+    fn roundtrip_with_plan_is_bit_exact() {
+        let nl = random_reducible_netlist(
+            11, 12, 2, &[(10, 3, 2), (6, 2, 2), (3, 2, 1)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let bytes = write_nlb(&nl, Some(&plan)).unwrap();
+        let m = read_nlb(&bytes).unwrap();
+        assert_same_netlist(&nl, &m.netlist);
+        let loaded = m.plan.expect("plan image should load");
+        assert_eq!(loaded.key(), plan.key());
+        assert_eq!(loaded.bitplane_layers(), plan.bitplane_layers());
+        let mut ex = PlanExecutor::new(loaded);
+        for (seed, batch) in [(1u64, 1usize), (2, 9), (3, 130)] {
+            let x = random_inputs(seed, &nl, batch);
+            let got = ex.eval_batch(&x, batch);
+            let ow = nl.out_width();
+            for b in 0..batch {
+                let one = nl
+                    .eval_one(&x[b * nl.n_in..(b + 1) * nl.n_in])
+                    .unwrap();
+                assert_eq!(&got[b * ow..(b + 1) * ow], &one[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_only_plan_roundtrips() {
+        let nl = random_reducible_netlist(13, 8, 2, &[(6, 3, 2)], 6);
+        let plan =
+            Arc::new(compile(&nl, PlanOptions { bitplane: false }));
+        let bytes = write_nlb(&nl, Some(&plan)).unwrap();
+        let m = read_nlb(&bytes).unwrap();
+        let loaded = m.plan.unwrap();
+        assert_eq!(loaded.key(), plan.key());
+        assert_eq!(loaded.bitplane_layers(), 0);
+    }
+
+    #[test]
+    fn plan_or_compile_reuses_matching_image() {
+        let nl = random_netlist(17, 8, 1, &[(4, 2, 2)]);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let bytes = write_nlb(&nl, Some(&plan)).unwrap();
+        let m = read_nlb(&bytes).unwrap();
+        let d = m.plan_or_compile(PlanOptions::default());
+        assert!(Arc::ptr_eq(&d, m.plan.as_ref().unwrap()));
+        // different options: the image does not apply, compile fresh
+        let g = m.plan_or_compile(PlanOptions { bitplane: false });
+        assert!(!Arc::ptr_eq(&g, m.plan.as_ref().unwrap()));
+        assert_eq!(g.key(), plan_key(&nl, PlanOptions { bitplane: false }));
+    }
+
+    #[test]
+    fn zero_layer_netlist_roundtrips() {
+        let nl = Netlist { name: "empty".into(), n_in: 3, in_bits: 2,
+                           layers: vec![] };
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let bytes = write_nlb(&nl, Some(&plan)).unwrap();
+        let m = read_nlb(&bytes).unwrap();
+        assert_same_netlist(&nl, &m.netlist);
+        let mut ex = PlanExecutor::new(m.plan.unwrap());
+        assert_eq!(ex.eval_one(&[1, 2, 3]), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_unit_layer_roundtrips() {
+        // a w=0 layer is valid (validate passes) and must survive the
+        // trip — or be rejected cleanly — never panic
+        let nl = Netlist {
+            name: "hollow".into(),
+            n_in: 2,
+            in_bits: 1,
+            layers: vec![LayerSpec {
+                w: 0,
+                fan_in: 2,
+                in_bits: 1,
+                out_bits: 1,
+                conn: vec![],
+                tables: vec![],
+            }],
+        };
+        nl.validate().unwrap();
+        let bytes = write_nlb(&nl, None).unwrap();
+        let m = read_nlb(&bytes).unwrap();
+        assert_same_netlist(&nl, &m.netlist);
+        assert_eq!(m.netlist.out_width(), 0);
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_length() {
+        let nl = random_netlist(19, 6, 1, &[(4, 2, 1)]);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let bytes = write_nlb(&nl, Some(&plan)).unwrap();
+        // every proper prefix must fail cleanly (no panic, no accept)
+        for n in 0..bytes.len() {
+            assert!(read_nlb(&bytes[..n]).is_err(), "prefix {n} accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let nl = random_netlist(23, 6, 1, &[(4, 2, 1)]);
+        let mut bytes = write_nlb(&nl, None).unwrap();
+        bytes[0] = b'X';
+        let err = read_nlb(&bytes).unwrap_err().to_string();
+        assert!(err.contains("magic"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_version_mismatch() {
+        let nl = random_netlist(29, 6, 1, &[(4, 2, 1)]);
+        let mut bytes = write_nlb(&nl, None).unwrap();
+        bytes[4] = NLB_VERSION as u8 + 1;
+        let err = read_nlb(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        let nl = random_netlist(31, 6, 1, &[(4, 2, 1)]);
+        let mut bytes = write_nlb(&nl, None).unwrap();
+        bytes[6] |= 0x80;
+        let err = read_nlb(&bytes).unwrap_err().to_string();
+        assert!(err.contains("flag"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_flipped_content_hash_byte() {
+        let nl = random_netlist(37, 6, 1, &[(4, 2, 1)]);
+        let mut bytes = write_nlb(&nl, None).unwrap();
+        bytes[8] ^= 0x01; // first content-hash byte
+        let err = read_nlb(&bytes).unwrap_err().to_string();
+        assert!(err.contains("content hash"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_corrupt_payload() {
+        let nl = random_netlist(41, 6, 1, &[(4, 2, 1)]);
+        let mut bytes = write_nlb(&nl, None).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        let err = read_nlb(&bytes).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let nl = random_netlist(43, 6, 1, &[(4, 2, 1)]);
+        let mut bytes = write_nlb(&nl, None).unwrap();
+        bytes.push(0);
+        assert!(read_nlb(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_foreign_plan() {
+        let nl = random_netlist(47, 6, 1, &[(4, 2, 1)]);
+        let other = random_netlist(48, 6, 1, &[(4, 2, 1)]);
+        let plan = Arc::new(compile(&other, PlanOptions::default()));
+        let err = write_nlb(&nl, Some(&plan)).unwrap_err().to_string();
+        assert!(err.contains("not compiled"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_invalid_netlist_section() {
+        // corrupt a table entry beyond out_bits *and* fix up both
+        // hashes so only structural validation can catch it
+        let nl = random_netlist(53, 4, 1, &[(2, 2, 1)]);
+        let mut evil = nl.clone();
+        evil.layers[0].tables[0] = 3; // > 1-bit out
+        // bypass write_nlb's own validation by patching bytes directly
+        let good = write_nlb(&nl, None).unwrap();
+        let mut bytes = good.clone();
+        // payload layout: name(4+len) n_in(4) in_bits(4) n_layers(4)
+        // w,fan_in,in_bits,out_bits(16) conn(2*2*4) tables...
+        let name_len = nl.name.len();
+        let table0 = 32 + 4 + name_len + 12 + 16 + 16;
+        bytes[table0] = 3;
+        // recompute both hashes so the file is "self-consistent"
+        let ch = evil.content_hash().to_le_bytes();
+        bytes[8..16].copy_from_slice(&ch);
+        let ph = fnv1a(&bytes[32..]).to_le_bytes();
+        bytes[24..32].copy_from_slice(&ph);
+        let err = read_nlb(&bytes).unwrap_err().to_string();
+        assert!(err.contains("validation"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_mismatched_plan_image() {
+        // plan image from a different netlist spliced after a valid
+        // netlist section: the image's key check must reject it
+        let nl = random_netlist(59, 6, 1, &[(4, 2, 1)]);
+        let other = random_netlist(60, 6, 1, &[(4, 2, 1)]);
+        let plan_other = Arc::new(compile(&other, PlanOptions::default()));
+        let with_plan = write_nlb(&other, Some(&plan_other)).unwrap();
+        let plain_other = write_nlb(&other, None).unwrap();
+        let image = &with_plan[plain_other.len()..];
+        let plain = write_nlb(&nl, None).unwrap();
+        let mut bytes = plain.clone();
+        bytes.extend_from_slice(image);
+        bytes[6] |= FLAG_PLAN;
+        let new_len = (bytes.len() - 32) as u64;
+        bytes[16..24].copy_from_slice(&new_len.to_le_bytes());
+        let ph = fnv1a(&bytes[32..]).to_le_bytes();
+        bytes[24..32].copy_from_slice(&ph);
+        let err = read_nlb(&bytes).unwrap_err().to_string();
+        assert!(err.contains("plan image"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn empty_input_is_rejected() {
+        assert!(read_nlb(&[]).is_err());
+    }
+}

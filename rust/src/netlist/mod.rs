@@ -18,15 +18,24 @@
 //! [`ExecPlan`] (shared tables deduplicated, CSR connections, static
 //! schedule) that [`PlanExecutor`]s run with zero steady-state
 //! allocation, cached across consumers by content hash ([`PlanCache`]).
+//!
+//! A netlist is also an *artifact*: [`format`](self) defines `.nlb`,
+//! the versioned on-disk representation (header + layer sections +
+//! optional compiled-plan image), written identically by the python
+//! exporter — so "get me a runnable model" means mapping a file, and
+//! config-driven synthesis is just one producer of such files.
 
+mod format;
 mod opt;
 mod plan;
 mod sim;
 
+pub use format::{load_nlb, read_nlb, save_nlb, write_nlb, NlbModel,
+                 NLB_MAGIC, NLB_VERSION};
 pub use opt::{optimize, ConstantFold, Cse, DeadLogic, OptLevel,
               OptReport, Pass, PassDelta, PassManager};
-pub use plan::{compile, ExecPlan, PlanCache, PlanExecutor, PlanOptions,
-               PlanStats};
+pub use plan::{compile, plan_key, ExecPlan, PlanCache, PlanExecutor,
+               PlanOptions, PlanStats, PLAN_FILE_MAGIC};
 pub use sim::{eval_packed, BitPlaneLayer, KernelChoice, SimOptions,
               Simulator, ThreadMode, WorkerPool, MAX_PLANE_SUPPORT};
 

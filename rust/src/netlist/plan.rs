@@ -44,9 +44,13 @@
 //! compiled-vs-interpreted rows).
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use anyhow::{bail, Context, Result};
+
+use super::format::{self, ByteReader};
 use super::sim::{chunked_units, eval_packed_rec, par_threads,
                  KernelChoice, SimOptions, ThreadMode, WorkerPool,
                  MAX_BUILD_ADDR_BITS, MAX_PLANE_SUPPORT, PAR_MIN_WORK,
@@ -273,6 +277,225 @@ impl ExecPlan {
             conn_entries: self.conn.len(),
             arena_bytes: self.words.len() * 8 + self.conn.len() * 4,
         }
+    }
+}
+
+/// Plan-image (de)serialization — the `.nlb` optional section and the
+/// persistent [`PlanCache`] file body.  Lives here (not in
+/// `netlist::format`) because it reads private arena fields; the byte
+/// helpers come from there so both sections share one encoding.
+impl ExecPlan {
+    /// Append this plan's image to `out`.  The arenas are dumped
+    /// verbatim (they are already flat, position-independent buffers);
+    /// everything derivable from the owning netlist — gather dims,
+    /// shifts, `prev_w`, `max_w`, `max_planes`, `tables_total` — is
+    /// recomputed at load instead of stored.
+    ///
+    /// ```text
+    /// key            u64   (plan_key the plan was compiled under)
+    /// tables_unique  u64
+    /// words          u64 count + count x u64
+    /// conn           u64 count + count x u32
+    /// n_layers       u32   (cross-checked against the netlist)
+    /// per layer:
+    ///   conn_off     u64
+    ///   table_off    w x u32
+    ///   bp flag      u8    (0 = gather only, 1 = bit-plane step)
+    ///   if bp: arity planes x u8; table_off planes x u32;
+    ///          src_off planes x u32      (planes = w * out_bits)
+    /// ```
+    pub(super) fn write_image(&self, out: &mut Vec<u8>) {
+        format::put_u64(out, self.key);
+        format::put_u64(out, self.tables_unique as u64);
+        format::put_u64(out, self.words.len() as u64);
+        for &w in &self.words {
+            format::put_u64(out, w);
+        }
+        format::put_u64(out, self.conn.len() as u64);
+        for &c in &self.conn {
+            format::put_u32(out, c);
+        }
+        format::put_u32(out, self.layers.len() as u32);
+        for pl in &self.layers {
+            format::put_u64(out, pl.gather.conn_off as u64);
+            for &t in &pl.gather.table_off {
+                format::put_u32(out, t);
+            }
+            match &pl.bitplane {
+                None => format::put_u8(out, 0),
+                Some(bp) => {
+                    format::put_u8(out, 1);
+                    for &a in &bp.arity {
+                        format::put_u8(out, a);
+                    }
+                    for &t in &bp.table_off {
+                        format::put_u32(out, t);
+                    }
+                    for &s in &bp.src_off {
+                        format::put_u32(out, s);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Parse a plan image for `nl`, validating every offset against
+    /// the arenas and the structure against the netlist before any of
+    /// it can be executed: the key must be one `nl` could have
+    /// produced, each gather conn block must equal the netlist wiring,
+    /// all table offsets must be in-arena, plane arities must respect
+    /// [`MAX_PLANE_SUPPORT`] and plane sources must index real
+    /// producer planes.  Finally the gather tables are compared
+    /// entry-by-entry ([`ExecPlan::matches`]), so a stale or spliced
+    /// image is rejected rather than served.
+    pub(super) fn read_image(r: &mut ByteReader<'_>, nl: &Netlist)
+                             -> Result<ExecPlan> {
+        let key = r.u64("plan key")?;
+        let bp_opts = if key == plan_key(nl, PlanOptions { bitplane: true }) {
+            true
+        } else if key == plan_key(nl, PlanOptions { bitplane: false }) {
+            false
+        } else {
+            bail!("plan key {key:016x} does not match the netlist \
+                   (content hash {:016x})", nl.content_hash());
+        };
+        let tables_unique = r.u64("tables_unique")? as usize;
+        let n_words = r.u64("word arena length")? as usize;
+        let words = r.u64s(n_words, "word arena")?;
+        let n_conn = r.u64("conn arena length")? as usize;
+        let conn = r.u32s(n_conn, "conn arena")?;
+        let n_layers = r.u32("plan layer count")? as usize;
+        if n_layers != nl.layers.len() {
+            bail!("plan has {n_layers} layers, netlist has {}",
+                  nl.layers.len());
+        }
+        let mut layers = Vec::with_capacity(nl.layers.len());
+        let mut tables_total = 0usize;
+        let mut prev_w = nl.n_in;
+        for (l, layer) in nl.layers.iter().enumerate() {
+            let conn_off = r.u64("gather conn offset")? as usize;
+            let table_off = r.u32s(layer.w, "gather table offsets")?;
+            let conn_end = conn_off
+                .checked_add(layer.w * layer.fan_in)
+                .filter(|&e| e <= conn.len())
+                .with_context(|| format!(
+                    "layer {l}: conn block out of arena bounds"))?;
+            if conn[conn_off..conn_end] != layer.conn[..] {
+                bail!("layer {l}: gather wiring differs from the \
+                       netlist");
+            }
+            let twords = layer.entries_per_unit().div_ceil(4);
+            for (u, &toff) in table_off.iter().enumerate() {
+                if (toff as usize).checked_add(twords)
+                    .map(|e| e > words.len())
+                    .unwrap_or(true)
+                {
+                    bail!("layer {l} unit {u}: gather table offset \
+                           {toff} out of arena bounds");
+                }
+            }
+            tables_total += layer.w;
+            let bitplane = match r.u8("bit-plane flag")? {
+                0 => None,
+                1 => {
+                    if !bp_opts {
+                        bail!("layer {l}: bit-plane step in a \
+                               gather-only plan image");
+                    }
+                    let planes = layer.w * layer.out_bits;
+                    let arity = r.u8s(planes, "plane arities")?;
+                    let bp_table_off =
+                        r.u32s(planes, "plane table offsets")?;
+                    let src_off = r.u32s(planes, "plane src offsets")?;
+                    let in_planes = prev_w * layer.in_bits;
+                    for p in 0..planes {
+                        let a = arity[p] as usize;
+                        if a > MAX_PLANE_SUPPORT {
+                            bail!("layer {l} plane {p}: arity {a} \
+                                   exceeds {MAX_PLANE_SUPPORT}");
+                        }
+                        if (bp_table_off[p] as usize) >= words.len() {
+                            bail!("layer {l} plane {p}: table offset \
+                                   out of arena bounds");
+                        }
+                        let s0 = src_off[p] as usize;
+                        let s1 = s0.checked_add(a)
+                            .filter(|&e| e <= conn.len())
+                            .with_context(|| format!(
+                                "layer {l} plane {p}: source run out \
+                                 of arena bounds"))?;
+                        if conn[s0..s1].iter()
+                            .any(|&s| s as usize >= in_planes)
+                        {
+                            bail!("layer {l} plane {p}: source plane \
+                                   index out of range ({in_planes} \
+                                   producer planes)");
+                        }
+                    }
+                    tables_total += planes;
+                    Some(BitPlaneStep {
+                        w: layer.w,
+                        out_bits: layer.out_bits,
+                        arity,
+                        table_off: bp_table_off,
+                        src_off,
+                    })
+                }
+                f => bail!("layer {l}: bad bit-plane flag {f}"),
+            };
+            let shifts: Vec<u32> = (0..layer.fan_in)
+                .map(|f| (layer.in_bits * f) as u32)
+                .collect();
+            layers.push(PlanLayer {
+                gather: GatherStep {
+                    w: layer.w,
+                    fan_in: layer.fan_in,
+                    in_bits: layer.in_bits,
+                    out_bits: layer.out_bits,
+                    prev_w,
+                    conn_off,
+                    table_off,
+                    shifts,
+                },
+                bitplane,
+            });
+            prev_w = layer.w;
+        }
+        if tables_unique > tables_total || tables_unique > words.len() {
+            bail!("implausible dedup stats: {tables_unique} unique of \
+                   {tables_total} tables in {} words", words.len());
+        }
+        let max_w = layers
+            .iter()
+            .map(|l| l.gather.w)
+            .max()
+            .unwrap_or(0)
+            .max(nl.n_in);
+        let max_planes = layers
+            .iter()
+            .map(|l| l.gather.w * l.gather.out_bits)
+            .max()
+            .unwrap_or(0)
+            .max(nl.n_in * nl.in_bits);
+        let plan = ExecPlan {
+            name: nl.name.clone(),
+            n_in: nl.n_in,
+            in_bits: nl.in_bits,
+            out_width: nl.out_width(),
+            out_bits: nl.out_bits(),
+            key,
+            words,
+            conn,
+            layers,
+            max_w,
+            max_planes,
+            tables_total,
+            tables_unique,
+        };
+        if !plan.matches(nl) {
+            bail!("plan gather tables differ from the netlist");
+        }
+        Ok(plan)
     }
 }
 
@@ -824,7 +1047,9 @@ impl PlanExecutor {
 }
 
 /// Cache key: structural content hash mixed with the compile options.
-fn plan_key(nl: &Netlist, opts: PlanOptions) -> u64 {
+/// Public because persistent cache files and artifact tooling name
+/// plans by this key (`{key:016x}.plan` in a cache directory).
+pub fn plan_key(nl: &Netlist, opts: PlanOptions) -> u64 {
     let h = nl.content_hash();
     if opts.bitplane {
         h
@@ -833,7 +1058,61 @@ fn plan_key(nl: &Netlist, opts: PlanOptions) -> u64 {
     }
 }
 
-/// Content-addressed cache of compiled plans, shared across threads.
+/// Magic for a persistent plan-cache file: a checksummed container
+/// around one plan image (see [`ExecPlan::write_image`]).  Distinct
+/// from the `.nlb` magic so the two cannot be confused — a cache file
+/// carries no netlist section and is only readable next to one.
+pub const PLAN_FILE_MAGIC: [u8; 4] = *b"NLBP";
+const PLAN_FILE_VERSION: u16 = 1;
+
+fn plan_file_bytes(plan: &ExecPlan) -> Vec<u8> {
+    let mut payload = Vec::new();
+    plan.write_image(&mut payload);
+    let mut out = Vec::with_capacity(24 + payload.len());
+    out.extend_from_slice(&PLAN_FILE_MAGIC);
+    format::put_u16(&mut out, PLAN_FILE_VERSION);
+    format::put_u16(&mut out, 0); // reserved
+    format::put_u64(&mut out, payload.len() as u64);
+    format::put_u64(&mut out, format::fnv1a(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn read_plan_file(bytes: &[u8], nl: &Netlist) -> Result<ExecPlan> {
+    if bytes.len() < 24 {
+        bail!("truncated header: {} bytes, need 24", bytes.len());
+    }
+    if bytes[..4] != PLAN_FILE_MAGIC {
+        bail!("bad magic (not a plan cache file)");
+    }
+    let mut h = ByteReader::new(&bytes[4..24]);
+    let version = h.u16("version")?;
+    if version != PLAN_FILE_VERSION {
+        bail!("unsupported plan file version {version} (this build \
+               reads version {PLAN_FILE_VERSION})");
+    }
+    let _reserved = h.u16("reserved")?;
+    let payload_len = h.u64("payload length")?;
+    let payload_hash = h.u64("payload checksum")?;
+    let payload = &bytes[24..];
+    if payload.len() as u64 != payload_len {
+        bail!("payload is {} bytes but the header declares \
+               {payload_len}", payload.len());
+    }
+    if format::fnv1a(payload) != payload_hash {
+        bail!("payload checksum mismatch (file corrupt)");
+    }
+    let mut r = ByteReader::new(payload);
+    let plan = ExecPlan::read_image(&mut r, nl).context("plan image")?;
+    if r.remaining() != 0 {
+        bail!("{} trailing bytes after the plan image", r.remaining());
+    }
+    Ok(plan)
+}
+
+/// Content-addressed cache of compiled plans, shared across threads —
+/// optionally backed by a directory of plan-image files so the cache
+/// survives process restarts.
 ///
 /// Keyed by [`Netlist::content_hash`] (structure only — the name is
 /// excluded, so two identically-structured models share one plan) mixed
@@ -842,11 +1121,25 @@ fn plan_key(nl: &Netlist, opts: PlanOptions) -> u64 {
 /// immutable `Arc<ExecPlan>`.  Compilation runs outside the map lock;
 /// concurrent racers may both compile, the last insert wins (plans for
 /// equal content are identical, so either result is correct).
+///
+/// With a cache directory ([`PlanCache::persistent`]) each compiled
+/// plan is also written to `{key:016x}.plan` (atomically: temp file +
+/// rename), and a cold lookup tries the file before compiling — that is
+/// the cold-start path: a server restarting with N registered models
+/// loads N plan images instead of recompiling N netlists
+/// (`benches/coldstart` measures the ratio).  Disk is strictly a
+/// fallback layer: every loaded image is re-validated against the
+/// netlist (see [`ExecPlan::read_image`]), and any unreadable, corrupt
+/// or stale file is logged, ignored and overwritten by a fresh
+/// compile — a poisoned cache directory can cost time, never
+/// correctness.
 #[derive(Default)]
 pub struct PlanCache {
     inner: Mutex<HashMap<u64, Arc<ExecPlan>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    disk_hits: AtomicU64,
+    dir: Option<PathBuf>,
 }
 
 impl PlanCache {
@@ -854,7 +1147,59 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    /// The plan for `nl`, compiled on first sight of its content.
+    /// A cache backed by `dir` (created if missing; creation failure
+    /// is logged and each file operation then fails soft).
+    pub fn persistent(dir: impl Into<PathBuf>) -> PlanCache {
+        let dir = dir.into();
+        if let Err(e) = std::fs::create_dir_all(&dir) {
+            log::warn!("plan cache dir {}: {e}", dir.display());
+        }
+        PlanCache { dir: Some(dir), ..Default::default() }
+    }
+
+    /// The backing directory, if this cache is persistent.
+    pub fn cache_dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    fn plan_path(&self, key: u64) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("{key:016x}.plan")))
+    }
+
+    fn load_from_disk(&self, key: u64, nl: &Netlist)
+                      -> Option<Arc<ExecPlan>> {
+        let path = self.plan_path(key)?;
+        // a missing file is the expected cold-cache case — stay quiet
+        let bytes = std::fs::read(&path).ok()?;
+        match read_plan_file(&bytes, nl) {
+            Ok(p) if p.key() == key => Some(Arc::new(p)),
+            Ok(p) => {
+                log::warn!("plan cache {}: image key {:016x} does not \
+                            match the file name (recompiling)",
+                           path.display(), p.key());
+                None
+            }
+            Err(e) => {
+                log::warn!("plan cache {}: {e:#} (recompiling)",
+                           path.display());
+                None
+            }
+        }
+    }
+
+    fn store_to_disk(&self, key: u64, plan: &ExecPlan) {
+        let Some(path) = self.plan_path(key) else { return };
+        if let Some(d) = &self.dir {
+            let _ = std::fs::create_dir_all(d);
+        }
+        if let Err(e) = format::write_atomic(&path, &plan_file_bytes(plan))
+        {
+            log::warn!("plan cache write {}: {e}", path.display());
+        }
+    }
+
+    /// The plan for `nl`: from memory, else from the cache directory,
+    /// else compiled (and then persisted).
     pub fn get_or_compile(&self, nl: &Netlist, opts: PlanOptions)
                           -> Arc<ExecPlan> {
         let key = plan_key(nl, opts);
@@ -871,10 +1216,48 @@ impl PlanCache {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return Arc::new(compile(nl, opts));
         }
+        if let Some(p) = self.load_from_disk(key, nl) {
+            self.disk_hits.fetch_add(1, Ordering::Relaxed);
+            self.inner.lock().unwrap().insert(key, p.clone());
+            return p;
+        }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let plan = Arc::new(compile(nl, opts));
+        self.store_to_disk(key, &plan);
         self.inner.lock().unwrap().insert(key, plan.clone());
         plan
+    }
+
+    /// Insert a plan that arrived with an artifact (an `.nlb` plan
+    /// image) instead of being compiled here.  Returns the resident
+    /// plan for its key — the already-cached one if equivalent content
+    /// is resident (so identical artifacts share one plan), else the
+    /// admitted plan.  Re-verified against `nl` first: a mismatched
+    /// pair is an error, never a poisoned cache.
+    pub fn admit(&self, nl: &Netlist, plan: Arc<ExecPlan>)
+                 -> Result<Arc<ExecPlan>> {
+        if !plan.matches(nl) {
+            bail!("plan does not match the netlist it was admitted \
+                   for");
+        }
+        let key = plan.key();
+        let resident = {
+            let mut map = self.inner.lock().unwrap();
+            match map.get(&key) {
+                Some(p) if p.matches(nl) => p.clone(),
+                _ => {
+                    map.insert(key, plan.clone());
+                    plan
+                }
+            }
+        };
+        // seed the directory so a restart cold-loads artifact plans too
+        if let Some(path) = self.plan_path(key) {
+            if std::fs::metadata(&path).is_err() {
+                self.store_to_disk(key, &resident);
+            }
+        }
+        Ok(resident)
     }
 
     /// Distinct plans resident.
@@ -886,7 +1269,7 @@ impl PlanCache {
         self.len() == 0
     }
 
-    /// Lookups answered from the cache.
+    /// Lookups answered from memory.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
@@ -894,6 +1277,12 @@ impl PlanCache {
     /// Lookups that compiled.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Lookups answered by loading a plan image from the cache
+    /// directory (always 0 for a non-persistent cache).
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
     }
 }
 
@@ -1141,5 +1530,125 @@ mod tests {
         assert!(lent.is_some());
         ex.set_threads(1);
         assert_plan_matches_eval_one(&nl, &mut ex, 4, 100);
+    }
+
+    /// Fresh per-test directory under the system temp dir (tests run
+    /// in-process-parallel, so the name carries a tag and the pid).
+    fn temp_cache_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("nid_plan_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn persistent_cache_reloads_across_instances() {
+        let dir = temp_cache_dir("reload");
+        let nl = random_reducible_netlist(
+            61, 10, 2, &[(8, 3, 2), (4, 2, 2)], 6);
+        {
+            let cache = PlanCache::persistent(&dir);
+            let p = cache.get_or_compile(&nl, PlanOptions::default());
+            assert_eq!((cache.misses(), cache.disk_hits()), (1, 0));
+            let q = cache.get_or_compile(&nl, PlanOptions::default());
+            assert!(Arc::ptr_eq(&p, &q));
+            assert_eq!(cache.hits(), 1);
+        }
+        // a fresh cache over the same directory models a process
+        // restart: the lookup is answered from disk, not recompiled
+        let cache = PlanCache::persistent(&dir);
+        let p = cache.get_or_compile(&nl, PlanOptions::default());
+        assert_eq!((cache.misses(), cache.disk_hits()), (0, 1));
+        let mut ex = PlanExecutor::new(p);
+        assert_plan_matches_eval_one(&nl, &mut ex, 5, 80);
+        // second lookup hits memory, not disk
+        cache.get_or_compile(&nl, PlanOptions::default());
+        assert_eq!((cache.hits(), cache.disk_hits()), (1, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistent_cache_separates_options() {
+        let dir = temp_cache_dir("opts");
+        let nl = random_reducible_netlist(63, 8, 2, &[(6, 3, 2)], 6);
+        {
+            let cache = PlanCache::persistent(&dir);
+            cache.get_or_compile(&nl, PlanOptions::default());
+            cache.get_or_compile(&nl, PlanOptions { bitplane: false });
+            assert_eq!(cache.misses(), 2);
+        }
+        let cache = PlanCache::persistent(&dir);
+        let a = cache.get_or_compile(&nl, PlanOptions::default());
+        let b = cache.get_or_compile(&nl, PlanOptions { bitplane: false });
+        assert_eq!((cache.misses(), cache.disk_hits()), (0, 2));
+        assert!(a.bitplane_layers() > 0);
+        assert_eq!(b.bitplane_layers(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistent_cache_tolerates_corrupt_files() {
+        let dir = temp_cache_dir("corrupt");
+        let nl = random_netlist(67, 8, 1, &[(6, 3, 2)]);
+        let key = plan_key(&nl, PlanOptions::default());
+        {
+            let cache = PlanCache::persistent(&dir);
+            cache.get_or_compile(&nl, PlanOptions::default());
+        }
+        let path = dir.join(format!("{key:016x}.plan"));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        // the corrupt file is detected, ignored and overwritten by the
+        // recompile — never served
+        let cache = PlanCache::persistent(&dir);
+        let p = cache.get_or_compile(&nl, PlanOptions::default());
+        assert_eq!((cache.misses(), cache.disk_hits()), (1, 0));
+        assert!(p.matches(&nl));
+        let cache2 = PlanCache::persistent(&dir);
+        cache2.get_or_compile(&nl, PlanOptions::default());
+        assert_eq!(cache2.disk_hits(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn admit_shares_validates_and_persists() {
+        let dir = temp_cache_dir("admit");
+        let nl = random_netlist(71, 8, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        {
+            let cache = PlanCache::persistent(&dir);
+            let a = cache.admit(&nl, plan.clone()).unwrap();
+            assert!(Arc::ptr_eq(&a, &plan));
+            // a second identical artifact shares the resident plan
+            let b = cache
+                .admit(&nl, Arc::new(compile(&nl, PlanOptions::default())))
+                .unwrap();
+            assert!(Arc::ptr_eq(&b, &plan));
+            // a mismatched pair is rejected
+            let other = random_netlist(72, 8, 1, &[(6, 3, 2), (3, 2, 2)]);
+            assert!(cache.admit(&other, plan.clone()).is_err());
+            // get_or_compile now hits memory
+            let c = cache.get_or_compile(&nl, PlanOptions::default());
+            assert!(Arc::ptr_eq(&c, &plan));
+            assert_eq!((cache.hits(), cache.misses()), (1, 0));
+        }
+        // admit seeded the directory: a restart cold-loads from disk
+        let cache = PlanCache::persistent(&dir);
+        cache.get_or_compile(&nl, PlanOptions::default());
+        assert_eq!((cache.misses(), cache.disk_hits()), (0, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn admit_works_without_a_directory() {
+        let cache = PlanCache::new();
+        let nl = random_netlist(73, 6, 1, &[(4, 2, 1)]);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let a = cache.admit(&nl, plan.clone()).unwrap();
+        assert!(Arc::ptr_eq(&a, &plan));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.disk_hits(), 0);
     }
 }

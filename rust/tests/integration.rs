@@ -7,6 +7,11 @@
 //!
 //! The smallest configuration (nid) is used throughout to keep the suite
 //! fast; the full-size configs are exercised by the benches/examples.
+//!
+//! The `golden_*` tests need no runtime: they load the committed
+//! python-written `.nlb` artifacts under `tests/golden/` and pin the
+//! cross-language format contract (python/tests/test_nlb.py holds the
+//! other end).
 
 use neuralut::config::{Meta, TrainConfig};
 use neuralut::coordinator::{run_flow, FlowOptions, Session};
@@ -163,6 +168,83 @@ fn full_flow_with_rtl_roundtrip() {
     assert!(r.netlist_opt.total_units() <= r.netlist.total_units());
     for (_, rep) in &r.reports {
         assert!(rep.fmax_mhz > 50.0 && rep.latency_ns > 0.1);
+    }
+}
+
+/// The committed golden manifest: [(model, file, content_hash, inputs,
+/// outputs)], written by `python -m tests.golden_nlb`.
+fn golden_manifest() -> Vec<(String, String, u64, Vec<Vec<i32>>,
+                             Vec<Vec<i32>>)> {
+    use neuralut::util::json::Json;
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden");
+    let text = std::fs::read_to_string(format!("{dir}/golden_io.json"))
+        .expect("tests/golden/golden_io.json is committed");
+    let rows = |v: &Json| -> Vec<Vec<i32>> {
+        v.as_arr().unwrap().iter()
+            .map(|row| row.as_arr().unwrap().iter()
+                .map(|c| c.as_i64().unwrap() as i32).collect())
+            .collect()
+    };
+    Json::parse(&text).unwrap().as_arr().unwrap().iter()
+        .map(|e| (
+            e.at("model").unwrap().as_str().unwrap().to_string(),
+            format!("{dir}/{}", e.at("file").unwrap().as_str().unwrap()),
+            u64::from_str_radix(
+                e.at("content_hash").unwrap().as_str().unwrap(), 16)
+                .unwrap(),
+            rows(e.at("inputs").unwrap()),
+            rows(e.at("outputs").unwrap()),
+        ))
+        .collect()
+}
+
+#[test]
+fn golden_python_artifacts_load_and_evaluate_bit_exactly() {
+    // the cross-language keystone: a python-exported model must load
+    // here, hash identically, and reproduce python's recorded outputs
+    use neuralut::netlist::load_nlb;
+    let manifest = golden_manifest();
+    assert_eq!(manifest.len(), 2, "expected both golden models");
+    for (model, file, hash, inputs, outputs) in manifest {
+        let m = load_nlb(&file).unwrap();
+        assert_eq!(m.netlist.name, model);
+        assert_eq!(m.netlist.content_hash(), hash,
+                   "{model}: content hash diverged between languages");
+        assert!(m.plan.is_none(), "python writes no plan image");
+        for (x, want) in inputs.iter().zip(&outputs) {
+            assert_eq!(&m.netlist.eval_one(x).unwrap(), want,
+                       "{model}: output differs from python eval");
+        }
+    }
+}
+
+#[test]
+fn golden_artifacts_reserialize_byte_identically() {
+    // both writers emit canonical bytes: rust(write(python_read)) must
+    // equal the committed python-written file exactly
+    use neuralut::netlist::{load_nlb, write_nlb};
+    for (model, file, _, _, _) in golden_manifest() {
+        let committed = std::fs::read(&file).unwrap();
+        let m = load_nlb(&file).unwrap();
+        let rewritten = write_nlb(&m.netlist, None).unwrap();
+        assert_eq!(rewritten, committed,
+                   "{model}: rust re-encoding differs from python bytes");
+    }
+}
+
+#[test]
+fn golden_artifacts_compile_and_conform() {
+    // a python-trained model dropped into the serving path: compile a
+    // plan for it and run the full engine-conformance suite
+    use neuralut::coordinator::check_conformance;
+    use neuralut::netlist::{load_nlb, PlanExecutor, PlanOptions};
+    use std::sync::Arc;
+    for (model, file, _, _, _) in golden_manifest() {
+        let m = load_nlb(&file).unwrap();
+        let plan = m.plan_or_compile(PlanOptions::default());
+        let mut ex = PlanExecutor::new(Arc::clone(&plan));
+        check_conformance(&mut ex, &m.netlist, 0x60)
+            .unwrap_or_else(|e| panic!("{model}: {e:#}"));
     }
 }
 
