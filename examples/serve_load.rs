@@ -1,0 +1,245 @@
+//! Loopback load generator for the TCP serving frontend.
+//!
+//! Two modes:
+//! * **self-host** (default): spins up an in-process `NetServer` over
+//!   a seeded random netlist and drives it over 127.0.0.1 — a
+//!   one-command demo needing no trained artifacts;
+//! * **`--addr HOST:PORT`**: drives an already-running
+//!   `neuralut serve --listen` process (what the CI smoke job does).
+//!
+//! The generator sweeps pipelining depth: each stage keeps `depth`
+//! requests in flight on one connection and measures client-side
+//! latency per request.  Depths at or below the server's admission
+//! bound must never shed; the final stage deliberately exceeds the
+//! bound and must see explicit `OVERLOADED` sheds — bounded-queue
+//! rejection, not queue collapse.  Results (throughput, p50/p99/p999
+//! at and beyond the shed point) land in `BENCH_serve.json` next to
+//! the other `BENCH_*.json` artifacts.
+//!
+//! Run: `cargo run --release --example serve_load -- [--quick]
+//! [--addr HOST:PORT] [--requests N] [--max-inflight N]`
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use neuralut::coordinator::{InferenceServer, ModelRegistry, ServerConfig};
+use neuralut::metrics::LatencyStats;
+use neuralut::net::wire::Message;
+use neuralut::net::{Client, NetConfig, NetServer};
+use neuralut::netlist::testutil::{random_inputs, random_netlist};
+use neuralut::report::Table;
+use neuralut::util::Json;
+
+struct StageResult {
+    depth: usize,
+    requests: usize,
+    ok: usize,
+    shed: usize,
+    secs: f64,
+    lat: LatencyStats,
+}
+
+/// Drive `n` single-row requests with `depth` kept in flight.
+fn run_stage(c: &mut Client, model: &str, n_in: usize, depth: usize,
+             n: usize, xs: &[i32]) -> StageResult {
+    let mut window: VecDeque<(u64, Instant)> = VecDeque::new();
+    let mut lat = LatencyStats::default();
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    let mut recv = |window: &mut VecDeque<(u64, Instant)>,
+                    c: &mut Client, lat: &mut LatencyStats,
+                    ok: &mut usize, shed: &mut usize| {
+        let (id, sent) = window.pop_front().expect("window empty");
+        let frame = c.recv_frame().expect("response");
+        assert_eq!(frame.id, id, "responses must arrive in order");
+        lat.record(sent.elapsed().as_secs_f64() * 1e6);
+        match frame.msg {
+            Message::Result { .. } => *ok += 1,
+            Message::Error { code, message } => {
+                assert_eq!(code, neuralut::net::wire::ERR_OVERLOADED,
+                           "unexpected error under load: {message}");
+                *shed += 1;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    };
+    let t = Instant::now();
+    for i in 0..n {
+        if window.len() >= depth {
+            recv(&mut window, c, &mut lat, &mut ok, &mut shed);
+        }
+        let row = xs[(i % (xs.len() / n_in)) * n_in..][..n_in].to_vec();
+        let id = c.send_infer(model, 1, n_in as u32, row)
+            .expect("send");
+        window.push_back((id, Instant::now()));
+    }
+    while !window.is_empty() {
+        recv(&mut window, c, &mut lat, &mut ok, &mut shed);
+    }
+    StageResult { depth, requests: n, ok, shed,
+                  secs: t.elapsed().as_secs_f64(), lat }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let addr = flag(&args, "--addr");
+    let per_stage: usize = flag(&args, "--requests")
+        .map(|v| v.parse().expect("--requests N"))
+        .unwrap_or(if quick { 400 } else { 5000 });
+
+    // self-host unless --addr points at a live `serve --listen`
+    let hosted: Option<(NetServer, neuralut::netlist::Netlist)> =
+        if addr.is_none() {
+            let max_inflight: usize = flag(&args, "--max-inflight")
+                .map(|v| v.parse().expect("--max-inflight N"))
+                .unwrap_or(64);
+            let nl = random_netlist(11, 8, 1, &[(6, 3, 2), (4, 2, 2)]);
+            let mut registry = ModelRegistry::new();
+            registry.register("loadtest", nl.clone());
+            let server = InferenceServer::start(
+                registry,
+                ServerConfig { max_batch: 32,
+                               max_wait: Duration::from_micros(100),
+                               ..ServerConfig::default() });
+            let net = NetServer::bind(
+                server, "127.0.0.1:0",
+                NetConfig { max_inflight, ..NetConfig::default() })
+                .expect("bind loopback");
+            println!("self-hosting on {} (max {} in-flight rows)",
+                     net.local_addr(), max_inflight);
+            Some((net, nl))
+        } else {
+            None
+        };
+    let target = addr.clone().unwrap_or_else(|| {
+        hosted.as_ref().unwrap().0.local_addr().to_string()
+    });
+
+    let mut c = Client::connect(&target[..]).expect("connect");
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    c.ping().expect("ping");
+
+    // discover the first hosted model and the admission bound
+    let stats = c.stats("").expect("stats");
+    let doc = Json::parse(&stats).expect("stats json");
+    let entry = &doc.at("models").unwrap().as_arr().unwrap()[0];
+    let model = entry.at("model").unwrap().as_str().unwrap().to_string();
+    let n_in = entry.at("n_in").unwrap().as_usize().unwrap();
+    let max_inflight = doc.at("server").unwrap().at("max_inflight")
+        .unwrap().as_usize().unwrap();
+    println!("driving model '{model}' (n_in {n_in}) on {target}; \
+              admission bound {max_inflight} rows");
+
+    // reproducible inputs: sweep valid codes without needing the model
+    let in_bits_guess = 1usize; // codes 0/1 are valid for any in_bits
+    let xs: Vec<i32> = (0..1024 * n_in)
+        .map(|i| ((i * 7 + i / n_in) % (1 << in_bits_guess)) as i32)
+        .collect();
+
+    // depth sweep: strictly under the bound (must not shed — at
+    // exactly the bound a shed can race the writer's release), then
+    // past it (must shed explicitly)
+    let mut depths: Vec<usize> = [1usize, 8, 32]
+        .into_iter()
+        .filter(|&d| d < max_inflight)
+        .collect();
+    let overload_depth = (max_inflight * 4).clamp(max_inflight + 8, 4096);
+    depths.push(overload_depth);
+
+    let mut table = Table::new(
+        "TCP serving under load (single connection, pipelined)",
+        &["depth", "requests", "ok", "shed", "req/s", "p50 us",
+          "p99 us", "p999 us"],
+    );
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for &depth in &depths {
+        let r = run_stage(&mut c, &model, n_in, depth, per_stage, &xs);
+        let s = r.lat.summary();
+        table.row(&[
+            r.depth.to_string(),
+            r.requests.to_string(),
+            r.ok.to_string(),
+            r.shed.to_string(),
+            format!("{:.0}", r.requests as f64 / r.secs),
+            format!("{:.0}", s.p50),
+            format!("{:.0}", s.p99),
+            format!("{:.0}", s.p999),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("depth".into(), Json::Num(r.depth as f64));
+        row.insert("requests".into(), Json::Num(r.requests as f64));
+        row.insert("ok".into(), Json::Num(r.ok as f64));
+        row.insert("shed".into(), Json::Num(r.shed as f64));
+        row.insert("req_per_s".into(),
+                   Json::Num(r.requests as f64 / r.secs));
+        row.insert("mean_us".into(), Json::Num(s.mean));
+        row.insert("p50_us".into(), Json::Num(s.p50));
+        row.insert("p99_us".into(), Json::Num(s.p99));
+        row.insert("p999_us".into(), Json::Num(s.p999));
+        row.insert("overload".into(),
+                   Json::Bool(r.depth > max_inflight));
+        rows.push(Json::Obj(row));
+        results.push(r);
+    }
+    table.print();
+
+    // the contract the sweep must prove: no sheds under the bound,
+    // explicit sheds past it, and every request answered either way
+    for r in &results {
+        assert_eq!(r.ok + r.shed, r.requests,
+                   "depth {}: {} requests vanished", r.depth,
+                   r.requests - r.ok - r.shed);
+        if r.depth < max_inflight {
+            assert_eq!(r.shed, 0,
+                       "depth {} is under the bound yet shed {}",
+                       r.depth, r.shed);
+        }
+    }
+    let overload = results.last().unwrap();
+    assert!(overload.shed > 0,
+            "depth {} past the bound {} never shed — admission \
+             control is not bounding the queue",
+            overload.depth, max_inflight);
+    println!("\noverload stage (depth {}): {} served, {} explicitly \
+              shed — bounded admission holds",
+             overload.depth, overload.ok, overload.shed);
+
+    // final server-side stats ride along in the bench artifact
+    let final_stats = c.stats("").expect("final stats");
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("serve".into()));
+    root.insert("quick".into(), Json::Bool(quick));
+    root.insert("addr".into(), Json::Str(target.clone()));
+    root.insert("model".into(), Json::Str(model.clone()));
+    root.insert("max_inflight".into(), Json::Num(max_inflight as f64));
+    root.insert("requests_per_stage".into(),
+                Json::Num(per_stage as f64));
+    root.insert("stages".into(), Json::Arr(rows));
+    root.insert("server_stats".into(),
+                Json::parse(&final_stats).expect("final stats json"));
+    let path = "BENCH_serve.json";
+    match std::fs::write(path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if let Some((net, nl)) = hosted {
+        // self-host epilogue: spot-check the answers really came from
+        // the model (the stages only checked delivery, not values)
+        let x = random_inputs(12, &nl, 1);
+        let y = c.infer("loadtest", 1, n_in, x.clone()).expect("infer");
+        assert_eq!(y, nl.eval_one(&x).unwrap(), "served answer differs");
+        drop(c);
+        net.shutdown();
+        println!("drained cleanly; {} connections served, {} requests \
+                  shed overall", net.accepted_conns(), net.shed_total());
+    }
+}

@@ -1,0 +1,62 @@
+"""Deterministic golden NLWP frames shared by the python and rust suites.
+
+``rust/tests/golden/golden_frames.bin`` is the concatenation of the
+frames below, produced by this module (``python -m tests.golden_wire``
+from ``python/``, or rerun :func:`write_golden`).  ``test_wire.py``
+asserts the committed bytes still match what the current encoder
+produces; the rust ``golden_wire_frames_decode_and_reencode`` test
+decodes the same bytes into the same frames and re-encodes them
+byte-identically — that pair of tests is the cross-language protocol
+contract, exactly like the ``.nlb`` goldens.
+
+Everything is closed-form (no rng, no trained models) so the two
+implementations can construct the identical expected list.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Tuple
+
+from compile import wire
+
+
+def golden_frames() -> List[Tuple[int, wire.Message]]:
+    """(request id, message) pairs — keep in lockstep with the rust
+    test's expected list."""
+    return [
+        (1, wire.Ping()),
+        (2, wire.Pong()),
+        (0x0123456789ABCDEF,
+         wire.Infer(model="nid", batch=2, n_in=3,
+                    codes=[0, 1, -2, 3, 2, 1])),
+        # a bigger request with closed-form codes: (i * 7) % 19 - 9
+        (4, wire.Infer(model="golden_mix", batch=4, n_in=5,
+                       codes=[(i * 7) % 19 - 9 for i in range(20)])),
+        (7, wire.Result(batch=2, out_width=1, codes=[1, -3])),
+        (8, wire.Error(code=wire.ERR_OVERLOADED, message="shed")),
+        (9, wire.Stats(model="")),
+        (10, wire.Stats(model="jsc")),
+        (11, wire.StatsResult(json='{"x":1}')),
+        (12, wire.Result(batch=3, out_width=0, codes=[])),
+    ]
+
+
+def golden_bytes() -> bytes:
+    return b"".join(wire.encode_frame(i, m) for i, m in golden_frames())
+
+
+def write_golden(out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "golden_frames.bin")
+    with open(path, "wb") as f:
+        f.write(golden_bytes())
+    return path
+
+
+if __name__ == "__main__":
+    import sys
+
+    target = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "golden")
+    print(write_golden(os.path.normpath(target)))

@@ -1,0 +1,139 @@
+"""NLWP wire-protocol tests: canonical round-trips, totality under
+corruption (truncations, bit flips, hostile length prefixes), the
+fatal/recoverable split, and the committed golden frames staying in
+sync with the encoder (the rust ``net`` suite holds the other end of
+that contract)."""
+
+import os
+import struct
+
+import pytest
+
+from compile import wire
+
+import golden_wire
+
+
+SAMPLES = golden_wire.golden_frames()
+
+
+def test_roundtrip_every_kind_is_canonical():
+    for frame_id, msg in SAMPLES:
+        data = wire.encode_frame(frame_id, msg)
+        frame, used = wire.decode_frame(data)
+        assert used == len(data)
+        assert frame.id == frame_id
+        assert frame.msg == msg
+        # re-encoding the decoded frame is byte-identical
+        assert wire.encode_frame(frame.id, frame.msg) == data
+
+
+def test_rejects_truncation_at_every_length():
+    data = wire.encode_frame(
+        3, wire.Infer(model="m", batch=2, n_in=2, codes=[1, 2, 3, 4]))
+    for n in range(len(data)):
+        with pytest.raises(wire.WireError):
+            wire.decode_frame(data[:n])
+
+
+def test_single_byte_body_corruption_is_always_caught():
+    data = bytearray(wire.encode_frame(
+        4, wire.Infer(model="model", batch=3, n_in=4,
+                      codes=list(range(12)))))
+    for pos in range(wire.HEADER_LEN, len(data)):
+        for flip in (0x01, 0x80, 0xFF):
+            evil = bytearray(data)
+            evil[pos] ^= flip
+            with pytest.raises(wire.WireError) as e:
+                wire.decode_frame(bytes(evil))
+            assert "checksum" in str(e.value), (pos, flip)
+
+
+def test_bad_magic_and_version_and_oversize_are_fatal():
+    base = wire.encode_frame(5, wire.Ping())
+
+    evil = b"X" + base[1:]
+    with pytest.raises(wire.WireError) as e:
+        wire.decode_frame(evil)
+    assert e.value.fatal and "magic" in str(e.value)
+
+    evil = bytearray(base)
+    evil[4] = wire.WIRE_VERSION + 1
+    with pytest.raises(wire.WireError) as e:
+        wire.decode_frame(bytes(evil))
+    assert e.value.fatal and "version" in str(e.value)
+
+    evil = bytearray(base)
+    evil[16:20] = struct.pack("<I", 0xFFFFFFFF)
+    with pytest.raises(wire.WireError) as e:
+        wire.decode_frame(bytes(evil))
+    assert e.value.fatal and "cap" in str(e.value)
+
+
+def test_unknown_kind_and_checksum_are_recoverable():
+    base = bytearray(wire.encode_frame(5, wire.Ping()))
+    base[6] = 0xEE
+    with pytest.raises(wire.WireError) as e:
+        wire.decode_frame(bytes(base))
+    assert not e.value.fatal and "unknown frame kind" in str(e.value)
+
+    data = bytearray(wire.encode_frame(
+        6, wire.Stats(model="m")))
+    data[-1] ^= 0x40
+    with pytest.raises(wire.WireError) as e:
+        wire.decode_frame(bytes(data))
+    assert not e.value.fatal
+
+
+def test_rejects_overlong_name_with_consistent_checksum():
+    body = struct.pack("<H", wire.MAX_NAME + 1)
+    body += b"a" * (wire.MAX_NAME + 1)
+    body += struct.pack("<II", 1, 0)
+    data = wire.WIRE_MAGIC + struct.pack(
+        "<HHQII", wire.WIRE_VERSION, wire.KIND_INFER, 1, len(body),
+        wire.fnv1a(body) & 0xFFFFFFFF)
+    data += body
+    with pytest.raises(wire.WireError) as e:
+        wire.decode_frame(data)
+    assert not e.value.fatal and "cap" in str(e.value)
+
+
+def test_rejects_trailing_bytes_in_body():
+    body = b"\x55"
+    data = wire.WIRE_MAGIC + struct.pack(
+        "<HHQII", wire.WIRE_VERSION, wire.KIND_PING, 6, len(body),
+        wire.fnv1a(body) & 0xFFFFFFFF)
+    data += body
+    with pytest.raises(wire.WireError) as e:
+        wire.decode_frame(data)
+    assert "trailing" in str(e.value)
+
+
+def test_error_message_truncates_at_char_boundary():
+    long = "é" * wire.MAX_MESSAGE  # 2 bytes per char
+    data = wire.encode_frame(
+        1, wire.Error(code=wire.ERR_INTERNAL, message=long))
+    frame, _ = wire.decode_frame(data)
+    assert len(frame.msg.message.encode("utf-8")) <= wire.MAX_MESSAGE
+    assert frame.msg.message  # non-empty, valid UTF-8 by construction
+
+
+def test_back_to_back_frames_parse_from_one_buffer():
+    stream = golden_wire.golden_bytes()
+    offset = 0
+    for frame_id, msg in SAMPLES:
+        frame, used = wire.decode_frame(stream[offset:])
+        assert frame.id == frame_id
+        assert frame.msg == msg
+        offset += used
+    assert offset == len(stream)
+
+
+def test_committed_golden_frames_match_encoder():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "rust",
+                        "tests", "golden", "golden_frames.bin")
+    with open(path, "rb") as f:
+        committed = f.read()
+    assert committed == golden_wire.golden_bytes(), (
+        "rust/tests/golden/golden_frames.bin is stale — regenerate with "
+        "`python -m tests.golden_wire` and update the rust expectations")

@@ -23,5 +23,5 @@ mod session;
 pub use engine::{check_conformance, InferenceEngine, ModelEngine};
 pub use flow::{run_flow, FlowOptions, FlowResult};
 pub use server::{BatchPolicy, InferenceServer, ModelRegistry, ModelStats,
-                 ServerConfig};
+                 Pending, ServerConfig};
 pub use session::Session;

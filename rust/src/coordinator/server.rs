@@ -265,6 +265,22 @@ struct ModelState {
     batches: Mutex<BatchStats>,
 }
 
+/// A submitted-but-unanswered request: the reply half of
+/// [`InferenceServer::submit`].  Dropping it abandons the answer (the
+/// worker's send fails harmlessly); [`Pending::wait`] blocks until the
+/// batch containing the request completes.
+pub struct Pending {
+    rx: Receiver<Vec<i32>>,
+}
+
+impl Pending {
+    /// Block until the router/worker pipeline answers.  Fails only if
+    /// the server stopped before the request was evaluated.
+    pub fn wait(self) -> Result<Vec<i32>> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("server stopped"))
+    }
+}
+
 /// Point-in-time per-model serving statistics.
 #[derive(Clone, Debug)]
 pub struct ModelStats {
@@ -469,9 +485,12 @@ impl InferenceServer {
         Ok((m.n_in, m.out_width))
     }
 
-    /// Synchronous request: submit one sample to `model`, wait for its
-    /// output codes.
-    pub fn infer(&self, model: &str, x: Vec<i32>) -> Result<Vec<i32>> {
+    /// Asynchronous request: validate and enqueue one sample for
+    /// `model`, returning a [`Pending`] handle immediately.  The
+    /// submitting thread is free to pipeline more requests (the TCP
+    /// frontend's reader thread does exactly this) while the
+    /// router/worker pipeline batches and evaluates.
+    pub fn submit(&self, model: &str, x: Vec<i32>) -> Result<Pending> {
         let (idx, m) = self.model(model)?;
         anyhow::ensure!(x.len() == m.n_in,
                         "bad input width {} for model '{model}' (n_in {})",
@@ -481,7 +500,13 @@ impl InferenceServer {
         tx.send(Request { model: idx, x, enqueued: Instant::now(),
                           reply: rtx })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rrx.recv()?)
+        Ok(Pending { rx: rrx })
+    }
+
+    /// Synchronous request: submit one sample to `model`, wait for its
+    /// output codes.
+    pub fn infer(&self, model: &str, x: Vec<i32>) -> Result<Vec<i32>> {
+        self.submit(model, x)?.wait()
     }
 
     /// Fire-and-collect: submit many samples for `model` from this
@@ -489,20 +514,11 @@ impl InferenceServer {
     /// threads — and multiple models).
     pub fn infer_many(&self, model: &str, rows: Vec<Vec<i32>>)
                       -> Result<Vec<Vec<i32>>> {
-        let (idx, m) = self.model(model)?;
-        let tx = self.sender()?;
-        let mut replies = Vec::with_capacity(rows.len());
-        for x in rows {
-            anyhow::ensure!(x.len() == m.n_in,
-                            "bad input width {} for model '{model}' (n_in {})",
-                            x.len(), m.n_in);
-            let (rtx, rrx) = channel();
-            tx.send(Request { model: idx, x, enqueued: Instant::now(),
-                              reply: rtx })
-                .map_err(|_| anyhow::anyhow!("server stopped"))?;
-            replies.push(rrx);
-        }
-        replies.into_iter().map(|r| Ok(r.recv()?)).collect()
+        let pending: Vec<Pending> = rows
+            .into_iter()
+            .map(|x| self.submit(model, x))
+            .collect::<Result<_>>()?;
+        pending.into_iter().map(|p| p.wait()).collect()
     }
 
     /// A [`ModelEngine`] view of one hosted model (implements

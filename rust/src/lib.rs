@@ -24,6 +24,7 @@ pub mod dataset;
 pub mod luts;
 pub mod mapper;
 pub mod metrics;
+pub mod net;
 pub mod netlist;
 pub mod pruning;
 pub mod report;

@@ -9,6 +9,8 @@
 //!   serve  --config <a[,b..]> train the named configs, serve them all
 //!                             from one multi-model batch server
 //!   serve  --model <f.nlb,..> serve exported artifacts without training
+//!   serve  --listen <addr>    expose the models over TCP (NLWP wire
+//!                             protocol; --serve-secs, --max-inflight)
 //!   inspect --model <f.nlb>   inspect an artifact without a runtime
 //!
 //! Common flags: --steps N --dense-steps N --train N --test N --seed N
@@ -24,6 +26,7 @@ use neuralut::config::Meta;
 use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer,
                             ModelRegistry, ServerConfig};
 use neuralut::mapper::{map_netlist, MappedNetlist};
+use neuralut::net::{NetConfig, NetServer};
 use neuralut::netlist::{load_nlb, ExecPlan, Netlist, OptLevel};
 use neuralut::report::{pct, sci, Table};
 use neuralut::runtime::Runtime;
@@ -458,6 +461,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                       registration hits");
         }
     }
+    // --listen ADDR: expose the server over TCP instead of driving
+    // synthetic traffic in-process
+    if let Some(addr) = args.flags.get("listen") {
+        return serve_listen(args, server, &configs, addr);
+    }
+
     let sw = Stopwatch::start();
     // one client thread per model: the streams interleave in the router
     std::thread::scope(|s| -> Result<()> {
@@ -503,6 +512,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --listen ADDR`: host the models over TCP (NLWP protocol)
+/// instead of driving synthetic traffic in-process.  `--serve-secs N`
+/// bounds the run (0 = until killed); `--max-inflight N` sets the
+/// admission bound past which requests are shed with a typed
+/// OVERLOADED error.  On a bounded run the server drains gracefully
+/// (flushes in-flight responses) before printing final statistics.
+fn serve_listen(args: &Args, server: InferenceServer,
+                models: &[String], addr: &str) -> Result<()> {
+    let cfg = NetConfig {
+        max_inflight: args.usize_flag(
+            "max-inflight", NetConfig::default().max_inflight)?,
+        ..NetConfig::default()
+    };
+    let net = NetServer::bind(server, addr, cfg)?;
+    println!("listening on {} — {} models ({}), max {} in-flight rows",
+             net.local_addr(), models.len(), models.join(", "),
+             cfg.max_inflight);
+    let secs = args.usize_flag("serve-secs", 0)?;
+    if secs == 0 {
+        println!("serving until killed (--serve-secs N for a bounded \
+                  run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs as u64));
+    println!("\n{secs}s elapsed: draining (refusing new work, flushing \
+              in-flight responses)");
+    net.shutdown();
+
+    let mut t = Table::new(
+        "serving statistics (per model)",
+        &["model", "requests", "batches", "occupancy", "mean us",
+          "p50 us", "p99 us", "p999 us"],
+    );
+    let mut total = 0u64;
+    for st in net.inner().all_stats() {
+        total += st.requests;
+        t.row(&[
+            st.model.clone(),
+            st.requests.to_string(),
+            st.batches.to_string(),
+            format!("{:.1}", st.mean_occupancy),
+            format!("{:.0}", st.latency.mean),
+            format!("{:.0}", st.latency.p50),
+            format!("{:.0}", st.latency.p99),
+            format!("{:.0}", st.latency.p999),
+        ]);
+    }
+    t.print();
+    println!("\nserved {total} requests over TCP in {secs}s; {} \
+              connections accepted, {} requests shed",
+             net.accepted_conns(), net.shed_total());
+    Ok(())
+}
+
 fn main() {
     let args = match parse_args() {
         Ok(a) => a,
@@ -527,7 +592,8 @@ fn main() {
                  [--artifacts DIR] [--out FILE] [--requests N] \
                  [--max-batch N] [--max-wait-us N] [--workers N] \
                  [--sim-threads N] [--opt-level 0|1|2] [--plan] \
-                 [--model FILE.nlb[,FILE.nlb...]] [--plan-cache DIR]\n\n\
+                 [--model FILE.nlb[,FILE.nlb...]] [--plan-cache DIR] \
+                 [--listen ADDR] [--serve-secs N] [--max-inflight N]\n\n\
                  serve hosts several configs at once: \
                  --config nid,jsc_cb serves both from one process \
                  (per-model batching policies and statistics). \
@@ -550,7 +616,16 @@ fn main() {
                  training/optimizer/compile, inspect needs no runtime. \
                  --plan-cache DIR keeps compiled plans on disk keyed by \
                  content hash so a restarted server cold-loads instead \
-                 of recompiling."
+                 of recompiling.\n\n\
+                 serve --listen ADDR exposes the models over TCP (the \
+                 NLWP length-prefixed protocol; see DESIGN.md): \
+                 per-connection pipelining feeds the same batching \
+                 router, requests past --max-inflight rows are shed \
+                 with a typed OVERLOADED error, and stats (p50/p99/\
+                 p999, occupancy, shed counts) are queryable over the \
+                 wire. --serve-secs N bounds the run and drains \
+                 gracefully; 0 (default) serves until killed. \
+                 examples/serve_load.rs is a ready-made load generator."
             );
             Ok(())
         }

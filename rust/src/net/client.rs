@@ -1,0 +1,258 @@
+//! Client side of the NLWP protocol: a blocking connection handle
+//! ([`Client`]), the consumer-facing [`Session`] over it
+//! ([`NetSession`]), and an [`InferenceEngine`] adapter
+//! ([`RemoteEngine`]) so the conformance suite can hold a served
+//! model to the exact same contract as an in-process executor.
+//!
+//! [`Client`] exposes both a synchronous request/response surface
+//! (`infer`, `stats`, `ping`) and a split send/receive surface
+//! (`send_infer` + `recv_frame`) for pipelining: a load generator may
+//! keep many requests in flight on one connection, which is exactly
+//! what drives the server's batcher to form large batches.
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::InferenceEngine;
+use crate::util::Json;
+
+use super::session::{single_input_batch, InferError, Session, INPUT_X,
+                     OUTPUT_Y};
+use super::wire::{self, Frame, Message};
+
+/// One blocking NLWP connection.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect to a [`NetServer`](super::server::NetServer).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client, InferError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader, next_id: 1 })
+    }
+
+    /// Optional read timeout — lets tests and load generators fail
+    /// fast instead of hanging on a wedged peer.
+    pub fn set_read_timeout(&self, t: Option<Duration>)
+                            -> Result<(), InferError> {
+        self.reader.get_ref().set_read_timeout(t)?;
+        Ok(())
+    }
+
+    /// Send any request frame; returns the id the response will echo.
+    pub fn send(&mut self, msg: &Message) -> Result<u64, InferError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.writer.write_all(&wire::encode_frame(id, msg))?;
+        Ok(id)
+    }
+
+    /// Send one inference request without waiting (pipelining).
+    pub fn send_infer(&mut self, model: &str, batch: u32, n_in: u32,
+                      codes: Vec<i32>) -> Result<u64, InferError> {
+        self.send(&Message::Infer {
+            model: model.to_string(), batch, n_in, codes,
+        })
+    }
+
+    /// Read the next frame off the wire.
+    pub fn recv_frame(&mut self) -> Result<Frame, InferError> {
+        Ok(wire::read_frame(&mut self.reader)?)
+    }
+
+    /// Read the response to request `id`.  Error frames for the
+    /// request (including id-0 errors the server sends when a frame
+    /// was too corrupt to carry a trustworthy id) become typed
+    /// [`InferError`] values; anything else is a protocol violation.
+    pub fn recv_response(&mut self, id: u64)
+                         -> Result<Message, InferError> {
+        let frame = self.recv_frame()?;
+        match frame.msg {
+            Message::Error { code, message }
+                if frame.id == id || frame.id == 0 =>
+            {
+                Err(InferError::from_wire(code, &message))
+            }
+            msg if frame.id == id => Ok(msg),
+            msg => Err(InferError::Protocol(format!(
+                "response id {} does not match request id {id} \
+                 (kind {})", frame.id, msg.kind()))),
+        }
+    }
+
+    /// Round-trip a ping.
+    pub fn ping(&mut self) -> Result<(), InferError> {
+        let id = self.send(&Message::Ping)?;
+        match self.recv_response(id)? {
+            Message::Pong => Ok(()),
+            other => Err(InferError::Protocol(format!(
+                "expected PONG, got kind {}", other.kind()))),
+        }
+    }
+
+    /// Synchronous inference: row-major `batch * n_in` codes in,
+    /// row-major `batch * out_width` codes out.
+    pub fn infer(&mut self, model: &str, batch: usize, n_in: usize,
+                 codes: Vec<i32>) -> Result<Vec<i32>, InferError> {
+        let id = self.send_infer(model, batch as u32, n_in as u32,
+                                 codes)?;
+        match self.recv_response(id)? {
+            Message::Result { batch: b, codes, .. } => {
+                if b as usize != batch {
+                    return Err(InferError::Protocol(format!(
+                        "result batch {b} != requested {batch}")));
+                }
+                Ok(codes)
+            }
+            other => Err(InferError::Protocol(format!(
+                "expected RESULT, got kind {}", other.kind()))),
+        }
+    }
+
+    /// Fetch the server's stats JSON (empty `model`: all models).
+    pub fn stats(&mut self, model: &str) -> Result<String, InferError> {
+        let id = self.send(&Message::Stats {
+            model: model.to_string(),
+        })?;
+        match self.recv_response(id)? {
+            Message::StatsResult { json } => Ok(json),
+            other => Err(InferError::Protocol(format!(
+                "expected STATS_RESULT, got kind {}", other.kind()))),
+        }
+    }
+
+    /// Probe a hosted model's IO widths from the stats document.
+    pub fn model_io(&mut self, model: &str)
+                    -> Result<(usize, usize), InferError> {
+        let json = self.stats(model)?;
+        let parse = |json: &str| -> Result<(usize, usize)> {
+            let doc = Json::parse(json)?;
+            let arr = doc.at("models")?.as_arr()?;
+            let entry = arr.first().ok_or_else(|| {
+                anyhow::anyhow!("stats document lists no models")
+            })?;
+            Ok((entry.at("n_in")?.as_usize()?,
+                entry.at("out_width")?.as_usize()?))
+        };
+        parse(&json).map_err(|e| {
+            InferError::Protocol(format!("stats json: {e:#}"))
+        })
+    }
+}
+
+/// A served model behind the [`Session`] API: the TCP twin of
+/// [`EngineSession`](super::session::EngineSession).  IO widths are
+/// probed from the server at open time, so the caller needs nothing
+/// but an address and a model name.
+pub struct NetSession {
+    client: Client,
+    model: String,
+    n_in: usize,
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+}
+
+impl NetSession {
+    pub fn open(addr: impl ToSocketAddrs, model: &str)
+                -> Result<NetSession, InferError> {
+        let mut client = Client::connect(addr)?;
+        let (n_in, _) = client.model_io(model)?;
+        Ok(NetSession {
+            client,
+            model: model.to_string(),
+            n_in,
+            inputs: vec![INPUT_X.to_string()],
+            outputs: vec![OUTPUT_Y.to_string()],
+        })
+    }
+
+    /// The underlying connection (e.g. for a stats query).
+    pub fn client_mut(&mut self) -> &mut Client {
+        &mut self.client
+    }
+}
+
+impl Session for NetSession {
+    fn run(&mut self, inputs: &[(&str, &[i32])])
+           -> Result<HashMap<String, Vec<i32>>, InferError> {
+        let (x, batch) = single_input_batch(inputs, self.n_in)?;
+        let y = self.client.infer(&self.model, batch, self.n_in,
+                                  x.to_vec())?;
+        let mut out = HashMap::new();
+        out.insert(OUTPUT_Y.to_string(), y);
+        Ok(out)
+    }
+
+    fn input_names(&self) -> &[String] {
+        &self.inputs
+    }
+
+    fn output_names(&self) -> &[String] {
+        &self.outputs
+    }
+}
+
+/// A served model viewed as an [`InferenceEngine`], so
+/// [`check_conformance`](crate::coordinator::check_conformance) can
+/// prove TCP answers bit-exact with the in-process executors.
+///
+/// `run_batch` deliberately does *not* pre-validate input length: the
+/// request goes out with the model's declared `n_in`, so a short
+/// input is rejected by the server's wire decode — conformance's
+/// rejection case exercises the remote validation path, not a local
+/// shortcut.
+pub struct RemoteEngine {
+    client: Client,
+    model: String,
+    n_in: usize,
+    out_width: usize,
+}
+
+impl RemoteEngine {
+    pub fn open(addr: impl ToSocketAddrs, model: &str)
+                -> Result<RemoteEngine, InferError> {
+        let mut client = Client::connect(addr)?;
+        let (n_in, out_width) = client.model_io(model)?;
+        Ok(RemoteEngine {
+            client,
+            model: model.to_string(),
+            n_in,
+            out_width,
+        })
+    }
+}
+
+impl InferenceEngine for RemoteEngine {
+    fn run_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<i32>> {
+        let y = self
+            .client
+            .infer(&self.model, batch, self.n_in, x.to_vec())
+            .map_err(|e| anyhow::anyhow!("remote run_batch: {e}"))?;
+        anyhow::ensure!(y.len() == batch * self.out_width,
+                        "remote result len {} != batch {batch} * \
+                         out_width {}", y.len(), self.out_width);
+        Ok(y)
+    }
+
+    fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    fn out_width(&self) -> usize {
+        self.out_width
+    }
+
+    fn describe(&self) -> String {
+        format!("remote model '{}': n_in {}, out_width {}", self.model,
+                self.n_in, self.out_width)
+    }
+}

@@ -1,0 +1,32 @@
+//! Network-facing serving layer: the NLWP wire protocol and the TCP
+//! frontend over the coordinator's batching
+//! [`InferenceServer`](crate::coordinator::InferenceServer).
+//!
+//! * [`wire`] — the length-prefixed binary framing (magic, version,
+//!   request id, checksummed body) with total decode: every corrupt
+//!   byte stream yields a typed [`wire::WireError`], never a panic.
+//! * [`session`] — the transport-independent consumer API:
+//!   [`Session`] (named inputs/outputs, errors as values) and the
+//!   typed [`InferError`].
+//! * [`server`] — [`NetServer`]: per-connection reader/writer thread
+//!   pairs feeding the batching router, admission control with
+//!   explicit sheds, graceful drain, stats over the wire.
+//! * [`client`] — [`Client`] (sync + pipelined), [`NetSession`]
+//!   (`Session` over TCP) and [`RemoteEngine`] (so the conformance
+//!   suite holds the wire path to bit-exactness with in-process
+//!   executors).
+//!
+//! The design point mirrors the deployment story of an FPGA LUT
+//! model: the network frontend must never be the reason the answer is
+//! wrong (corruption is detected, overload is an explicit typed shed,
+//! shutdown flushes in-flight work) and must never amplify load
+//! (bounded admission, bounded writer queues, backpressure to TCP).
+
+pub mod client;
+pub mod server;
+pub mod session;
+pub mod wire;
+
+pub use client::{Client, NetSession, RemoteEngine};
+pub use server::{NetConfig, NetServer};
+pub use session::{EngineSession, InferError, Session, INPUT_X, OUTPUT_Y};

@@ -1,0 +1,622 @@
+//! TCP serving frontend: the socket between [`InferenceServer`]'s
+//! router/batcher and the outside world.
+//!
+//! One [`NetServer`] owns one `InferenceServer` and a listening
+//! socket.  Each accepted connection gets a **reader** thread (decode
+//! frames, admit or shed, submit to the batching router) and a
+//! **writer** thread (wait for answers, encode responses) joined by a
+//! bounded queue — so a client may pipeline arbitrarily many requests
+//! on one connection and the batcher sees them all concurrently, while
+//! responses stay in request order per connection (ids are still
+//! echoed, so clients need not rely on ordering).
+//!
+//! # Admission control
+//!
+//! The frontend bounds *admitted rows* (samples submitted to the
+//! router whose responses have not yet been written) at
+//! [`NetConfig::max_inflight`].  A request that would exceed the bound
+//! is answered immediately with an `ERR_OVERLOADED` error frame — an
+//! explicit shed, counted per model and globally, never a silent drop
+//! and never unbounded queue growth.  Row accounting is released only
+//! after the response bytes are handed to the kernel, so a slow
+//! client reading responses lazily cannot park unbounded result data
+//! in the writer queue either.
+//!
+//! # Graceful drain ([`NetServer::shutdown`])
+//!
+//! 1. stop accepting: the accept loop observes the stop flag and
+//!    drops the listener — new connections are refused by the OS;
+//! 2. reject new work: readers answer every further `INFER` frame
+//!    with `ERR_SHUTTING_DOWN`;
+//! 3. flush in-flight work: wait (bounded by
+//!    [`NetConfig::drain_wait`]) until every admitted row's response
+//!    has been written;
+//! 4. close: force-shutdown all connection sockets (unblocking idle
+//!    readers), join every connection thread, then stop the inner
+//!    `InferenceServer` (which flushes its own final batches).
+//!
+//! Shutdown is idempotent and also runs on `Drop`.
+//!
+//! # Statistics over the wire
+//!
+//! A `STATS` frame is answered with a JSON document (schema below) —
+//! the same numbers [`InferenceServer::model_stats`] reports
+//! in-process, extended with frontend counters:
+//!
+//! ```json
+//! {
+//!   "models": [{"model": "nid", "n_in": 16, "out_width": 1,
+//!               "requests": 0, "batches": 0, "mean_occupancy": 0.0,
+//!               "max_batch_seen": 0,
+//!               "latency_us": {"count": 0, "mean": 0.0, "p50": 0.0,
+//!                              "p99": 0.0, "p999": 0.0},
+//!               "net": {"requests": 0, "rows": 0, "shed": 0}}],
+//!   "server": {"accepted_conns": 0, "open_conns": 0, "inflight": 0,
+//!              "max_inflight": 1024, "shed_total": 0,
+//!              "draining": false}
+//! }
+//! ```
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream,
+               ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{InferenceServer, Pending};
+use crate::util::Json;
+
+use super::wire::{self, Frame, Message, WireError};
+
+/// Frontend tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Bound on admitted in-flight rows (samples); requests past it
+    /// are shed with `ERR_OVERLOADED`.  Also the largest admissible
+    /// single request: a batch wider than the bound is always shed,
+    /// even on an idle server.
+    pub max_inflight: usize,
+    /// Writer-queue depth per connection (frames).  A full queue
+    /// blocks the reader, which backpressures the TCP stream.
+    pub writer_queue: usize,
+    /// How long [`NetServer::shutdown`] waits for in-flight responses
+    /// to flush before force-closing connections.
+    pub drain_wait: Duration,
+    /// Accept-loop poll interval (the listener is non-blocking so the
+    /// stop flag is observed promptly).
+    pub accept_poll: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_inflight: 1024,
+            writer_queue: 256,
+            drain_wait: Duration::from_secs(5),
+            accept_poll: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Per-model frontend counters (the batcher's own stats live in the
+/// inner server).
+#[derive(Default)]
+struct NetCounters {
+    requests: AtomicU64,
+    rows: AtomicU64,
+    shed: AtomicU64,
+}
+
+struct ModelMeta {
+    name: String,
+    n_in: usize,
+    out_width: usize,
+    net: NetCounters,
+}
+
+struct Shared {
+    server: InferenceServer,
+    models: Vec<ModelMeta>,
+    by_name: HashMap<String, usize>,
+    cfg: NetConfig,
+    stop: AtomicBool,
+    /// admitted rows whose responses are not yet written
+    inflight: AtomicUsize,
+    shed_total: AtomicU64,
+    accepted: AtomicU64,
+    open: AtomicUsize,
+    next_conn: AtomicU64,
+    /// socket clones for force-close on drain, keyed by connection id
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// Handle to a running TCP frontend.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Mutex<Option<std::thread::JoinHandle<()>>>,
+    done: AtomicBool,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections for `server`'s hosted models.
+    pub fn bind(server: InferenceServer, addr: impl ToSocketAddrs,
+                cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let models: Vec<ModelMeta> = server
+            .models()
+            .into_iter()
+            .map(|name| {
+                let (n_in, out_width) = server
+                    .model_io(&name)
+                    .expect("hosted model has IO widths");
+                ModelMeta { name, n_in, out_width,
+                            net: NetCounters::default() }
+            })
+            .collect();
+        let by_name = models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.name.clone(), i))
+            .collect();
+        let shared = Arc::new(Shared {
+            server,
+            models,
+            by_name,
+            cfg,
+            stop: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            shed_total: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            open: AtomicUsize::new(0),
+            next_conn: AtomicU64::new(1),
+            conns: Mutex::new(HashMap::new()),
+            threads: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("nla-net-accept".into())
+                .spawn(move || accept_loop(&listener, &shared))
+                .expect("spawn accept thread")
+        };
+        log::info!("net frontend listening on {addr} ({} models, \
+                    max_inflight {})",
+                   shared.models.len(), cfg.max_inflight);
+        Ok(NetServer {
+            shared,
+            addr,
+            accept: Mutex::new(Some(accept)),
+            done: AtomicBool::new(false),
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The wrapped inference server (e.g. for in-process stats).
+    pub fn inner(&self) -> &InferenceServer {
+        &self.shared.server
+    }
+
+    /// Currently admitted in-flight rows.
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Requests shed by admission control since start.
+    pub fn shed_total(&self) -> u64 {
+        self.shared.shed_total.load(Ordering::SeqCst)
+    }
+
+    /// Connections accepted since start.
+    pub fn accepted_conns(&self) -> u64 {
+        self.shared.accepted.load(Ordering::SeqCst)
+    }
+
+    /// Connections currently open.
+    pub fn open_conns(&self) -> usize {
+        self.shared.open.load(Ordering::SeqCst)
+    }
+
+    /// Graceful drain (see the module doc for the four phases).
+    /// Idempotent; also runs on `Drop`.
+    pub fn shutdown(&self) {
+        if self.done.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // 1: the accept loop polls the flag; joining it guarantees the
+        // listener is dropped and new connections are refused
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // 2 runs in the readers (stop flag); 3: wait for in-flight
+        // responses to flush.  Zero must hold across a settle window:
+        // a reader that loaded the stop flag as false may still be a
+        // few instructions from admitting, and force-closing under it
+        // would lose that request's answer.
+        let deadline = Instant::now() + self.shared.cfg.drain_wait;
+        let mut zero_streak = 0;
+        while zero_streak < 3 && Instant::now() < deadline {
+            if self.shared.inflight.load(Ordering::SeqCst) == 0 {
+                zero_streak += 1;
+                std::thread::sleep(Duration::from_millis(5));
+            } else {
+                zero_streak = 0;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        // 4: force-close every connection socket (unblocks idle
+        // readers) and join the connection threads
+        {
+            let mut conns = self.shared.conns.lock().unwrap();
+            for (_, s) in conns.drain() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        let handles =
+            std::mem::take(&mut *self.shared.threads.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        // finally stop the batcher itself (flushes its own tail)
+        self.shared.server.shutdown();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.accepted.fetch_add(1, Ordering::SeqCst);
+                if let Err(e) = spawn_connection(shared, stream) {
+                    log::warn!("net: connection setup failed: {e:#}");
+                }
+                // opportunistic tidy-up so a long-lived server does
+                // not accumulate finished join handles
+                shared
+                    .threads
+                    .lock()
+                    .unwrap()
+                    .retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(shared.cfg.accept_poll);
+            }
+            Err(e) => {
+                log::warn!("net: accept failed: {e}");
+                std::thread::sleep(shared.cfg.accept_poll);
+            }
+        }
+    }
+    // listener drops here: further connects are refused by the OS
+}
+
+/// Frames queued from a connection's reader to its writer.
+enum Out {
+    /// Already-encoded response bytes (errors, pongs, stats).
+    Ready(Vec<u8>),
+    /// An admitted inference: the writer waits for the answers, then
+    /// encodes the result frame and releases the admission rows.
+    Infer { id: u64, model: usize, batch: usize, pending: Vec<Pending> },
+}
+
+fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream)
+                    -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?;
+    let conn_id = shared.next_conn.fetch_add(1, Ordering::SeqCst);
+    // a clone for the force-close registry and one for the writer
+    let force = stream.try_clone()?;
+    let wstream = stream.try_clone()?;
+    shared.conns.lock().unwrap().insert(conn_id, force);
+    shared.open.fetch_add(1, Ordering::SeqCst);
+    let (tx, rx) = sync_channel::<Out>(shared.cfg.writer_queue.max(1));
+    let reader = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name(format!("nla-net-read-{conn_id}"))
+            .spawn(move || reader_loop(&shared, stream, &tx))
+            .expect("spawn reader")
+    };
+    let writer = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name(format!("nla-net-write-{conn_id}"))
+            .spawn(move || writer_loop(&shared, wstream, &rx, conn_id))
+            .expect("spawn writer")
+    };
+    let mut threads = shared.threads.lock().unwrap();
+    threads.push(reader);
+    threads.push(writer);
+    Ok(())
+}
+
+fn error_frame(id: u64, code: u16, message: String) -> Vec<u8> {
+    wire::encode_frame(id, &Message::Error { code, message })
+}
+
+fn reader_loop(shared: &Arc<Shared>, mut stream: TcpStream,
+               tx: &SyncSender<Out>) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(frame) => {
+                if !handle_frame(shared, frame, tx) {
+                    break;
+                }
+            }
+            Err(e) if e.is_fatal() => {
+                // framing sync is lost: answer best-effort (not on
+                // plain transport errors — the peer is gone), close.
+                // The id of an undecodable frame cannot be trusted, so
+                // the final error carries id 0.
+                if !matches!(e, WireError::Io(_)) {
+                    let _ = tx.try_send(Out::Ready(error_frame(
+                        0, wire::ERR_BAD_FRAME, e.to_string())));
+                }
+                break;
+            }
+            Err(e) => {
+                // recoverable: the whole frame was consumed, so answer
+                // with a typed error and keep the connection open
+                if tx.send(Out::Ready(error_frame(
+                        0, wire::ERR_BAD_FRAME, e.to_string())))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        }
+    }
+    // tx drops here; the writer drains the queue and cleans up
+}
+
+/// Process one decoded frame.  Returns false when the connection
+/// should close (writer gone).
+fn handle_frame(shared: &Arc<Shared>, frame: Frame, tx: &SyncSender<Out>)
+                -> bool {
+    let id = frame.id;
+    let out = match frame.msg {
+        Message::Ping => {
+            Out::Ready(wire::encode_frame(id, &Message::Pong))
+        }
+        Message::Stats { model } => match stats_json(shared, &model) {
+            Ok(json) => Out::Ready(wire::encode_frame(
+                id, &Message::StatsResult { json })),
+            Err((code, msg)) => Out::Ready(error_frame(id, code, msg)),
+        },
+        Message::Infer { model, batch, n_in, codes } => {
+            admit_infer(shared, id, &model, batch, n_in, codes)
+        }
+        // a client must not send response kinds; answer (don't abort —
+        // framing is intact) and continue
+        Message::Result { .. } | Message::StatsResult { .. }
+        | Message::Error { .. } | Message::Pong => {
+            Out::Ready(error_frame(
+                id, wire::ERR_BAD_FRAME,
+                "unexpected response-kind frame".into()))
+        }
+    };
+    tx.send(out).is_ok()
+}
+
+/// Validate, admit (or shed) and submit one inference request;
+/// returns what the writer should send.
+fn admit_infer(shared: &Arc<Shared>, id: u64, model: &str, batch: u32,
+               n_in: u32, codes: Vec<i32>) -> Out {
+    if shared.stop.load(Ordering::SeqCst) {
+        return Out::Ready(error_frame(
+            id, wire::ERR_SHUTTING_DOWN,
+            "server is draining; no new work accepted".into()));
+    }
+    let Some(&idx) = shared.by_name.get(model) else {
+        return Out::Ready(error_frame(
+            id, wire::ERR_UNKNOWN_MODEL,
+            format!("no model named '{model}' is hosted")));
+    };
+    let meta = &shared.models[idx];
+    let batch = batch as usize;
+    if batch == 0 {
+        return Out::Ready(error_frame(
+            id, wire::ERR_BAD_INPUT, "batch must be at least 1".into()));
+    }
+    if n_in as usize != meta.n_in {
+        return Out::Ready(error_frame(
+            id, wire::ERR_BAD_INPUT,
+            format!("model '{model}' expects n_in {}, request declares \
+                     {n_in}", meta.n_in)));
+    }
+    debug_assert_eq!(codes.len(), batch * meta.n_in,
+                     "wire decode guarantees the code count");
+    // admission: reserve `batch` rows or shed explicitly
+    let mut cur = shared.inflight.load(Ordering::SeqCst);
+    loop {
+        if cur + batch > shared.cfg.max_inflight {
+            meta.net.shed.fetch_add(1, Ordering::SeqCst);
+            shared.shed_total.fetch_add(1, Ordering::SeqCst);
+            return Out::Ready(error_frame(
+                id, wire::ERR_OVERLOADED,
+                format!("admission queue full ({} of {} rows in \
+                         flight)", cur, shared.cfg.max_inflight)));
+        }
+        match shared.inflight.compare_exchange(
+            cur, cur + batch, Ordering::SeqCst, Ordering::SeqCst)
+        {
+            Ok(_) => break,
+            Err(now) => cur = now,
+        }
+    }
+    // submit row by row: the router re-batches per model across every
+    // connection, so a k-row request and k single-row requests take
+    // the same path
+    let mut pending = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let row = codes[b * meta.n_in..(b + 1) * meta.n_in].to_vec();
+        match shared.server.submit(&meta.name, row) {
+            Ok(p) => pending.push(p),
+            Err(e) => {
+                // inner server stopped under us: release the rows and
+                // answer with a value, as always
+                shared.inflight.fetch_sub(batch, Ordering::SeqCst);
+                return Out::Ready(error_frame(
+                    id, wire::ERR_SHUTTING_DOWN, format!("{e:#}")));
+            }
+        }
+    }
+    meta.net.requests.fetch_add(1, Ordering::SeqCst);
+    meta.net.rows.fetch_add(batch as u64, Ordering::SeqCst);
+    Out::Infer { id, model: idx, batch, pending }
+}
+
+fn writer_loop(shared: &Arc<Shared>, mut stream: TcpStream,
+               rx: &Receiver<Out>, conn_id: u64) {
+    // once the socket dies we keep draining the queue so admission
+    // rows are always released, but stop writing
+    let mut dead = false;
+    while let Ok(out) = rx.recv() {
+        match out {
+            Out::Ready(bytes) => {
+                if !dead && stream.write_all(&bytes).is_err() {
+                    dead = true;
+                }
+            }
+            Out::Infer { id, model, batch, pending } => {
+                if dead {
+                    // abandon the answers (workers' sends fail
+                    // harmlessly) but release the admission rows
+                    drop(pending);
+                    shared.inflight.fetch_sub(batch, Ordering::SeqCst);
+                    continue;
+                }
+                let ow = shared.models[model].out_width;
+                let mut codes: Vec<i32> = Vec::with_capacity(batch * ow);
+                let mut stopped = false;
+                for p in pending {
+                    match p.wait() {
+                        Ok(mut y) => codes.append(&mut y),
+                        Err(_) => {
+                            stopped = true;
+                            break;
+                        }
+                    }
+                }
+                let msg = if stopped {
+                    Message::Error {
+                        code: wire::ERR_SHUTTING_DOWN,
+                        message: "server stopped before the request \
+                                  completed".into(),
+                    }
+                } else {
+                    Message::Result {
+                        batch: batch as u32,
+                        out_width: ow as u32,
+                        codes,
+                    }
+                };
+                if stream.write_all(&wire::encode_frame(id, &msg))
+                    .is_err()
+                {
+                    dead = true;
+                }
+                // release only after the response bytes are out (or
+                // the socket is known dead): "in flight" means "the
+                // answer has not reached the kernel yet"
+                shared.inflight.fetch_sub(batch, Ordering::SeqCst);
+            }
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    shared.conns.lock().unwrap().remove(&conn_id);
+    shared.open.fetch_sub(1, Ordering::SeqCst);
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// Build the stats JSON document (`model` empty: every hosted model).
+fn stats_json(shared: &Arc<Shared>, model: &str)
+              -> Result<String, (u16, String)> {
+    use std::collections::BTreeMap;
+    let indices: Vec<usize> = if model.is_empty() {
+        (0..shared.models.len()).collect()
+    } else {
+        match shared.by_name.get(model) {
+            Some(&i) => vec![i],
+            None => {
+                return Err((wire::ERR_UNKNOWN_MODEL, format!(
+                    "no model named '{model}' is hosted")));
+            }
+        }
+    };
+    let mut models = Vec::new();
+    for i in indices {
+        let meta = &shared.models[i];
+        let st = shared
+            .server
+            .model_stats(&meta.name)
+            .map_err(|e| (wire::ERR_INTERNAL, format!("{e:#}")))?;
+        let mut lat = BTreeMap::new();
+        lat.insert("count".into(), num(st.latency.count as f64));
+        lat.insert("mean".into(), num(st.latency.mean));
+        lat.insert("p50".into(), num(st.latency.p50));
+        lat.insert("p99".into(), num(st.latency.p99));
+        lat.insert("p999".into(), num(st.latency.p999));
+        let mut net = BTreeMap::new();
+        net.insert("requests".into(),
+                   num(meta.net.requests.load(Ordering::SeqCst) as f64));
+        net.insert("rows".into(),
+                   num(meta.net.rows.load(Ordering::SeqCst) as f64));
+        net.insert("shed".into(),
+                   num(meta.net.shed.load(Ordering::SeqCst) as f64));
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Json::Str(meta.name.clone()));
+        m.insert("n_in".into(), num(meta.n_in as f64));
+        m.insert("out_width".into(), num(meta.out_width as f64));
+        m.insert("requests".into(), num(st.requests as f64));
+        m.insert("batches".into(), num(st.batches as f64));
+        m.insert("mean_occupancy".into(), num(st.mean_occupancy));
+        m.insert("max_batch_seen".into(), num(st.max_batch_seen as f64));
+        m.insert("latency_us".into(), Json::Obj(lat));
+        m.insert("net".into(), Json::Obj(net));
+        models.push(Json::Obj(m));
+    }
+    let mut srv = BTreeMap::new();
+    srv.insert("accepted_conns".into(),
+               num(shared.accepted.load(Ordering::SeqCst) as f64));
+    srv.insert("open_conns".into(),
+               num(shared.open.load(Ordering::SeqCst) as f64));
+    srv.insert("inflight".into(),
+               num(shared.inflight.load(Ordering::SeqCst) as f64));
+    srv.insert("max_inflight".into(),
+               num(shared.cfg.max_inflight as f64));
+    srv.insert("shed_total".into(),
+               num(shared.shed_total.load(Ordering::SeqCst) as f64));
+    srv.insert("draining".into(),
+               Json::Bool(shared.stop.load(Ordering::SeqCst)));
+    let mut root = BTreeMap::new();
+    root.insert("models".into(), Json::Arr(models));
+    root.insert("server".into(), Json::Obj(srv));
+    Ok(Json::Obj(root).to_string())
+}

@@ -1,0 +1,266 @@
+//! The stable serving API shape: named inputs/outputs, errors as
+//! values (the `Session` trait idiom from deli-infer, specialized to
+//! code-valued LUT netlists).
+//!
+//! [`Session`] is what a *consumer* of a served model programs
+//! against; it deliberately hides whether the model runs in-process
+//! ([`EngineSession`] over any `InferenceEngine`) or across the wire
+//! (`net::client::NetSession` over a TCP connection).  Every failure
+//! is a typed [`InferError`] value — a session call never panics on
+//! bad input and never surfaces a transport problem as anything but
+//! an error variant.
+//!
+//! A LUT netlist has one logical input tensor and one logical output
+//! tensor, so the named-IO surface is small: inputs `["x"]` (row-major
+//! `batch * n_in` codes), outputs `["y"]` (row-major `batch *
+//! out_width` codes).  The names are part of the stable API so richer
+//! models (e.g. a cascade exposing per-tier outputs) can extend the
+//! map without breaking callers.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::coordinator::InferenceEngine;
+
+use super::wire;
+
+/// The conventional input tensor name.
+pub const INPUT_X: &str = "x";
+/// The conventional output tensor name.
+pub const OUTPUT_Y: &str = "y";
+
+/// Typed inference failure — the error-as-value side of the session
+/// API, with a lossless mapping onto wire error codes (so a TCP
+/// session surfaces exactly what the server answered).
+#[derive(Debug)]
+pub enum InferError {
+    /// Malformed frame or request body (wire code 1).
+    BadFrame(String),
+    /// The server hosts no model by this name (wire code 2).
+    UnknownModel(String),
+    /// Input shape/width rejected (wire code 3).
+    BadInput(String),
+    /// Admission control shed the request: the bounded queue is full
+    /// (wire code 4).  Retry later — the server is alive.
+    Overloaded,
+    /// The server is draining and accepts no new work (wire code 5).
+    ShuttingDown,
+    /// Server-side failure while evaluating (wire code 6).
+    Internal(String),
+    /// The peer violated the protocol (unexpected kind, bad frame).
+    Protocol(String),
+    /// Transport failure (connect, read, write).
+    Io(std::io::Error),
+}
+
+impl InferError {
+    /// The wire error code this variant maps to (None for client-side
+    /// transport/protocol failures, which have no frame).
+    pub fn code(&self) -> Option<u16> {
+        match self {
+            InferError::BadFrame(_) => Some(wire::ERR_BAD_FRAME),
+            InferError::UnknownModel(_) => Some(wire::ERR_UNKNOWN_MODEL),
+            InferError::BadInput(_) => Some(wire::ERR_BAD_INPUT),
+            InferError::Overloaded => Some(wire::ERR_OVERLOADED),
+            InferError::ShuttingDown => Some(wire::ERR_SHUTTING_DOWN),
+            InferError::Internal(_) => Some(wire::ERR_INTERNAL),
+            InferError::Protocol(_) | InferError::Io(_) => None,
+        }
+    }
+
+    /// Reconstruct the typed error a [`wire::Message::Error`] frame
+    /// carries.  Unknown codes (a newer server) degrade to
+    /// [`InferError::Protocol`] instead of being misread.
+    pub fn from_wire(code: u16, message: &str) -> InferError {
+        match code {
+            wire::ERR_BAD_FRAME => InferError::BadFrame(message.into()),
+            wire::ERR_UNKNOWN_MODEL => {
+                InferError::UnknownModel(message.into())
+            }
+            wire::ERR_BAD_INPUT => InferError::BadInput(message.into()),
+            wire::ERR_OVERLOADED => InferError::Overloaded,
+            wire::ERR_SHUTTING_DOWN => InferError::ShuttingDown,
+            wire::ERR_INTERNAL => InferError::Internal(message.into()),
+            other => InferError::Protocol(format!(
+                "unknown error code {other}: {message}")),
+        }
+    }
+}
+
+impl fmt::Display for InferError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InferError::BadFrame(m) => write!(f, "bad frame: {m}"),
+            InferError::UnknownModel(m) => {
+                write!(f, "unknown model: {m}")
+            }
+            InferError::BadInput(m) => write!(f, "bad input: {m}"),
+            InferError::Overloaded => {
+                write!(f, "overloaded: request shed by admission control")
+            }
+            InferError::ShuttingDown => {
+                write!(f, "server is shutting down")
+            }
+            InferError::Internal(m) => write!(f, "server error: {m}"),
+            InferError::Protocol(m) => write!(f, "protocol error: {m}"),
+            InferError::Io(e) => write!(f, "transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+impl From<std::io::Error> for InferError {
+    fn from(e: std::io::Error) -> InferError {
+        InferError::Io(e)
+    }
+}
+
+impl From<wire::WireError> for InferError {
+    fn from(e: wire::WireError) -> InferError {
+        match e {
+            wire::WireError::Io(io) => InferError::Io(io),
+            other => InferError::Protocol(other.to_string()),
+        }
+    }
+}
+
+/// A served model behind named inputs/outputs and `Result`-typed
+/// errors — the stable consumer-facing API shape, independent of
+/// transport.
+pub trait Session {
+    /// Evaluate named input tensors to named output tensors.  For LUT
+    /// netlists: one input [`INPUT_X`] of row-major codes whose length
+    /// is a multiple of the model's `n_in`; one output [`OUTPUT_Y`] of
+    /// `batch * out_width` codes.
+    fn run(&mut self, inputs: &[(&str, &[i32])])
+           -> Result<HashMap<String, Vec<i32>>, InferError>;
+
+    /// Names `run` accepts, in declaration order.
+    fn input_names(&self) -> &[String];
+
+    /// Names `run` produces, in declaration order.
+    fn output_names(&self) -> &[String];
+}
+
+/// Extract the single `x` input and derive the batch size — the shared
+/// front door of every LUT session implementation.
+pub(crate) fn single_input_batch<'a>(inputs: &[(&str, &'a [i32])],
+                                     n_in: usize)
+                                     -> Result<(&'a [i32], usize),
+                                               InferError> {
+    if inputs.len() != 1 || inputs[0].0 != INPUT_X {
+        return Err(InferError::BadInput(format!(
+            "expected exactly one input named '{INPUT_X}', got {:?}",
+            inputs.iter().map(|(n, _)| *n).collect::<Vec<_>>())));
+    }
+    let x = inputs[0].1;
+    if n_in == 0 {
+        return Err(InferError::BadInput("model has no inputs".into()));
+    }
+    if x.is_empty() || x.len() % n_in != 0 {
+        return Err(InferError::BadInput(format!(
+            "input '{INPUT_X}' length {} is not a positive multiple of \
+             n_in {n_in}", x.len())));
+    }
+    Ok((x, x.len() / n_in))
+}
+
+/// In-process [`Session`] over any [`InferenceEngine`] — the same API
+/// shape as a TCP session, with the transport removed.  Conformance
+/// tests pair the two to prove the wire adds nothing but frames.
+pub struct EngineSession<E> {
+    engine: E,
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+}
+
+impl<E: InferenceEngine> EngineSession<E> {
+    pub fn new(engine: E) -> EngineSession<E> {
+        EngineSession {
+            engine,
+            inputs: vec![INPUT_X.to_string()],
+            outputs: vec![OUTPUT_Y.to_string()],
+        }
+    }
+
+    /// The wrapped engine (e.g. to inspect widths).
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+}
+
+impl<E: InferenceEngine> Session for EngineSession<E> {
+    fn run(&mut self, inputs: &[(&str, &[i32])])
+           -> Result<HashMap<String, Vec<i32>>, InferError> {
+        let (x, batch) = single_input_batch(inputs, self.engine.n_in())?;
+        let y = self
+            .engine
+            .run_batch(x, batch)
+            .map_err(|e| InferError::Internal(format!("{e:#}")))?;
+        let mut out = HashMap::new();
+        out.insert(OUTPUT_Y.to_string(), y);
+        Ok(out)
+    }
+
+    fn input_names(&self) -> &[String] {
+        &self.inputs
+    }
+
+    fn output_names(&self) -> &[String] {
+        &self.outputs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::testutil::{random_inputs, random_netlist};
+
+    #[test]
+    fn engine_session_matches_eval_one() {
+        let nl = random_netlist(81, 6, 1, &[(4, 2, 2), (2, 2, 1)]);
+        let mut s = EngineSession::new(nl.simulator());
+        assert_eq!(s.input_names(), [INPUT_X.to_string()]);
+        assert_eq!(s.output_names(), [OUTPUT_Y.to_string()]);
+        let x = random_inputs(81, &nl, 5);
+        let out = s.run(&[(INPUT_X, &x[..])]).unwrap();
+        let y = &out[OUTPUT_Y];
+        let ow = nl.out_width();
+        for b in 0..5 {
+            let want = nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap();
+            assert_eq!(&y[b * ow..(b + 1) * ow], &want[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn engine_session_rejects_bad_inputs_as_values() {
+        let nl = random_netlist(82, 6, 1, &[(4, 2, 2)]);
+        let mut s = EngineSession::new(nl.simulator());
+        let x = random_inputs(82, &nl, 1);
+        // wrong name
+        assert!(matches!(s.run(&[("z", &x[..])]),
+                         Err(InferError::BadInput(_))));
+        // two inputs
+        assert!(matches!(s.run(&[(INPUT_X, &x[..]), (INPUT_X, &x[..])]),
+                         Err(InferError::BadInput(_))));
+        // not a multiple of n_in
+        assert!(matches!(s.run(&[(INPUT_X, &x[..5])]),
+                         Err(InferError::BadInput(_))));
+        // empty
+        assert!(matches!(s.run(&[(INPUT_X, &[][..])]),
+                         Err(InferError::BadInput(_))));
+    }
+
+    #[test]
+    fn wire_code_mapping_is_lossless() {
+        for code in [wire::ERR_BAD_FRAME, wire::ERR_UNKNOWN_MODEL,
+                     wire::ERR_BAD_INPUT, wire::ERR_OVERLOADED,
+                     wire::ERR_SHUTTING_DOWN, wire::ERR_INTERNAL] {
+            let e = InferError::from_wire(code, "m");
+            assert_eq!(e.code(), Some(code));
+        }
+        // unknown codes degrade to Protocol, not a panic or a misread
+        assert!(InferError::from_wire(999, "m").code().is_none());
+    }
+}

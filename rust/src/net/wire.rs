@@ -1,0 +1,648 @@
+//! The `nlwp` wire protocol: length-prefixed binary frames over TCP.
+//!
+//! Design goals, in order: *totality* (any byte stream either parses
+//! into a validated frame or yields a typed [`WireError`] — decoding
+//! never panics and never allocates more than the frame cap), *errors
+//! as values* (a server answers malformed or rejected requests with
+//! [`Message::Error`] frames; the connection aborts only when framing
+//! sync is lost), and *cheapness* (one 24-byte header, no text
+//! parsing on the request path — the nanoseconds the plan executor
+//! saves are not spent re-tokenizing JSON).
+//!
+//! The python mirror (`python/compile/wire.py`) encodes the identical
+//! bytes; the committed golden frames (`rust/tests/golden/
+//! golden_frames.bin`) pin the cross-language contract the same way
+//! the `.nlb` goldens pin the artifact format.
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "NLWP"
+//! 4       2     version (currently 1)
+//! 6       2     kind (see the KIND_* constants)
+//! 8       8     request id (echoed verbatim in the response)
+//! 16      4     body length (<= MAX_BODY)
+//! 20      4     body checksum (low 32 bits of FNV-1a over the body)
+//! 24      ..    body (layout depends on kind)
+//!
+//! kind 1  INFER         u16 model-name length + UTF-8 name,
+//!                       u32 batch, u32 n_in,
+//!                       batch * n_in  i32 input codes (row-major)
+//! kind 2  RESULT        u32 batch, u32 out_width,
+//!                       batch * out_width  i32 output codes (row-major)
+//! kind 3  ERROR         u16 error code (ERR_*),
+//!                       u16 message length + UTF-8 message
+//! kind 4  STATS         u16 model-name length + UTF-8 name
+//!                       (length 0: every hosted model)
+//! kind 5  STATS_RESULT  UTF-8 JSON document (the whole body)
+//! kind 6  PING          empty body
+//! kind 7  PONG          empty body
+//! ```
+//!
+//! ## Versioning & recovery policy
+//!
+//! The version bumps on any layout change; readers accept exactly the
+//! versions they know and reject the rest — an old peer must never
+//! misparse a new frame.  Errors split into two classes:
+//!
+//! * **fatal** ([`WireError::is_fatal`]): bad magic, unknown version,
+//!   a body length beyond [`MAX_BODY`], or transport I/O failure —
+//!   framing sync is lost (or never existed), so the peer answers
+//!   with one final [`Message::Error`] frame where possible and
+//!   closes the connection;
+//! * **recoverable**: checksum mismatch, unknown kind, malformed body
+//!   — the full frame was consumed, sync holds, so the peer answers
+//!   with a typed [`Message::Error`] and keeps the connection open.
+//!
+//! A single corrupted byte anywhere in a body is always caught: every
+//! FNV-1a step is bijective modulo 2^32 in the running hash, so two
+//! bodies differing in one byte can never share the truncated
+//! checksum.
+
+use std::fmt;
+use std::io::Read;
+
+use crate::netlist::fnv1a;
+
+pub const WIRE_MAGIC: [u8; 4] = *b"NLWP";
+pub const WIRE_VERSION: u16 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 24;
+/// Hard cap on a frame body — an adversarial length prefix is rejected
+/// before any allocation (16 MiB ≈ a 4M-sample single-code batch, far
+/// beyond any sane request).
+pub const MAX_BODY: usize = 1 << 24;
+/// Cap on a model-name field.
+pub const MAX_NAME: usize = 256;
+/// Cap on an error-message field (encoders truncate to fit).
+pub const MAX_MESSAGE: usize = 4096;
+
+pub const KIND_INFER: u16 = 1;
+pub const KIND_RESULT: u16 = 2;
+pub const KIND_ERROR: u16 = 3;
+pub const KIND_STATS: u16 = 4;
+pub const KIND_STATS_RESULT: u16 = 5;
+pub const KIND_PING: u16 = 6;
+pub const KIND_PONG: u16 = 7;
+
+/// Error codes carried by [`Message::Error`] frames.
+pub const ERR_BAD_FRAME: u16 = 1;
+pub const ERR_UNKNOWN_MODEL: u16 = 2;
+pub const ERR_BAD_INPUT: u16 = 3;
+pub const ERR_OVERLOADED: u16 = 4;
+pub const ERR_SHUTTING_DOWN: u16 = 5;
+pub const ERR_INTERNAL: u16 = 6;
+
+/// One decoded frame body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Evaluate `batch` row-major samples of `n_in` codes on `model`.
+    Infer { model: String, batch: u32, n_in: u32, codes: Vec<i32> },
+    /// Row-major output codes for a completed [`Message::Infer`].
+    Result { batch: u32, out_width: u32, codes: Vec<i32> },
+    /// A rejected or failed request — an answer, not a disconnect.
+    Error { code: u16, message: String },
+    /// Request serving statistics (`model` empty: all models).
+    Stats { model: String },
+    /// JSON statistics document (see `net::server` for the schema).
+    StatsResult { json: String },
+    /// Liveness / drain probe.
+    Ping,
+    /// Answer to [`Message::Ping`].
+    Pong,
+}
+
+impl Message {
+    pub fn kind(&self) -> u16 {
+        match self {
+            Message::Infer { .. } => KIND_INFER,
+            Message::Result { .. } => KIND_RESULT,
+            Message::Error { .. } => KIND_ERROR,
+            Message::Stats { .. } => KIND_STATS,
+            Message::StatsResult { .. } => KIND_STATS_RESULT,
+            Message::Ping => KIND_PING,
+            Message::Pong => KIND_PONG,
+        }
+    }
+}
+
+/// One frame: the echoed request id plus the decoded body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub id: u64,
+    pub msg: Message,
+}
+
+/// Typed decode/transport failure.  [`WireError::is_fatal`] tells a
+/// peer whether framing sync survives (answer and continue) or not
+/// (answer best-effort, then close).
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    BadMagic([u8; 4]),
+    BadVersion(u16),
+    Oversize(u32),
+    BadChecksum,
+    UnknownKind(u16),
+    Malformed(String),
+}
+
+impl WireError {
+    /// True when the byte stream can no longer be trusted to be
+    /// frame-aligned (close the connection after answering).
+    pub fn is_fatal(&self) -> bool {
+        matches!(self,
+                 WireError::Io(_) | WireError::BadMagic(_)
+                 | WireError::BadVersion(_) | WireError::Oversize(_))
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "transport: {e}"),
+            WireError::BadMagic(m) => {
+                write!(f, "bad magic {m:02x?} (expected \"NLWP\")")
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this peer \
+                           speaks version {WIRE_VERSION})")
+            }
+            WireError::Oversize(n) => {
+                write!(f, "body length {n} exceeds the {MAX_BODY}-byte cap")
+            }
+            WireError::BadChecksum => {
+                write!(f, "body checksum mismatch (frame corrupt)")
+            }
+            WireError::UnknownKind(k) => {
+                write!(f, "unknown frame kind {k}")
+            }
+            WireError::Malformed(m) => write!(f, "malformed body: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// Low 32 bits of FNV-1a — the body checksum.
+fn checksum(body: &[u8]) -> u32 {
+    fnv1a(body) as u32
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32s(out: &mut Vec<u8>, vs: &[i32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_name(out: &mut Vec<u8>, name: &str) {
+    debug_assert!(name.len() <= MAX_NAME, "encoder name too long");
+    put_u16(out, name.len() as u16);
+    out.extend_from_slice(name.as_bytes());
+}
+
+/// Serialize one frame.  Encoding is canonical: decoding the result
+/// and re-encoding it reproduces the bytes (the golden-frame test
+/// holds both implementations to this).
+pub fn encode_frame(id: u64, msg: &Message) -> Vec<u8> {
+    let mut body = Vec::new();
+    match msg {
+        Message::Infer { model, batch, n_in, codes } => {
+            put_name(&mut body, model);
+            put_u32(&mut body, *batch);
+            put_u32(&mut body, *n_in);
+            put_i32s(&mut body, codes);
+        }
+        Message::Result { batch, out_width, codes } => {
+            put_u32(&mut body, *batch);
+            put_u32(&mut body, *out_width);
+            put_i32s(&mut body, codes);
+        }
+        Message::Error { code, message } => {
+            put_u16(&mut body, *code);
+            // truncate at a char boundary so the field always fits
+            let mut cut = message.len().min(MAX_MESSAGE);
+            while cut > 0 && !message.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            put_u16(&mut body, cut as u16);
+            body.extend_from_slice(&message.as_bytes()[..cut]);
+        }
+        Message::Stats { model } => {
+            put_name(&mut body, model);
+        }
+        Message::StatsResult { json } => {
+            body.extend_from_slice(json.as_bytes());
+        }
+        Message::Ping | Message::Pong => {}
+    }
+    debug_assert!(body.len() <= MAX_BODY, "encoder body over cap");
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&WIRE_MAGIC);
+    put_u16(&mut out, WIRE_VERSION);
+    put_u16(&mut out, msg.kind());
+    put_u64(&mut out, id);
+    put_u32(&mut out, body.len() as u32);
+    put_u32(&mut out, checksum(&body));
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Bounds-checked little-endian cursor over a frame body.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Malformed(format!(
+                "{what} needs {n} bytes at offset {}, only {} left",
+                self.pos, self.remaining())));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn i32s(&mut self, count: usize, what: &str)
+            -> Result<Vec<i32>, WireError> {
+        let n = count.checked_mul(4).ok_or_else(|| {
+            WireError::Malformed(format!("{what}: count overflow"))
+        })?;
+        Ok(self.take(n, what)?
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn name(&mut self, what: &str) -> Result<String, WireError> {
+        let len = self.u16(what)? as usize;
+        if len > MAX_NAME {
+            return Err(WireError::Malformed(format!(
+                "{what} length {len} exceeds the {MAX_NAME}-byte cap")));
+        }
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| {
+            WireError::Malformed(format!("{what} is not UTF-8"))
+        })
+    }
+}
+
+/// Decoded header: the fixed part of a frame, validated except for the
+/// body checksum (which needs the body).
+struct Header {
+    kind: u16,
+    id: u64,
+    body_len: usize,
+    body_sum: u32,
+}
+
+fn decode_header(h: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
+    if h[..4] != WIRE_MAGIC {
+        return Err(WireError::BadMagic([h[0], h[1], h[2], h[3]]));
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let kind = u16::from_le_bytes([h[6], h[7]]);
+    let id = u64::from_le_bytes(h[8..16].try_into().unwrap());
+    let body_len = u32::from_le_bytes(h[16..20].try_into().unwrap());
+    if body_len as usize > MAX_BODY {
+        return Err(WireError::Oversize(body_len));
+    }
+    let body_sum = u32::from_le_bytes(h[20..24].try_into().unwrap());
+    Ok(Header { kind, id, body_len: body_len as usize, body_sum })
+}
+
+fn decode_body(kind: u16, body: &[u8]) -> Result<Message, WireError> {
+    let mut c = Cursor::new(body);
+    let msg = match kind {
+        KIND_INFER => {
+            let model = c.name("model name")?;
+            let batch = c.u32("batch")?;
+            let n_in = c.u32("n_in")?;
+            let count = (batch as usize)
+                .checked_mul(n_in as usize)
+                .ok_or_else(|| {
+                    WireError::Malformed("batch * n_in overflow".into())
+                })?;
+            let codes = c.i32s(count, "input codes")?;
+            Message::Infer { model, batch, n_in, codes }
+        }
+        KIND_RESULT => {
+            let batch = c.u32("batch")?;
+            let out_width = c.u32("out_width")?;
+            let count = (batch as usize)
+                .checked_mul(out_width as usize)
+                .ok_or_else(|| {
+                    WireError::Malformed("batch * out_width overflow".into())
+                })?;
+            let codes = c.i32s(count, "output codes")?;
+            Message::Result { batch, out_width, codes }
+        }
+        KIND_ERROR => {
+            let code = c.u16("error code")?;
+            let len = c.u16("message length")? as usize;
+            let bytes = c.take(len, "message")?;
+            let message = String::from_utf8(bytes.to_vec()).map_err(|_| {
+                WireError::Malformed("error message is not UTF-8".into())
+            })?;
+            Message::Error { code, message }
+        }
+        KIND_STATS => Message::Stats { model: c.name("model name")? },
+        KIND_STATS_RESULT => {
+            let bytes = c.take(c.remaining(), "stats json")?;
+            let json = String::from_utf8(bytes.to_vec()).map_err(|_| {
+                WireError::Malformed("stats json is not UTF-8".into())
+            })?;
+            Message::StatsResult { json }
+        }
+        KIND_PING => Message::Ping,
+        KIND_PONG => Message::Pong,
+        other => return Err(WireError::UnknownKind(other)),
+    };
+    if c.remaining() != 0 {
+        return Err(WireError::Malformed(format!(
+            "{} trailing bytes after the body", c.remaining())));
+    }
+    Ok(msg)
+}
+
+/// Parse exactly one frame from the front of `bytes`; returns the
+/// frame and the number of bytes consumed.  Total: any input either
+/// parses or yields a typed error, never panics.
+pub fn decode_frame(bytes: &[u8]) -> Result<(Frame, usize), WireError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(WireError::Malformed(format!(
+            "truncated header: {} bytes, need {HEADER_LEN}", bytes.len())));
+    }
+    let header: [u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+    let h = decode_header(&header)?;
+    let total = HEADER_LEN + h.body_len;
+    if bytes.len() < total {
+        return Err(WireError::Malformed(format!(
+            "truncated body: frame needs {total} bytes, have {}",
+            bytes.len())));
+    }
+    let body = &bytes[HEADER_LEN..total];
+    if checksum(body) != h.body_sum {
+        return Err(WireError::BadChecksum);
+    }
+    let msg = decode_body(h.kind, body)?;
+    Ok((Frame { id: h.id, msg }, total))
+}
+
+/// Read one frame from a blocking stream.  Fatal errors ([`WireError::
+/// is_fatal`]) mean the stream is no longer frame-aligned; recoverable
+/// ones consumed the whole frame, so the caller may answer with a
+/// [`Message::Error`] and keep reading.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut hb = [0u8; HEADER_LEN];
+    r.read_exact(&mut hb)?;
+    let h = decode_header(&hb)?;
+    let mut body = vec![0u8; h.body_len];
+    r.read_exact(&mut body)?;
+    if checksum(&body) != h.body_sum {
+        return Err(WireError::BadChecksum);
+    }
+    let msg = decode_body(h.kind, &body)?;
+    Ok(Frame { id: h.id, msg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<(u64, Message)> {
+        vec![
+            (1, Message::Ping),
+            (2, Message::Pong),
+            (0x0123_4567_89AB_CDEF,
+             Message::Infer { model: "nid".into(), batch: 2, n_in: 3,
+                              codes: vec![0, 1, -2, 3, 2, 1] }),
+            (7, Message::Result { batch: 2, out_width: 1,
+                                  codes: vec![1, -3] }),
+            (8, Message::Error { code: ERR_OVERLOADED,
+                                 message: "shed".into() }),
+            (9, Message::Stats { model: String::new() }),
+            (10, Message::Stats { model: "jsc".into() }),
+            (11, Message::StatsResult { json: "{\"x\":1}".into() }),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_every_kind() {
+        for (id, msg) in sample_frames() {
+            let bytes = encode_frame(id, &msg);
+            let (frame, used) = decode_frame(&bytes).unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(frame.id, id);
+            assert_eq!(frame.msg, msg);
+            // canonical: re-encoding reproduces the bytes
+            assert_eq!(encode_frame(frame.id, &frame.msg), bytes);
+        }
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_length() {
+        let bytes = encode_frame(3, &Message::Infer {
+            model: "m".into(), batch: 2, n_in: 2,
+            codes: vec![1, 2, 3, 4],
+        });
+        for n in 0..bytes.len() {
+            assert!(decode_frame(&bytes[..n]).is_err(),
+                    "prefix {n} accepted");
+        }
+    }
+
+    #[test]
+    fn single_byte_body_corruption_is_always_caught() {
+        let bytes = encode_frame(4, &Message::Infer {
+            model: "model".into(), batch: 3, n_in: 4,
+            codes: (0..12).collect(),
+        });
+        for pos in HEADER_LEN..bytes.len() {
+            for flip in [0x01u8, 0x80, 0xFF] {
+                let mut evil = bytes.clone();
+                evil[pos] ^= flip;
+                match decode_frame(&evil) {
+                    Err(WireError::BadChecksum) => {}
+                    other => panic!(
+                        "body byte {pos} ^ {flip:#x}: expected checksum \
+                         failure, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_fatal() {
+        let mut bytes = encode_frame(5, &Message::Ping);
+        bytes[0] = b'X';
+        let err = decode_frame(&bytes).unwrap_err();
+        assert!(matches!(err, WireError::BadMagic(_)));
+        assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn bad_version_is_fatal() {
+        let mut bytes = encode_frame(5, &Message::Ping);
+        bytes[4] = WIRE_VERSION as u8 + 1;
+        let err = decode_frame(&bytes).unwrap_err();
+        assert!(matches!(err, WireError::BadVersion(_)));
+        assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn oversize_length_is_fatal_and_rejected_before_allocation() {
+        let mut bytes = encode_frame(5, &Message::Ping);
+        bytes[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_frame(&bytes).unwrap_err();
+        assert!(matches!(err, WireError::Oversize(_)));
+        assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn unknown_kind_is_recoverable() {
+        let mut bytes = encode_frame(5, &Message::Ping);
+        bytes[6] = 0xEE;
+        let err = decode_frame(&bytes).unwrap_err();
+        assert!(matches!(err, WireError::UnknownKind(_)));
+        assert!(!err.is_fatal());
+    }
+
+    #[test]
+    fn checksum_and_malformed_are_recoverable() {
+        assert!(!WireError::BadChecksum.is_fatal());
+        assert!(!WireError::Malformed("x".into()).is_fatal());
+    }
+
+    #[test]
+    fn rejects_overlong_name() {
+        // hand-build an infer body with a name over the cap, with a
+        // consistent checksum so only the name check can reject it
+        let mut body = Vec::new();
+        put_u16(&mut body, (MAX_NAME + 1) as u16);
+        body.extend_from_slice(&vec![b'a'; MAX_NAME + 1]);
+        put_u32(&mut body, 1);
+        put_u32(&mut body, 0);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&WIRE_MAGIC);
+        put_u16(&mut bytes, WIRE_VERSION);
+        put_u16(&mut bytes, KIND_INFER);
+        put_u64(&mut bytes, 1);
+        put_u32(&mut bytes, body.len() as u32);
+        put_u32(&mut bytes, checksum(&body));
+        bytes.extend_from_slice(&body);
+        let err = decode_frame(&bytes).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn rejects_trailing_bytes_in_body() {
+        // a Ping body must be empty: splice one byte in and fix up the
+        // header so only the body-shape check can reject it
+        let mut bytes = encode_frame(6, &Message::Ping);
+        bytes.push(0x55);
+        let blen = 1u32;
+        bytes[16..20].copy_from_slice(&blen.to_le_bytes());
+        let sum = checksum(&[0x55]);
+        bytes[20..24].copy_from_slice(&sum.to_le_bytes());
+        let err = decode_frame(&bytes).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn error_message_is_truncated_at_char_boundary() {
+        let long = "é".repeat(MAX_MESSAGE); // 2 bytes per char
+        let bytes = encode_frame(1, &Message::Error {
+            code: ERR_INTERNAL, message: long,
+        });
+        let (frame, _) = decode_frame(&bytes).unwrap();
+        match frame.msg {
+            Message::Error { message, .. } => {
+                assert!(message.len() <= MAX_MESSAGE);
+                assert!(!message.is_empty());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_reader_handles_back_to_back_frames_and_eof() {
+        let mut stream = Vec::new();
+        for (id, msg) in sample_frames() {
+            stream.extend_from_slice(&encode_frame(id, &msg));
+        }
+        let mut r = std::io::Cursor::new(stream);
+        for (id, msg) in sample_frames() {
+            let frame = read_frame(&mut r).unwrap();
+            assert_eq!(frame.id, id);
+            assert_eq!(frame.msg, msg);
+        }
+        // clean EOF at a frame boundary surfaces as a fatal Io error
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(matches!(err, WireError::Io(_)));
+        assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn mid_frame_eof_is_fatal_io() {
+        let bytes = encode_frame(9, &Message::Stats { model: "m".into() });
+        // cut inside the body: header parses, body read hits EOF
+        let mut r = std::io::Cursor::new(bytes[..HEADER_LEN + 1].to_vec());
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(matches!(err, WireError::Io(_)));
+        assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn zero_width_result_roundtrips() {
+        // out_width 0 (a hollow model) is representable: batch > 0,
+        // empty codes
+        let msg = Message::Result { batch: 3, out_width: 0,
+                                    codes: vec![] };
+        let bytes = encode_frame(12, &msg);
+        let (frame, _) = decode_frame(&bytes).unwrap();
+        assert_eq!(frame.msg, msg);
+    }
+}

@@ -75,8 +75,10 @@ const FLAG_PLAN: u16 = 1;
 /// FNV-1a over raw bytes — the payload checksum.  (The *content* hash
 /// is [`Netlist::content_hash`], an FNV-1a over the decoded structure;
 /// this one detects corruption anywhere in the encoded payload,
-/// including the plan image, before any of it is parsed.)
-pub(super) fn fnv1a(bytes: &[u8]) -> u64 {
+/// including the plan image, before any of it is parsed.)  Also the
+/// frame checksum of the TCP wire protocol (`net::wire` truncates it
+/// to 32 bits), re-exported crate-wide from `netlist`.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xCBF2_9CE4_8422_2325u64;
     for &b in bytes {
         h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);

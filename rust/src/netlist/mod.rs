@@ -32,6 +32,7 @@ mod sim;
 
 pub use format::{load_nlb, read_nlb, save_nlb, write_nlb, NlbModel,
                  NLB_MAGIC, NLB_VERSION};
+pub(crate) use format::fnv1a;
 pub use opt::{optimize, ConstantFold, Cse, DeadLogic, OptLevel,
               OptReport, Pass, PassDelta, PassManager};
 pub use plan::{compile, plan_key, ExecPlan, PlanCache, PlanExecutor,

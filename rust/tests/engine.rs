@@ -257,6 +257,48 @@ fn shutdown_under_concurrent_load() {
 }
 
 #[test]
+fn conformance_tcp_remote_engine_on_artifact_matches_plan_executor() {
+    // the full deployment chain: export an `.nlb` artifact, load it
+    // into a server, expose it over TCP, and hold the remote engine to
+    // the exact same contract as the in-process executor of the same
+    // artifact — the wire adds frames, never bits
+    use neuralut::net::{NetConfig, NetServer, RemoteEngine};
+    use neuralut::netlist::{load_nlb, save_nlb};
+
+    let nl = random_netlist(96, 8, 1, &[(6, 3, 2), (4, 2, 2)]);
+    let plan = nl.compile_plan(PlanOptions::default());
+    let path = std::env::temp_dir().join(format!(
+        "nid_net_artifact_{}.nlb", std::process::id()));
+    save_nlb(&path, &nl, Some(&plan)).unwrap();
+    let model = load_nlb(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // in-process reference: the artifact's own plan image
+    let image = model.plan.clone().expect("artifact carries a plan");
+    let mut local = PlanExecutor::new(image);
+
+    let mut registry = ModelRegistry::new();
+    registry.register_artifact("art", model);
+    let server = InferenceServer::start(registry, ServerConfig::default());
+    let net = NetServer::bind(server, "127.0.0.1:0",
+                              NetConfig::default()).unwrap();
+    let mut remote = RemoteEngine::open(net.local_addr(), "art").unwrap();
+
+    // the remote engine satisfies the engine contract end to end
+    // (shape, bit-exactness vs eval_one, determinism, rejection)
+    check_conformance(&mut remote, &nl, 96).unwrap();
+
+    // and answers bit-exactly what the in-process executor answers
+    for batch in [1usize, 7, 64, 129] {
+        let x = random_inputs(97 ^ batch as u64, &nl, batch);
+        let want = local.run_batch(&x, batch).unwrap();
+        let got = remote.run_batch(&x, batch).unwrap();
+        assert_eq!(got, want, "batch {batch}: TCP differs from local");
+    }
+    net.shutdown();
+}
+
+#[test]
 fn server_requests_after_engine_use_still_route() {
     // an engine view and direct infer calls share the same router
     let nl = random_netlist(95, 6, 1, &[(4, 2, 2), (2, 2, 2)]);

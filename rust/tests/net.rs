@@ -1,0 +1,423 @@
+//! TCP serving-frontend battery: the committed cross-language golden
+//! frames, wire-level corruption over a live socket (truncations,
+//! flipped bytes, hostile length prefixes, mid-frame disconnects —
+//! typed errors or clean closes, never a panic or a hang), admission
+//! control under flood (explicit sheds, counted in stats), and
+//! graceful drain (in-flight responses flush, new work is refused).
+//!
+//! The python twin of the golden-frame test is
+//! `python/tests/test_wire.py`; regenerate the goldens with
+//! `python -m tests.golden_wire` from `python/`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use neuralut::coordinator::{InferenceServer, ModelRegistry, ServerConfig};
+use neuralut::net::wire::{self, Frame, Message};
+use neuralut::net::{Client, InferError, NetConfig, NetServer, NetSession,
+                    Session, INPUT_X, OUTPUT_Y};
+use neuralut::netlist::testutil::{random_inputs, random_netlist};
+use neuralut::netlist::Netlist;
+use neuralut::util::Json;
+
+/// The committed golden frames — keep in lockstep with
+/// `python/tests/golden_wire.py::golden_frames`.
+fn golden_frames() -> Vec<(u64, Message)> {
+    vec![
+        (1, Message::Ping),
+        (2, Message::Pong),
+        (0x0123_4567_89AB_CDEF,
+         Message::Infer { model: "nid".into(), batch: 2, n_in: 3,
+                          codes: vec![0, 1, -2, 3, 2, 1] }),
+        (4, Message::Infer {
+            model: "golden_mix".into(), batch: 4, n_in: 5,
+            codes: (0..20).map(|i| (i * 7) % 19 - 9).collect(),
+        }),
+        (7, Message::Result { batch: 2, out_width: 1,
+                              codes: vec![1, -3] }),
+        (8, Message::Error { code: wire::ERR_OVERLOADED,
+                             message: "shed".into() }),
+        (9, Message::Stats { model: String::new() }),
+        (10, Message::Stats { model: "jsc".into() }),
+        (11, Message::StatsResult { json: "{\"x\":1}".into() }),
+        (12, Message::Result { batch: 3, out_width: 0, codes: vec![] }),
+    ]
+}
+
+#[test]
+fn golden_wire_frames_decode_and_reencode() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                       "/rust/tests/golden/golden_frames.bin");
+    let bytes = std::fs::read(path)
+        .expect("tests/golden/golden_frames.bin is committed");
+    let mut offset = 0;
+    for (id, msg) in golden_frames() {
+        let (frame, used) = wire::decode_frame(&bytes[offset..])
+            .unwrap_or_else(|e| panic!("frame id {id}: {e}"));
+        assert_eq!(frame.id, id);
+        assert_eq!(frame.msg, msg);
+        // canonical: the rust encoder reproduces the python bytes
+        assert_eq!(wire::encode_frame(id, &msg),
+                   &bytes[offset..offset + used], "frame id {id}");
+        offset += used;
+    }
+    assert_eq!(offset, bytes.len(), "trailing bytes in the golden file");
+}
+
+/// A small served model plus its reference netlist.
+fn serve(seed: u64, cfg: NetConfig) -> (NetServer, Netlist) {
+    let nl = random_netlist(seed, 6, 1, &[(5, 2, 2), (3, 2, 2)]);
+    let mut registry = ModelRegistry::new();
+    registry.register("m", nl.clone());
+    let server = InferenceServer::start(
+        registry,
+        ServerConfig { max_batch: 8, max_wait: Duration::from_micros(100),
+                       workers: 2, ..ServerConfig::default() },
+    );
+    let net = NetServer::bind(server, "127.0.0.1:0", cfg)
+        .expect("bind loopback");
+    (net, nl)
+}
+
+#[test]
+fn tcp_infer_is_bit_exact_and_stats_count_it() {
+    let (net, nl) = serve(201, NetConfig::default());
+    let mut c = Client::connect(net.local_addr()).unwrap();
+    c.ping().unwrap();
+    let batch = 17;
+    let x = random_inputs(201, &nl, batch);
+    let y = c.infer("m", batch, 6, x.clone()).unwrap();
+    let ow = nl.out_width();
+    assert_eq!(y.len(), batch * ow);
+    for b in 0..batch {
+        let want = nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap();
+        assert_eq!(&y[b * ow..(b + 1) * ow], &want[..], "row {b}");
+    }
+    let doc = Json::parse(&c.stats("m").unwrap()).unwrap();
+    let models = doc.at("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 1);
+    let m = &models[0];
+    assert_eq!(m.at("model").unwrap().as_str().unwrap(), "m");
+    assert_eq!(m.at("n_in").unwrap().as_usize().unwrap(), 6);
+    assert_eq!(m.at("out_width").unwrap().as_usize().unwrap(), ow);
+    let netc = m.at("net").unwrap();
+    assert_eq!(netc.at("requests").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(netc.at("rows").unwrap().as_usize().unwrap(), batch);
+    assert_eq!(netc.at("shed").unwrap().as_usize().unwrap(), 0);
+    // the batcher saw every row
+    assert_eq!(m.at("requests").unwrap().as_usize().unwrap(), batch);
+    net.shutdown();
+}
+
+#[test]
+fn tcp_rejections_are_typed_values_and_connection_survives() {
+    let (net, _nl) = serve(202, NetConfig::default());
+    let mut c = Client::connect(net.local_addr()).unwrap();
+    // unknown model
+    match c.infer("ghost", 1, 6, vec![0; 6]) {
+        Err(InferError::UnknownModel(_)) => {}
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    // wrong declared width
+    match c.infer("m", 1, 5, vec![0; 5]) {
+        Err(InferError::BadInput(_)) => {}
+        other => panic!("expected BadInput, got {other:?}"),
+    }
+    // zero batch
+    match c.infer("m", 0, 6, vec![]) {
+        Err(InferError::BadInput(_)) => {}
+        other => panic!("expected BadInput, got {other:?}"),
+    }
+    // stats for an unknown model
+    match c.stats("ghost") {
+        Err(InferError::UnknownModel(_)) => {}
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    // the connection answered four rejections and still works
+    c.ping().unwrap();
+    let y = c.infer("m", 1, 6, vec![0; 6]).unwrap();
+    assert!(!y.is_empty());
+    net.shutdown();
+}
+
+#[test]
+fn corrupt_frames_get_typed_errors_recoverable_keeps_connection() {
+    let (net, nl) = serve(203, NetConfig::default());
+    let mut c = Client::connect(net.local_addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // flip one body byte: checksum catches it, server answers with an
+    // id-0 BAD_FRAME error and the connection stays in sync
+    let x = random_inputs(203, &nl, 1);
+    let good = wire::encode_frame(77, &Message::Infer {
+        model: "m".into(), batch: 1, n_in: 6, codes: x.clone(),
+    });
+    let mut evil = good.clone();
+    let last = evil.len() - 1;
+    evil[last] ^= 0x20;
+    // write the corrupt frame through a raw socket
+    let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+    raw.set_nodelay(true).unwrap();
+    raw.write_all(&evil).unwrap();
+    let frame = read_one(&mut raw);
+    match frame.msg {
+        Message::Error { code, .. } => {
+            assert_eq!(code, wire::ERR_BAD_FRAME);
+            assert_eq!(frame.id, 0, "corrupt ids must not be echoed");
+        }
+        other => panic!("expected error frame, got {other:?}"),
+    }
+    // same connection, valid frame: still served
+    raw.write_all(&good).unwrap();
+    let frame = read_one(&mut raw);
+    match frame.msg {
+        Message::Result { codes, .. } => {
+            assert_eq!(codes, nl.eval_one(&x).unwrap());
+            assert_eq!(frame.id, 77);
+        }
+        other => panic!("expected result frame, got {other:?}"),
+    }
+
+    // unknown kind: recoverable too
+    let mut unk = wire::encode_frame(5, &Message::Ping);
+    unk[6] = 0xEE;
+    raw.write_all(&unk).unwrap();
+    match read_one(&mut raw).msg {
+        Message::Error { code, .. } => {
+            assert_eq!(code, wire::ERR_BAD_FRAME);
+        }
+        other => panic!("expected error frame, got {other:?}"),
+    }
+    // a response-kind frame from a client is answered, not fatal
+    raw.write_all(&wire::encode_frame(6, &Message::Pong)).unwrap();
+    match read_one(&mut raw).msg {
+        Message::Error { code, .. } => {
+            assert_eq!(code, wire::ERR_BAD_FRAME);
+        }
+        other => panic!("expected error frame, got {other:?}"),
+    }
+    drop(raw);
+    c.ping().unwrap();
+    net.shutdown();
+}
+
+#[test]
+fn fatal_corruption_answers_then_closes_cleanly() {
+    let (net, _nl) = serve(204, NetConfig::default());
+    // exactly one header each, so the server closes with nothing
+    // unread (an unread byte would turn the close into a reset and
+    // could discard the error frame in flight)
+    for evil in [
+        // bad magic: answered best-effort, then closed
+        vec![b'X'; wire::HEADER_LEN],
+        // hostile length prefix (4 GiB body): rejected before any
+        // allocation, answered, closed
+        {
+            let mut b = wire::encode_frame(9, &Message::Ping);
+            b[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+            b
+        },
+        // wrong version: answered, closed
+        {
+            let mut b = wire::encode_frame(9, &Message::Ping);
+            b[4] = 0x42;
+            b
+        },
+    ] {
+        let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        raw.write_all(&evil).unwrap();
+        let frame = read_one(&mut raw);
+        match frame.msg {
+            Message::Error { code, .. } => {
+                assert_eq!(code, wire::ERR_BAD_FRAME);
+            }
+            other => panic!("expected error frame, got {other:?}"),
+        }
+        // ... and the server closes: the next read hits EOF, it does
+        // not hang
+        let mut rest = Vec::new();
+        raw.read_to_end(&mut rest).expect("clean close, not a hang");
+        assert!(rest.is_empty(), "unexpected bytes after the error");
+    }
+    // the server survived three hostile connections
+    let mut c = Client::connect(net.local_addr()).unwrap();
+    c.ping().unwrap();
+    net.shutdown();
+}
+
+#[test]
+fn mid_frame_disconnect_does_not_wedge_the_server() {
+    let (net, nl) = serve(205, NetConfig::default());
+    // half a header
+    let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+    raw.write_all(b"NLWP\x01\x00").unwrap();
+    drop(raw);
+    // a full header promising a body that never comes
+    let full = wire::encode_frame(3, &Message::Infer {
+        model: "m".into(), batch: 1, n_in: 6, codes: vec![0; 6],
+    });
+    let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+    raw.write_all(&full[..wire::HEADER_LEN + 3]).unwrap();
+    drop(raw);
+    // the server is still fully alive
+    let mut c = Client::connect(net.local_addr()).unwrap();
+    let x = random_inputs(205, &nl, 2);
+    let y = c.infer("m", 2, 6, x.clone()).unwrap();
+    let ow = nl.out_width();
+    for b in 0..2 {
+        assert_eq!(&y[b * ow..(b + 1) * ow],
+                   &nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap()[..]);
+    }
+    net.shutdown();
+}
+
+#[test]
+fn overload_sheds_explicitly_and_counts_in_stats() {
+    // admission bound of 1 row: pipelined single-row requests race the
+    // writer, so a flood must shed; a batch wider than the bound is
+    // shed deterministically even when idle
+    let (net, nl) = serve(206, NetConfig {
+        max_inflight: 1,
+        ..NetConfig::default()
+    });
+    let mut c = Client::connect(net.local_addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // deterministic: batch 4 > bound 1 is always OVERLOADED
+    match c.infer("m", 4, 6, random_inputs(206, &nl, 4)) {
+        Err(InferError::Overloaded) => {}
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+
+    // flood: pipeline many single-row requests without reading
+    let flood = 400usize;
+    let x = random_inputs(207, &nl, flood);
+    let mut ids = Vec::with_capacity(flood);
+    for i in 0..flood {
+        let row = x[i * 6..(i + 1) * 6].to_vec();
+        ids.push(c.send_infer("m", 1, 6, row).unwrap());
+    }
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    let ow = nl.out_width();
+    for (i, id) in ids.into_iter().enumerate() {
+        let frame = c.recv_frame().unwrap();
+        assert_eq!(frame.id, id, "responses arrive in request order");
+        match frame.msg {
+            Message::Result { codes, .. } => {
+                let want =
+                    nl.eval_one(&x[i * 6..(i + 1) * 6]).unwrap();
+                assert_eq!(codes[..ow], want[..], "row {i}");
+                ok += 1;
+            }
+            Message::Error { code, .. } => {
+                assert_eq!(code, wire::ERR_OVERLOADED,
+                           "only sheds may fail under flood");
+                shed += 1;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed, flood);
+    assert!(ok > 0, "nothing was served under flood");
+    assert!(shed > 0, "a 1-row bound never shed under a 400-deep flood");
+    // every shed (incl. the deterministic batch-4 one) is counted
+    let stats = c.stats("").expect("stats stay queryable after overload");
+    let doc = Json::parse(&stats).unwrap();
+    let m = &doc.at("models").unwrap().as_arr().unwrap()[0];
+    let counted =
+        m.at("net").unwrap().at("shed").unwrap().as_usize().unwrap();
+    assert_eq!(counted, shed + 1, "stats shed count disagrees");
+    let srv = doc.at("server").unwrap();
+    assert_eq!(srv.at("shed_total").unwrap().as_usize().unwrap(),
+               shed + 1);
+    assert_eq!(srv.at("max_inflight").unwrap().as_usize().unwrap(), 1);
+    net.shutdown();
+}
+
+#[test]
+fn graceful_drain_flushes_inflight_then_refuses_new_connections() {
+    let (net, nl) = serve(208, NetConfig::default());
+    let addr = net.local_addr();
+    let mut c = Client::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // put work in flight, then drain while it is pending
+    let k = 64usize;
+    let x = random_inputs(208, &nl, k);
+    let mut ids = Vec::new();
+    for i in 0..k {
+        ids.push(c.send_infer("m", 1, 6,
+                              x[i * 6..(i + 1) * 6].to_vec()).unwrap());
+    }
+    // let admissions land so the drain has real in-flight work
+    std::thread::sleep(Duration::from_millis(50));
+    let t = Instant::now();
+    net.shutdown();
+    assert!(t.elapsed() < Duration::from_secs(10), "drain hung");
+    // every in-flight request got an answer: a bit-exact result or a
+    // typed shutting-down error, never silence
+    let ow = nl.out_width();
+    let mut answered = 0usize;
+    for (i, id) in ids.into_iter().enumerate() {
+        let frame = c.recv_frame().unwrap_or_else(|e| {
+            panic!("request {i} got no answer before close: {e}")
+        });
+        assert_eq!(frame.id, id);
+        match frame.msg {
+            Message::Result { codes, .. } => {
+                let want = nl.eval_one(&x[i * 6..(i + 1) * 6]).unwrap();
+                assert_eq!(codes[..ow], want[..], "row {i}");
+                answered += 1;
+            }
+            Message::Error { code, .. } => {
+                assert_eq!(code, wire::ERR_SHUTTING_DOWN);
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert!(answered > 0, "drain answered nothing");
+    // new connections are refused (or immediately closed) after drain
+    match TcpStream::connect(addr) {
+        Err(_) => {}
+        Ok(mut s) => {
+            s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            s.write_all(&wire::encode_frame(1, &Message::Ping)).ok();
+            let mut buf = Vec::new();
+            // a drained server never answers; EOF or reset, not a hang
+            assert!(matches!(s.read_to_end(&mut buf), Ok(0) | Err(_)),
+                    "drained server still answering");
+        }
+    }
+    // shutdown is idempotent
+    net.shutdown();
+}
+
+#[test]
+fn net_session_speaks_the_session_api_over_tcp() {
+    let (net, nl) = serve(209, NetConfig::default());
+    let mut s = NetSession::open(net.local_addr(), "m").unwrap();
+    assert_eq!(s.input_names(), [INPUT_X.to_string()]);
+    assert_eq!(s.output_names(), [OUTPUT_Y.to_string()]);
+    let x = random_inputs(209, &nl, 9);
+    let out = s.run(&[(INPUT_X, &x[..])]).unwrap();
+    let y = &out[OUTPUT_Y];
+    let ow = nl.out_width();
+    for b in 0..9 {
+        let want = nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap();
+        assert_eq!(&y[b * ow..(b + 1) * ow], &want[..], "row {b}");
+    }
+    // bad inputs are values here exactly as in-process
+    assert!(matches!(s.run(&[("z", &x[..])]),
+                     Err(InferError::BadInput(_))));
+    assert!(matches!(s.run(&[(INPUT_X, &x[..5])]),
+                     Err(InferError::BadInput(_))));
+    net.shutdown();
+}
+
+/// Read one frame off a raw socket (test helper).
+fn read_one(s: &mut TcpStream) -> Frame {
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    wire::read_frame(s).expect("a frame")
+}
