@@ -1,7 +1,7 @@
 //! L3 hot-path microbenchmarks: netlist simulator throughput (gather vs
 //! bit-plane kernels, interpreted walk vs compiled execution plan,
-//! single- and multi-threaded) and the batching server, used for
-//! EXPERIMENTS.md §Hot path.  Custom harness (no criterion offline);
+//! scalar vs wide-word lanes, single- and multi-threaded) and the
+//! batching server, used for EXPERIMENTS.md §Hot path.  Custom harness (no criterion offline);
 //! medians over repeated runs.  (`cargo bench --bench netlist_hotpath`)
 //!
 //! Two side outputs:
@@ -20,8 +20,8 @@ use neuralut::coordinator::{InferenceServer, ServerConfig};
 use neuralut::mapper::map_netlist;
 use neuralut::netlist::testutil::{random_inputs, random_netlist,
                                   random_reducible_netlist};
-use neuralut::netlist::{compile, optimize, Netlist, OptLevel, PlanCache,
-                        PlanOptions, SimOptions, ThreadMode};
+use neuralut::netlist::{compile, optimize, LaneSelect, Netlist, OptLevel,
+                        PlanCache, PlanOptions, SimOptions, ThreadMode};
 use neuralut::report::Table;
 use neuralut::util::Json;
 
@@ -152,6 +152,37 @@ fn main() {
                            default_opts, batch);
         if batch == 256 {
             speedup_256 = tg / tb;
+        }
+    }
+
+    // scalar vs wide-word lanes on the same compiled plan: identical
+    // bit-plane kernels, W 64-sample words per table evaluation (the
+    // lane ops auto-vectorize to the CPU's SIMD width).  The contract
+    // (enforced below, skipped under --quick): wide lanes strictly beat
+    // the scalar path once the batch fills several lane blocks
+    // (batch >= 1024, i.e. >= 16 words per plane); small batches carry
+    // no such promise — that is why auto-selection keeps them scalar.
+    let lane = |lanes| SimOptions { lanes, ..Default::default() };
+    let mut wide_speedup_1024 = 0.0;
+    for batch in [64usize, 256, 1024, 4096] {
+        let t1 = h.sim_row("jsc-like reducible (lanes w1)", &jsc_reduc,
+                           lane(LaneSelect::W1), batch);
+        let t4 = h.sim_row("jsc-like reducible (lanes w4)", &jsc_reduc,
+                           lane(LaneSelect::W4), batch);
+        let t8 = h.sim_row("jsc-like reducible (lanes w8)", &jsc_reduc,
+                           lane(LaneSelect::W8), batch);
+        println!("wide lanes @ batch {batch}: w4 {:.2}x, w8 {:.2}x vs \
+                  scalar", t1 / t4, t1 / t8);
+        if batch == 1024 {
+            wide_speedup_1024 = t1 / t4;
+        }
+        if !quick && batch >= 1024 {
+            assert!(t4 < t1,
+                    "w4 eval {:.1}us not faster than scalar {:.1}us at \
+                     batch {batch}", t4 * 1e6, t1 * 1e6);
+            assert!(t8 < t1,
+                    "w8 eval {:.1}us not faster than scalar {:.1}us at \
+                     batch {batch}", t8 * 1e6, t1 * 1e6);
         }
     }
 
@@ -338,6 +369,9 @@ fn main() {
     println!("compiled plan vs interpreted walk @ batch 1: \
               {small_batch_compiled:.2}x (must be > 1x; no batch may \
               regress)");
+    println!("wide lanes (w4) vs scalar @ batch 1024: \
+              {wide_speedup_1024:.2}x (strict win required at batch >= \
+              1024)");
     println!("pooled vs scoped workers @ batch 64 x2t: \
               {small_batch_speedup:.2}x (pool wakes where a spawn never \
               amortizes)");

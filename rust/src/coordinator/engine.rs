@@ -8,21 +8,26 @@
 //! * [`Simulator`] — the direct in-process path (serial, scoped-thread
 //!   or persistent-pool, per its `SimOptions`; executes a compiled
 //!   `ExecPlan` by default);
-//! * [`PlanExecutor`] — a compiled execution plan with private scratch,
-//!   the form server workers run (plans are compiled once per model and
-//!   shared immutably; the plan may equally come from an `.nlb`
-//!   artifact's plan image — the engine contract does not care which
-//!   producer built it);
+//! * [`WidePlanExecutor`] at every lane width — a compiled execution
+//!   plan with private scratch, the form server workers run (plans are
+//!   compiled once per model and shared immutably; the plan may equally
+//!   come from an `.nlb` artifact's plan image — the engine contract
+//!   does not care which producer built it).  `PlanExecutor` is the
+//!   scalar `W = 1` alias and the reference; wide executors are proven
+//!   bit-exact against it by the same conformance contract;
+//! * [`LaneExecutor`] — a `WidePlanExecutor` whose width was chosen at
+//!   runtime (`select_backend`), which is what servers actually hold;
 //! * [`ModelEngine`] — one named model hosted by an
 //!   [`InferenceServer`](super::server::InferenceServer), routed through
 //!   the shared router/worker pipeline.
 //!
 //! [`check_conformance`] is the engine contract as executable code; the
-//! `engine` integration suite runs it against every backend.
+//! `engine` integration suite runs it against every backend (including
+//! every lane width, and one width over TCP via `RemoteEngine`).
 
 use anyhow::Result;
 
-use crate::netlist::{Netlist, PlanExecutor, Simulator};
+use crate::netlist::{LaneExecutor, Netlist, Simulator, WidePlanExecutor};
 
 use super::server::InferenceServer;
 
@@ -69,7 +74,7 @@ impl InferenceEngine for Simulator<'_> {
     }
 }
 
-impl InferenceEngine for PlanExecutor {
+impl<const W: usize> InferenceEngine for WidePlanExecutor<W> {
     fn run_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<i32>> {
         let n_in = self.plan().n_in();
         anyhow::ensure!(x.len() == batch * n_in,
@@ -89,8 +94,35 @@ impl InferenceEngine for PlanExecutor {
     fn describe(&self) -> String {
         let opts = self.options();
         let st = self.plan().stats();
-        format!("plan[{}]: {}, {} threads ({:?})", self.plan().name(),
-                st.summary(), opts.threads, opts.mode)
+        format!("plan[{}]: {}, {} threads ({:?}), {}x64-sample lanes",
+                self.plan().name(), st.summary(), opts.threads, opts.mode,
+                self.lane_width())
+    }
+}
+
+impl InferenceEngine for LaneExecutor {
+    fn run_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<i32>> {
+        let n_in = self.plan().n_in();
+        anyhow::ensure!(x.len() == batch * n_in,
+                        "run_batch: input len {} != batch {batch} * n_in \
+                         {n_in}", x.len());
+        Ok(self.eval_batch(x, batch))
+    }
+
+    fn n_in(&self) -> usize {
+        self.plan().n_in()
+    }
+
+    fn out_width(&self) -> usize {
+        self.plan().out_width()
+    }
+
+    fn describe(&self) -> String {
+        let opts = self.options();
+        let st = self.plan().stats();
+        format!("plan[{}]: {}, {} threads ({:?}), {}x64-sample lanes",
+                self.plan().name(), st.summary(), opts.threads, opts.mode,
+                self.width())
     }
 }
 
@@ -193,6 +225,38 @@ mod tests {
         let mut ex = PlanExecutor::new(plan);
         check_conformance(&mut ex, &nl, 52).unwrap();
         assert!(ex.describe().starts_with("plan["));
+        assert!(ex.describe().contains("1x64-sample lanes"));
+    }
+
+    #[test]
+    fn wide_plan_executors_conform_at_every_width() {
+        use crate::netlist::PlanOptions;
+        use std::sync::Arc;
+        let nl = random_netlist(54, 10, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let plan = Arc::new(nl.compile_plan(PlanOptions::default()));
+        let mut w4: WidePlanExecutor<4> =
+            WidePlanExecutor::new(plan.clone());
+        check_conformance(&mut w4, &nl, 54).unwrap();
+        assert!(w4.describe().contains("4x64-sample lanes"));
+        let mut w8: WidePlanExecutor<8> = WidePlanExecutor::new(plan);
+        check_conformance(&mut w8, &nl, 54).unwrap();
+        assert!(w8.describe().contains("8x64-sample lanes"));
+    }
+
+    #[test]
+    fn lane_executor_conforms_at_every_width() {
+        use crate::netlist::{PlanOptions, SimOptions};
+        use std::sync::Arc;
+        let nl = random_netlist(55, 10, 1, &[(6, 3, 2), (3, 2, 2)]);
+        let plan = Arc::new(nl.compile_plan(PlanOptions::default()));
+        for width in [1usize, 4, 8] {
+            let mut ex = LaneExecutor::for_width(
+                width, plan.clone(), SimOptions::default());
+            check_conformance(&mut ex, &nl, 55).unwrap();
+            assert!(ex.describe()
+                        .contains(&format!("{width}x64-sample lanes")),
+                    "describe: {}", ex.describe());
+        }
     }
 
     /// A plan revived from an `.nlb` artifact's plan image must satisfy

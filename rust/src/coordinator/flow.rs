@@ -19,7 +19,8 @@ use crate::coordinator::session::{predictions, Session};
 use crate::dataset::{self, GenOpts, Splits};
 use crate::mapper::{map_netlist, MappedNetlist};
 use crate::metrics;
-use crate::netlist::{optimize, save_nlb, ExecPlan, Netlist, OptLevel,
+use crate::netlist::{optimize, save_nlb, select_backend, ExecPlan,
+                     LaneExecutor, LaneSelect, Netlist, OptLevel,
                      OptReport, PlanExecutor, PlanOptions, SimOptions};
 use crate::pruning;
 use crate::rtl;
@@ -219,7 +220,20 @@ pub fn run_flow(rt: &Runtime, meta: &Meta, opts: &FlowOptions) -> Result<FlowRes
     anyhow::ensure!(plan_out == net_out,
                     "compiled execution plan broke bit-exactness on '{}'",
                     opts.config);
-    log::info!("[{}] plan: {}", top.name, plan.stats().summary());
+    // ...and at the lane width a server would auto-select for this
+    // host, so the exact backend that serves traffic is the one proven
+    // on the test set (scalar and wide share one generic kernel, but
+    // the flow checks the instantiation, not the argument)
+    let wide_w = select_backend(LaneSelect::Auto, test.n.max(256));
+    if wide_w > 1 {
+        let mut wide = LaneExecutor::for_width(
+            wide_w, plan.clone(), SimOptions::default());
+        anyhow::ensure!(wide.eval_batch(&test.x, test.n) == net_out,
+                        "wide ({wide_w}-lane) execution broke \
+                         bit-exactness on '{}'", opts.config);
+    }
+    log::info!("[{}] plan: {} ({}x64-sample lanes auto-selected)",
+               top.name, plan.stats().summary(), wide_w);
     let mapped = map_netlist(&netlist_opt, true);
     let mapped_raw = map_netlist(&netlist, true);
     let dm = DelayModel::default();

@@ -12,11 +12,16 @@
 //! registration into an arena-backed execution plan (`netlist::plan`)
 //! through a per-server [`PlanCache`] keyed by netlist content hash —
 //! content-identical models share one plan — and worker threads own
-//! one [`PlanExecutor`] (private scratch over the shared immutable
+//! one [`LaneExecutor`] (private scratch over the shared immutable
 //! plan) per model, each with `sim_threads` evaluation threads on a
-//! lent worker pool, so one big batch fans out across cores.  Workers
-//! publish per-model latency ([`LatencyStats`]) and batch-occupancy
-//! ([`BatchStats`]) statistics.  Python is nowhere on this path.
+//! lent worker pool, so one big batch fans out across cores.  The lane
+//! width each model runs at is resolved once at startup
+//! ([`select_backend`] over [`ServerConfig::lanes`] with the model's
+//! `max_batch` as the hint) and every worker runs that width, so the
+//! backend is a per-model property, not a per-worker accident.
+//! Workers publish per-model latency ([`LatencyStats`]) and
+//! batch-occupancy ([`BatchStats`]) statistics.  Python is nowhere on
+//! this path.
 //!
 //! The router blocks on the request channel with a timeout equal to the
 //! earliest pending batch deadline — no spin-waiting — so an idle or
@@ -54,9 +59,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::metrics::{BatchStats, LatencyStats, LatencySummary};
-use crate::netlist::{load_nlb, optimize, ExecPlan, Netlist, NlbModel,
-                     OptLevel, OptReport, PlanCache, PlanExecutor,
-                     PlanOptions, PlanStats, SimOptions, WorkerPool};
+use crate::netlist::{load_nlb, optimize, select_backend, ExecPlan,
+                     LaneExecutor, LaneSelect, Netlist, NlbModel,
+                     OptLevel, OptReport, PlanCache, PlanOptions,
+                     PlanStats, SimOptions, WorkerPool};
 
 use super::engine::ModelEngine;
 
@@ -99,6 +105,12 @@ pub struct ServerConfig {
     /// the cold-start path (`benches/coldstart`).  `None` keeps the
     /// cache in-memory only.
     pub plan_cache_dir: Option<PathBuf>,
+    /// Lane-width policy for the workers' executors (`--lanes` on the
+    /// CLI).  `Auto` resolves per model against its `max_batch`: small
+    /// batch ceilings stay on the scalar `W = 1` path, large ones get
+    /// the widest profitable lane the CPU supports.  A fixed width
+    /// pins every model.
+    pub lanes: LaneSelect,
 }
 
 impl Default for ServerConfig {
@@ -110,6 +122,7 @@ impl Default for ServerConfig {
             sim_threads: 1,
             opt_level: OptLevel::Full,
             plan_cache_dir: None,
+            lanes: LaneSelect::Auto,
         }
     }
 }
@@ -257,6 +270,10 @@ struct ModelState {
     /// every worker with private scratch
     plan: Arc<ExecPlan>,
     policy: BatchPolicy,
+    /// lane width every worker executes this model at — resolved once
+    /// at startup from [`ServerConfig::lanes`] with the model's
+    /// `max_batch` as the batch hint
+    lane_width: usize,
     n_in: usize,
     out_width: usize,
     /// what the optimizer removed at registration
@@ -378,16 +395,22 @@ impl InferenceServer {
                         (opt_report, plan)
                     }
                 };
-                log::info!("model '{}' plan: {}", spec.name,
-                           plan.stats().summary());
                 let n_in = plan.n_in();
                 let out_width = plan.out_width();
                 let mut policy = spec.policy.unwrap_or(default_policy);
                 policy.max_batch = policy.max_batch.max(1);
+                // the model's batch ceiling is the best batch-size hint
+                // a server has: a model capped at small batches never
+                // profits from wide lanes
+                let lane_width =
+                    select_backend(cfg.lanes, policy.max_batch);
+                log::info!("model '{}' plan: {} ({}x64-sample lanes)",
+                           spec.name, plan.stats().summary(), lane_width);
                 Arc::new(ModelState {
                     name: spec.name,
                     plan,
                     policy,
+                    lane_width,
                     n_in,
                     out_width,
                     opt_report,
@@ -421,6 +444,7 @@ impl InferenceServer {
         }
         let sim_opts = SimOptions {
             threads: cfg.sim_threads.max(1),
+            lanes: cfg.lanes,
             ..SimOptions::default()
         };
         for w in 0..cfg.workers.max(1) {
@@ -552,6 +576,14 @@ impl InferenceServer {
     pub fn plan_stats(&self, model: &str) -> Result<PlanStats> {
         let (_, m) = self.model(model)?;
         Ok(m.plan.stats())
+    }
+
+    /// Lane width (64-sample words per op) `model`'s workers execute
+    /// at — resolved once at startup from [`ServerConfig::lanes`] and
+    /// the model's `max_batch`.
+    pub fn model_lane_width(&self, model: &str) -> Result<usize> {
+        let (_, m) = self.model(model)?;
+        Ok(m.lane_width)
     }
 
     /// (distinct plans compiled, cache hits) across all registrations —
@@ -726,13 +758,16 @@ fn worker_loop(brx: &Mutex<Receiver<BatchJob>>, models: &[Arc<ModelState>],
                stop: &AtomicBool, sim_opts: SimOptions) {
     // one plan executor per hosted model: the *plan* (tables, wiring,
     // schedule) is the registration-time compile shared by every worker;
-    // only the scratch buffers here are private.  A single worker pool
-    // is lent to whichever model's executor is evaluating: this worker
+    // only the scratch buffers here are private.  Each executor runs at
+    // the lane width resolved for its model at startup, so every worker
+    // serves a model with the same backend.  A single worker pool is
+    // lent to whichever model's executor is evaluating: this worker
     // drives one batch at a time, so parked evaluation threads scale
     // with `workers`, not `workers × models`.
-    let mut exs: Vec<PlanExecutor> = models
+    let mut exs: Vec<LaneExecutor> = models
         .iter()
-        .map(|m| PlanExecutor::with_options(m.plan.clone(), sim_opts))
+        .map(|m| LaneExecutor::for_width(m.lane_width, m.plan.clone(),
+                                         sim_opts))
         .collect();
     let mut lent = if sim_opts.threads > 1 {
         Some(WorkerPool::new(sim_opts.threads - 1))
@@ -865,6 +900,44 @@ mod tests {
             assert_eq!(got[b], direct.eval_one(row).unwrap(), "row {b}");
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn lane_config_resolves_per_model_and_stays_bit_exact() {
+        // default config: max_batch 64 is under the auto threshold, so
+        // workers stay on the scalar path; pinning W4 forces wide
+        // execution, and served answers must stay bit-exact either way
+        let nl = random_netlist(61, 12, 1, &[(8, 3, 2), (4, 2, 2)]);
+        let direct = nl.clone();
+        let auto = InferenceServer::start_single(nl.clone(),
+                                                 ServerConfig::default());
+        let model = auto.default_model().to_string();
+        assert_eq!(auto.model_lane_width(&model).unwrap(), 1,
+                   "auto keeps small batch ceilings scalar");
+        assert!(auto.model_lane_width("nope").is_err());
+        auto.shutdown();
+        // a large batch ceiling under Auto goes wide on every CPU we
+        // build for (widest_supported_lane is >= 4 on all targets)
+        let big = InferenceServer::start_single(
+            nl.clone(),
+            ServerConfig { max_batch: 1024, ..Default::default() });
+        assert!(big.model_lane_width(&model).unwrap() >= 4);
+        big.shutdown();
+        let wide = InferenceServer::start_single(
+            nl,
+            ServerConfig { max_batch: 16, lanes: LaneSelect::W4,
+                           ..Default::default() },
+        );
+        assert_eq!(wide.model_lane_width(&model).unwrap(), 4);
+        let x = random_inputs(61, &direct, 40);
+        let rows: Vec<Vec<i32>> =
+            (0..40).map(|b| x[b * 12..(b + 1) * 12].to_vec()).collect();
+        let got = wide.infer_many(&model, rows.clone()).unwrap();
+        for (b, row) in rows.iter().enumerate() {
+            assert_eq!(got[b], direct.eval_one(row).unwrap(),
+                       "wide row {b}");
+        }
+        wide.shutdown();
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! Common flags: --steps N --dense-steps N --train N --test N --seed N
 //!               --no-skips --random-conn --augment --artifacts DIR
 //!               --plan-cache DIR (persistent compiled-plan cache)
+//!               --lanes auto|1|4|8 (wide-word execution backend)
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -27,7 +28,8 @@ use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer,
                             ModelRegistry, ServerConfig};
 use neuralut::mapper::{map_netlist, MappedNetlist};
 use neuralut::net::{NetConfig, NetServer};
-use neuralut::netlist::{load_nlb, ExecPlan, Netlist, OptLevel};
+use neuralut::netlist::{load_nlb, select_backend, ExecPlan, LaneSelect,
+                        Netlist, OptLevel};
 use neuralut::report::{pct, sci, Table};
 use neuralut::runtime::Runtime;
 use neuralut::util::Stopwatch;
@@ -78,6 +80,15 @@ impl Args {
         match self.flags.get("opt-level") {
             Some(v) => v.parse(),
             None => Ok(OptLevel::Full),
+        }
+    }
+
+    /// `--lanes auto|1|4|8` (default: auto — resolved per model against
+    /// its batch ceiling and the CPU's vector width).
+    fn lanes(&self) -> Result<LaneSelect> {
+        match self.flags.get("lanes") {
+            Some(v) => v.parse(),
+            None => Ok(LaneSelect::Auto),
         }
     }
 }
@@ -308,6 +319,11 @@ fn inspect_artifact(args: &Args, path: &str) -> Result<()> {
         None => println!("plan image: none (serve will compile at \
                           registration)"),
     }
+    // what this host would execute the artifact with: batch hint 0
+    // means "no ceiling known", i.e. the widest profitable lane
+    let lanes = args.lanes()?;
+    println!("execution backend here: {}x64-sample lanes (--lanes \
+              {lanes})", select_backend(lanes, 0));
     Ok(())
 }
 
@@ -442,6 +458,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sim_threads: args.usize_flag("sim-threads", 1)?,
         opt_level: args.opt_level()?,
         plan_cache_dir: plan_cache_dir.clone(),
+        lanes: args.lanes()?,
     };
     let server = InferenceServer::start(registry, cfg);
     let configs = served;
@@ -449,6 +466,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("{name}: optimizer {}",
                  server.opt_report(name)?.summary());
         println!("{name}: plan {}", server.plan_stats(name)?.summary());
+        let lw = server.model_lane_width(name)?;
+        println!("{name}: backend plan-w{lw} ({lw}x64-sample lanes)");
     }
     {
         let (compiled, hits) = server.plan_cache_counts();
@@ -592,6 +611,7 @@ fn main() {
                  [--artifacts DIR] [--out FILE] [--requests N] \
                  [--max-batch N] [--max-wait-us N] [--workers N] \
                  [--sim-threads N] [--opt-level 0|1|2] [--plan] \
+                 [--lanes auto|1|4|8] \
                  [--model FILE.nlb[,FILE.nlb...]] [--plan-cache DIR] \
                  [--listen ADDR] [--serve-secs N] [--max-inflight N]\n\n\
                  serve hosts several configs at once: \
@@ -608,7 +628,11 @@ fn main() {
                  into deduplicated arenas, compiled once per content \
                  hash); --plan prints the plan's arena/dedup statistics \
                  on flow/inspect, and serve logs per-model plan stats \
-                 plus plan-cache hit counts.\n\n\
+                 plus plan-cache hit counts. --lanes picks the wide-word \
+                 execution backend (W 64-sample words per op, \
+                 auto-vectorized): auto resolves per model from its \
+                 batch ceiling and the CPU's vector width, 1/4/8 pin \
+                 the width; every width is bit-exact.\n\n\
                  export writes a versioned .nlb artifact (optimized \
                  netlist + compiled-plan image, default <config>.nlb, \
                  override with --out). serve --model and inspect \

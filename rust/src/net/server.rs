@@ -46,6 +46,7 @@
 //! ```json
 //! {
 //!   "models": [{"model": "nid", "n_in": 16, "out_width": 1,
+//!               "backend": "plan-w1", "lane_width": 1,
 //!               "requests": 0, "batches": 0, "mean_occupancy": 0.0,
 //!               "max_batch_seen": 0,
 //!               "latency_us": {"count": 0, "mean": 0.0, "p50": 0.0,
@@ -116,6 +117,9 @@ struct ModelMeta {
     name: String,
     n_in: usize,
     out_width: usize,
+    /// lane width the inner server's workers execute this model at
+    /// (`plan-w{N}` in the STATS document)
+    lane_width: usize,
     net: NetCounters,
 }
 
@@ -159,7 +163,10 @@ impl NetServer {
                 let (n_in, out_width) = server
                     .model_io(&name)
                     .expect("hosted model has IO widths");
-                ModelMeta { name, n_in, out_width,
+                let lane_width = server
+                    .model_lane_width(&name)
+                    .expect("hosted model has a lane width");
+                ModelMeta { name, n_in, out_width, lane_width,
                             net: NetCounters::default() }
             })
             .collect();
@@ -594,6 +601,9 @@ fn stats_json(shared: &Arc<Shared>, model: &str)
         m.insert("model".into(), Json::Str(meta.name.clone()));
         m.insert("n_in".into(), num(meta.n_in as f64));
         m.insert("out_width".into(), num(meta.out_width as f64));
+        m.insert("backend".into(),
+                 Json::Str(format!("plan-w{}", meta.lane_width)));
+        m.insert("lane_width".into(), num(meta.lane_width as f64));
         m.insert("requests".into(), num(st.requests as f64));
         m.insert("batches".into(), num(st.batches as f64));
         m.insert("mean_occupancy".into(), num(st.mean_occupancy));

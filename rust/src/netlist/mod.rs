@@ -18,6 +18,11 @@
 //! [`ExecPlan`] (shared tables deduplicated, CSR connections, static
 //! schedule) that [`PlanExecutor`]s run with zero steady-state
 //! allocation, cached across consumers by content hash ([`PlanCache`]).
+//! The executor core is width-polymorphic ([`WidePlanExecutor`]):
+//! wide lanes evaluate 4 or 8 packed words — up to 512 samples — per
+//! table operation, selected at runtime ([`select_backend`],
+//! [`LaneSelect`]) and bit-exact with the scalar reference by
+//! construction.
 //!
 //! A netlist is also an *artifact*: [`format`](self) defines `.nlb`,
 //! the versioned on-disk representation (header + layer sections +
@@ -35,10 +40,12 @@ pub use format::{load_nlb, read_nlb, save_nlb, write_nlb, NlbModel,
 pub(crate) use format::fnv1a;
 pub use opt::{optimize, ConstantFold, Cse, DeadLogic, OptLevel,
               OptReport, Pass, PassDelta, PassManager};
-pub use plan::{compile, plan_key, ExecPlan, PlanCache, PlanExecutor,
-               PlanOptions, PlanStats, PLAN_FILE_MAGIC};
-pub use sim::{eval_packed, BitPlaneLayer, KernelChoice, SimOptions,
-              Simulator, ThreadMode, WorkerPool, MAX_PLANE_SUPPORT};
+pub use plan::{compile, plan_key, select_backend, ExecPlan, LaneExecutor,
+               PlanCache, PlanExecutor, PlanOptions, PlanStats,
+               WidePlanExecutor, PLAN_FILE_MAGIC};
+pub use sim::{eval_packed, BitPlaneLayer, KernelChoice, LaneSelect,
+              SimOptions, Simulator, ThreadMode, WorkerPool,
+              MAX_PLANE_SUPPORT};
 
 use anyhow::{bail, Context, Result};
 

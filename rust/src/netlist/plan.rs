@@ -25,7 +25,7 @@
 //!   `Simulator`), and the layer schedule is static;
 //! * a [`PlanExecutor`] owns double-buffered, pre-sized activation
 //!   planes, so steady-state `eval_batch` performs **zero heap
-//!   allocation** (observable via [`PlanExecutor::buffer_grows`]).
+//!   allocation** (observable via [`WidePlanExecutor::buffer_grows`]).
 //!
 //! A plan is immutable and shareable (`Arc<ExecPlan>`): the server
 //! compiles each model once at registration through a [`PlanCache`]
@@ -42,6 +42,26 @@
 //! path at batch 1 — which is where interpretation overhead dominates
 //! and the compiled path wins outright (`netlist_hotpath`
 //! compiled-vs-interpreted rows).
+//!
+//! **Wide-word execution.**  The executor core is width-polymorphic:
+//! [`WidePlanExecutor<W>`] runs the *same* plan over [`Lane<W>`]
+//! registers — `W` consecutive packed words of one bit-plane, i.e.
+//! `W * 64` samples per table evaluation — and [`PlanExecutor`] is the
+//! `W = 1` alias that remains the scalar reference.  Because the packed
+//! buffer is plane-major, widening needs no layout change: a lane is
+//! just the next `W` words of the plane a scalar kernel would have
+//! visited one at a time, and the trailing `nwords % W` words of each
+//! plane (a batch that is not a multiple of `64 * W`) fall through to
+//! the scalar Shannon kernel.  The lane ops are plain fixed-size array
+//! bitwise loops the compiler auto-vectorizes (SSE2/AVX2/AVX-512/NEON
+//! — no intrinsics, no unsafe), and one generic kernel serves every
+//! width, so the scalar and wide paths cannot drift.  Runtime width
+//! selection lives in [`select_backend`] (batch-size hint plus a CPU
+//! feature probe) and the width-erased [`LaneExecutor`] carries the
+//! chosen executor behind one API for servers and CLIs; gather, pack
+//! and unpack are code-major and width-independent, so the wide win is
+//! the bit-plane kernel, which is where large batches spend their
+//! time (`netlist_hotpath` scalar-vs-wide rows).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -52,9 +72,10 @@ use anyhow::{bail, Context, Result};
 
 use super::format::{self, ByteReader};
 use super::sim::{chunked_units, eval_packed_rec, par_threads,
-                 KernelChoice, SimOptions, ThreadMode, WorkerPool,
-                 MAX_BUILD_ADDR_BITS, MAX_PLANE_SUPPORT, PAR_MIN_WORK,
-                 PAR_MIN_WORK_POOLED, PAR_MIN_WORK_POOLED_GATHER};
+                 KernelChoice, LaneSelect, SimOptions, ThreadMode,
+                 WorkerPool, MAX_BUILD_ADDR_BITS, MAX_PLANE_SUPPORT,
+                 PAR_MIN_WORK, PAR_MIN_WORK_POOLED,
+                 PAR_MIN_WORK_POOLED_GATHER};
 use super::{LayerSpec, Netlist};
 
 /// Compilation knobs.  Execution-time knobs (threads, mode, the packed
@@ -685,11 +706,105 @@ fn gather_units_rowmajor(plan: &ExecPlan, g: &GatherStep, x: &[i32],
     }
 }
 
+/// A wide word: `W` consecutive `u64`s of one packed bit-plane, so
+/// `W * 64` samples per operation.  The ops are plain fixed-size array
+/// loops — no intrinsics, no unsafe — which LLVM auto-vectorizes to
+/// whatever the target offers (SSE2/AVX2/AVX-512/NEON); `W = 1`
+/// compiles to exactly the scalar code the pre-wide kernel emitted.
+#[derive(Clone, Copy)]
+pub(crate) struct Lane<const W: usize>([u64; W]);
+
+impl<const W: usize> Lane<W> {
+    #[inline(always)]
+    fn splat(v: u64) -> Lane<W> {
+        Lane([v; W])
+    }
+
+    /// The first `W` words of `words`.
+    #[inline(always)]
+    fn load(words: &[u64]) -> Lane<W> {
+        let mut a = [0u64; W];
+        a.copy_from_slice(&words[..W]);
+        Lane(a)
+    }
+
+    /// Write into the first `W` words of `out`.
+    #[inline(always)]
+    fn store(self, out: &mut [u64]) {
+        out[..W].copy_from_slice(&self.0);
+    }
+}
+
+impl<const W: usize> std::ops::Not for Lane<W> {
+    type Output = Lane<W>;
+
+    #[inline(always)]
+    fn not(mut self) -> Lane<W> {
+        for x in self.0.iter_mut() {
+            *x = !*x;
+        }
+        self
+    }
+}
+
+impl<const W: usize> std::ops::BitAnd for Lane<W> {
+    type Output = Lane<W>;
+
+    #[inline(always)]
+    fn bitand(mut self, rhs: Lane<W>) -> Lane<W> {
+        for (x, &y) in self.0.iter_mut().zip(rhs.0.iter()) {
+            *x &= y;
+        }
+        self
+    }
+}
+
+impl<const W: usize> std::ops::BitOr for Lane<W> {
+    type Output = Lane<W>;
+
+    #[inline(always)]
+    fn bitor(mut self, rhs: Lane<W>) -> Lane<W> {
+        for (x, &y) in self.0.iter_mut().zip(rhs.0.iter()) {
+            *x |= y;
+        }
+        self
+    }
+}
+
+/// Lane-wide twin of `eval_packed_rec`: the same Shannon expansion,
+/// with every mux step `(!x & lo) | (x & hi)` running elementwise over
+/// `W` words.  Identical cofactor order and identical per-word bit
+/// operations make it bit-exact with the scalar kernel by construction.
+#[inline(always)]
+fn eval_packed_lanes<const W: usize>(table: u64, inputs: &[Lane<W>])
+                                     -> Lane<W> {
+    match inputs.len() {
+        0 => Lane::splat(if table & 1 == 1 { !0u64 } else { 0u64 }),
+        n => {
+            let x = inputs[n - 1];
+            let half = 1usize << (n - 1);
+            let mask = (1u64 << half) - 1;
+            let lo = eval_packed_lanes(table & mask, &inputs[..n - 1]);
+            let hi =
+                eval_packed_lanes((table >> half) & mask, &inputs[..n - 1]);
+            (!x & lo) | (x & hi)
+        }
+    }
+}
+
 /// Bit-plane evaluation of units `[u0, u1)`; `out` covers exactly that
-/// unit range (plane-major, `nwords` words per plane).
-fn bitplane_units(plan: &ExecPlan, s: &BitPlaneStep, prev: &[u64],
-                  nwords: usize, u0: usize, u1: usize, out: &mut [u64]) {
+/// unit range (plane-major, `nwords` words per plane).  Width-generic:
+/// each plane runs `nwords / W` full-lane evaluations over [`Lane<W>`]
+/// registers, then the ragged tail — the trailing `nwords % W` words,
+/// i.e. a batch that is not a multiple of `64 * W` — falls through to
+/// the scalar Shannon kernel word by word.  `W = 1` *is* the scalar
+/// path (every word is a full lane, the tail is empty).
+fn bitplane_units<const W: usize>(plan: &ExecPlan, s: &BitPlaneStep,
+                                  prev: &[u64], nwords: usize, u0: usize,
+                                  u1: usize, out: &mut [u64]) {
     debug_assert_eq!(out.len(), (u1 - u0) * s.out_bits * nwords);
+    let blocks = nwords / W;
+    let mut lanes = [Lane::<W>::splat(0); MAX_PLANE_SUPPORT];
     let mut ins = [0u64; MAX_PLANE_SUPPORT];
     let p0 = u0 * s.out_bits;
     for p in p0..u1 * s.out_bits {
@@ -698,11 +813,18 @@ fn bitplane_units(plan: &ExecPlan, s: &BitPlaneStep, prev: &[u64],
         let srcs = &plan.conn[off..off + a];
         let table = plan.words[s.table_off[p] as usize];
         let dst = &mut out[(p - p0) * nwords..(p - p0 + 1) * nwords];
-        for (wd, slot) in dst.iter_mut().enumerate() {
+        for blk in 0..blocks {
+            let wd = blk * W;
+            for (i, &src) in srcs.iter().enumerate() {
+                lanes[i] = Lane::load(&prev[src as usize * nwords + wd..]);
+            }
+            eval_packed_lanes(table, &lanes[..a]).store(&mut dst[wd..]);
+        }
+        for wd in blocks * W..nwords {
             for (i, &src) in srcs.iter().enumerate() {
                 ins[i] = prev[src as usize * nwords + wd];
             }
-            *slot = eval_packed_rec(table, &ins[..a]);
+            dst[wd] = eval_packed_rec(table, &ins[..a]);
         }
     }
 }
@@ -757,13 +879,17 @@ fn unpack_codes(planes: &[u64], w: usize, bits: usize, batch: usize,
     }
 }
 
-/// Executes an [`ExecPlan`] with private, reusable scratch.  One
-/// executor per thread; the plan itself is shared and immutable.
+/// Executes an [`ExecPlan`] with private, reusable scratch, processing
+/// `W` packed words — `W * 64` samples — per bit-plane table
+/// evaluation.  One executor per thread; the plan itself is shared and
+/// immutable.  [`PlanExecutor`] is the `W = 1` alias and the scalar
+/// reference; all widths are bit-exact with it because they run the
+/// same width-generic kernel (see the module doc).
 ///
 /// Threading mirrors the interpreted simulator exactly — same chunk
 /// math, same profitability floors, scoped or pooled per
 /// [`SimOptions::mode`] — so every mode is bit-exact with every other.
-pub struct PlanExecutor {
+pub struct WidePlanExecutor<const W: usize> {
     plan: Arc<ExecPlan>,
     opts: SimOptions,
     pool: Option<WorkerPool>,
@@ -781,14 +907,18 @@ pub struct PlanExecutor {
     grows: usize,
 }
 
-impl PlanExecutor {
-    pub fn new(plan: Arc<ExecPlan>) -> PlanExecutor {
+/// The scalar (`W = 1`) executor — the bit-exactness reference every
+/// wider lane is checked against, and the default small-batch backend.
+pub type PlanExecutor = WidePlanExecutor<1>;
+
+impl<const W: usize> WidePlanExecutor<W> {
+    pub fn new(plan: Arc<ExecPlan>) -> WidePlanExecutor<W> {
         Self::with_options(plan, SimOptions::default())
     }
 
     pub fn with_options(plan: Arc<ExecPlan>, opts: SimOptions)
-                        -> PlanExecutor {
-        PlanExecutor {
+                        -> WidePlanExecutor<W> {
+        WidePlanExecutor {
             plan,
             opts,
             pool: None,
@@ -805,6 +935,12 @@ impl PlanExecutor {
     /// The plan this executor runs.
     pub fn plan(&self) -> &Arc<ExecPlan> {
         &self.plan
+    }
+
+    /// This executor's lane width: packed words per bit-plane table
+    /// evaluation (`W * 64` samples per op).
+    pub const fn lane_width(&self) -> usize {
+        W
     }
 
     /// The options this executor was built with.
@@ -856,7 +992,7 @@ impl PlanExecutor {
     }
 
     /// Row-major input codes -> row-major output codes (allocating
-    /// convenience wrapper around [`PlanExecutor::eval_batch_into`]).
+    /// convenience wrapper around [`Self::eval_batch_into`]).
     pub fn eval_batch(&mut self, x: &[i32], batch: usize) -> Vec<i32> {
         let mut out = Vec::new();
         self.eval_batch_into(x, batch, &mut out);
@@ -932,7 +1068,8 @@ impl PlanExecutor {
                         &mut bits_nxt[..planes * nwords], bp.w,
                         bp.out_bits * nwords, t, self.pool.as_mut(),
                         |u0, u1, dst| {
-                            bitplane_units(p, bp, prev, nwords, u0, u1, dst)
+                            bitplane_units::<W>(p, bp, prev, nwords, u0,
+                                                u1, dst)
                         },
                     );
                     std::mem::swap(&mut bits_cur, &mut bits_nxt);
@@ -1033,7 +1170,7 @@ impl PlanExecutor {
     }
 
     /// Allocating convenience wrapper around
-    /// [`PlanExecutor::eval_one_into`].
+    /// [`Self::eval_one_into`].
     pub fn eval_one(&mut self, x: &[i32]) -> Vec<i32> {
         let mut out = Vec::new();
         self.eval_one_into(x, &mut out);
@@ -1043,6 +1180,136 @@ impl PlanExecutor {
     fn scratch_capacity(&self) -> usize {
         self.cur.capacity() + self.nxt.capacity()
             + self.bits_cur.capacity() + self.bits_nxt.capacity()
+    }
+}
+
+/// The widest lane worth running on this CPU.  4-word (256-bit) lanes
+/// are the portable default — they auto-vectorize well even on 128-bit
+/// SIMD (two ops per step) and cost nothing scalar thanks to reduced
+/// loop overhead; 8-word lanes only pay for themselves where 512-bit
+/// registers exist.
+fn widest_supported_lane() -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx512f") {
+            return 8;
+        }
+        4
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        4
+    }
+}
+
+/// Resolve a [`LaneSelect`] to a concrete executor width.
+///
+/// An explicit request pins that width.  `Auto` consults the batch-size
+/// hint first — below 256 samples a plane holds at most 4 packed words,
+/// so wider lanes would run tail-only and the scalar reference is the
+/// right backend — and otherwise probes the CPU
+/// (`is_x86_feature_detected!`-style where available) for the widest
+/// profitable lane.  A hint of 0 means "unknown / unbounded" and trusts
+/// the probe.
+pub fn select_backend(lanes: LaneSelect, batch_hint: usize) -> usize {
+    if let Some(w) = lanes.fixed_width() {
+        return w;
+    }
+    if batch_hint != 0 && batch_hint < 256 {
+        return 1;
+    }
+    widest_supported_lane()
+}
+
+/// A width-erased [`WidePlanExecutor`]: the lane width is a const
+/// generic (so each kernel is monomorphized and auto-vectorized), but
+/// servers and CLIs choose the width at runtime ([`select_backend`]) —
+/// this enum carries one executor of the chosen width behind a uniform
+/// API.  Every variant runs the same plan bit-exactly; only throughput
+/// differs.
+pub enum LaneExecutor {
+    W1(WidePlanExecutor<1>),
+    W4(WidePlanExecutor<4>),
+    W8(WidePlanExecutor<8>),
+}
+
+macro_rules! each_lane {
+    ($self:expr, $ex:ident => $body:expr) => {
+        match $self {
+            LaneExecutor::W1($ex) => $body,
+            LaneExecutor::W4($ex) => $body,
+            LaneExecutor::W8($ex) => $body,
+        }
+    };
+}
+
+impl LaneExecutor {
+    /// An executor of exactly `width` lanes.  Panics on widths outside
+    /// {1, 4, 8} — widths are produced by [`select_backend`] or the
+    /// validated `--lanes` flag, never free-form.
+    pub fn for_width(width: usize, plan: Arc<ExecPlan>, opts: SimOptions)
+                     -> LaneExecutor {
+        match width {
+            1 => LaneExecutor::W1(WidePlanExecutor::with_options(plan, opts)),
+            4 => LaneExecutor::W4(WidePlanExecutor::with_options(plan, opts)),
+            8 => LaneExecutor::W8(WidePlanExecutor::with_options(plan, opts)),
+            w => panic!("unsupported lane width {w} (supported: 1, 4, 8)"),
+        }
+    }
+
+    /// An executor at the width `opts.lanes` resolves to for
+    /// `batch_hint` (see [`select_backend`]).
+    pub fn select(plan: Arc<ExecPlan>, opts: SimOptions, batch_hint: usize)
+                  -> LaneExecutor {
+        Self::for_width(select_backend(opts.lanes, batch_hint), plan, opts)
+    }
+
+    /// The lane width this executor runs at.
+    pub fn width(&self) -> usize {
+        each_lane!(self, ex => ex.lane_width())
+    }
+
+    /// The plan this executor runs.
+    pub fn plan(&self) -> &Arc<ExecPlan> {
+        each_lane!(self, ex => ex.plan())
+    }
+
+    /// The options the executor was built with.
+    pub fn options(&self) -> SimOptions {
+        each_lane!(self, ex => ex.options())
+    }
+
+    /// See [`WidePlanExecutor::buffer_grows`].
+    pub fn buffer_grows(&self) -> usize {
+        each_lane!(self, ex => ex.buffer_grows())
+    }
+
+    /// See [`WidePlanExecutor::set_threads`].
+    pub fn set_threads(&mut self, threads: usize) {
+        each_lane!(self, ex => ex.set_threads(threads))
+    }
+
+    /// See [`WidePlanExecutor::set_pool`].
+    pub fn set_pool(&mut self, pool: Option<WorkerPool>)
+                    -> Option<WorkerPool> {
+        each_lane!(self, ex => ex.set_pool(pool))
+    }
+
+    pub fn eval_batch(&mut self, x: &[i32], batch: usize) -> Vec<i32> {
+        each_lane!(self, ex => ex.eval_batch(x, batch))
+    }
+
+    pub fn eval_batch_into(&mut self, x: &[i32], batch: usize,
+                           out: &mut Vec<i32>) {
+        each_lane!(self, ex => ex.eval_batch_into(x, batch, out))
+    }
+
+    pub fn eval_one(&mut self, x: &[i32]) -> Vec<i32> {
+        each_lane!(self, ex => ex.eval_one(x))
+    }
+
+    pub fn eval_one_into(&mut self, x: &[i32], out: &mut Vec<i32>) {
+        each_lane!(self, ex => ex.eval_one_into(x, out))
     }
 }
 
@@ -1291,8 +1558,9 @@ mod tests {
     use super::super::testutil::*;
     use super::*;
 
-    fn assert_plan_matches_eval_one(nl: &Netlist, ex: &mut PlanExecutor,
-                                    seed: u64, batch: usize) {
+    fn assert_plan_matches_eval_one<const W: usize>(
+        nl: &Netlist, ex: &mut WidePlanExecutor<W>, seed: u64,
+        batch: usize) {
         let x = random_inputs(seed, nl, batch);
         let got = ex.eval_batch(&x, batch);
         let ow = nl.out_width();
@@ -1330,6 +1598,123 @@ mod tests {
         let mut ex = PlanExecutor::new(plan);
         for (seed, batch) in [(4u64, 1usize), (5, 31), (6, 64), (7, 200)] {
             assert_plan_matches_eval_one(&nl, &mut ex, seed, batch);
+        }
+    }
+
+    #[test]
+    fn wide_executors_match_scalar_on_ragged_batches() {
+        let nl = random_reducible_netlist(
+            19, 12, 2, &[(8, 4, 2), (4, 4, 2), (2, 2, 2)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let mut w1: WidePlanExecutor<1> = WidePlanExecutor::new(plan.clone());
+        let mut w4: WidePlanExecutor<4> = WidePlanExecutor::new(plan.clone());
+        let mut w8: WidePlanExecutor<8> = WidePlanExecutor::new(plan);
+        assert_eq!((w1.lane_width(), w4.lane_width(), w8.lane_width()),
+                   (1, 4, 8));
+        // single sample, sub-word, one word, lane-misaligned word
+        // counts, exact lane multiples, word + sub-word tails
+        for (seed, batch) in [(1u64, 1usize), (2, 33), (3, 64), (4, 65),
+                              (5, 256), (6, 300), (7, 511), (8, 64 * 8),
+                              (9, 64 * 8 + 1), (10, 64 * 12 + 17)] {
+            let x = random_inputs(seed, &nl, batch);
+            let want = w1.eval_batch(&x, batch);
+            assert_eq!(w4.eval_batch(&x, batch), want, "W4 batch {batch}");
+            assert_eq!(w8.eval_batch(&x, batch), want, "W8 batch {batch}");
+        }
+        assert_plan_matches_eval_one(&nl, &mut w4, 11, 300);
+        assert_plan_matches_eval_one(&nl, &mut w8, 12, 300);
+    }
+
+    #[test]
+    fn wide_threaded_executors_are_bit_exact() {
+        let nl = random_reducible_netlist(
+            37, 24, 2, &[(64, 3, 2), (48, 2, 3), (16, 2, 2)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let mut serial: WidePlanExecutor<4> =
+            WidePlanExecutor::new(plan.clone());
+        let mut pooled: WidePlanExecutor<4> = WidePlanExecutor::with_options(
+            plan, SimOptions { threads: 4, ..Default::default() });
+        for (seed, batch) in [(1u64, 600usize), (2, 2100)] {
+            let x = random_inputs(seed, &nl, batch);
+            assert_eq!(pooled.eval_batch(&x, batch),
+                       serial.eval_batch(&x, batch), "batch {batch}");
+        }
+        assert_plan_matches_eval_one(&nl, &mut pooled, 9, 2100);
+    }
+
+    #[test]
+    fn select_backend_resolves_widths() {
+        assert_eq!(select_backend(LaneSelect::W1, 0), 1);
+        assert_eq!(select_backend(LaneSelect::W4, 0), 4);
+        assert_eq!(select_backend(LaneSelect::W8, 0), 8);
+        // explicit widths ignore the batch hint
+        assert_eq!(select_backend(LaneSelect::W8, 1), 8);
+        // small batch hints pin scalar under Auto
+        assert_eq!(select_backend(LaneSelect::Auto, 1), 1);
+        assert_eq!(select_backend(LaneSelect::Auto, 255), 1);
+        // large or unknown batches probe the CPU for a wide lane
+        for hint in [0usize, 256, 4096] {
+            let w = select_backend(LaneSelect::Auto, hint);
+            assert!(w == 4 || w == 8, "auto resolved to {w}");
+        }
+    }
+
+    #[test]
+    fn lane_executor_is_bit_exact_across_widths() {
+        let nl = random_reducible_netlist(
+            61, 16, 2, &[(24, 3, 2), (12, 2, 2), (4, 2, 2)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let mut w1 =
+            LaneExecutor::for_width(1, plan.clone(), SimOptions::default());
+        assert_eq!(w1.width(), 1);
+        for width in [4usize, 8] {
+            let mut ex = LaneExecutor::for_width(
+                width, plan.clone(), SimOptions::default());
+            assert_eq!(ex.width(), width);
+            assert!(Arc::ptr_eq(ex.plan(), &plan));
+            for (seed, batch) in [(1u64, 1usize), (2, 130), (3, 1000)] {
+                let x = random_inputs(seed, &nl, batch);
+                assert_eq!(ex.eval_batch(&x, batch),
+                           w1.eval_batch(&x, batch),
+                           "width {width} batch {batch}");
+            }
+            let x = random_inputs(9, &nl, 1);
+            assert_eq!(ex.eval_one(&x), w1.eval_one(&x));
+        }
+        // select() honors pinned widths and the small-batch hint
+        let pinned = LaneExecutor::select(
+            plan.clone(),
+            SimOptions { lanes: LaneSelect::W4, ..Default::default() }, 0);
+        assert_eq!(pinned.width(), 4);
+        let small =
+            LaneExecutor::select(plan.clone(), SimOptions::default(), 64);
+        assert_eq!(small.width(), 1);
+        let auto = LaneExecutor::select(plan, SimOptions::default(), 0);
+        assert!(auto.width() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported lane width")]
+    fn lane_executor_rejects_unknown_widths() {
+        let nl = random_netlist(31, 6, 2, &[(4, 2, 2)]);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let _ = LaneExecutor::for_width(2, plan, SimOptions::default());
+    }
+
+    #[test]
+    fn wide_steady_state_eval_does_not_grow_buffers() {
+        let nl = random_reducible_netlist(
+            41, 16, 2, &[(24, 3, 2), (12, 2, 2), (4, 2, 2)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let mut ex: WidePlanExecutor<4> = WidePlanExecutor::new(plan);
+        let mut out = Vec::new();
+        let x = random_inputs(3, &nl, 1030);
+        ex.eval_batch_into(&x, 1030, &mut out);
+        let after_first = ex.buffer_grows();
+        for rep in 0..5 {
+            ex.eval_batch_into(&x, 1030, &mut out);
+            assert_eq!(ex.buffer_grows(), after_first,
+                       "rep {rep} reallocated scratch");
         }
     }
 

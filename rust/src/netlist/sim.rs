@@ -43,7 +43,7 @@
 
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
-use super::plan::{self, ExecPlan, PlanExecutor, PlanOptions};
+use super::plan::{self, ExecPlan, LaneExecutor, PlanOptions};
 use super::{LayerSpec, Netlist};
 
 /// Widest reduced support a plane may have and still use the packed
@@ -93,6 +93,64 @@ pub enum ThreadMode {
     Pooled,
 }
 
+/// Lane-width request for the compiled executor (CLI `--lanes`,
+/// `ServerConfig::lanes`, [`SimOptions::lanes`]).  The compiled
+/// bit-plane kernel is width-polymorphic over `W` consecutive packed
+/// words per operation (`netlist::plan::WidePlanExecutor`); this enum
+/// is how callers ask for a width before one is resolved to a concrete
+/// executor by `netlist::plan::select_backend`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LaneSelect {
+    /// Resolve at runtime: scalar for small batch hints, else the
+    /// widest lane the CPU profits from (feature-probed on x86-64).
+    #[default]
+    Auto,
+    /// Pin the one-word scalar reference path (W = 1).
+    W1,
+    /// Pin 4-word (256-bit) lanes.
+    W4,
+    /// Pin 8-word (512-bit) lanes.
+    W8,
+}
+
+impl LaneSelect {
+    /// The pinned width, or `None` for [`LaneSelect::Auto`].
+    pub fn fixed_width(self) -> Option<usize> {
+        match self {
+            LaneSelect::Auto => None,
+            LaneSelect::W1 => Some(1),
+            LaneSelect::W4 => Some(4),
+            LaneSelect::W8 => Some(8),
+        }
+    }
+}
+
+impl std::str::FromStr for LaneSelect {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<LaneSelect, Self::Err> {
+        match s {
+            "auto" => Ok(LaneSelect::Auto),
+            "1" => Ok(LaneSelect::W1),
+            "4" => Ok(LaneSelect::W4),
+            "8" => Ok(LaneSelect::W8),
+            other => anyhow::bail!(
+                "bad lane width {other:?} (expected auto|1|4|8)"),
+        }
+    }
+}
+
+impl std::fmt::Display for LaneSelect {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LaneSelect::Auto => write!(f, "auto"),
+            LaneSelect::W1 => write!(f, "1"),
+            LaneSelect::W4 => write!(f, "4"),
+            LaneSelect::W8 => write!(f, "8"),
+        }
+    }
+}
+
 /// Simulator construction knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct SimOptions {
@@ -118,6 +176,12 @@ pub struct SimOptions {
     /// the interpreted baseline the `netlist_hotpath` bench compares
     /// against.
     pub compiled: bool,
+    /// Lane width for the compiled bit-plane kernel: how many packed
+    /// 64-sample words each table evaluation processes at once
+    /// (default [`LaneSelect::Auto`] — resolved per executor by
+    /// `netlist::plan::select_backend`).  Every width is bit-exact
+    /// with every other; this is purely a throughput knob.
+    pub lanes: LaneSelect,
 }
 
 impl Default for SimOptions {
@@ -128,6 +192,7 @@ impl Default for SimOptions {
             mode: ThreadMode::Pooled,
             min_bitplane_batch: 32,
             compiled: true,
+            lanes: LaneSelect::Auto,
         }
     }
 }
@@ -654,8 +719,9 @@ pub struct Simulator<'a> {
     opts: SimOptions,
     /// interpreted per-layer kernels (empty when compiled)
     kernels: Vec<LayerKernel>,
-    /// compiled execution ([`SimOptions::compiled`], the default)
-    plan_exec: Option<PlanExecutor>,
+    /// compiled execution ([`SimOptions::compiled`], the default) at
+    /// the lane width [`SimOptions::lanes`] resolves to
+    plan_exec: Option<LaneExecutor>,
     /// persistent workers ([`ThreadMode::Pooled`] with `threads > 1`);
     /// lives inside `plan_exec` when compiled
     pool: Option<WorkerPool>,
@@ -678,7 +744,9 @@ impl<'a> Simulator<'a> {
         let (kernels, plan_exec) = if opts.compiled {
             let p = Arc::new(plan::compile(
                 nl, PlanOptions { bitplane: opts.bitplane }));
-            (Vec::new(), Some(PlanExecutor::with_options(p, opts)))
+            // no batch hint here: a simulator serves any batch size, so
+            // `Auto` resolves straight to the CPU's widest lane
+            (Vec::new(), Some(LaneExecutor::select(p, opts, 0)))
         } else {
             let kernels = nl
                 .layers
@@ -768,6 +836,13 @@ impl<'a> Simulator<'a> {
     /// ([`SimOptions::compiled`]).
     pub fn plan(&self) -> Option<&Arc<ExecPlan>> {
         self.plan_exec.as_ref().map(|pe| pe.plan())
+    }
+
+    /// Lane width of the compiled executor (`None` when interpreted):
+    /// how many packed 64-sample words each bit-plane table evaluation
+    /// processes at once.
+    pub fn lane_width(&self) -> Option<usize> {
+        self.plan_exec.as_ref().map(|pe| pe.width())
     }
 
     /// Per-layer kernel choice (introspection for benches/logs).
@@ -1162,6 +1237,49 @@ mod tests {
                 assert_matches_eval_one(&nl, &mut sim, seed, batch);
             }
         }
+    }
+
+    #[test]
+    fn pinned_lane_widths_are_bit_exact() {
+        let nl = random_reducible_netlist(
+            49, 20, 2, &[(48, 3, 2), (32, 2, 2), (8, 2, 2)], 6);
+        let mut w1 = nl.simulator_with(
+            SimOptions { lanes: LaneSelect::W1, ..Default::default() });
+        assert_eq!(w1.lane_width(), Some(1));
+        for lanes in [LaneSelect::W4, LaneSelect::W8, LaneSelect::Auto] {
+            let mut wide = nl.simulator_with(
+                SimOptions { lanes, ..Default::default() });
+            let w = wide.lane_width().unwrap();
+            assert_eq!(lanes.fixed_width().unwrap_or(w), w);
+            // ragged batches: full lanes plus scalar tail words
+            for (seed, batch) in
+                [(1u64, 1usize), (2, 63), (3, 257), (4, 64 * 8 * 3 + 5)]
+            {
+                let x = random_inputs(seed, &nl, batch);
+                assert_eq!(w1.eval_batch(&x, batch),
+                           wide.eval_batch(&x, batch),
+                           "lanes {lanes} batch {batch}");
+            }
+        }
+        // the interpreted walk never carries a lane width
+        let interp = nl.simulator_with(
+            SimOptions { compiled: false, ..Default::default() });
+        assert_eq!(interp.lane_width(), None);
+    }
+
+    #[test]
+    fn lane_select_parses_and_displays() {
+        for (s, want) in [("auto", LaneSelect::Auto), ("1", LaneSelect::W1),
+                          ("4", LaneSelect::W4), ("8", LaneSelect::W8)] {
+            let got: LaneSelect = s.parse().unwrap();
+            assert_eq!(got, want);
+            assert_eq!(got.to_string(), s);
+        }
+        assert!("2".parse::<LaneSelect>().is_err());
+        assert!("wide".parse::<LaneSelect>().is_err());
+        assert_eq!(LaneSelect::default(), LaneSelect::Auto);
+        assert_eq!(LaneSelect::Auto.fixed_width(), None);
+        assert_eq!(LaneSelect::W8.fixed_width(), Some(8));
     }
 
     #[test]

@@ -95,6 +95,29 @@ fn conformance_plan_executor_serial_and_threaded() {
 }
 
 #[test]
+fn conformance_wide_plan_executors_every_width() {
+    // the wide-word backends are engines in their own right: every
+    // supported lane width must pass the same contract as the scalar
+    // reference, on an optimized netlist (the plans serving ships)
+    use neuralut::netlist::{LaneExecutor, WidePlanExecutor};
+    let nl = random_reducible_netlist(
+        76, 20, 2, &[(40, 3, 2), (24, 2, 2), (6, 2, 2)], 6);
+    let (opt, _) = optimize(&nl, OptLevel::Full);
+    let plan = Arc::new(opt.compile_plan(PlanOptions::default()));
+    let mut w4: WidePlanExecutor<4> = WidePlanExecutor::new(plan.clone());
+    check_conformance(&mut w4, &opt, 76).unwrap();
+    let mut w8: WidePlanExecutor<8> = WidePlanExecutor::new(plan.clone());
+    check_conformance(&mut w8, &opt, 77).unwrap();
+    // and through the runtime-selected wrapper, at every width
+    for width in [1usize, 4, 8] {
+        let mut ex = LaneExecutor::for_width(width, plan.clone(),
+                                             SimOptions::default());
+        check_conformance(&mut ex, &opt, 78 + width as u64).unwrap();
+        assert_eq!(ex.width(), width);
+    }
+}
+
+#[test]
 fn conformance_plan_of_optimized_netlist() {
     // the exact serving chain: optimize, compile, execute — conformance
     // against the optimized netlist and bit-exactness against the raw
@@ -295,6 +318,36 @@ fn conformance_tcp_remote_engine_on_artifact_matches_plan_executor() {
         let got = remote.run_batch(&x, batch).unwrap();
         assert_eq!(got, want, "batch {batch}: TCP differs from local");
     }
+    net.shutdown();
+}
+
+#[test]
+fn conformance_tcp_remote_engine_on_wide_lane_server() {
+    // a server pinned to W=4 workers serves over TCP: the remote engine
+    // must satisfy the same contract as against scalar workers, and the
+    // wire-visible stats must name the wide backend per model
+    use neuralut::net::{Client, NetConfig, NetServer, RemoteEngine};
+    use neuralut::netlist::LaneSelect;
+    use neuralut::util::Json;
+
+    let nl = random_netlist(98, 8, 1, &[(6, 3, 2), (4, 2, 2)]);
+    let mut registry = ModelRegistry::new();
+    registry.register("wide", nl.clone());
+    let server = InferenceServer::start(
+        registry,
+        ServerConfig { lanes: LaneSelect::W4, ..ServerConfig::default() });
+    assert_eq!(server.model_lane_width("wide").unwrap(), 4);
+    let net = NetServer::bind(server, "127.0.0.1:0",
+                              NetConfig::default()).unwrap();
+    let mut remote = RemoteEngine::open(net.local_addr(), "wide").unwrap();
+    check_conformance(&mut remote, &nl, 98).unwrap();
+    let mut c = Client::connect(net.local_addr()).unwrap();
+    let doc = Json::parse(&c.stats("wide").unwrap()).unwrap();
+    let models = doc.at("models").unwrap().as_arr().unwrap();
+    assert_eq!(models[0].at("backend").unwrap().as_str().unwrap(),
+               "plan-w4");
+    assert_eq!(models[0].at("lane_width").unwrap().as_usize().unwrap(),
+               4);
     net.shutdown();
 }
 

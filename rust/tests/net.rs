@@ -101,6 +101,10 @@ fn tcp_infer_is_bit_exact_and_stats_count_it() {
     assert_eq!(m.at("model").unwrap().as_str().unwrap(), "m");
     assert_eq!(m.at("n_in").unwrap().as_usize().unwrap(), 6);
     assert_eq!(m.at("out_width").unwrap().as_usize().unwrap(), ow);
+    // max_batch 8 stays under the auto threshold: scalar backend,
+    // reported per model over the wire
+    assert_eq!(m.at("backend").unwrap().as_str().unwrap(), "plan-w1");
+    assert_eq!(m.at("lane_width").unwrap().as_usize().unwrap(), 1);
     let netc = m.at("net").unwrap();
     assert_eq!(netc.at("requests").unwrap().as_usize().unwrap(), 1);
     assert_eq!(netc.at("rows").unwrap().as_usize().unwrap(), batch);

@@ -10,7 +10,7 @@ use neuralut::netlist::testutil::{random_inputs, random_netlist,
                                   random_reducible_netlist};
 use neuralut::netlist::{compile, optimize, Netlist, OptLevel, PlanCache,
                         PlanExecutor, PlanOptions, SimOptions,
-                        ThreadMode};
+                        ThreadMode, WidePlanExecutor};
 use neuralut::pruning;
 use neuralut::rtl;
 use neuralut::timing::{evaluate, DelayModel, Pipelining};
@@ -289,6 +289,52 @@ fn prop_compiled_plan_is_bit_exact_on_dense_netlists() {
            arb_shape, |&(seed, n_in, in_bits, ref shapes)| {
         let nl = random_netlist(seed, n_in, in_bits, shapes);
         check_compiled_plan_bit_exact(&nl, seed)
+    });
+}
+
+/// Wide vs scalar on one netlist: the scalar `PlanExecutor` (`W = 1`)
+/// is the reference; `WidePlanExecutor` at W in {4, 8} must reproduce
+/// its output bit-for-bit at ragged batch sizes spanning less than one
+/// lane block (pure scalar tail), exact block multiples (no tail), and
+/// several blocks plus a tail — up to 3 * 64 * W samples.
+fn check_wide_matches_scalar(nl: &Netlist, seed: u64)
+                             -> Result<(), String> {
+    let plan = Arc::new(compile(nl, PlanOptions::default()));
+    let mut scalar = PlanExecutor::new(plan.clone());
+    let mut w4: WidePlanExecutor<4> = WidePlanExecutor::new(plan.clone());
+    let mut w8: WidePlanExecutor<8> = WidePlanExecutor::new(plan);
+    for batch in [1usize,
+                  1 + (seed % 63) as usize,
+                  64 * 4,          // exactly one W=4 lane block
+                  64 * 4 + 7,      // one W=4 block + ragged tail
+                  64 * 8 + 1,      // one W=8 block + one tail word
+                  3 * 64 * 8 - 5,
+                  3 * 64 * 8] {
+        let x = random_inputs(seed ^ batch as u64, nl, batch);
+        let want = scalar.eval_batch(&x, batch);
+        if w4.eval_batch(&x, batch) != want {
+            return Err(format!("W=4 differs at batch {batch}"));
+        }
+        if w8.eval_batch(&x, batch) != want {
+            return Err(format!("W=8 differs at batch {batch}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_wide_executor_is_bit_exact() {
+    // the wide-word keystone: every lane width is bit-exact with the
+    // scalar reference on dense, reducible and optimized netlists —
+    // the plans the serving path actually executes
+    forall("wide executor == scalar", 0xE4, 8, arb_shape,
+           |&(seed, n_in, in_bits, ref shapes)| {
+        let dense = random_netlist(seed, n_in, in_bits, shapes);
+        check_wide_matches_scalar(&dense, seed)?;
+        let nl = random_reducible_netlist(seed, n_in, in_bits, shapes, 6);
+        check_wide_matches_scalar(&nl, seed)?;
+        let (opt, _) = optimize(&nl, OptLevel::Full);
+        check_wide_matches_scalar(&opt, seed ^ 0xE4)
     });
 }
 
