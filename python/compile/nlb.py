@@ -11,7 +11,7 @@ Wire layout (all integers little-endian)::
 
     offset  size  field
     0       4     magic "NLBF"
-    4       2     version (currently 1)
+    4       2     version (currently 2)
     6       2     flags (bit 0: compiled-plan image present; never set here)
     8       8     content hash (structural FNV-1a, see Netlist.content_hash)
     16      8     payload length (== file length - 32)
@@ -25,9 +25,18 @@ Wire layout (all integers little-endian)::
         w, fan_in, in_bits, out_bits            4 x u32
         conn     w * fan_in             x u32   (unit-major)
         tables   w * 2^(in_bits*fan_in) x u16   (unit-major)
+      padding         (v2+, iff flags bit 0: 0-7 zero bytes so the plan
+                       image lands on a file offset that is a multiple
+                       of 8 — what makes the rust side's zero-copy
+                       mmap load possible; this writer sets no flag
+                       bits, so it never emits padding, but the rule is
+                       part of the byte contract and mirrored here)
+      plan image      (iff flags bit 0 — rust-only section)
 
 The version bumps on any layout change; readers accept exactly the
-versions they know and reject the rest.
+versions they know and reject the rest.  v2 added the alignment
+padding rule above; v1 (identical except unpadded and tagged 1) is
+still accepted on both sides via a back-compat read.
 """
 
 from __future__ import annotations
@@ -40,7 +49,8 @@ from typing import Dict, List, Sequence
 from .topology import Topology
 
 NLB_MAGIC = b"NLBF"
-NLB_VERSION = 1
+NLB_VERSION = 2
+NLB_MIN_VERSION = 1      # oldest version the reader still accepts
 FLAG_PLAN = 1            # rust-only section; this writer never sets it
 MAX_ADDR_BITS = 24       # same cap as rust/src/netlist (2^24 u16 entries)
 
@@ -198,8 +208,16 @@ def write_nlb_bytes(nl: Netlist) -> bytes:
         parts.append(struct.pack(f"<{len(layer.conn)}I", *layer.conn))
         parts.append(struct.pack(f"<{len(layer.tables)}H", *layer.tables))
     payload = b"".join(parts)
+    # v2 alignment rule: a payload about to grow a plan image is padded
+    # with zero bytes to a multiple of 8 first (header is 32 bytes, so
+    # the image then starts 8-byte aligned in the file).  This writer
+    # never sets FLAG_PLAN, so the padding is always empty here — the
+    # computation stays as executable documentation of the contract.
+    flags = 0
+    if flags & FLAG_PLAN:
+        payload += b"\x00" * ((8 - len(payload) % 8) % 8)
     header = NLB_MAGIC + struct.pack(
-        "<HHQQQ", NLB_VERSION, 0, nl.content_hash(), len(payload),
+        "<HHQQQ", NLB_VERSION, flags, nl.content_hash(), len(payload),
         fnv1a(payload))
     return header + payload
 
@@ -217,10 +235,10 @@ def read_nlb_bytes(data: bytes) -> Netlist:
         raise ValueError(f"bad magic {data[:4]!r} (not an .nlb file)")
     version, flags, content_hash, payload_len, payload_hash = \
         struct.unpack_from("<HHQQQ", data, 4)
-    if version != NLB_VERSION:
+    if not NLB_MIN_VERSION <= version <= NLB_VERSION:
         raise ValueError(
             f"unsupported format version {version} (this reader "
-            f"handles version {NLB_VERSION})")
+            f"handles versions {NLB_MIN_VERSION}..{NLB_VERSION})")
     if flags & ~FLAG_PLAN:
         raise ValueError(f"unknown flag bits {flags & ~FLAG_PLAN:#06x}")
     payload = data[32:]

@@ -74,6 +74,16 @@ def test_rejects_corrupt_headers(patch, needle):
         nlb.read_nlb_bytes(bytes(data))
 
 
+def test_reads_v1_files():
+    """v1 differs from a plan-free v2 file only in the version field —
+    the reader must keep accepting it (back-compat contract with the
+    committed v1 fixture on the rust side)."""
+    nl = _random_netlist(9)
+    data = bytearray(nlb.write_nlb_bytes(nl))
+    data[4:6] = struct.pack("<H", 1)
+    assert nlb.read_nlb_bytes(bytes(data)) == nl
+
+
 def test_rejects_trailing_garbage():
     data = nlb.write_nlb_bytes(_random_netlist(13)) + b"\x00"
     with pytest.raises(ValueError):

@@ -1,31 +1,43 @@
 //! Cold-start bench: what does it cost to get N models *runnable* in a
-//! fresh process?  Three paths, same netlists (EXPERIMENTS.md §Cold
+//! fresh process?  Four paths, same netlists (EXPERIMENTS.md §Cold
 //! start):
 //!
 //! * **recompile** — the pre-artifact world: plans compiled from the
 //!   in-memory netlists (bit-plane decomposition, support extraction,
 //!   table interning — all redone every process start);
-//! * **plan image** — `load_nlb` on exported `.nlb` artifacts carrying
-//!   compiled-plan images (read + checksum + full validation, no
-//!   compilation);
+//! * **copy-load** — `load_nlb` on exported `.nlb` artifacts carrying
+//!   compiled-plan images (read + checksum + full validation, arenas
+//!   copied into owned buffers);
+//! * **mmap-load** — `load_nlb_mapped` on the same artifacts: identical
+//!   validation, but the word/conn arenas are borrowed zero-copy from
+//!   the mapping (v2 files pad so the offsets are 8-byte aligned);
 //! * **plan cache** — a fresh `PlanCache::persistent` instance over a
 //!   warm cache directory (the restarted-server path; must serve every
-//!   plan from disk, asserted via `disk_hits`).
+//!   plan from disk, asserted via `disk_hits` — disk hits are mapped
+//!   by default, `set_mmap(false)` timed as the copying contrast).
 //!
-//! Every artifact-loaded plan is also run through the engine
-//! `check_conformance` suite against its own netlist — the bench
-//! doubles as the CI cold-start smoke (`-- --quick` skips the timing
-//! floors, never the conformance).  Writes `BENCH_coldstart.json`.
-//! (`cargo bench --bench coldstart`)
+//! Every mapped plan is also run through the engine `check_conformance`
+//! suite against its own netlist — scalar, `WidePlanExecutor` at
+//! W ∈ {4, 8}, and a sample over TCP — so the bench doubles as the CI
+//! cold-start smoke (`-- --quick` skips the timing floors, never the
+//! conformance).  Writes `BENCH_coldstart.json` through the shared
+//! `benches/common` emitter.  (`cargo bench --bench coldstart`)
+
+#[path = "common/mod.rs"]
+mod common;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
-use neuralut::coordinator::check_conformance;
+use neuralut::coordinator::{check_conformance, InferenceServer,
+                            ModelRegistry, ServerConfig};
+use neuralut::net::{NetConfig, NetServer, RemoteEngine};
 use neuralut::netlist::testutil::random_reducible_netlist;
-use neuralut::netlist::{compile, load_nlb, save_nlb, Netlist, PlanCache,
-                        PlanExecutor, PlanOptions};
+use neuralut::netlist::{compile, load_nlb, load_nlb_mapped, save_nlb,
+                        Netlist, PlanCache, PlanExecutor, PlanOptions,
+                        WidePlanExecutor};
 use neuralut::report::Table;
 use neuralut::util::Json;
 
@@ -43,6 +55,13 @@ fn bench<F: FnMut()>(reps: usize, mut f: F) -> f64 {
         times.push(t.elapsed().as_secs_f64());
     }
     median(times)
+}
+
+/// Whether this host takes the zero-copy path at all (elsewhere the
+/// mapped loader transparently copies, so the mmap row degenerates to
+/// the copy-load row and its floor is skipped).
+fn host_maps() -> bool {
+    cfg!(all(unix, target_pointer_width = "64", target_endian = "little"))
 }
 
 /// N structurally distinct jsc-shaped reducible netlists (per-bit
@@ -77,7 +96,7 @@ fn main() {
         println!("--quick: minimal reps, timing floors skipped \
                   (conformance still enforced)");
     }
-    let n_total = 16usize;
+    let n_total = 64usize;
     let fleet = model_fleet(n_total);
     let opts = PlanOptions::default();
 
@@ -117,19 +136,19 @@ fn main() {
             format!("{:.2} ms", secs * 1e3),
             format!("{:.1} us", secs * 1e6 / n as f64),
         ]);
-        let mut obj = BTreeMap::new();
-        obj.insert("case".into(), Json::Str(case.into()));
-        obj.insert("n_models".into(), Json::Num(n as f64));
-        obj.insert("ms".into(), Json::Num(secs * 1e3));
-        obj.insert("us_per_model".into(),
-                   Json::Num(secs * 1e6 / n as f64));
-        rows.push(Json::Obj(obj));
+        rows.push(common::json_row(&[
+            ("case", Json::Str(case.into())),
+            ("n_models", Json::Num(n as f64)),
+            ("ms", Json::Num(secs * 1e3)),
+            ("us_per_model", Json::Num(secs * 1e6 / n as f64)),
+        ]));
     };
 
     let mut compile_at = BTreeMap::new();
     let mut load_at = BTreeMap::new();
+    let mut mmap_at = BTreeMap::new();
     let mut cache_at = BTreeMap::new();
-    for n in [1usize, 8, n_total] {
+    for n in [1usize, 8, 16, n_total] {
         let t_compile = bench(reps, || {
             for nl in &fleet[..n] {
                 std::hint::black_box(compile(nl, opts));
@@ -144,7 +163,20 @@ fn main() {
                 std::hint::black_box(&m);
             }
         });
-        record(&mut table, &mut rows, "load .nlb plan image", n, t_load);
+        record(&mut table, &mut rows, "copy-load .nlb plan image", n,
+               t_load);
+        let t_mmap = bench(reps, || {
+            for p in &paths[..n] {
+                let m = load_nlb_mapped(p).unwrap();
+                let plan = m.plan.as_ref().expect("plan image");
+                assert_eq!(plan.is_mapped(), host_maps(),
+                           "zero-copy load expected iff the host \
+                            supports it");
+                std::hint::black_box(&m);
+            }
+        });
+        record(&mut table, &mut rows, "mmap-load .nlb plan image", n,
+               t_mmap);
         let t_cache = bench(reps, || {
             let cache = PlanCache::persistent(&cache_dir);
             for nl in &fleet[..n] {
@@ -157,38 +189,68 @@ fn main() {
                t_cache);
         compile_at.insert(n, t_compile);
         load_at.insert(n, t_load);
+        mmap_at.insert(n, t_mmap);
         cache_at.insert(n, t_cache);
     }
 
-    // conformance: every artifact-loaded plan must satisfy the engine
-    // contract against its own netlist — this is the CI smoke payload
+    // conformance: every *mapped* plan must satisfy the engine contract
+    // against its own netlist, at every lane width — this is the CI
+    // smoke payload, and the proof that borrowing arenas from a mapping
+    // changes nothing observable
     for (i, p) in paths.iter().enumerate() {
-        let m = load_nlb(p).unwrap();
-        let plan = m.plan.clone().expect("artifact carries a plan image");
-        let mut ex = PlanExecutor::new(plan);
-        check_conformance(&mut ex, &m.netlist, 0xC0 + i as u64)
-            .unwrap_or_else(|e| panic!("model {i}: {e:#}"));
+        let m = load_nlb_mapped(p).unwrap();
+        let plan = Arc::new(
+            m.plan.expect("artifact carries a plan image"));
+        assert_eq!(plan.is_mapped(), host_maps());
+        let mut w1 = PlanExecutor::new(plan.clone());
+        check_conformance(&mut w1, &m.netlist, 0xC0 + i as u64)
+            .unwrap_or_else(|e| panic!("model {i} w1: {e:#}"));
+        let mut w4: WidePlanExecutor<4> =
+            WidePlanExecutor::new(plan.clone());
+        check_conformance(&mut w4, &m.netlist, 0xC0 + i as u64)
+            .unwrap_or_else(|e| panic!("model {i} w4: {e:#}"));
+        let mut w8: WidePlanExecutor<8> = WidePlanExecutor::new(plan);
+        check_conformance(&mut w8, &m.netlist, 0xC0 + i as u64)
+            .unwrap_or_else(|e| panic!("model {i} w8: {e:#}"));
     }
-    println!("conformance: {} artifact-loaded plans pass the engine \
-              contract", paths.len());
+    println!("conformance: {} mapped plans pass the engine contract at \
+              W in {{1, 4, 8}}", paths.len());
+
+    // ...and over TCP: a served mapped artifact answers bit-exactly
+    // through the whole wire stack
+    {
+        let mut registry = ModelRegistry::new();
+        let m = load_nlb_mapped(&paths[0]).unwrap();
+        assert_eq!(m.plan.as_ref().map(|p| p.is_mapped()),
+                   Some(host_maps()));
+        registry.register_artifact("fleet0", m);
+        let server = InferenceServer::start(
+            registry, ServerConfig::default());
+        let net = NetServer::bind(server, "127.0.0.1:0",
+                                  NetConfig::default())
+            .expect("bind loopback");
+        let mut remote = RemoteEngine::open(net.local_addr(), "fleet0")
+            .expect("connect");
+        check_conformance(&mut remote, &fleet[0], 0x7C9)
+            .unwrap_or_else(|e| panic!("tcp conformance: {e:#}"));
+        net.shutdown();
+        println!("conformance: mapped plan serves bit-exactly over TCP");
+    }
 
     table.print();
-    let mut root = BTreeMap::new();
-    root.insert("bench".into(), Json::Str("coldstart".into()));
-    root.insert("quick".into(), Json::Bool(quick));
-    root.insert("reps".into(), Json::Num(reps as f64));
-    root.insert("n_models".into(), Json::Num(n_total as f64));
-    root.insert("rows".into(), Json::Arr(rows));
-    let path = "BENCH_coldstart.json";
-    match std::fs::write(path, Json::Obj(root).to_string()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+    common::emit_bench_json(
+        "coldstart", quick,
+        &[("reps", Json::Num(reps as f64)),
+          ("n_models", Json::Num(n_total as f64)),
+          ("host_maps", Json::Bool(host_maps()))],
+        rows);
 
-    for n in [8usize, n_total] {
-        println!("@ {n} models: plan-image load {:.2}x vs recompile, \
-                  warm cache {:.2}x vs recompile",
+    for n in [8usize, 16, n_total] {
+        println!("@ {n} models: copy-load {:.2}x vs recompile, \
+                  mmap-load {:.2}x vs copy-load, warm cache {:.2}x vs \
+                  recompile",
                  compile_at[&n] / load_at[&n],
+                 load_at[&n] / mmap_at[&n],
                  compile_at[&n] / cache_at[&n]);
     }
 
@@ -198,18 +260,26 @@ fn main() {
         println!("(--quick: timing floors not enforced this run)");
         return;
     }
-    // the acceptance floor: at >= 8 registered models both artifact
+    // the acceptance floors: at >= 8 registered models both artifact
     // paths must beat recompilation outright — skipping bit-plane
     // decomposition and table interning is an algorithmic win, not a
-    // constant-factor one, so no noise slack is granted
-    for n in [8usize, n_total] {
+    // constant-factor one, so no noise slack is granted — and the
+    // mapped load must beat the copying load (O(validation) vs
+    // O(bytes); only meaningful where the host actually maps)
+    for n in [8usize, 16, n_total] {
         assert!(load_at[&n] < compile_at[&n],
-                "@ {n} models: plan-image load {:.2}ms not faster than \
+                "@ {n} models: copy-load {:.2}ms not faster than \
                  recompile {:.2}ms",
                 load_at[&n] * 1e3, compile_at[&n] * 1e3);
         assert!(cache_at[&n] < compile_at[&n],
                 "@ {n} models: warm plan cache {:.2}ms not faster than \
                  recompile {:.2}ms",
                 cache_at[&n] * 1e3, compile_at[&n] * 1e3);
+        if host_maps() {
+            assert!(mmap_at[&n] < load_at[&n],
+                    "@ {n} models: mmap-load {:.2}ms not faster than \
+                     copy-load {:.2}ms",
+                    mmap_at[&n] * 1e3, load_at[&n] * 1e3);
+        }
     }
 }

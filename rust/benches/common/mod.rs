@@ -6,11 +6,45 @@
 
 #![allow(dead_code)]
 
+use std::collections::BTreeMap;
+
 use neuralut::config::Meta;
 use neuralut::coordinator::{run_flow, FlowOptions, FlowResult};
 use neuralut::dataset::GenOpts;
 use neuralut::netlist::OptLevel;
 use neuralut::runtime::Runtime;
+use neuralut::util::Json;
+
+/// Shared machine-readable bench output: every bench that emits JSON
+/// writes `BENCH_<name>.json` through this one function so the schema
+/// stays uniform across exhibits — `{"bench": name, "quick": bool,
+/// <extra keys>, "rows": [...]}` — and CI uploads are one glob away.
+/// A write failure is reported, never fatal: the human-readable table
+/// already went to stdout.
+pub fn emit_bench_json(name: &str, quick: bool, extra: &[(&str, Json)],
+                       rows: Vec<Json>) {
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str(name.into()));
+    root.insert("quick".into(), Json::Bool(quick));
+    for (k, v) in extra {
+        root.insert((*k).to_string(), v.clone());
+    }
+    root.insert("rows".into(), Json::Arr(rows));
+    let path = format!("BENCH_{name}.json");
+    match std::fs::write(&path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// A JSON row from (key, value) pairs — the common emitter's unit.
+pub fn json_row(fields: &[(&str, Json)]) -> Json {
+    let mut obj = BTreeMap::new();
+    for (k, v) in fields {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(obj)
+}
 
 pub fn scale() -> usize {
     if std::env::var("NLA_FULL").is_ok() {

@@ -1,7 +1,15 @@
 //! Figure 5: JSC ablation over three tree architectures x three
 //! configurations (complete / w/o learned mappings / w/o tree-level
 //! skips), reporting mapped area (bar) and accuracy spread over seeds
-//! (box).  (`cargo bench --bench fig5_ablation`)
+//! (box).  Writes `BENCH_fig5_ablation.json` through the shared
+//! `benches/common` emitter.
+//!
+//! Needs the compiled-config artifacts (`make artifacts`) and a PJRT
+//! runtime.  When either is missing — notably in CI, which builds no
+//! artifacts — the bench degrades gracefully: it reports why, emits a
+//! JSON document with `"skipped": true` and no rows, and exits 0, so
+//! the exhibit can run `--quick` in the gate without a hard dependency
+//! on the training stack.  (`cargo bench --bench fig5_ablation`)
 
 #[path = "common/mod.rs"]
 mod common;
@@ -9,11 +17,37 @@ mod common;
 use neuralut::config::Meta;
 use neuralut::report::{pct, Table};
 use neuralut::runtime::Runtime;
+use neuralut::util::Json;
+
+fn emit_skipped(quick: bool, reason: &str) {
+    println!("fig5_ablation skipped: {reason}");
+    common::emit_bench_json(
+        "fig5_ablation", quick,
+        &[("skipped", Json::Bool(true)),
+          ("reason", Json::Str(reason.into()))],
+        Vec::new());
+}
 
 fn main() {
-    let meta = Meta::load(Meta::default_dir()).expect("run `make artifacts`");
-    let rt = Runtime::new().expect("pjrt");
-    let seeds: Vec<u64> = if common::scale() > 1 {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let meta = match Meta::load(Meta::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            return emit_skipped(quick, &format!(
+                "no compiled-config artifacts (run `make artifacts`): \
+                 {e:#}"));
+        }
+    };
+    let rt = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            return emit_skipped(quick, &format!(
+                "no PJRT runtime available: {e:#}"));
+        }
+    };
+    let seeds: Vec<u64> = if quick {
+        vec![7]
+    } else if common::scale() > 1 {
         vec![7, 17, 27, 37]
     } else {
         vec![7, 17]
@@ -29,6 +63,7 @@ fn main() {
         ("fig5_opt2", "(2) 16-in tree of 2-LUTs, depth 4"),
         ("fig5_opt3", "(3) 64-in tree of 2-LUTs, depth 6"),
     ];
+    let mut rows: Vec<Json> = Vec::new();
     let mut area_by_arch = Vec::new();
     let mut complete_mean = Vec::new();
     let mut wo_map_mean = Vec::new();
@@ -46,6 +81,14 @@ fn main() {
                 if dense0 {
                     opts.dense_steps = 0; // random connectivity
                 }
+                if quick {
+                    // one seed, slashed budgets: exercises the whole
+                    // ablation matrix without CI-scale training time
+                    opts.dense_steps = opts.dense_steps.min(20);
+                    opts.sparse_steps = opts.sparse_steps.min(60);
+                    opts.gen.n_train = opts.gen.n_train.min(1500);
+                    opts.gen.n_test = opts.gen.n_test.min(500);
+                }
                 opts.skip_scale = skip;
                 let r = common::run(&rt, &meta, &opts);
                 accs.push(r.netlist_acc);
@@ -61,6 +104,15 @@ fn main() {
                 pct(mean),
                 format!("{}..{}", pct(min), pct(max)),
             ]);
+            rows.push(common::json_row(&[
+                ("architecture", Json::Str(config.into())),
+                ("variant", Json::Str(variant.into())),
+                ("p_luts", Json::Num(area as f64)),
+                ("acc_mean", Json::Num(mean)),
+                ("acc_min", Json::Num(min)),
+                ("acc_max", Json::Num(max)),
+                ("seeds", Json::Num(accs.len() as f64)),
+            ]));
             match variant {
                 "complete" => {
                     complete_mean.push(mean);
@@ -72,6 +124,11 @@ fn main() {
         }
     }
     table.print();
+    common::emit_bench_json(
+        "fig5_ablation", quick,
+        &[("skipped", Json::Bool(false)),
+          ("seeds", Json::Num(seeds.len() as f64))],
+        rows);
 
     // the paper's Fig. 5 takeaways, as shape checks
     println!("\nshape checks:");

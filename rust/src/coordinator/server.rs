@@ -59,10 +59,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::metrics::{BatchStats, LatencyStats, LatencySummary};
-use crate::netlist::{load_nlb, optimize, select_backend, ExecPlan,
-                     LaneExecutor, LaneSelect, Netlist, NlbModel,
-                     OptLevel, OptReport, PlanCache, PlanOptions,
-                     PlanStats, SimOptions, WorkerPool};
+use crate::netlist::{load_nlb, load_nlb_mapped, optimize,
+                     select_backend, ExecPlan, LaneExecutor, LaneSelect,
+                     Netlist, NlbModel, OptLevel, OptReport, PlanCache,
+                     PlanOptions, PlanStats, SimOptions, WorkerPool};
 
 use super::engine::ModelEngine;
 
@@ -105,6 +105,12 @@ pub struct ServerConfig {
     /// the cold-start path (`benches/coldstart`).  `None` keeps the
     /// cache in-memory only.
     pub plan_cache_dir: Option<PathBuf>,
+    /// Serve persistent-cache disk hits from memory-mapped `.plan`
+    /// files (zero-copy arenas, O(validation) cold start) instead of
+    /// reading them into owned buffers.  On by default; `--no-mmap` on
+    /// the CLI clears it.  Hosts where mapping is unavailable or a file
+    /// is unaligned fall back to the copying read regardless.
+    pub mmap: bool,
     /// Lane-width policy for the workers' executors (`--lanes` on the
     /// CLI).  `Auto` resolves per model against its `max_batch`: small
     /// batch ceilings stay on the scalar `W = 1` path, large ones get
@@ -122,6 +128,7 @@ impl Default for ServerConfig {
             sim_threads: 1,
             opt_level: OptLevel::Full,
             plan_cache_dir: None,
+            mmap: true,
             lanes: LaneSelect::Auto,
         }
     }
@@ -212,10 +219,26 @@ impl ModelRegistry {
 
     /// Load an `.nlb` file and register it — the `nid serve --model
     /// foo.nlb` path.  Fails on any malformed artifact (see
-    /// `netlist::format` for the validation pass).
+    /// `netlist::format` for the validation pass).  Maps the file for a
+    /// zero-copy load when the host and file layout allow it, falling
+    /// back to the copying read otherwise; use
+    /// [`ModelRegistry::register_file_with`] to force the copying path
+    /// (`--no-mmap`).
     pub fn register_file(&mut self, name: &str, path: impl AsRef<Path>)
                          -> Result<&mut Self> {
-        let model = load_nlb(path)?;
+        self.register_file_with(name, path, true)
+    }
+
+    /// [`ModelRegistry::register_file`] with an explicit mapping policy:
+    /// `mmap = false` always reads the artifact into owned buffers.
+    pub fn register_file_with(&mut self, name: &str,
+                              path: impl AsRef<Path>, mmap: bool)
+                              -> Result<&mut Self> {
+        let model = if mmap {
+            load_nlb_mapped(path)?
+        } else {
+            load_nlb(path)?
+        };
         Ok(self.register_artifact(name, model))
     }
 
@@ -330,10 +353,11 @@ impl InferenceServer {
                  -> InferenceServer {
         assert!(!registry.is_empty(), "registry holds no models");
         let default_policy = cfg.default_policy();
-        let plans = match &cfg.plan_cache_dir {
+        let mut plans = match &cfg.plan_cache_dir {
             Some(dir) => PlanCache::persistent(dir),
             None => PlanCache::new(),
         };
+        plans.set_mmap(cfg.mmap);
         let models: Vec<Arc<ModelState>> = registry
             .models
             .into_iter()

@@ -17,6 +17,13 @@
 //! system inventory and EXPERIMENTS.md for paper-vs-measured results
 //! and the hot-path benchmark numbers.
 
+// Unsafe is confined to two audited islands, each carrying an explicit
+// item- or module-level `allow` with a SAFETY argument:
+// `netlist::mapped` (mmap FFI + arena borrowing) and the lifetime-erased
+// worker-pool plumbing in `netlist::sim`.  CI greps for exactly this
+// confinement; everything else is denied here.
+#![deny(unsafe_code)]
+
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

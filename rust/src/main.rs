@@ -17,6 +17,7 @@
 //!               --no-skips --random-conn --augment --artifacts DIR
 //!               --plan-cache DIR (persistent compiled-plan cache)
 //!               --lanes auto|1|4|8 (wide-word execution backend)
+//!               --no-mmap (force copying artifact/plan loads)
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -28,8 +29,8 @@ use neuralut::coordinator::{run_flow, FlowOptions, InferenceServer,
                             ModelRegistry, ServerConfig};
 use neuralut::mapper::{map_netlist, MappedNetlist};
 use neuralut::net::{NetConfig, NetServer};
-use neuralut::netlist::{load_nlb, select_backend, ExecPlan, LaneSelect,
-                        Netlist, OptLevel};
+use neuralut::netlist::{load_nlb, load_nlb_mapped, select_backend,
+                        ExecPlan, LaneSelect, Netlist, OptLevel};
 use neuralut::report::{pct, sci, Table};
 use neuralut::runtime::Runtime;
 use neuralut::util::Stopwatch;
@@ -49,7 +50,7 @@ fn parse_args() -> Result<Args> {
         if let Some(name) = a.strip_prefix("--") {
             match name {
                 "no-skips" | "random-conn" | "augment" | "verify" | "quiet"
-                | "plan" => {
+                | "plan" | "no-mmap" => {
                     switches.push(name.to_string());
                 }
                 _ => {
@@ -301,7 +302,11 @@ fn print_netlist_inspection(title: &str, nl: &Netlist,
 /// map it, print the same per-layer table as the config path, and
 /// describe the embedded plan image (if any).
 fn inspect_artifact(args: &Args, path: &str) -> Result<()> {
-    let model = load_nlb(path)?;
+    let model = if args.has("no-mmap") {
+        load_nlb(path)?
+    } else {
+        load_nlb_mapped(path)?
+    };
     let nl = &model.netlist;
     let mapped_raw = map_netlist(nl, false);
     print_netlist_inspection(&format!("{} ({path})", nl.name), nl,
@@ -311,7 +316,9 @@ fn inspect_artifact(args: &Args, path: &str) -> Result<()> {
              nl.content_hash());
     match &model.plan {
         Some(plan) => {
-            println!("plan image: {}", plan.stats().summary());
+            println!("plan image: {}{}", plan.stats().summary(),
+                     if plan.is_mapped() { " [mapped zero-copy]" }
+                     else { "" });
             if args.has("plan") {
                 print_plan_stats(&nl.name, plan);
             }
@@ -417,9 +424,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             registry.register(name, r.netlist);
         }
     }
+    let use_mmap = !args.has("no-mmap");
     for path in &model_files {
-        let model = load_nlb(path)
-            .with_context(|| format!("loading artifact '{path}'"))?;
+        let model = if use_mmap {
+            load_nlb_mapped(path)
+        } else {
+            load_nlb(path)
+        }
+        .with_context(|| format!("loading artifact '{path}'"))?;
         let name = if model.netlist.name.is_empty() {
             std::path::Path::new(path)
                 .file_stem()
@@ -434,7 +446,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                   content hash {:016x}, plan image: {})",
                  model.netlist.layers.len(), model.netlist.total_units(),
                  model.netlist.content_hash(),
-                 if model.plan.is_some() { "yes" } else { "no" });
+                 match &model.plan {
+                     Some(p) if p.is_mapped() => "yes, mapped zero-copy",
+                     Some(_) => "yes",
+                     None => "no",
+                 });
         // artifacts ship no dataset: drive them with random (but valid
         // and reproducible) input codes
         let seed = args.usize_flag("seed", 7)? as u64;
@@ -458,6 +474,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sim_threads: args.usize_flag("sim-threads", 1)?,
         opt_level: args.opt_level()?,
         plan_cache_dir: plan_cache_dir.clone(),
+        mmap: use_mmap,
         lanes: args.lanes()?,
     };
     let server = InferenceServer::start(registry, cfg);
@@ -470,15 +487,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("{name}: backend plan-w{lw} ({lw}x64-sample lanes)");
     }
     {
+        // same three counters the STATS wire JSON reports under
+        // `plan_cache`: compiles / memory hits / disk hits
         let (compiled, hits) = server.plan_cache_counts();
-        if plan_cache_dir.is_some() {
-            println!("plan cache: {compiled} plans compiled, {hits} \
-                      registration hits, {} loaded from disk",
-                     server.plan_cache_disk_hits());
-        } else {
-            println!("plan cache: {compiled} plans compiled, {hits} \
-                      registration hits");
-        }
+        println!("plan cache: {compiled} compiles, {hits} memory hits, \
+                  {} disk hits{}",
+                 server.plan_cache_disk_hits(),
+                 if plan_cache_dir.is_some() && use_mmap {
+                     " (disk hits served zero-copy via mmap)"
+                 } else {
+                     ""
+                 });
     }
     // --listen ADDR: expose the server over TCP instead of driving
     // synthetic traffic in-process
@@ -613,6 +632,7 @@ fn main() {
                  [--sim-threads N] [--opt-level 0|1|2] [--plan] \
                  [--lanes auto|1|4|8] \
                  [--model FILE.nlb[,FILE.nlb...]] [--plan-cache DIR] \
+                 [--no-mmap] \
                  [--listen ADDR] [--serve-secs N] [--max-inflight N]\n\n\
                  serve hosts several configs at once: \
                  --config nid,jsc_cb serves both from one process \
@@ -640,7 +660,14 @@ fn main() {
                  training/optimizer/compile, inspect needs no runtime. \
                  --plan-cache DIR keeps compiled plans on disk keyed by \
                  content hash so a restarted server cold-loads instead \
-                 of recompiling.\n\n\
+                 of recompiling. Artifact and plan-cache loads are \
+                 zero-copy by default: the file is memory-mapped and \
+                 the plan's arenas are borrowed straight from the \
+                 mapping when the host is little-endian and the file \
+                 offsets are aligned (v2 artifacts pad to guarantee \
+                 this); --no-mmap forces the copying loader, and \
+                 unaligned/v1/foreign-endian files fall back to it \
+                 automatically.\n\n\
                  serve --listen ADDR exposes the models over TCP (the \
                  NLWP length-prefixed protocol; see DESIGN.md): \
                  per-connection pipelining feeds the same batching \

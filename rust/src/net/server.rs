@@ -54,7 +54,9 @@
 //!               "net": {"requests": 0, "rows": 0, "shed": 0}}],
 //!   "server": {"accepted_conns": 0, "open_conns": 0, "inflight": 0,
 //!              "max_inflight": 1024, "shed_total": 0,
-//!              "draining": false}
+//!              "draining": false,
+//!              "plan_cache": {"compiles": 1, "memory_hits": 0,
+//!                             "disk_hits": 0}}
 //! }
 //! ```
 
@@ -625,6 +627,17 @@ fn stats_json(shared: &Arc<Shared>, model: &str)
                num(shared.shed_total.load(Ordering::SeqCst) as f64));
     srv.insert("draining".into(),
                Json::Bool(shared.stop.load(Ordering::SeqCst)));
+    // plan-cache telemetry (stable keys, asserted in tests/net.rs):
+    // how the hosted plans came to exist — compiled here, shared from
+    // an identical registration, or cold-loaded from the persistent
+    // cache (zero-copy mapped unless --no-mmap / fallback)
+    let (compiles, memory_hits) = shared.server.plan_cache_counts();
+    let mut pc = BTreeMap::new();
+    pc.insert("compiles".into(), num(compiles as f64));
+    pc.insert("memory_hits".into(), num(memory_hits as f64));
+    pc.insert("disk_hits".into(),
+              num(shared.server.plan_cache_disk_hits() as f64));
+    srv.insert("plan_cache".into(), Json::Obj(pc));
     let mut root = BTreeMap::new();
     root.insert("models".into(), Json::Arr(models));
     root.insert("server".into(), Json::Obj(srv));

@@ -15,7 +15,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "NLBF"
-//! 4       2     version (currently 1)
+//! 4       2     version (currently 2)
 //! 6       2     flags (bit 0: compiled-plan image section present)
 //! 8       8     content hash (Netlist::content_hash of the payload)
 //! 16      8     payload length (must equal file length - 32)
@@ -29,6 +29,10 @@
 //!     w, fan_in, in_bits, out_bits          4 x u32
 //!     conn     w * fan_in            x u32  (unit-major)
 //!     tables   w * 2^(in_bits*fan_in) x u16 (unit-major)
+//!   padding     (v2+, iff flags bit 0: 0-7 zero bytes so the plan
+//!                image starts at a file offset that is a multiple of
+//!                8 — readers recompute the count and reject nonzero
+//!                bytes, keeping the encoding canonical)
 //!   plan image  (iff flags bit 0 — the ExecPlan arenas verbatim;
 //!                layout documented at `ExecPlan::write_image`)
 //! ```
@@ -36,10 +40,14 @@
 //! ## Versioning policy
 //!
 //! The version bumps on any layout change; readers accept exactly the
-//! versions they know (currently: 1) and reject the rest with a
-//! descriptive error — an old binary must never misparse a new file.
-//! New optional sections get a flag bit, and readers reject unknown
-//! flag bits for the same reason.
+//! versions they know and reject the rest with a descriptive error —
+//! an old binary must never misparse a new file.  New optional
+//! sections get a flag bit, and readers reject unknown flag bits for
+//! the same reason.  Currently readable: **v2** (the written version;
+//! adds the alignment padding before the plan image, which is what
+//! makes the zero-copy mapped load possible) and **v1** (the
+//! unpadded layout, accepted via a back-compat copying read —
+//! [`read_nlb_mapped`] never borrows arenas from a v1 file).
 //!
 //! ## Validation & threat model
 //!
@@ -63,11 +71,15 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::mapped::MappedFile;
 use super::plan::{compile, plan_key, ExecPlan, PlanOptions};
 use super::{LayerSpec, Netlist, MAX_ADDR_BITS};
 
 pub const NLB_MAGIC: [u8; 4] = *b"NLBF";
-pub const NLB_VERSION: u16 = 1;
+pub const NLB_VERSION: u16 = 2;
+
+/// Oldest version the reader still accepts (copying read only).
+const NLB_MIN_VERSION: u16 = 1;
 
 /// Flag bit 0: a compiled-plan image section follows the netlist.
 const FLAG_PLAN: u16 = 1;
@@ -117,6 +129,13 @@ impl<'a> ByteReader<'a> {
 
     pub(super) fn remaining(&self) -> usize {
         self.b.len() - self.pos
+    }
+
+    /// Bytes consumed so far — the cursor's offset from the start of
+    /// the buffer it was constructed over (used to translate reader
+    /// positions into absolute file offsets for the mapped load path).
+    pub(super) fn pos(&self) -> usize {
+        self.pos
     }
 
     pub(super) fn take(&mut self, n: usize, what: &str)
@@ -212,6 +231,16 @@ impl NlbModel {
 /// from this exact content — a file we write always loads.
 pub fn write_nlb(nl: &Netlist, plan: Option<&ExecPlan>)
                  -> Result<Vec<u8>> {
+    write_nlb_versioned(nl, plan, NLB_VERSION)
+}
+
+/// [`write_nlb`] with an explicit version — v1 (no alignment padding)
+/// exists only so back-compat tests can generate legacy fixtures.
+pub(crate) fn write_nlb_versioned(nl: &Netlist, plan: Option<&ExecPlan>,
+                                  version: u16) -> Result<Vec<u8>> {
+    if !(NLB_MIN_VERSION..=NLB_VERSION).contains(&version) {
+        bail!("cannot write .nlb version {version}");
+    }
     nl.validate().context("refusing to serialize an invalid netlist")?;
     if let Some(p) = plan {
         let ok = [true, false].iter().any(|&b| {
@@ -244,11 +273,19 @@ pub fn write_nlb(nl: &Netlist, plan: Option<&ExecPlan>)
     let mut flags = 0u16;
     if let Some(p) = plan {
         flags |= FLAG_PLAN;
+        if version >= 2 {
+            // pad the image to a file offset that is a multiple of 8:
+            // the payload starts at 32 (≡ 0 mod 8), so padding the
+            // payload length to 8 aligns the image — and with it the
+            // word/conn arenas — for the zero-copy mapped load
+            let pad = (8 - payload.len() % 8) % 8;
+            payload.resize(payload.len() + pad, 0);
+        }
         p.write_image(&mut payload);
     }
     let mut out = Vec::with_capacity(32 + payload.len());
     out.extend_from_slice(&NLB_MAGIC);
-    put_u16(&mut out, NLB_VERSION);
+    put_u16(&mut out, version);
     put_u16(&mut out, flags);
     put_u64(&mut out, nl.content_hash());
     put_u64(&mut out, payload.len() as u64);
@@ -261,6 +298,22 @@ pub fn write_nlb(nl: &Netlist, plan: Option<&ExecPlan>)
 /// error on any malformed input, never panics (see the module doc for
 /// the check order).
 pub fn read_nlb(bytes: &[u8]) -> Result<NlbModel> {
+    read_nlb_impl(bytes, None)
+}
+
+/// Zero-copy variant of [`read_nlb`]: parse a memory-mapped `.nlb`
+/// whole-file view, borrowing the plan arenas from the mapping when
+/// the file is v2 and the preconditions hold (little-endian host,
+/// aligned offsets — see `netlist::mapped`).  Validation is identical
+/// to the copying read; only the arena storage differs, observable via
+/// [`ExecPlan::is_mapped`].  v1 files and failed preconditions fall
+/// back to copying the arenas — never to weaker checking.
+pub fn read_nlb_mapped(map: &Arc<MappedFile>) -> Result<NlbModel> {
+    read_nlb_impl(map.bytes(), Some(map))
+}
+
+fn read_nlb_impl(bytes: &[u8], map: Option<&Arc<MappedFile>>)
+                 -> Result<NlbModel> {
     if bytes.len() < 32 {
         bail!("truncated header: {} bytes, need 32", bytes.len());
     }
@@ -271,9 +324,9 @@ pub fn read_nlb(bytes: &[u8]) -> Result<NlbModel> {
                file)");
     }
     let version = h.u16("version")?;
-    if version != NLB_VERSION {
+    if !(NLB_MIN_VERSION..=NLB_VERSION).contains(&version) {
         bail!("unsupported format version {version} (this build reads \
-               version {NLB_VERSION})");
+               versions {NLB_MIN_VERSION}..={NLB_VERSION})");
     }
     let flags = h.u16("flags")?;
     if flags & !FLAG_PLAN != 0 {
@@ -335,7 +388,21 @@ pub fn read_nlb(bytes: &[u8]) -> Result<NlbModel> {
                payload hashes to {:016x}", nl.content_hash());
     }
     let plan = if flags & FLAG_PLAN != 0 {
-        let p = ExecPlan::read_image(&mut r, &nl)
+        if version >= 2 {
+            // consume the writer's alignment padding (recomputed, not
+            // stored — and required to be zero, so the encoding stays
+            // canonical)
+            let pad = (8 - r.pos() % 8) % 8;
+            if r.take(pad, "alignment padding")?.iter().any(|&b| b != 0) {
+                bail!("nonzero alignment padding before the plan image");
+            }
+        }
+        // v1 files predate the alignment guarantee: always copy them
+        let src = match map {
+            Some(m) if version >= 2 => Some((m, 32usize)),
+            _ => None,
+        };
+        let p = ExecPlan::read_image(&mut r, &nl, src)
             .context("plan image section")?;
         Some(Arc::new(p))
     } else {
@@ -364,6 +431,22 @@ pub fn load_nlb(path: impl AsRef<Path>) -> Result<NlbModel> {
         .with_context(|| format!("reading {}", path.display()))?;
     read_nlb(&bytes)
         .with_context(|| format!("loading {}", path.display()))
+}
+
+/// Load an `.nlb` artifact by memory-mapping it: same validation as
+/// [`load_nlb`], but a v2 plan image's arenas are borrowed from the
+/// mapping instead of copied, making the load O(validation) rather
+/// than O(bytes).  On targets without mapping support this degrades to
+/// the copying load; a malformed file is an error on both paths.
+pub fn load_nlb_mapped(path: impl AsRef<Path>) -> Result<NlbModel> {
+    let path = path.as_ref();
+    match MappedFile::open(path) {
+        Ok(map) => read_nlb_mapped(&map)
+            .with_context(|| format!("loading {}", path.display())),
+        // Unsupported target — or any open error the copying path can
+        // diagnose better (missing file, permissions)
+        Err(_) => load_nlb(path),
+    }
 }
 
 /// Temp-file-then-rename write; the temp name carries the pid so
@@ -625,5 +708,140 @@ mod tests {
     #[test]
     fn empty_input_is_rejected() {
         assert!(read_nlb(&[]).is_err());
+    }
+
+    fn temp_artifact(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("nid_nlb_{tag}_{}.nlb", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    /// Do the zero-copy preconditions hold on this host?
+    fn host_maps() -> bool {
+        cfg!(all(unix, target_pointer_width = "64",
+                 target_endian = "little"))
+    }
+
+    #[test]
+    fn v2_plan_image_is_8_byte_aligned_for_any_name_length() {
+        // name lengths 5..=8 cover every padding residue the header
+        // fields leave reachable
+        for seed in [7u64, 77, 777, 7777] {
+            let nl = random_reducible_netlist(
+                seed, 8, 2, &[(6, 3, 2), (3, 2, 1)], 6);
+            let plan = Arc::new(compile(&nl, PlanOptions::default()));
+            let plain = write_nlb(&nl, None).unwrap();
+            let pad = (8 - (plain.len() - 32) % 8) % 8;
+            assert_eq!((plain.len() + pad) % 8, 0, "seed {seed}");
+            let bytes = write_nlb(&nl, Some(&plan)).unwrap();
+            assert_eq!(&bytes[plain.len()..plain.len() + pad],
+                       vec![0u8; pad].as_slice(), "seed {seed} padding");
+            let m = read_nlb(&bytes).unwrap();
+            assert_eq!(m.plan.unwrap().key(), plan.key(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn mapped_load_is_zero_copy_and_bit_exact() {
+        let nl = random_reducible_netlist(
+            81, 12, 2, &[(10, 3, 2), (6, 2, 2), (3, 2, 1)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let bytes = write_nlb(&nl, Some(&plan)).unwrap();
+        let path = temp_artifact("mapped", &bytes);
+        let m = load_nlb_mapped(&path).unwrap();
+        assert_same_netlist(&nl, &m.netlist);
+        let loaded = m.plan.expect("plan image should load");
+        assert_eq!(loaded.key(), plan.key());
+        if host_maps() {
+            assert!(loaded.is_mapped(),
+                    "v2 artifact plan should borrow the mapping");
+        }
+        // the copying load of the same file owns its arenas and the
+        // two agree with the interpreted reference bit-for-bit
+        let copied = load_nlb(&path).unwrap().plan.unwrap();
+        assert!(!copied.is_mapped());
+        let mut ex = PlanExecutor::new(loaded);
+        let mut exc = PlanExecutor::new(copied);
+        for (seed, batch) in [(1u64, 1usize), (2, 9), (3, 130)] {
+            let x = random_inputs(seed, &nl, batch);
+            let got = ex.eval_batch(&x, batch);
+            assert_eq!(exc.eval_batch(&x, batch), got);
+            let ow = nl.out_width();
+            for b in 0..batch {
+                let one = nl
+                    .eval_one(&x[b * nl.n_in..(b + 1) * nl.n_in])
+                    .unwrap();
+                assert_eq!(&got[b * ow..(b + 1) * ow], &one[..]);
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn plan_free_artifacts_load_mapped_too() {
+        let nl = random_netlist(83, 8, 1, &[(4, 2, 2)]);
+        let bytes = write_nlb(&nl, None).unwrap();
+        let path = temp_artifact("noplan", &bytes);
+        let m = load_nlb_mapped(&path).unwrap();
+        assert_same_netlist(&nl, &m.netlist);
+        assert!(m.plan.is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_files_load_via_the_copying_read() {
+        let nl = random_reducible_netlist(
+            85, 10, 2, &[(8, 3, 2), (4, 2, 1)], 6);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let v1 = write_nlb_v1(&nl, Some(&plan)).unwrap();
+        assert_eq!(u16::from_le_bytes([v1[4], v1[5]]), 1);
+        // in-memory read accepts the legacy layout
+        let m = read_nlb(&v1).unwrap();
+        assert_same_netlist(&nl, &m.netlist);
+        assert_eq!(m.plan.as_ref().unwrap().key(), plan.key());
+        // the mapped loader accepts it too but never borrows from it
+        let path = temp_artifact("v1", &v1);
+        let mm = load_nlb_mapped(&path).unwrap();
+        let loaded = mm.plan.unwrap();
+        assert!(!loaded.is_mapped(), "v1 must take the copying read");
+        let mut ex = PlanExecutor::new(loaded);
+        let x = random_inputs(5, &nl, 40);
+        let got = ex.eval_batch(&x, 40);
+        let ow = nl.out_width();
+        for b in 0..40 {
+            let one =
+                nl.eval_one(&x[b * nl.n_in..(b + 1) * nl.n_in]).unwrap();
+            assert_eq!(&got[b * ow..(b + 1) * ow], &one[..]);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_and_v2_encodings_differ_only_as_documented() {
+        // without a plan there is nothing to align: v1 and v2 bytes
+        // match except the version field
+        let nl = random_netlist(87, 6, 1, &[(4, 2, 1)]);
+        let v1 = write_nlb_v1(&nl, None).unwrap();
+        let v2 = write_nlb(&nl, None).unwrap();
+        assert_eq!(v1.len(), v2.len());
+        assert_eq!(&v1[..4], &v2[..4]);
+        assert_eq!(&v1[6..], &v2[6..]);
+        assert_ne!(v1[4], v2[4]);
+    }
+
+    #[test]
+    fn rejects_nonzero_alignment_padding() {
+        let nl = random_netlist(19, 6, 1, &[(4, 2, 1)]);
+        let plan = Arc::new(compile(&nl, PlanOptions::default()));
+        let plain = write_nlb(&nl, None).unwrap();
+        let pad = (8 - (plain.len() - 32) % 8) % 8;
+        assert!(pad > 0, "pick a netlist whose section forces padding");
+        let mut bytes = write_nlb(&nl, Some(&plan)).unwrap();
+        bytes[plain.len()] = 1;
+        let ph = fnv1a(&bytes[32..]).to_le_bytes();
+        bytes[24..32].copy_from_slice(&ph);
+        let err = read_nlb(&bytes).unwrap_err().to_string();
+        assert!(err.contains("padding"), "unexpected error: {err}");
     }
 }

@@ -1,0 +1,331 @@
+//! Memory-mapped artifact regions and the arena storage behind
+//! [`ExecPlan`](super::ExecPlan) — one of the crate's two audited
+//! `unsafe` islands (the other is the worker-pool plumbing in
+//! `netlist/sim.rs`; the crate root carries `#![deny(unsafe_code)]`
+//! and CI greps that the keyword appears nowhere else).
+//!
+//! ## Why
+//!
+//! A compiled plan is two flat little-endian buffers — a `u64` table
+//! arena and a `u32` conn arena — plus a thin layer schedule.  The
+//! copying loader pays O(bytes) per model to move those buffers into
+//! owned `Vec`s; at hundreds of registered models that is the dominant
+//! cold-start cost.  [`MappedFile`] + [`Arena`] let the loader *borrow*
+//! the arenas straight out of a memory-mapped `.nlb` / `.plan` file, so
+//! a load costs O(validation): headers, checksums and structural
+//! cross-checks are still performed on every byte, but the bulk data is
+//! never copied and pages fault in lazily on first execution.
+//!
+//! ## Safety argument
+//!
+//! The module exposes no raw pointers and no lifetimes tied to a file:
+//!
+//! * [`MappedFile`] owns a `PROT_READ`/`MAP_PRIVATE` mapping for its
+//!   whole lifetime and is only handed out as `Arc<MappedFile>`; every
+//!   [`Arena`] that borrows from it holds a clone of the `Arc`, so the
+//!   mapping outlives every view into it by construction.
+//! * [`Arena::try_map`] is the *only* way to build a borrowed arena,
+//!   and it re-checks every precondition `Deref`'s
+//!   `slice::from_raw_parts` needs: the host is little-endian (else the
+//!   raw bytes are not valid `T`s — foreign-endian hosts always copy),
+//!   the byte range lies inside the mapping, and the absolute address
+//!   is aligned for `T` (writers pad so this holds; an unaligned file
+//!   yields `None` and the caller falls back to the copying decoder).
+//! * Element types are sealed ([`ArenaElem`]: `u32`/`u64` only) — plain
+//!   old data with no invalid bit patterns, so arbitrary file bytes are
+//!   always valid values.  Validation happens *after* the borrow, on
+//!   the same checked-slice view execution uses.
+//! * The kernels index arenas exclusively through bounds-checked slice
+//!   ops, so even if the underlying file were truncated or rewritten
+//!   after validation, the worst outcomes are a panic or wrong outputs
+//!   — never out-of-bounds access through this module.  (Artifact and
+//!   cache writers are temp-file + rename, so a file is never truncated
+//!   in place under a reader; `MAP_PRIVATE` additionally decouples the
+//!   mapping from later writes on most systems.)
+//!
+//! `mmap`/`munmap` are declared by hand (the crate deliberately has no
+//! libc dependency) with the constants `PROT_READ = 1` /
+//! `MAP_PRIVATE = 2`, which hold on every 64-bit unix this crate
+//! targets (Linux, macOS, the BSDs).  Non-unix or 32-bit targets get
+//! [`io::ErrorKind::Unsupported`] from [`MappedFile::open`] and every
+//! caller falls back to the copying loader.
+#![allow(unsafe_code)]
+
+use std::io;
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(addr: *mut c_void, len: usize, prot: i32,
+                    flags: i32, fd: i32, offset: i64) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// A read-only memory mapping of a whole file, alive for as long as any
+/// `Arc` clone (and therefore any [`Arena`] borrowed from it) exists.
+pub struct MappedFile {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is immutable (PROT_READ, MAP_PRIVATE) for the
+// struct's whole lifetime, so shared access from any thread is sound.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// Map `path` read-only.  A zero-length file maps to an empty view
+    /// without calling `mmap` (which rejects length 0).  On targets
+    /// without the mapping syscalls this returns
+    /// [`io::ErrorKind::Unsupported`] and callers copy instead.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn open(path: &Path) -> io::Result<Arc<MappedFile>> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            return Ok(Arc::new(MappedFile { ptr: std::ptr::null(),
+                                            len: 0 }));
+        }
+        // SAFETY: plain read-only private mapping of an open fd; the
+        // result is checked against MAP_FAILED before use.  The fd may
+        // be closed afterwards — the mapping keeps the pages alive.
+        let ptr = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, sys::PROT_READ,
+                      sys::MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Arc::new(MappedFile { ptr: ptr as *const u8, len }))
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn open(_path: &Path) -> io::Result<Arc<MappedFile>> {
+        Err(io::Error::new(io::ErrorKind::Unsupported,
+                           "memory mapping is unsupported on this \
+                            target; use the copying loader"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The whole mapping as a byte slice — the view every header and
+    /// checksum validation runs over.
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+        // self; u8 has no alignment or validity requirements.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if self.len != 0 {
+            // SAFETY: exactly the region mmap returned; after the last
+            // Arc drops no view into it can exist.
+            unsafe {
+                sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+            }
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u32 {}
+    impl Sealed for u64 {}
+}
+
+/// Element types an [`Arena`] may hold: sealed to the two plain-old-data
+/// integers the plan arenas use, so any file bytes are valid values.
+pub trait ArenaElem: sealed::Sealed + Copy + 'static {}
+
+impl ArenaElem for u32 {}
+impl ArenaElem for u64 {}
+
+enum Repr<T: ArenaElem> {
+    Owned(Vec<T>),
+    /// `len` elements of `T` starting `off` bytes into `map`.  Invariant
+    /// (established by [`Arena::try_map`], the only constructor): the
+    /// host is little-endian, the byte range is inside the mapping, and
+    /// the absolute address is aligned for `T`.
+    Mapped {
+        map: Arc<MappedFile>,
+        off: usize,
+        len: usize,
+    },
+}
+
+/// Storage for one plan arena: an owned `Vec` (the compiler and the
+/// copying loader) or a borrowed slice of a memory-mapped file (the
+/// zero-copy loader).  Derefs to `[T]` either way, so the kernels are
+/// oblivious — they hoist `&plan.words` / `&plan.conn` to plain slices
+/// once per call and index those.
+pub struct Arena<T: ArenaElem>(Repr<T>);
+
+impl<T: ArenaElem> Arena<T> {
+    /// Borrow `count` elements starting at `byte_off` of `map`, or
+    /// `None` when the zero-copy preconditions fail (foreign-endian
+    /// host, out-of-bounds range, unaligned address) — the caller then
+    /// decodes a copy instead.  Infallibly safe: every precondition of
+    /// the `Deref` slice construction is established here, against the
+    /// immutable mapping the arena will keep alive.
+    pub fn try_map(map: &Arc<MappedFile>, byte_off: usize, count: usize)
+                   -> Option<Arena<T>> {
+        if !cfg!(target_endian = "little") {
+            return None;
+        }
+        let bytes = count.checked_mul(std::mem::size_of::<T>())?;
+        let end = byte_off.checked_add(bytes)?;
+        if end > map.len() {
+            return None;
+        }
+        let addr = map.bytes().as_ptr() as usize + byte_off;
+        if addr % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(Arena(Repr::Mapped { map: map.clone(), off: byte_off,
+                                  len: count }))
+    }
+
+    /// Does this arena borrow from a mapping (vs own its storage)?
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.0, Repr::Mapped { .. })
+    }
+}
+
+impl<T: ArenaElem> From<Vec<T>> for Arena<T> {
+    fn from(v: Vec<T>) -> Arena<T> {
+        Arena(Repr::Owned(v))
+    }
+}
+
+impl<T: ArenaElem> Deref for Arena<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        match &self.0 {
+            Repr::Owned(v) => v,
+            Repr::Mapped { map, off, len } => {
+                // SAFETY: try_map checked bounds and alignment against
+                // this mapping, which `map` keeps alive and immutable;
+                // T is sealed POD, so the bytes are valid values.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        map.bytes().as_ptr().add(*off) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_file(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("nid_mapped_{tag}_{}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_file_bytes_verbatim() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096 + 13).collect();
+        let p = temp_file("verbatim", &data);
+        let map = MappedFile::open(&p).unwrap();
+        assert_eq!(map.len(), data.len());
+        assert_eq!(map.bytes(), &data[..]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn zero_length_file_maps_empty() {
+        let p = temp_file("empty", &[]);
+        let map = MappedFile::open(&p).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(map.bytes(), &[] as &[u8]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let p = std::env::temp_dir().join("nid_mapped_nonexistent");
+        assert!(MappedFile::open(&p).is_err());
+    }
+
+    #[test]
+    fn try_map_reads_little_endian_elements() {
+        let vals: Vec<u64> = (0..32).map(|i| i * 0x0101_0101_0101).collect();
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = temp_file("u64s", &bytes);
+        let map = MappedFile::open(&p).unwrap();
+        let arena: Arena<u64> =
+            Arena::try_map(&map, 0, vals.len()).unwrap();
+        assert!(arena.is_mapped());
+        assert_eq!(&arena[..], &vals[..]);
+        // a mid-buffer aligned view works too
+        let tail: Arena<u64> =
+            Arena::try_map(&map, 8, vals.len() - 1).unwrap();
+        assert_eq!(&tail[..], &vals[1..]);
+        // the arena keeps the mapping alive past the last Arc
+        drop(map);
+        assert_eq!(arena[3], vals[3]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn try_map_rejects_misaligned_and_out_of_bounds() {
+        let p = temp_file("bounds", &[0u8; 64]);
+        let map = MappedFile::open(&p).unwrap();
+        // unaligned offsets for the element size
+        assert!(Arena::<u64>::try_map(&map, 4, 1).is_none());
+        assert!(Arena::<u64>::try_map(&map, 1, 1).is_none());
+        assert!(Arena::<u32>::try_map(&map, 2, 1).is_none());
+        // out of bounds: length, offset, and overflowing combinations
+        assert!(Arena::<u64>::try_map(&map, 0, 9).is_none());
+        assert!(Arena::<u64>::try_map(&map, 64, 1).is_none());
+        assert!(Arena::<u64>::try_map(&map, 0, usize::MAX).is_none());
+        assert!(Arena::<u32>::try_map(&map, usize::MAX - 3, 1).is_none());
+        // in-bounds aligned views at both element sizes are fine
+        assert!(Arena::<u64>::try_map(&map, 0, 8).is_some());
+        assert!(Arena::<u32>::try_map(&map, 60, 1).is_some());
+        // empty views are fine too
+        let empty: Arena<u32> = Arena::try_map(&map, 64, 0).unwrap();
+        assert_eq!(empty.len(), 0);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn owned_arena_derefs_to_its_vec() {
+        let arena: Arena<u32> = vec![7u32, 8, 9].into();
+        assert!(!arena.is_mapped());
+        assert_eq!(&arena[..], &[7, 8, 9]);
+    }
+}

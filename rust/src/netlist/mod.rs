@@ -31,13 +31,15 @@
 //! config-driven synthesis is just one producer of such files.
 
 mod format;
+mod mapped;
 mod opt;
 mod plan;
 mod sim;
 
-pub use format::{load_nlb, read_nlb, save_nlb, write_nlb, NlbModel,
-                 NLB_MAGIC, NLB_VERSION};
+pub use format::{load_nlb, load_nlb_mapped, read_nlb, read_nlb_mapped,
+                 save_nlb, write_nlb, NlbModel, NLB_MAGIC, NLB_VERSION};
 pub(crate) use format::fnv1a;
+pub use mapped::{Arena, MappedFile};
 pub use opt::{optimize, ConstantFold, Cse, DeadLogic, OptLevel,
               OptReport, Pass, PassDelta, PassManager};
 pub use plan::{compile, plan_key, select_backend, ExecPlan, LaneExecutor,
@@ -372,6 +374,14 @@ pub mod testutil {
         (0..batch * nl.n_in)
             .map(|_| rng.below(1 << nl.in_bits) as i32)
             .collect()
+    }
+
+    /// Serialize in the legacy v1 payload layout (no alignment padding
+    /// before the plan image) — fixture generator for the back-compat
+    /// tests; current tooling always writes [`NLB_VERSION`].
+    pub fn write_nlb_v1(nl: &Netlist, plan: Option<&ExecPlan>)
+                        -> Result<Vec<u8>> {
+        super::format::write_nlb_versioned(nl, plan, 1)
     }
 }
 

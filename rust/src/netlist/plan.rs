@@ -71,6 +71,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use super::format::{self, ByteReader};
+use super::mapped::{Arena, MappedFile};
 use super::sim::{chunked_units, eval_packed_rec, par_threads,
                  KernelChoice, LaneSelect, SimOptions, ThreadMode,
                  WorkerPool, MAX_BUILD_ADDR_BITS, MAX_PLANE_SUPPORT,
@@ -146,10 +147,12 @@ pub struct ExecPlan {
     /// cache key this plan was compiled under ([`Netlist::content_hash`]
     /// mixed with [`PlanOptions`])
     key: u64,
-    /// shared truth-table word arena (deduplicated)
-    words: Vec<u64>,
+    /// shared truth-table word arena (deduplicated) — owned after a
+    /// compile or copying load, borrowed from the artifact file after a
+    /// zero-copy load (see `netlist::mapped`)
+    words: Arena<u64>,
     /// shared connection / plane-source arena
-    conn: Vec<u32>,
+    conn: Arena<u32>,
     layers: Vec<PlanLayer>,
     /// widest signal plane (incl. the input), for code-buffer sizing
     max_w: usize,
@@ -254,6 +257,8 @@ impl ExecPlan {
         {
             return false;
         }
+        let words: &[u64] = &self.words;
+        let conn: &[u32] = &self.conn;
         for (pl, layer) in self.layers.iter().zip(&nl.layers) {
             let g = &pl.gather;
             if g.w != layer.w
@@ -264,7 +269,7 @@ impl ExecPlan {
                 return false;
             }
             let c0 = g.conn_off;
-            if self.conn[c0..c0 + layer.w * layer.fan_in] != layer.conn[..] {
+            if conn[c0..c0 + layer.w * layer.fan_in] != layer.conn[..] {
                 return false;
             }
             let entries = layer.entries_per_unit();
@@ -272,7 +277,7 @@ impl ExecPlan {
                 let toff = g.table_off[u] as usize;
                 let table = layer.unit_table(u);
                 for (i, &want) in table.iter().enumerate() {
-                    if table_read(&self.words, toff, i) != want {
+                    if table_read(words, toff, i) != want {
                         return false;
                     }
                 }
@@ -280,6 +285,12 @@ impl ExecPlan {
             }
         }
         true
+    }
+
+    /// Does this plan borrow its arenas from a memory-mapped artifact
+    /// file (zero-copy load) rather than own them?
+    pub fn is_mapped(&self) -> bool {
+        self.words.is_mapped() || self.conn.is_mapped()
     }
 
     pub fn stats(&self) -> PlanStats {
@@ -329,11 +340,11 @@ impl ExecPlan {
         format::put_u64(out, self.key);
         format::put_u64(out, self.tables_unique as u64);
         format::put_u64(out, self.words.len() as u64);
-        for &w in &self.words {
+        for &w in self.words.iter() {
             format::put_u64(out, w);
         }
         format::put_u64(out, self.conn.len() as u64);
-        for &c in &self.conn {
+        for &c in self.conn.iter() {
             format::put_u32(out, c);
         }
         format::put_u32(out, self.layers.len() as u32);
@@ -369,7 +380,15 @@ impl ExecPlan {
     /// producer planes.  Finally the gather tables are compared
     /// entry-by-entry ([`ExecPlan::matches`]), so a stale or spliced
     /// image is rejected rather than served.
-    pub(super) fn read_image(r: &mut ByteReader<'_>, nl: &Netlist)
+    /// When `src` is given (the reader's bytes live `base` bytes into a
+    /// memory-mapped file), the word/conn arenas are *borrowed* from
+    /// the mapping instead of copied, provided the zero-copy
+    /// preconditions hold ([`Arena::try_map`]: little-endian host,
+    /// in-bounds, 8-byte-aligned offsets — which the v2 writers pad to
+    /// guarantee); otherwise each arena independently falls back to an
+    /// owned copy.  Validation is identical on both paths.
+    pub(super) fn read_image(r: &mut ByteReader<'_>, nl: &Netlist,
+                             src: Option<(&Arc<MappedFile>, usize)>)
                              -> Result<ExecPlan> {
         let key = r.u64("plan key")?;
         let bp_opts = if key == plan_key(nl, PlanOptions { bitplane: true }) {
@@ -382,9 +401,9 @@ impl ExecPlan {
         };
         let tables_unique = r.u64("tables_unique")? as usize;
         let n_words = r.u64("word arena length")? as usize;
-        let words = r.u64s(n_words, "word arena")?;
+        let words = arena_u64(r, n_words, src, "word arena")?;
         let n_conn = r.u64("conn arena length")? as usize;
-        let conn = r.u32s(n_conn, "conn arena")?;
+        let conn = arena_u32(r, n_conn, src, "conn arena")?;
         let n_layers = r.u32("plan layer count")? as usize;
         if n_layers != nl.layers.len() {
             bail!("plan has {n_layers} layers, netlist has {}",
@@ -520,6 +539,51 @@ impl ExecPlan {
     }
 }
 
+/// Read `count` u64s as an [`Arena`]: borrowed from the mapped source
+/// when the zero-copy preconditions hold, else decoded into an owned
+/// copy.  Both paths advance the reader past the same bytes and apply
+/// the same bounds check, so the surrounding parse is oblivious.
+fn arena_u64(r: &mut ByteReader<'_>, count: usize,
+             src: Option<(&Arc<MappedFile>, usize)>, what: &str)
+             -> Result<Arena<u64>> {
+    let Some((map, base)) = src else {
+        return Ok(r.u64s(count, what)?.into());
+    };
+    let abs = base.checked_add(r.pos());
+    let n = count.checked_mul(8)
+        .with_context(|| format!("{what}: count overflow"))?;
+    let bytes = r.take(n, what)?;
+    match abs.and_then(|a| Arena::try_map(map, a, count)) {
+        Some(a) => Ok(a),
+        None => Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect::<Vec<u64>>()
+            .into()),
+    }
+}
+
+/// u32 twin of [`arena_u64`].
+fn arena_u32(r: &mut ByteReader<'_>, count: usize,
+             src: Option<(&Arc<MappedFile>, usize)>, what: &str)
+             -> Result<Arena<u32>> {
+    let Some((map, base)) = src else {
+        return Ok(r.u32s(count, what)?.into());
+    };
+    let abs = base.checked_add(r.pos());
+    let n = count.checked_mul(4)
+        .with_context(|| format!("{what}: count overflow"))?;
+    let bytes = r.take(n, what)?;
+    match abs.and_then(|a| Arena::try_map(map, a, count)) {
+        Some(a) => Ok(a),
+        None => Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect::<Vec<u32>>()
+            .into()),
+    }
+}
+
 /// Append `packed` to the arena unless identical content is already
 /// interned; returns the word offset either way.
 fn intern(words: &mut Vec<u64>, dedup: &mut HashMap<Vec<u64>, u32>,
@@ -645,8 +709,8 @@ pub fn compile(nl: &Netlist, opts: PlanOptions) -> ExecPlan {
         out_width: nl.out_width(),
         out_bits: nl.out_bits(),
         key: plan_key(nl, opts),
-        words,
-        conn,
+        words: words.into(),
+        conn: conn.into(),
         layers,
         max_w,
         max_planes,
@@ -666,9 +730,13 @@ fn table_read(words: &[u64], toff: usize, addr: usize) -> u16 {
 fn gather_units(plan: &ExecPlan, g: &GatherStep, prev: &[u16],
                 batch: usize, u0: usize, u1: usize, dst: &mut [u16]) {
     debug_assert_eq!(dst.len(), (u1 - u0) * batch);
+    // hoist the arenas to plain slices once — the storage may be
+    // mapped, and the Arena deref must stay out of the inner loops
+    let words: &[u64] = &plan.words;
+    let conn_arena: &[u32] = &plan.conn;
     for u in u0..u1 {
         let c0 = g.conn_off + u * g.fan_in;
-        let conn = &plan.conn[c0..c0 + g.fan_in];
+        let conn = &conn_arena[c0..c0 + g.fan_in];
         let toff = g.table_off[u] as usize;
         let row = &mut dst[(u - u0) * batch..(u - u0 + 1) * batch];
         for (b, slot) in row.iter_mut().enumerate() {
@@ -677,7 +745,7 @@ fn gather_units(plan: &ExecPlan, g: &GatherStep, prev: &[u16],
                 addr |= (prev[src as usize * batch + b] as usize)
                     << g.shifts[f];
             }
-            *slot = table_read(&plan.words, toff, addr);
+            *slot = table_read(words, toff, addr);
         }
     }
 }
@@ -690,9 +758,11 @@ fn gather_units_rowmajor(plan: &ExecPlan, g: &GatherStep, x: &[i32],
                          dst: &mut [u16]) {
     debug_assert_eq!(dst.len(), (u1 - u0) * batch);
     let n_in = g.prev_w;
+    let words: &[u64] = &plan.words;
+    let conn_arena: &[u32] = &plan.conn;
     for u in u0..u1 {
         let c0 = g.conn_off + u * g.fan_in;
-        let conn = &plan.conn[c0..c0 + g.fan_in];
+        let conn = &conn_arena[c0..c0 + g.fan_in];
         let toff = g.table_off[u] as usize;
         let row = &mut dst[(u - u0) * batch..(u - u0 + 1) * batch];
         for (b, slot) in row.iter_mut().enumerate() {
@@ -701,7 +771,7 @@ fn gather_units_rowmajor(plan: &ExecPlan, g: &GatherStep, x: &[i32],
                 addr |= (x[b * n_in + src as usize] as usize)
                     << g.shifts[f];
             }
-            *slot = table_read(&plan.words, toff, addr);
+            *slot = table_read(words, toff, addr);
         }
     }
 }
@@ -806,12 +876,14 @@ fn bitplane_units<const W: usize>(plan: &ExecPlan, s: &BitPlaneStep,
     let blocks = nwords / W;
     let mut lanes = [Lane::<W>::splat(0); MAX_PLANE_SUPPORT];
     let mut ins = [0u64; MAX_PLANE_SUPPORT];
+    let words: &[u64] = &plan.words;
+    let conn_arena: &[u32] = &plan.conn;
     let p0 = u0 * s.out_bits;
     for p in p0..u1 * s.out_bits {
         let a = s.arity[p] as usize;
         let off = s.src_off[p] as usize;
-        let srcs = &plan.conn[off..off + a];
-        let table = plan.words[s.table_off[p] as usize];
+        let srcs = &conn_arena[off..off + a];
+        let table = words[s.table_off[p] as usize];
         let dst = &mut out[(p - p0) * nwords..(p - p0 + 1) * nwords];
         for blk in 0..blocks {
             let wd = blk * W;
@@ -1144,19 +1216,20 @@ impl<const W: usize> WidePlanExecutor<W> {
         let mut nxt = std::mem::take(&mut self.one_b);
         cur.clear();
         cur.extend(x.iter().map(|&c| c as u16));
+        let words: &[u64] = &plan.words;
+        let conn_arena: &[u32] = &plan.conn;
         for pl in &plan.layers {
             let g = &pl.gather;
             nxt.clear();
             nxt.resize(g.w, 0);
             for (u, slot) in nxt.iter_mut().enumerate() {
                 let c0 = g.conn_off + u * g.fan_in;
-                let conn = &plan.conn[c0..c0 + g.fan_in];
+                let conn = &conn_arena[c0..c0 + g.fan_in];
                 let mut addr = 0usize;
                 for (f, &src) in conn.iter().enumerate() {
                     addr |= (cur[src as usize] as usize) << g.shifts[f];
                 }
-                *slot = table_read(&plan.words, g.table_off[u] as usize,
-                                   addr);
+                *slot = table_read(words, g.table_off[u] as usize, addr);
             }
             std::mem::swap(&mut cur, &mut nxt);
         }
@@ -1345,7 +1418,13 @@ fn plan_file_bytes(plan: &ExecPlan) -> Vec<u8> {
     out
 }
 
-fn read_plan_file(bytes: &[u8], nl: &Netlist) -> Result<ExecPlan> {
+/// Parse a plan-cache file.  `src` carries the mapping when `bytes`
+/// come from one — the 24-byte header plus the image's own 24-byte
+/// prefix put both arenas at 8-byte file offsets, so the v1 cache
+/// layout zero-copy-loads as is (no version bump needed; unlike `.nlb`
+/// there is no variable-length field ahead of the image).
+fn read_plan_file(bytes: &[u8], nl: &Netlist,
+                  src: Option<&Arc<MappedFile>>) -> Result<ExecPlan> {
     if bytes.len() < 24 {
         bail!("truncated header: {} bytes, need 24", bytes.len());
     }
@@ -1370,7 +1449,8 @@ fn read_plan_file(bytes: &[u8], nl: &Netlist) -> Result<ExecPlan> {
         bail!("payload checksum mismatch (file corrupt)");
     }
     let mut r = ByteReader::new(payload);
-    let plan = ExecPlan::read_image(&mut r, nl).context("plan image")?;
+    let plan = ExecPlan::read_image(&mut r, nl, src.map(|m| (m, 24)))
+        .context("plan image")?;
     if r.remaining() != 0 {
         bail!("{} trailing bytes after the plan image", r.remaining());
     }
@@ -1407,6 +1487,10 @@ pub struct PlanCache {
     misses: AtomicU64,
     disk_hits: AtomicU64,
     dir: Option<PathBuf>,
+    /// disable the zero-copy disk-hit path (`--no-mmap`); the default
+    /// `false` means disk hits memory-map their `.plan` file and
+    /// borrow the arenas
+    no_mmap: bool,
 }
 
 impl PlanCache {
@@ -1424,6 +1508,14 @@ impl PlanCache {
         PlanCache { dir: Some(dir), ..Default::default() }
     }
 
+    /// Enable/disable memory-mapped disk hits (enabled by default).
+    /// With mapping off — or on targets without mapping support — disk
+    /// hits fall back to read-and-copy; results are identical either
+    /// way, only load cost differs.
+    pub fn set_mmap(&mut self, enabled: bool) {
+        self.no_mmap = !enabled;
+    }
+
     /// The backing directory, if this cache is persistent.
     pub fn cache_dir(&self) -> Option<&Path> {
         self.dir.as_deref()
@@ -1437,8 +1529,23 @@ impl PlanCache {
                       -> Option<Arc<ExecPlan>> {
         let path = self.plan_path(key)?;
         // a missing file is the expected cold-cache case — stay quiet
-        let bytes = std::fs::read(&path).ok()?;
-        match read_plan_file(&bytes, nl) {
+        if std::fs::metadata(&path).is_err() {
+            return None;
+        }
+        let parsed = if self.no_mmap {
+            let bytes = std::fs::read(&path).ok()?;
+            read_plan_file(&bytes, nl, None)
+        } else {
+            match MappedFile::open(&path) {
+                Ok(map) => read_plan_file(map.bytes(), nl, Some(&map)),
+                // unsupported target or a racing delete: copy instead
+                Err(_) => {
+                    let bytes = std::fs::read(&path).ok()?;
+                    read_plan_file(&bytes, nl, None)
+                }
+            }
+        };
+        match parsed {
             Ok(p) if p.key() == key => Some(Arc::new(p)),
             Ok(p) => {
                 log::warn!("plan cache {}: image key {:016x} does not \
@@ -2023,6 +2130,73 @@ mod tests {
         let cache = PlanCache::persistent(&dir);
         cache.get_or_compile(&nl, PlanOptions::default());
         assert_eq!((cache.misses(), cache.disk_hits()), (0, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistent_cache_disk_hits_are_mapped() {
+        let dir = temp_cache_dir("mmap");
+        let nl = random_reducible_netlist(
+            77, 10, 2, &[(8, 3, 2), (4, 2, 2)], 6);
+        {
+            let cache = PlanCache::persistent(&dir);
+            let p = cache.get_or_compile(&nl, PlanOptions::default());
+            assert!(!p.is_mapped(),
+                    "freshly compiled plans own their arenas");
+        }
+        let cache = PlanCache::persistent(&dir);
+        let p = cache.get_or_compile(&nl, PlanOptions::default());
+        assert_eq!(cache.disk_hits(), 1);
+        if cfg!(all(unix, target_pointer_width = "64",
+                    target_endian = "little"))
+        {
+            assert!(p.is_mapped(),
+                    "disk hit should borrow the mapped .plan file");
+        }
+        let mut ex = PlanExecutor::new(p);
+        assert_plan_matches_eval_one(&nl, &mut ex, 13, 90);
+        // the escape hatch copies instead; identical results
+        let mut copying = PlanCache::persistent(&dir);
+        copying.set_mmap(false);
+        let q = copying.get_or_compile(&nl, PlanOptions::default());
+        assert_eq!(copying.disk_hits(), 1);
+        assert!(!q.is_mapped());
+        let mut exq = PlanExecutor::new(q);
+        assert_plan_matches_eval_one(&nl, &mut exq, 14, 90);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mapped_plans_are_bit_exact_at_all_lane_widths() {
+        let dir = temp_cache_dir("mmap_lanes");
+        let nl = random_reducible_netlist(
+            79, 12, 2, &[(8, 4, 2), (4, 4, 2), (2, 2, 2)], 6);
+        {
+            let cache = PlanCache::persistent(&dir);
+            cache.get_or_compile(&nl, PlanOptions::default());
+        }
+        let cache = PlanCache::persistent(&dir);
+        let p = cache.get_or_compile(&nl, PlanOptions::default());
+        assert_eq!(cache.disk_hits(), 1);
+        let mut w1: WidePlanExecutor<1> = WidePlanExecutor::new(p.clone());
+        let mut w4: WidePlanExecutor<4> = WidePlanExecutor::new(p.clone());
+        let mut w8: WidePlanExecutor<8> = WidePlanExecutor::new(p);
+        // single-sample path, gather regime, packed regime with a
+        // ragged lane tail — all against the interpreted reference
+        for (seed, batch) in [(1u64, 1usize), (2, 130), (3, 64 * 8 + 9)] {
+            let x = random_inputs(seed, &nl, batch);
+            let want = w1.eval_batch(&x, batch);
+            let ow = nl.out_width();
+            for b in 0..batch {
+                let one = nl
+                    .eval_one(&x[b * nl.n_in..(b + 1) * nl.n_in])
+                    .unwrap();
+                assert_eq!(&want[b * ow..(b + 1) * ow], &one[..],
+                           "scalar-on-mapped row {b}");
+            }
+            assert_eq!(w4.eval_batch(&x, batch), want, "W4 batch {batch}");
+            assert_eq!(w8.eval_batch(&x, batch), want, "W8 batch {batch}");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -222,6 +222,7 @@ struct Job {
 
 // SAFETY: the pointee is `Sync` (shared calls are fine) and the posting
 // thread keeps it alive until `pending == 0`, enforced in `run`.
+#[allow(unsafe_code)]
 unsafe impl Send for Job {}
 
 #[derive(Default)]
@@ -303,6 +304,9 @@ impl Drop for DrainGuard<'_> {
     }
 }
 
+// audited unsafe island: dereferences the lifetime-erased job pointer
+// (see the SAFETY comment at the use site)
+#[allow(unsafe_code)]
 fn pool_worker_loop(shared: &PoolShared) {
     let mut st = pool_lock(shared);
     loop {
@@ -374,7 +378,8 @@ impl WorkerPool {
     /// compile-time guarantee rather than a protocol.
     // a plain `as` cast cannot widen the trait object's lifetime bound,
     // so the transmute below is not expressible as a pointer cast
-    #[allow(clippy::useless_transmute,
+    #[allow(unsafe_code,
+            clippy::useless_transmute,
             clippy::transmutes_expressible_as_ptr_casts)]
     pub fn run<F: Fn(usize) + Sync>(&mut self, n: usize, f: F) {
         if n == 0 {
@@ -655,7 +660,9 @@ struct SendPtr<T>(*mut T);
 
 // SAFETY: access is restricted to disjoint index ranges per task, and
 // the buffer outlives the pool job (`WorkerPool::run` blocks).
+#[allow(unsafe_code)]
 unsafe impl<T: Send> Send for SendPtr<T> {}
+#[allow(unsafe_code)]
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Run `f(u0, u1, dst)` over unit ranges of a layer with `w` units whose
@@ -665,6 +672,9 @@ unsafe impl<T: Send> Sync for SendPtr<T> {}
 /// (serial when `threads <= 1`).  Chunk boundaries are identical in
 /// every mode, and each mode hands each worker exactly one disjoint
 /// range, so all three execution paths are bit-exact by construction.
+// audited unsafe island: reconstructs disjoint output sub-slices from a
+// raw pointer on pool workers (see the SAFETY comment at the use site)
+#[allow(unsafe_code)]
 pub(super) fn chunked_units<T: Send, F>(out: &mut [T], w: usize,
                                         stride: usize, threads: usize,
                                         pool: Option<&mut WorkerPool>,

@@ -233,6 +233,36 @@ fn golden_artifacts_reserialize_byte_identically() {
 }
 
 #[test]
+fn golden_v1_artifact_still_loads_via_the_copying_read() {
+    // back-compat keystone: `golden_mix_v1.nlb` is the pre-padding v1
+    // encoding of `golden_mix.nlb` (snapshotted when the format moved
+    // to v2).  It must keep loading — through both loaders — decode to
+    // the identical model, and never take the zero-copy path (v1 files
+    // carry no alignment guarantee)
+    use neuralut::netlist::{load_nlb, load_nlb_mapped};
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden");
+    let v1_path = format!("{dir}/golden_mix_v1.nlb");
+    let v1_bytes = std::fs::read(&v1_path).unwrap();
+    assert_eq!(&v1_bytes[4..6], &[1, 0], "fixture must stay version 1");
+    let v1 = load_nlb(&v1_path).unwrap();
+    let v1_mapped = load_nlb_mapped(&v1_path).unwrap();
+    let v2 = load_nlb(format!("{dir}/golden_mix.nlb")).unwrap();
+    assert_eq!(v1.netlist.content_hash(), v2.netlist.content_hash());
+    assert_eq!(v1_mapped.netlist.content_hash(),
+               v2.netlist.content_hash());
+    assert!(v1.plan.is_none() && v1_mapped.plan.is_none());
+    for (model, _, _, inputs, outputs) in golden_manifest() {
+        if model != "golden_mix" {
+            continue;
+        }
+        for (x, want) in inputs.iter().zip(&outputs) {
+            assert_eq!(&v1.netlist.eval_one(x).unwrap(), want);
+            assert_eq!(&v1_mapped.netlist.eval_one(x).unwrap(), want);
+        }
+    }
+}
+
+#[test]
 fn golden_artifacts_compile_and_conform() {
     // a python-trained model dropped into the serving path: compile a
     // plan for it and run the full engine-conformance suite

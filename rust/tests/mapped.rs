@@ -1,0 +1,249 @@
+//! Failure-lattice battery for the zero-copy mapped artifact loader.
+//!
+//! The mapped path borrows plan arenas straight out of `mmap`ed `.nlb`
+//! and `.plan` files, so the loader's contract under hostile input is
+//! load-bearing: every truncation, corruption, misalignment or
+//! foreign-endian marker must either produce a descriptive error or
+//! fall back to the copying decoder — never UB, never a panic.  The
+//! same lattice runs against v1 (unpadded, copy-only) files to prove
+//! the back-compat read is just as total.  The tail of the file proves
+//! the *success* path end-to-end: a mapped artifact serves bit-exactly
+//! through every executor width and over TCP.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use neuralut::coordinator::{check_conformance, InferenceServer,
+                            ModelRegistry, ServerConfig};
+use neuralut::net::{NetConfig, NetServer, RemoteEngine};
+use neuralut::netlist::testutil::{random_netlist, write_nlb_v1};
+use neuralut::netlist::{load_nlb, load_nlb_mapped, read_nlb, write_nlb,
+                        LaneExecutor, Netlist, PlanExecutor, PlanOptions,
+                        SimOptions, WidePlanExecutor};
+use neuralut::util::Rng;
+
+/// Whether this host satisfies the zero-copy preconditions (the mapped
+/// loader exists everywhere; *borrowing* needs unix + 64-bit +
+/// little-endian, everything else falls back to copying).
+fn host_maps() -> bool {
+    cfg!(all(unix, target_pointer_width = "64", target_endian = "little"))
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("nlb_lattice_{}_{tag}.nlb", std::process::id()));
+    p
+}
+
+/// Small netlist + its v2 artifact bytes (with a compiled-plan image —
+/// the section the mapped loader actually borrows from).
+fn artifact(seed: u64) -> (Netlist, Vec<u8>) {
+    let nl = random_netlist(seed, 8, 1, &[(5, 2, 2), (3, 2, 2)]);
+    let plan = nl.compile_plan(PlanOptions::default());
+    let bytes = write_nlb(&nl, Some(&plan)).unwrap();
+    (nl, bytes)
+}
+
+/// Write `bytes` to a temp file and run the mapped loader on it.
+fn mapped_load(tag: &str, bytes: &[u8])
+               -> anyhow::Result<neuralut::netlist::NlbModel> {
+    let path = temp_path(tag);
+    std::fs::write(&path, bytes).unwrap();
+    let r = load_nlb_mapped(&path);
+    let _ = std::fs::remove_file(&path);
+    r
+}
+
+#[test]
+fn every_truncation_errors_cleanly() {
+    let (_nl, bytes) = artifact(301);
+    // the copying decoder sees every possible prefix...
+    for cut in 0..bytes.len() {
+        assert!(read_nlb(&bytes[..cut]).is_err(),
+                "truncation to {cut}/{} bytes parsed", bytes.len());
+    }
+    // ...and the mapped loader a sampled lattice of them (file + mmap
+    // per probe), always including the header/payload/image boundaries
+    let mut cuts: Vec<usize> = (0..bytes.len()).step_by(17).collect();
+    cuts.extend([0, 1, 31, 32, 33, bytes.len() - 1]);
+    for cut in cuts {
+        assert!(mapped_load("trunc", &bytes[..cut]).is_err(),
+                "mapped truncation to {cut}/{} bytes parsed",
+                bytes.len());
+    }
+}
+
+#[test]
+fn v1_truncations_error_cleanly_too() {
+    let nl = random_netlist(302, 8, 1, &[(5, 2, 2), (3, 2, 2)]);
+    let plan = nl.compile_plan(PlanOptions::default());
+    let bytes = write_nlb_v1(&nl, Some(&plan)).unwrap();
+    assert_eq!(bytes[4], 1, "fixture must be a v1 file");
+    for cut in 0..bytes.len() {
+        assert!(read_nlb(&bytes[..cut]).is_err(),
+                "v1 truncation to {cut}/{} bytes parsed", bytes.len());
+    }
+    for cut in (0..bytes.len()).step_by(23) {
+        assert!(mapped_load("trunc_v1", &bytes[..cut]).is_err());
+    }
+}
+
+/// 32 random single-byte corruptions per fixture: each must either be
+/// rejected or decode to a model bit-identical to the original (a flip
+/// can land in a byte the format legitimately tolerates only if it
+/// changes nothing observable).  Both decoders, never a panic.
+fn corruption_lattice(tag: &str, nl: &Netlist, bytes: &[u8], seed: u64) {
+    let reference = {
+        let m = read_nlb(bytes).unwrap();
+        assert_eq!(m.netlist.content_hash(), nl.content_hash());
+        m
+    };
+    let mut rng = Rng::new(seed);
+    for case in 0..32 {
+        let pos = rng.below(bytes.len());
+        let flip = 1u8 << rng.below(8);
+        let mut bad = bytes.to_vec();
+        bad[pos] ^= flip;
+        for (which, result) in [("copying", read_nlb(&bad)),
+                                ("mapped", mapped_load(tag, &bad))] {
+            match result {
+                Err(_) => {}
+                Ok(m) => {
+                    assert_eq!(
+                        m.netlist.content_hash(),
+                        reference.netlist.content_hash(),
+                        "{which} decoder accepted corruption case \
+                         {case} (byte {pos} ^ {flip:#04x}) as a \
+                         *different* model");
+                    let x = neuralut::netlist::testutil::random_inputs(
+                        seed ^ 0xC0DE, &m.netlist, 4);
+                    for b in 0..4 {
+                        let row = &x[b * nl.n_in..(b + 1) * nl.n_in];
+                        assert_eq!(m.netlist.eval_one(row).unwrap(),
+                                   nl.eval_one(row).unwrap(),
+                                   "{which} decoder, case {case}: \
+                                    accepted model diverges");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_byte_corruptions_are_rejected_or_harmless() {
+    let (nl, bytes) = artifact(303);
+    corruption_lattice("corrupt_v2", &nl, &bytes, 404);
+}
+
+#[test]
+fn plan_free_corruptions_are_rejected_or_harmless() {
+    let nl = random_netlist(304, 8, 1, &[(5, 2, 2), (3, 2, 2)]);
+    let bytes = write_nlb(&nl, None).unwrap();
+    corruption_lattice("corrupt_noplan", &nl, &bytes, 405);
+}
+
+#[test]
+fn v1_corruptions_are_rejected_or_harmless() {
+    let nl = random_netlist(305, 8, 1, &[(5, 2, 2), (3, 2, 2)]);
+    let plan = nl.compile_plan(PlanOptions::default());
+    let bytes = write_nlb_v1(&nl, Some(&plan)).unwrap();
+    corruption_lattice("corrupt_v1", &nl, &bytes, 406);
+}
+
+#[test]
+fn foreign_endian_count_fields_are_rejected_cleanly() {
+    let (_nl, bytes) = artifact(306);
+    // byte-swap the first payload u32 (the name length) as a
+    // big-endian writer would have encoded it, then re-seal the
+    // payload checksum so only the *semantic* checks can object — the
+    // reader must still reject (the count no longer matches the
+    // payload), not trust the foreign encoding
+    let mut bad = bytes.clone();
+    bad[32..36].reverse();
+    let fnv = fnv1a(&bad[32..]);
+    bad[24..32].copy_from_slice(&fnv.to_le_bytes());
+    assert!(read_nlb(&bad).is_err(), "byte-swapped count parsed");
+    assert!(mapped_load("endian", &bad).is_err());
+}
+
+/// FNV-1a mirror of the format's payload checksum (the crate keeps its
+/// own private; the test re-seals tampered payloads with it).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[test]
+fn v1_files_with_plans_take_the_copying_fallback() {
+    // v1 has no alignment padding, so the mapped loader must not
+    // borrow from it — the fall-back arm of the lattice
+    let nl = random_netlist(307, 8, 1, &[(5, 2, 2), (3, 2, 2)]);
+    let plan = nl.compile_plan(PlanOptions::default());
+    let bytes = write_nlb_v1(&nl, Some(&plan)).unwrap();
+    let m = mapped_load("v1_fallback", &bytes).unwrap();
+    let p = m.plan.expect("fixture carries a plan image");
+    assert!(!p.is_mapped(), "v1 file must load via the copying read");
+    let x = neuralut::netlist::testutil::random_inputs(307, &nl, 6);
+    let mut ex = PlanExecutor::new(Arc::new(p));
+    check_conformance(&mut ex, &nl, 87).unwrap();
+    for b in 0..6 {
+        let row = &x[b * nl.n_in..(b + 1) * nl.n_in];
+        assert_eq!(m.netlist.eval_one(row).unwrap(),
+                   nl.eval_one(row).unwrap());
+    }
+}
+
+#[test]
+fn mapped_artifact_conforms_at_every_lane_width() {
+    let (nl, bytes) = artifact(308);
+    let path = temp_path("conform");
+    std::fs::write(&path, &bytes).unwrap();
+    let m = load_nlb_mapped(&path).unwrap();
+    let plan = Arc::new(m.plan.expect("fixture carries a plan image"));
+    assert_eq!(plan.is_mapped(), host_maps(),
+               "zero-copy load expected iff the host supports it");
+    let mut w1 = PlanExecutor::new(plan.clone());
+    check_conformance(&mut w1, &nl, 81).unwrap();
+    let mut w4: WidePlanExecutor<4> = WidePlanExecutor::new(plan.clone());
+    check_conformance(&mut w4, &nl, 82).unwrap();
+    let mut w8: WidePlanExecutor<8> = WidePlanExecutor::new(plan.clone());
+    check_conformance(&mut w8, &nl, 83).unwrap();
+    for width in [1usize, 4, 8] {
+        let mut ex = LaneExecutor::for_width(width, plan.clone(),
+                                             SimOptions::default());
+        check_conformance(&mut ex, &nl, 84).unwrap();
+    }
+    // the copying loader agrees with the mapped one bit-for-bit
+    let copied = load_nlb(&path).unwrap();
+    let cp = copied.plan.expect("copying load keeps the plan");
+    assert!(!cp.is_mapped());
+    let mut ex = PlanExecutor::new(Arc::new(cp));
+    check_conformance(&mut ex, &nl, 85).unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn mapped_artifact_serves_bit_exactly_over_tcp() {
+    let (nl, bytes) = artifact(309);
+    let path = temp_path("tcp");
+    std::fs::write(&path, &bytes).unwrap();
+    let m = load_nlb_mapped(&path).unwrap();
+    assert_eq!(m.plan.as_ref().map(|p| p.is_mapped()), Some(host_maps()));
+    let mut registry = ModelRegistry::new();
+    registry.register_artifact("mapped", m);
+    let server = InferenceServer::start(registry, ServerConfig {
+        max_batch: 16,
+        ..ServerConfig::default()
+    });
+    let net = NetServer::bind(server, "127.0.0.1:0",
+                              NetConfig::default()).unwrap();
+    let mut remote = RemoteEngine::open(net.local_addr(), "mapped")
+        .unwrap();
+    check_conformance(&mut remote, &nl, 86).unwrap();
+    net.shutdown();
+    let _ = std::fs::remove_file(&path);
+}

@@ -111,6 +111,13 @@ fn tcp_infer_is_bit_exact_and_stats_count_it() {
     assert_eq!(netc.at("shed").unwrap().as_usize().unwrap(), 0);
     // the batcher saw every row
     assert_eq!(m.at("requests").unwrap().as_usize().unwrap(), batch);
+    // plan-cache telemetry rides along under stable keys: this server
+    // compiled its one model in-process (no persistent cache, no
+    // identical sibling registration)
+    let pc = doc.at("server").unwrap().at("plan_cache").unwrap();
+    assert_eq!(pc.at("compiles").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(pc.at("memory_hits").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(pc.at("disk_hits").unwrap().as_usize().unwrap(), 0);
     net.shutdown();
 }
 
