@@ -7,77 +7,143 @@
 //! * **`--addr HOST:PORT`**: drives an already-running
 //!   `neuralut serve --listen` process (what the CI smoke job does).
 //!
-//! The generator sweeps pipelining depth: each stage keeps `depth`
-//! requests in flight on one connection and measures client-side
-//! latency per request.  Depths at or below the server's admission
-//! bound must never shed; the final stage deliberately exceeds the
-//! bound and must see explicit `OVERLOADED` sheds — bounded-queue
-//! rejection, not queue collapse.  Results (throughput, p50/p99/p999
-//! at and beyond the shed point) land in `BENCH_serve.json` next to
-//! the other `BENCH_*.json` artifacts.
+//! Three sweeps, all on the same server:
+//! * **capacity**: pipelining depth per connection. Depths under both
+//!   the per-connection quota and the global admission bound must
+//!   never shed; the final stage deliberately exceeds the global
+//!   bound and must see explicit `OVERLOADED`/`CONN_QUOTA` sheds —
+//!   bounded-queue rejection, not queue collapse.
+//! * **deadline**: the overload depth again, but with a per-request
+//!   deadline budget. A budget under the observed p50 is shed at
+//!   admission (`DEADLINE`, counted separately from capacity sheds);
+//!   a roomy budget is honored — the p99 of the *answered* requests
+//!   stays inside it even past capacity.
+//! * **retry**: greedy flooder connections saturate admission while a
+//!   `RetryClient` pushes requests through; every request ends in a
+//!   bit-delivered answer or a typed give-up, and the retry counters
+//!   land in the artifact.
+//!
+//! Results (throughput, p50/p99/p999, shed/retry counters per stage)
+//! land in `BENCH_serve.json` next to the other `BENCH_*.json`
+//! artifacts.
 //!
 //! Run: `cargo run --release --example serve_load -- [--quick]
-//! [--addr HOST:PORT] [--requests N] [--max-inflight N]`
+//! [--addr HOST:PORT] [--requests N] [--max-inflight N]
+//! [--max-inflight-per-conn N] [--connect-timeout-ms N]`
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use neuralut::coordinator::{InferenceServer, ModelRegistry, ServerConfig};
 use neuralut::metrics::LatencyStats;
-use neuralut::net::wire::Message;
-use neuralut::net::{Client, NetConfig, NetServer};
+use neuralut::net::wire::{self, Message};
+use neuralut::net::{Client, ClientConfig, NetConfig, NetServer,
+                    RetryClient, RetryPolicy};
 use neuralut::netlist::testutil::{random_inputs, random_netlist};
 use neuralut::report::Table;
 use neuralut::util::Json;
 
 struct StageResult {
+    kind: &'static str,
     depth: usize,
+    deadline_us: Option<u64>,
     requests: usize,
     ok: usize,
     shed: usize,
+    quota_sheds: usize,
+    deadline_sheds: usize,
     secs: f64,
+    /// All responses, sheds included (capacity-sweep latency).
     lat: LatencyStats,
+    /// Answered (Result) responses only — what a deadline budget is
+    /// measured against.
+    lat_ok: LatencyStats,
 }
 
-/// Drive `n` single-row requests with `depth` kept in flight.
-fn run_stage(c: &mut Client, model: &str, n_in: usize, depth: usize,
+/// Drive `n` single-row requests with `depth` kept in flight,
+/// optionally carrying a deadline budget on every request.
+fn run_stage(c: &mut Client, kind: &'static str, model: &str,
+             n_in: usize, depth: usize, deadline_us: Option<u64>,
              n: usize, xs: &[i32]) -> StageResult {
     let mut window: VecDeque<(u64, Instant)> = VecDeque::new();
     let mut lat = LatencyStats::default();
+    let mut lat_ok = LatencyStats::default();
     let mut ok = 0usize;
     let mut shed = 0usize;
+    let mut quota_sheds = 0usize;
+    let mut deadline_sheds = 0usize;
     let mut recv = |window: &mut VecDeque<(u64, Instant)>,
                     c: &mut Client, lat: &mut LatencyStats,
-                    ok: &mut usize, shed: &mut usize| {
+                    lat_ok: &mut LatencyStats, ok: &mut usize,
+                    shed: &mut usize, quota_sheds: &mut usize,
+                    deadline_sheds: &mut usize| {
         let (id, sent) = window.pop_front().expect("window empty");
         let frame = c.recv_frame().expect("response");
         assert_eq!(frame.id, id, "responses must arrive in order");
-        lat.record(sent.elapsed().as_secs_f64() * 1e6);
+        let us = sent.elapsed().as_secs_f64() * 1e6;
+        lat.record(us);
         match frame.msg {
-            Message::Result { .. } => *ok += 1,
-            Message::Error { code, message } => {
-                assert_eq!(code, neuralut::net::wire::ERR_OVERLOADED,
-                           "unexpected error under load: {message}");
-                *shed += 1;
+            Message::Result { .. } => {
+                lat_ok.record(us);
+                *ok += 1;
             }
+            Message::Error { code, message } => match code {
+                wire::ERR_OVERLOADED => *shed += 1,
+                wire::ERR_CONN_QUOTA => *quota_sheds += 1,
+                wire::ERR_DEADLINE => *deadline_sheds += 1,
+                _ => panic!("unexpected error under load: {message}"),
+            },
             other => panic!("unexpected frame {other:?}"),
         }
     };
     let t = Instant::now();
     for i in 0..n {
         if window.len() >= depth {
-            recv(&mut window, c, &mut lat, &mut ok, &mut shed);
+            recv(&mut window, c, &mut lat, &mut lat_ok, &mut ok,
+                 &mut shed, &mut quota_sheds, &mut deadline_sheds);
         }
         let row = xs[(i % (xs.len() / n_in)) * n_in..][..n_in].to_vec();
-        let id = c.send_infer(model, 1, n_in as u32, row)
+        let id = c.send_infer_deadline(model, 1, n_in as u32, row,
+                                       deadline_us)
             .expect("send");
         window.push_back((id, Instant::now()));
     }
     while !window.is_empty() {
-        recv(&mut window, c, &mut lat, &mut ok, &mut shed);
+        recv(&mut window, c, &mut lat, &mut lat_ok, &mut ok, &mut shed,
+             &mut quota_sheds, &mut deadline_sheds);
     }
-    StageResult { depth, requests: n, ok, shed,
-                  secs: t.elapsed().as_secs_f64(), lat }
+    StageResult { kind, depth, deadline_us, requests: n, ok, shed,
+                  quota_sheds, deadline_sheds,
+                  secs: t.elapsed().as_secs_f64(), lat, lat_ok }
+}
+
+fn stage_row(r: &StageResult) -> Json {
+    let s = r.lat.summary();
+    let mut row = BTreeMap::new();
+    row.insert("kind".into(), Json::Str(r.kind.into()));
+    row.insert("depth".into(), Json::Num(r.depth as f64));
+    if let Some(dl) = r.deadline_us {
+        row.insert("deadline_us".into(), Json::Num(dl as f64));
+    }
+    row.insert("requests".into(), Json::Num(r.requests as f64));
+    row.insert("ok".into(), Json::Num(r.ok as f64));
+    row.insert("shed".into(), Json::Num(r.shed as f64));
+    row.insert("quota_sheds".into(), Json::Num(r.quota_sheds as f64));
+    row.insert("deadline_sheds".into(),
+               Json::Num(r.deadline_sheds as f64));
+    row.insert("req_per_s".into(),
+               Json::Num(r.requests as f64 / r.secs));
+    row.insert("mean_us".into(), Json::Num(s.mean));
+    row.insert("p50_us".into(), Json::Num(s.p50));
+    row.insert("p99_us".into(), Json::Num(s.p99));
+    row.insert("p999_us".into(), Json::Num(s.p999));
+    if r.ok > 0 {
+        row.insert("p99_answered_us".into(),
+                   Json::Num(r.lat_ok.summary().p99));
+    }
+    Json::Obj(row)
 }
 
 fn flag(args: &[String], name: &str) -> Option<String> {
@@ -93,6 +159,11 @@ fn main() {
     let per_stage: usize = flag(&args, "--requests")
         .map(|v| v.parse().expect("--requests N"))
         .unwrap_or(if quick { 400 } else { 5000 });
+    let connect_timeout = Duration::from_millis(
+        flag(&args, "--connect-timeout-ms")
+            .map(|v| v.parse().expect("--connect-timeout-ms N"))
+            .unwrap_or(5000),
+    );
 
     // self-host unless --addr points at a live `serve --listen`
     let hosted: Option<(NetServer, neuralut::netlist::Netlist)> =
@@ -100,6 +171,9 @@ fn main() {
             let max_inflight: usize = flag(&args, "--max-inflight")
                 .map(|v| v.parse().expect("--max-inflight N"))
                 .unwrap_or(64);
+            let per_conn: Option<usize> =
+                flag(&args, "--max-inflight-per-conn")
+                    .map(|v| v.parse().expect("--max-inflight-per-conn N"));
             let nl = random_netlist(11, 8, 1, &[(6, 3, 2), (4, 2, 2)]);
             let mut registry = ModelRegistry::new();
             registry.register("loadtest", nl.clone());
@@ -108,12 +182,15 @@ fn main() {
                 ServerConfig { max_batch: 32,
                                max_wait: Duration::from_micros(100),
                                ..ServerConfig::default() });
-            let net = NetServer::bind(
-                server, "127.0.0.1:0",
-                NetConfig { max_inflight, ..NetConfig::default() })
+            let cfg = NetConfig { max_inflight,
+                                  max_inflight_per_conn: per_conn,
+                                  ..NetConfig::default() };
+            let quota = cfg.conn_quota();
+            let net = NetServer::bind(server, "127.0.0.1:0", cfg)
                 .expect("bind loopback");
-            println!("self-hosting on {} (max {} in-flight rows)",
-                     net.local_addr(), max_inflight);
+            println!("self-hosting on {} (max {} in-flight rows, {} per \
+                      connection)",
+                     net.local_addr(), max_inflight, quota);
             Some((net, nl))
         } else {
             None
@@ -122,20 +199,28 @@ fn main() {
         hosted.as_ref().unwrap().0.local_addr().to_string()
     });
 
-    let mut c = Client::connect(&target[..]).expect("connect");
+    let client_cfg = ClientConfig { connect_timeout,
+                                    ..ClientConfig::default() };
+    let mut c = Client::connect_with(&target[..], &client_cfg)
+        .expect("connect");
     c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
     c.ping().expect("ping");
 
-    // discover the first hosted model and the admission bound
+    // discover the first hosted model, the admission bound and the
+    // per-connection quota
     let stats = c.stats("").expect("stats");
     let doc = Json::parse(&stats).expect("stats json");
     let entry = &doc.at("models").unwrap().as_arr().unwrap()[0];
     let model = entry.at("model").unwrap().as_str().unwrap().to_string();
     let n_in = entry.at("n_in").unwrap().as_usize().unwrap();
-    let max_inflight = doc.at("server").unwrap().at("max_inflight")
-        .unwrap().as_usize().unwrap();
+    let srv = doc.at("server").unwrap();
+    let max_inflight =
+        srv.at("max_inflight").unwrap().as_usize().unwrap();
+    let quota =
+        srv.at("max_inflight_per_conn").unwrap().as_usize().unwrap();
     println!("driving model '{model}' (n_in {n_in}) on {target}; \
-              admission bound {max_inflight} rows");
+              admission bound {max_inflight} rows, {quota} per \
+              connection");
 
     // reproducible inputs: sweep valid codes without needing the model
     let in_bits_guess = 1usize; // codes 0/1 are valid for any in_bits
@@ -143,9 +228,10 @@ fn main() {
         .map(|i| ((i * 7 + i / n_in) % (1 << in_bits_guess)) as i32)
         .collect();
 
-    // depth sweep: strictly under the bound (must not shed — at
-    // exactly the bound a shed can race the writer's release), then
-    // past it (must shed explicitly)
+    // capacity sweep: strictly under both bounds (must not shed — at
+    // exactly a bound a shed can race the writer's release), then
+    // past the global bound (must shed explicitly)
+    let safe = quota.min(max_inflight);
     let mut depths: Vec<usize> = [1usize, 8, 32]
         .into_iter()
         .filter(|&d| d < max_inflight)
@@ -155,62 +241,186 @@ fn main() {
 
     let mut table = Table::new(
         "TCP serving under load (single connection, pipelined)",
-        &["depth", "requests", "ok", "shed", "req/s", "p50 us",
-          "p99 us", "p999 us"],
+        &["kind", "depth", "requests", "ok", "shed", "quota", "deadl",
+          "req/s", "p50 us", "p99 us", "p999 us"],
     );
-    let mut rows = Vec::new();
-    let mut results = Vec::new();
-    for &depth in &depths {
-        let r = run_stage(&mut c, &model, n_in, depth, per_stage, &xs);
+    let mut emit = |table: &mut Table, r: &StageResult| {
         let s = r.lat.summary();
         table.row(&[
+            r.kind.to_string(),
             r.depth.to_string(),
             r.requests.to_string(),
             r.ok.to_string(),
             r.shed.to_string(),
+            r.quota_sheds.to_string(),
+            r.deadline_sheds.to_string(),
             format!("{:.0}", r.requests as f64 / r.secs),
             format!("{:.0}", s.p50),
             format!("{:.0}", s.p99),
             format!("{:.0}", s.p999),
         ]);
-        let mut row = BTreeMap::new();
-        row.insert("depth".into(), Json::Num(r.depth as f64));
-        row.insert("requests".into(), Json::Num(r.requests as f64));
-        row.insert("ok".into(), Json::Num(r.ok as f64));
-        row.insert("shed".into(), Json::Num(r.shed as f64));
-        row.insert("req_per_s".into(),
-                   Json::Num(r.requests as f64 / r.secs));
-        row.insert("mean_us".into(), Json::Num(s.mean));
-        row.insert("p50_us".into(), Json::Num(s.p50));
-        row.insert("p99_us".into(), Json::Num(s.p99));
-        row.insert("p999_us".into(), Json::Num(s.p999));
-        row.insert("overload".into(),
-                   Json::Bool(r.depth > max_inflight));
-        rows.push(Json::Obj(row));
+    };
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for &depth in &depths {
+        let r = run_stage(&mut c, "capacity", &model, n_in, depth, None,
+                          per_stage, &xs);
+        emit(&mut table, &r);
+        rows.push(stage_row(&r));
         results.push(r);
     }
-    table.print();
 
-    // the contract the sweep must prove: no sheds under the bound,
-    // explicit sheds past it, and every request answered either way
+    // the contract the capacity sweep must prove: no sheds under both
+    // bounds, explicit sheds past the global bound, and every request
+    // answered either way
     for r in &results {
-        assert_eq!(r.ok + r.shed, r.requests,
+        assert_eq!(r.ok + r.shed + r.quota_sheds, r.requests,
                    "depth {}: {} requests vanished", r.depth,
-                   r.requests - r.ok - r.shed);
-        if r.depth < max_inflight {
-            assert_eq!(r.shed, 0,
-                       "depth {} is under the bound yet shed {}",
-                       r.depth, r.shed);
+                   r.requests - r.ok - r.shed - r.quota_sheds);
+        if r.depth < safe {
+            assert_eq!(r.shed + r.quota_sheds, 0,
+                       "depth {} is under both bounds yet shed {}",
+                       r.depth, r.shed + r.quota_sheds);
         }
     }
     let overload = results.last().unwrap();
-    assert!(overload.shed > 0,
+    assert!(overload.shed + overload.quota_sheds > 0,
             "depth {} past the bound {} never shed — admission \
              control is not bounding the queue",
             overload.depth, max_inflight);
     println!("\noverload stage (depth {}): {} served, {} explicitly \
               shed — bounded admission holds",
-             overload.depth, overload.ok, overload.shed);
+             overload.depth, overload.ok,
+             overload.shed + overload.quota_sheds);
+
+    // deadline sweep at the same overload depth: the p50 the server
+    // has observed by now decides admission.  The tight budget is a
+    // tenth of the *client-side* depth-1 p50 — decisively below the
+    // server's own service-time estimate even after subtracting wire
+    // overhead, so the shed is deterministic, not a coin flip
+    let p50 = results[0].lat.summary().p50.max(1.0);
+    let tight = ((p50 / 10.0) as u64).max(1);
+    let roomy = ((p50 * 20.0) as u64).max(5_000);
+    let mut deadline_results = Vec::new();
+    for (budget, label) in [(tight, "tight"), (roomy, "roomy")] {
+        let r = run_stage(&mut c, "deadline", &model, n_in,
+                          overload_depth, Some(budget), per_stage, &xs);
+        assert_eq!(r.ok + r.shed + r.quota_sheds + r.deadline_sheds,
+                   r.requests, "{label}: requests vanished");
+        emit(&mut table, &r);
+        rows.push(stage_row(&r));
+        deadline_results.push((budget, label, r));
+    }
+    let (_, _, tight_r) = &deadline_results[0];
+    assert!(tight_r.deadline_sheds > 0,
+            "a {tight} µs budget under the observed p50 ({p50:.0} µs) \
+             never shed — deadline admission is not engaging");
+    let (_, _, roomy_r) = &deadline_results[1];
+    assert!(roomy_r.ok > 0, "a roomy {roomy} µs budget served nothing");
+    let p99_answered = roomy_r.lat_ok.summary().p99;
+    println!("deadline stages: tight {tight} µs shed {} of {} at \
+              admission; roomy {roomy} µs answered {} with p99 \
+              {p99_answered:.0} µs",
+             tight_r.deadline_sheds, tight_r.requests, roomy_r.ok);
+    if !quick {
+        assert!(p99_answered <= roomy as f64,
+                "p99 of answered requests ({p99_answered:.0} µs) blew \
+                 the {roomy} µs budget they were admitted under");
+    }
+
+    // retry stage: saturate admission with greedy flooder connections,
+    // then push requests through a RetryClient — every request ends in
+    // an answer or a typed give-up, never silence
+    let flooders = max_inflight / quota.max(1) + 1;
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for _ in 0..flooders {
+        let stop = stop.clone();
+        let target = target.clone();
+        let model = model.clone();
+        let row: Vec<i32> = xs[..n_in].to_vec();
+        let depth = quota.max(1);
+        handles.push(std::thread::spawn(move || {
+            let Ok(mut c) = Client::connect(&target[..]) else { return };
+            let _ = c.set_read_timeout(Some(Duration::from_secs(1)));
+            let mut outstanding = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                while outstanding < depth && !stop.load(Ordering::Relaxed)
+                {
+                    if c.send_infer(&model, 1, n_in as u32, row.clone())
+                        .is_err()
+                    {
+                        return;
+                    }
+                    outstanding += 1;
+                }
+                if c.recv_frame().is_ok() {
+                    outstanding -= 1;
+                } else {
+                    return;
+                }
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    let retry_cfg = ClientConfig {
+        connect_timeout,
+        read_timeout: Some(Duration::from_secs(10)),
+        retry: RetryPolicy { max_attempts: 6,
+                             base: Duration::from_millis(2),
+                             cap: Duration::from_millis(50),
+                             seed: 0xBEEF },
+        fault: None,
+    };
+    let mut rc = RetryClient::connect(&target[..], retry_cfg)
+        .expect("retry connect");
+    let retry_n = if quick { 100 } else { 500 };
+    let t = Instant::now();
+    let mut retry_ok = 0usize;
+    let mut gave_up = 0usize;
+    let mut retry_lat = LatencyStats::default();
+    for i in 0..retry_n {
+        let row = &xs[(i % (xs.len() / n_in)) * n_in..][..n_in];
+        let sent = Instant::now();
+        match rc.infer(&model, 1, n_in, row, None) {
+            Ok(_) => {
+                retry_lat.record(sent.elapsed().as_secs_f64() * 1e6);
+                retry_ok += 1;
+            }
+            Err(_) => gave_up += 1,
+        }
+    }
+    let retry_secs = t.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        let _ = h.join();
+    }
+    let st = rc.retry_stats();
+    assert_eq!(retry_ok + gave_up, retry_n, "retry requests vanished");
+    assert!(retry_ok > 0,
+            "the retry client served nothing through the flood");
+    println!("retry stage: {retry_ok}/{retry_n} served through \
+              {flooders} flooder connections ({} retries, {} typed \
+              give-ups)", st.retries, gave_up);
+    {
+        let s = retry_lat.summary();
+        let mut row = BTreeMap::new();
+        row.insert("kind".into(), Json::Str("retry".into()));
+        row.insert("flooders".into(), Json::Num(flooders as f64));
+        row.insert("requests".into(), Json::Num(retry_n as f64));
+        row.insert("ok".into(), Json::Num(retry_ok as f64));
+        row.insert("gave_up".into(), Json::Num(gave_up as f64));
+        row.insert("attempts".into(), Json::Num(st.attempts as f64));
+        row.insert("retries".into(), Json::Num(st.retries as f64));
+        row.insert("reconnects".into(), Json::Num(st.reconnects as f64));
+        row.insert("backoff_us".into(), Json::Num(st.backoff_us as f64));
+        row.insert("req_per_s".into(),
+                   Json::Num(retry_n as f64 / retry_secs));
+        row.insert("p50_us".into(), Json::Num(s.p50));
+        row.insert("p99_us".into(), Json::Num(s.p99));
+        rows.push(Json::Obj(row));
+    }
+    table.print();
 
     // final server-side stats ride along in the bench artifact
     let final_stats = c.stats("").expect("final stats");
@@ -220,6 +430,7 @@ fn main() {
     root.insert("addr".into(), Json::Str(target.clone()));
     root.insert("model".into(), Json::Str(model.clone()));
     root.insert("max_inflight".into(), Json::Num(max_inflight as f64));
+    root.insert("max_inflight_per_conn".into(), Json::Num(quota as f64));
     root.insert("requests_per_stage".into(),
                 Json::Num(per_stage as f64));
     root.insert("stages".into(), Json::Arr(rows));
@@ -240,6 +451,8 @@ fn main() {
         drop(c);
         net.shutdown();
         println!("drained cleanly; {} connections served, {} requests \
-                  shed overall", net.accepted_conns(), net.shed_total());
+                  shed overall ({} deadline, {} quota)",
+                 net.accepted_conns(), net.shed_total(),
+                 net.deadline_sheds_total(), net.quota_sheds_total());
     }
 }

@@ -1,6 +1,6 @@
 """Deterministic golden NLWP frames shared by the python and rust suites.
 
-``rust/tests/golden/golden_frames.bin`` is the concatenation of the
+``rust/tests/golden/golden_frames.bin`` is the concatenation of the v2
 frames below, produced by this module (``python -m tests.golden_wire``
 from ``python/``, or rerun :func:`write_golden`).  ``test_wire.py``
 asserts the committed bytes still match what the current encoder
@@ -8,6 +8,11 @@ produces; the rust ``golden_wire_frames_decode_and_reencode`` test
 decodes the same bytes into the same frames and re-encodes them
 byte-identically — that pair of tests is the cross-language protocol
 contract, exactly like the ``.nlb`` goldens.
+
+``golden_frames_v1.bin`` pins the *previous* wire version the same
+way: it is the original v1 golden byte stream (the v2 reader must keep
+decoding it forever, and the v1 encoder must keep reproducing it).
+:func:`golden_frames_v1` is the v1-expressible subset of the old list.
 
 Everything is closed-form (no rng, no trained models) so the two
 implementations can construct the identical expected list.
@@ -33,6 +38,32 @@ def golden_frames() -> List[Tuple[int, wire.Message]]:
         # a bigger request with closed-form codes: (i * 7) % 19 - 9
         (4, wire.Infer(model="golden_mix", batch=4, n_in=5,
                        codes=[(i * 7) % 19 - 9 for i in range(20)])),
+        # v2: a request carrying a 250 ms deadline budget
+        (6, wire.Infer(model="dl", batch=1, n_in=4, codes=[1, 2, 3, 4],
+                       deadline_us=250_000)),
+        (7, wire.Result(batch=2, out_width=1, codes=[1, -3])),
+        (8, wire.Error(code=wire.ERR_OVERLOADED, message="shed")),
+        (9, wire.Stats(model="")),
+        (10, wire.Stats(model="jsc")),
+        (11, wire.StatsResult(json='{"x":1}')),
+        (12, wire.Result(batch=3, out_width=0, codes=[])),
+        # v2 error codes
+        (13, wire.Error(code=wire.ERR_DEADLINE, message="late")),
+        (14, wire.Error(code=wire.ERR_CONN_QUOTA, message="greedy")),
+    ]
+
+
+def golden_frames_v1() -> List[Tuple[int, wire.Message]]:
+    """The original v1 golden list (no deadlines, no v2 error codes) —
+    pinned forever for cross-version compatibility."""
+    return [
+        (1, wire.Ping()),
+        (2, wire.Pong()),
+        (0x0123456789ABCDEF,
+         wire.Infer(model="nid", batch=2, n_in=3,
+                    codes=[0, 1, -2, 3, 2, 1])),
+        (4, wire.Infer(model="golden_mix", batch=4, n_in=5,
+                       codes=[(i * 7) % 19 - 9 for i in range(20)])),
         (7, wire.Result(batch=2, out_width=1, codes=[1, -3])),
         (8, wire.Error(code=wire.ERR_OVERLOADED, message="shed")),
         (9, wire.Stats(model="")),
@@ -46,12 +77,21 @@ def golden_bytes() -> bytes:
     return b"".join(wire.encode_frame(i, m) for i, m in golden_frames())
 
 
-def write_golden(out_dir: str) -> str:
+def golden_bytes_v1() -> bytes:
+    return b"".join(wire.encode_frame(i, m, version=1)
+                    for i, m in golden_frames_v1())
+
+
+def write_golden(out_dir: str) -> List[str]:
     os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, "golden_frames.bin")
-    with open(path, "wb") as f:
-        f.write(golden_bytes())
-    return path
+    paths = []
+    for name, data in (("golden_frames.bin", golden_bytes()),
+                       ("golden_frames_v1.bin", golden_bytes_v1())):
+        path = os.path.join(out_dir, name)
+        with open(path, "wb") as f:
+            f.write(data)
+        paths.append(path)
+    return paths
 
 
 if __name__ == "__main__":
@@ -59,4 +99,5 @@ if __name__ == "__main__":
 
     target = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
         os.path.dirname(__file__), "..", "..", "rust", "tests", "golden")
-    print(write_golden(os.path.normpath(target)))
+    for p in write_golden(os.path.normpath(target)):
+        print(p)

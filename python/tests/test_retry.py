@@ -1,0 +1,94 @@
+"""Cross-language pin of the retry backoff schedule.
+
+``rust/src/net/client.rs`` computes decorrelated-jitter backoff in
+pure u64 µs arithmetic precisely so this mirror can reproduce it
+bit-exactly: an inline port of the repo's Xoshiro256** RNG (seeded via
+SplitMix64, as in ``rust/src/util/rng.rs``) drives the same schedule
+formula, and both suites assert the same five pinned values.  A drift
+in either implementation breaks one of the two tests.
+"""
+
+M64 = (1 << 64) - 1
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Xoshiro256StarStar:
+    """Port of ``util::Rng`` — Xoshiro256** seeded via SplitMix64."""
+
+    def __init__(self, seed: int):
+        sm = seed & M64
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & M64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        r = (_rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return r
+
+
+def next_backoff_us(rng: Xoshiro256StarStar, base_us: int, cap_us: int,
+                    prev_us: int) -> int:
+    """Mirror of ``client::next_backoff_us`` (saturating u64 math)."""
+    span = max(1, min(prev_us * 3, M64) - base_us) \
+        if min(prev_us * 3, M64) > base_us else 1
+    return min(cap_us, base_us + rng.next_u64() % span)
+
+
+def backoff_schedule(seed: int, base_us: int, cap_us: int, n: int):
+    rng = Xoshiro256StarStar(seed)
+    base = max(1, base_us)
+    cap = max(base, cap_us)
+    prev = base
+    out = []
+    for _ in range(n):
+        prev = next_backoff_us(rng, base, cap, prev)
+        out.append(prev)
+    return out
+
+
+# keep in lockstep with client.rs::backoff_schedule_is_pinned_cross_language
+PINNED_BACKOFF_US = [15_407, 42_344, 15_890, 13_804, 23_193]
+
+
+def test_backoff_schedule_is_pinned_cross_language():
+    assert backoff_schedule(0xDECAF, 10_000, 1_000_000, 5) == \
+        PINNED_BACKOFF_US
+
+
+def test_backoff_stays_within_bounds_and_is_deterministic():
+    a = backoff_schedule(0xDECAF, 10_000, 1_000_000, 64)
+    b = backoff_schedule(0xDECAF, 10_000, 1_000_000, 64)
+    assert a == b
+    assert all(10_000 <= s <= 1_000_000 for s in a)
+    assert max(a) > a[0], "the jitter window never grew"
+    assert a != backoff_schedule(0xDECAF + 1, 10_000, 1_000_000, 64)
+
+
+def test_rng_port_matches_rust_unit_test_property():
+    # mirror of util::rng determinism: same seed, same stream
+    a = Xoshiro256StarStar(42)
+    b = Xoshiro256StarStar(42)
+    assert [a.next_u64() for _ in range(100)] == \
+        [b.next_u64() for _ in range(100)]
+    assert Xoshiro256StarStar(1).next_u64() != \
+        Xoshiro256StarStar(2).next_u64()
+
+
+def test_degenerate_policy_floors_at_one_microsecond():
+    assert backoff_schedule(1, 0, 0, 16) == [1] * 16

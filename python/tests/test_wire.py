@@ -137,3 +137,89 @@ def test_committed_golden_frames_match_encoder():
     assert committed == golden_wire.golden_bytes(), (
         "rust/tests/golden/golden_frames.bin is stale — regenerate with "
         "`python -m tests.golden_wire` and update the rust expectations")
+
+
+def test_committed_v1_golden_frames_match_v1_encoder():
+    # the v1 stream is pinned forever: old peers must keep working
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "rust",
+                        "tests", "golden", "golden_frames_v1.bin")
+    with open(path, "rb") as f:
+        committed = f.read()
+    assert committed == golden_wire.golden_bytes_v1(), (
+        "rust/tests/golden/golden_frames_v1.bin changed — the v1 "
+        "encoding is frozen and must never drift")
+
+
+def test_v2_reader_decodes_v1_frames_as_no_deadline():
+    offset = 0
+    stream = golden_wire.golden_bytes_v1()
+    for frame_id, msg in golden_wire.golden_frames_v1():
+        frame, used = wire.decode_frame(stream[offset:])
+        assert frame.id == frame_id
+        assert frame.msg == msg
+        if isinstance(frame.msg, wire.Infer):
+            assert frame.msg.deadline_us is None
+        # canonical per version: the v1 encoder reproduces the bytes
+        assert wire.encode_frame(frame.id, frame.msg, version=1) == \
+            stream[offset:offset + used]
+        offset += used
+    assert offset == len(stream)
+
+
+def test_v1_encoder_refuses_to_drop_a_deadline():
+    msg = wire.Infer(model="m", batch=1, n_in=1, codes=[0],
+                     deadline_us=1000)
+    with pytest.raises(AssertionError):
+        wire.encode_frame(1, msg, version=1)
+
+
+def _with_raw_deadline(data: bytes, model: str, raw: int) -> bytes:
+    """Rewrite the raw deadline field of an encoded v2 INFER frame and
+    fix the checksum, to forge semantically-hostile-but-valid bytes."""
+    off = wire.HEADER_LEN + 2 + len(model.encode()) + 4 + 4
+    evil = bytearray(data)
+    evil[off:off + 8] = struct.pack("<Q", raw)
+    body = bytes(evil[wire.HEADER_LEN:])
+    evil[20:24] = struct.pack("<I", wire.fnv1a(body) & 0xFFFFFFFF)
+    return bytes(evil)
+
+
+def test_deadline_validation_rejects_zero_and_oversize():
+    good = wire.encode_frame(
+        9, wire.Infer(model="m", batch=1, n_in=2, codes=[5, -5],
+                      deadline_us=1000))
+    # boundary values survive
+    for raw in (1, wire.MAX_DEADLINE_US):
+        frame, _ = wire.decode_frame(_with_raw_deadline(good, "m", raw))
+        assert frame.msg.deadline_us == raw
+    # the sentinel decodes as "no deadline"
+    frame, _ = wire.decode_frame(
+        _with_raw_deadline(good, "m", wire.NO_DEADLINE))
+    assert frame.msg.deadline_us is None
+    # zero and oversize are malformed (recoverable, not fatal)
+    for raw in (0, wire.MAX_DEADLINE_US + 1):
+        with pytest.raises(wire.WireError) as e:
+            wire.decode_frame(_with_raw_deadline(good, "m", raw))
+        assert not e.value.fatal
+        assert "deadline" in str(e.value)
+
+
+def test_version_zero_and_future_versions_are_fatal():
+    base = bytearray(wire.encode_frame(5, wire.Ping()))
+    for v in (0, wire.WIRE_VERSION + 1, 0xFFFF):
+        evil = bytearray(base)
+        evil[4:6] = struct.pack("<H", v)
+        with pytest.raises(wire.WireError) as e:
+            wire.decode_frame(bytes(evil))
+        assert e.value.fatal and "version" in str(e.value)
+
+
+def test_deadline_roundtrips_canonically():
+    for dl in (None, 1, 250_000, wire.MAX_DEADLINE_US):
+        msg = wire.Infer(model="m", batch=2, n_in=1, codes=[3, 4],
+                         deadline_us=dl)
+        data = wire.encode_frame(42, msg)
+        frame, used = wire.decode_frame(data)
+        assert used == len(data)
+        assert frame.msg == msg
+        assert wire.encode_frame(frame.id, frame.msg) == data

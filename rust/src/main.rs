@@ -10,7 +10,8 @@
 //!                             from one multi-model batch server
 //!   serve  --model <f.nlb,..> serve exported artifacts without training
 //!   serve  --listen <addr>    expose the models over TCP (NLWP wire
-//!                             protocol; --serve-secs, --max-inflight)
+//!                             protocol; --serve-secs, --max-inflight,
+//!                             --max-inflight-per-conn)
 //!   inspect --model <f.nlb>   inspect an artifact without a runtime
 //!
 //! Common flags: --steps N --dense-steps N --train N --test N --seed N
@@ -553,20 +554,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `serve --listen ADDR`: host the models over TCP (NLWP protocol)
 /// instead of driving synthetic traffic in-process.  `--serve-secs N`
 /// bounds the run (0 = until killed); `--max-inflight N` sets the
-/// admission bound past which requests are shed with a typed
-/// OVERLOADED error.  On a bounded run the server drains gracefully
+/// global admission bound and `--max-inflight-per-conn N` the
+/// per-connection quota (default: a quarter of the global bound) —
+/// past either, requests are shed with a typed OVERLOADED /
+/// CONN_QUOTA error.  On a bounded run the server drains gracefully
 /// (flushes in-flight responses) before printing final statistics.
 fn serve_listen(args: &Args, server: InferenceServer,
                 models: &[String], addr: &str) -> Result<()> {
+    let max_inflight = args.usize_flag(
+        "max-inflight", NetConfig::default().max_inflight)?;
+    let per_conn = match args.flags.get("max-inflight-per-conn") {
+        Some(v) => Some(v.parse::<usize>()?),
+        None => None,
+    };
     let cfg = NetConfig {
-        max_inflight: args.usize_flag(
-            "max-inflight", NetConfig::default().max_inflight)?,
+        max_inflight,
+        max_inflight_per_conn: per_conn,
         ..NetConfig::default()
     };
+    let conn_quota = cfg.conn_quota();
     let net = NetServer::bind(server, addr, cfg)?;
-    println!("listening on {} — {} models ({}), max {} in-flight rows",
+    println!("listening on {} — {} models ({}), max {} in-flight rows \
+              ({} per connection)",
              net.local_addr(), models.len(), models.join(", "),
-             cfg.max_inflight);
+             max_inflight, conn_quota);
     let secs = args.usize_flag("serve-secs", 0)?;
     if secs == 0 {
         println!("serving until killed (--serve-secs N for a bounded \
@@ -601,8 +612,10 @@ fn serve_listen(args: &Args, server: InferenceServer,
     }
     t.print();
     println!("\nserved {total} requests over TCP in {secs}s; {} \
-              connections accepted, {} requests shed",
-             net.accepted_conns(), net.shed_total());
+              connections accepted, {} requests shed ({} deadline, \
+              {} conn-quota)",
+             net.accepted_conns(), net.shed_total(),
+             net.deadline_sheds_total(), net.quota_sheds_total());
     Ok(())
 }
 
@@ -633,7 +646,8 @@ fn main() {
                  [--lanes auto|1|4|8] \
                  [--model FILE.nlb[,FILE.nlb...]] [--plan-cache DIR] \
                  [--no-mmap] \
-                 [--listen ADDR] [--serve-secs N] [--max-inflight N]\n\n\
+                 [--listen ADDR] [--serve-secs N] [--max-inflight N] \
+                 [--max-inflight-per-conn N]\n\n\
                  serve hosts several configs at once: \
                  --config nid,jsc_cb serves both from one process \
                  (per-model batching policies and statistics). \
@@ -672,8 +686,13 @@ fn main() {
                  NLWP length-prefixed protocol; see DESIGN.md): \
                  per-connection pipelining feeds the same batching \
                  router, requests past --max-inflight rows are shed \
-                 with a typed OVERLOADED error, and stats (p50/p99/\
-                 p999, occupancy, shed counts) are queryable over the \
+                 with a typed OVERLOADED error, a single connection \
+                 past --max-inflight-per-conn rows (default: a quarter \
+                 of the global bound) with CONN_QUOTA, and requests \
+                 whose wire-v2 deadline budget cannot be met are shed \
+                 up front with DEADLINE. Stats (p50/p99/p999, \
+                 occupancy, shed counts incl. deadline/quota sheds, \
+                 per-connection counters) are queryable over the \
                  wire. --serve-secs N bounds the run and drains \
                  gracefully; 0 (default) serves until killed. \
                  examples/serve_load.rs is a ready-made load generator."

@@ -1,50 +1,180 @@
 //! Client side of the NLWP protocol: a blocking connection handle
-//! ([`Client`]), the consumer-facing [`Session`] over it
-//! ([`NetSession`]), and an [`InferenceEngine`] adapter
-//! ([`RemoteEngine`]) so the conformance suite can hold a served
-//! model to the exact same contract as an in-process executor.
+//! ([`Client`]), a resilient retrying wrapper ([`RetryClient`]), the
+//! consumer-facing [`Session`] over it ([`NetSession`]), and an
+//! [`InferenceEngine`] adapter ([`RemoteEngine`]) so the conformance
+//! suite can hold a served model to the exact same contract as an
+//! in-process executor — through restarts and injected faults.
 //!
 //! [`Client`] exposes both a synchronous request/response surface
 //! (`infer`, `stats`, `ping`) and a split send/receive surface
 //! (`send_infer` + `recv_frame`) for pipelining: a load generator may
 //! keep many requests in flight on one connection, which is exactly
 //! what drives the server's batcher to form large batches.
+//!
+//! [`RetryClient`] wraps the synchronous surface in a bounded retry
+//! loop: capacity sheds and transport failures are retried with
+//! decorrelated-jitter exponential backoff (fresh request ids each
+//! attempt, reconnecting when the connection is suspect), semantic
+//! rejections are returned immediately — the taxonomy lives on
+//! [`InferError::is_retryable`].  All timing math is integer µs so
+//! the Python mirror can pin the schedule bit-exactly.
 
 use std::collections::HashMap;
 use std::io::{BufReader, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::coordinator::InferenceEngine;
-use crate::util::Json;
+use crate::util::{Json, Rng};
 
+use super::fault::{FaultPlan, NetIo};
 use super::session::{single_input_batch, InferError, Session, INPUT_X,
                      OUTPUT_Y};
 use super::wire::{self, Frame, Message};
 
+/// Bounded exponential backoff with decorrelated jitter (each sleep
+/// is drawn from a window that grows with the previous sleep, so
+/// synchronized retry storms decorrelate).  All integer µs.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts per request (1 = no retries).
+    pub max_attempts: u32,
+    /// First-retry backoff floor.
+    pub base: Duration,
+    /// Backoff ceiling.
+    pub cap: Duration,
+    /// Seed for the jitter stream (deterministic tests).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base: Duration::from_millis(10),
+            cap: Duration::from_secs(1),
+            seed: 0x5EED_BACC,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries at all (the raw-client behavior).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, ..RetryPolicy::default() }
+    }
+}
+
+/// One decorrelated-jitter step: uniform in
+/// `[base, max(base + 1, 3 * prev))`, clamped to `cap` — the AWS
+/// "decorrelated jitter" schedule in pure u64 µs arithmetic (no
+/// floats, so the Python mirror reproduces it bit-exactly).
+pub(crate) fn next_backoff_us(rng: &mut Rng, base_us: u64, cap_us: u64,
+                              prev_us: u64) -> u64 {
+    let span = prev_us.saturating_mul(3).saturating_sub(base_us).max(1);
+    (base_us + rng.next_u64() % span).min(cap_us)
+}
+
+/// The first `n` backoff sleeps (µs) the policy would draw — pure, for
+/// tests and capacity planning; pinned cross-language against the
+/// Python mirror.
+pub fn backoff_schedule(policy: &RetryPolicy, n: usize) -> Vec<u64> {
+    let mut rng = Rng::new(policy.seed);
+    let base = policy.base.as_micros().max(1) as u64;
+    let cap = (policy.cap.as_micros() as u64).max(base);
+    let mut prev = base;
+    (0..n)
+        .map(|_| {
+            prev = next_backoff_us(&mut rng, base, cap, prev);
+            prev
+        })
+        .collect()
+}
+
+/// Connection-level knobs for [`Client`] / [`RetryClient`].
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Bound on each TCP connect attempt — a half-dead host answers
+    /// with an error instead of hanging the caller indefinitely.
+    pub connect_timeout: Duration,
+    /// Read timeout on the connection (`None`: block forever).  The
+    /// default is generous but finite, so a wedged server surfaces as
+    /// a typed timeout a retry loop can act on.
+    pub read_timeout: Option<Duration>,
+    /// Retry behavior for [`RetryClient`] (ignored by raw [`Client`]
+    /// calls).
+    pub retry: RetryPolicy,
+    /// Fault-injection plan wrapped around the connection's I/O
+    /// (chaos tests only; `None` in production).
+    pub fault: Option<Arc<FaultPlan>>,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Some(Duration::from_secs(30)),
+            retry: RetryPolicy::default(),
+            fault: None,
+        }
+    }
+}
+
 /// One blocking NLWP connection.
 pub struct Client {
-    writer: TcpStream,
-    reader: BufReader<TcpStream>,
+    sock: TcpStream,
+    writer: NetIo,
+    reader: BufReader<NetIo>,
     next_id: u64,
 }
 
 impl Client {
-    /// Connect to a [`NetServer`](super::server::NetServer).
+    /// Connect to a [`NetServer`](super::server::NetServer) with
+    /// default timeouts.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Client, InferError> {
-        let stream = TcpStream::connect(addr)?;
+        Client::connect_with(addr, &ClientConfig::default())
+    }
+
+    /// Connect with explicit timeouts and (optionally) a fault plan.
+    /// Every resolved address is tried, each bounded by
+    /// `cfg.connect_timeout`.
+    pub fn connect_with(addr: impl ToSocketAddrs, cfg: &ClientConfig)
+                        -> Result<Client, InferError> {
+        let addrs: Vec<SocketAddr> = addr.to_socket_addrs()?.collect();
+        let mut last: Option<InferError> = None;
+        for a in &addrs {
+            match TcpStream::connect_timeout(a, cfg.connect_timeout) {
+                Ok(s) => return Client::from_stream(s, cfg),
+                Err(e) => last = Some(InferError::Io(e)),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            InferError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "address resolved to nothing"))
+        }))
+    }
+
+    fn from_stream(stream: TcpStream, cfg: &ClientConfig)
+                   -> Result<Client, InferError> {
         stream.set_nodelay(true)?;
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { writer: stream, reader, next_id: 1 })
+        stream.set_read_timeout(cfg.read_timeout)?;
+        let rstream = stream.try_clone()?;
+        let sock = stream.try_clone()?;
+        let writer = NetIo::wrap(stream, cfg.fault.as_ref());
+        let reader =
+            BufReader::new(NetIo::wrap(rstream, cfg.fault.as_ref()));
+        Ok(Client { sock, writer, reader, next_id: 1 })
     }
 
     /// Optional read timeout — lets tests and load generators fail
     /// fast instead of hanging on a wedged peer.
     pub fn set_read_timeout(&self, t: Option<Duration>)
                             -> Result<(), InferError> {
-        self.reader.get_ref().set_read_timeout(t)?;
+        self.sock.set_read_timeout(t)?;
         Ok(())
     }
 
@@ -59,8 +189,17 @@ impl Client {
     /// Send one inference request without waiting (pipelining).
     pub fn send_infer(&mut self, model: &str, batch: u32, n_in: u32,
                       codes: Vec<i32>) -> Result<u64, InferError> {
+        self.send_infer_deadline(model, batch, n_in, codes, None)
+    }
+
+    /// Send one inference request carrying an optional µs deadline
+    /// budget (measured by the server from frame arrival).
+    pub fn send_infer_deadline(&mut self, model: &str, batch: u32,
+                               n_in: u32, codes: Vec<i32>,
+                               deadline_us: Option<u64>)
+                               -> Result<u64, InferError> {
         self.send(&Message::Infer {
-            model: model.to_string(), batch, n_in, codes,
+            model: model.to_string(), batch, n_in, deadline_us, codes,
         })
     }
 
@@ -103,8 +242,17 @@ impl Client {
     /// row-major `batch * out_width` codes out.
     pub fn infer(&mut self, model: &str, batch: usize, n_in: usize,
                  codes: Vec<i32>) -> Result<Vec<i32>, InferError> {
-        let id = self.send_infer(model, batch as u32, n_in as u32,
-                                 codes)?;
+        self.infer_deadline(model, batch, n_in, codes, None)
+    }
+
+    /// Synchronous inference with an optional µs deadline budget.
+    pub fn infer_deadline(&mut self, model: &str, batch: usize,
+                          n_in: usize, codes: Vec<i32>,
+                          deadline_us: Option<u64>)
+                          -> Result<Vec<i32>, InferError> {
+        let id = self.send_infer_deadline(model, batch as u32,
+                                          n_in as u32, codes,
+                                          deadline_us)?;
         match self.recv_response(id)? {
             Message::Result { batch: b, codes, .. } => {
                 if b as usize != batch {
@@ -146,6 +294,170 @@ impl Client {
         parse(&json).map_err(|e| {
             InferError::Protocol(format!("stats json: {e:#}"))
         })
+    }
+}
+
+/// What a [`RetryClient`] has done so far — proof in tests that a
+/// chaos run actually retried, and a production signal that the
+/// server is shedding.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RetryStats {
+    /// Individual attempts (requests + retries).
+    pub attempts: u64,
+    /// Attempts that were retries of a failed attempt.
+    pub retries: u64,
+    /// Connection re-establishments after a suspect failure.
+    pub reconnects: u64,
+    /// Requests that exhausted `max_attempts` on retryable errors.
+    pub gave_up: u64,
+    /// Total backoff slept, µs.
+    pub backoff_us: u64,
+}
+
+/// A [`Client`] wrapped in bounded idempotent retries: capacity sheds
+/// (`OVERLOADED`, `CONN_QUOTA`), transport failures and server
+/// restarts are absorbed with decorrelated-jitter backoff; semantic
+/// rejections (`BAD_INPUT`, `UNKNOWN_MODEL`, `DEADLINE`, `INTERNAL`)
+/// pass straight through.  Inference is idempotent (same input, same
+/// answer, no server-side state), so re-sending a request whose fate
+/// is unknown is always safe — at worst the server computes it twice.
+pub struct RetryClient {
+    addrs: Vec<SocketAddr>,
+    cfg: ClientConfig,
+    conn: Option<Client>,
+    rng: Rng,
+    stats: RetryStats,
+    ever_connected: bool,
+}
+
+impl RetryClient {
+    /// Resolve `addr` and prepare a retrying client.  The connection
+    /// itself is established lazily inside the retry loop, so a
+    /// server that is still starting (or restarting) is handled like
+    /// any other transient failure.
+    pub fn connect(addr: impl ToSocketAddrs, cfg: ClientConfig)
+                   -> Result<RetryClient, InferError> {
+        let addrs: Vec<SocketAddr> = addr.to_socket_addrs()?.collect();
+        if addrs.is_empty() {
+            return Err(InferError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "address resolved to nothing")));
+        }
+        let rng = Rng::new(cfg.retry.seed);
+        Ok(RetryClient {
+            addrs,
+            cfg,
+            conn: None,
+            rng,
+            stats: RetryStats::default(),
+            ever_connected: false,
+        })
+    }
+
+    /// What the retry loop has done so far.
+    pub fn retry_stats(&self) -> RetryStats {
+        self.stats
+    }
+
+    fn ensure_conn(&mut self) -> Result<&mut Client, InferError> {
+        if self.conn.is_none() {
+            let mut last: Option<InferError> = None;
+            for a in &self.addrs {
+                match Client::connect_with(*a, &self.cfg) {
+                    Ok(c) => {
+                        self.conn = Some(c);
+                        last = None;
+                        break;
+                    }
+                    Err(e) => last = Some(e),
+                }
+            }
+            match last {
+                Some(e) => return Err(e),
+                None => {
+                    if self.ever_connected {
+                        self.stats.reconnects += 1;
+                    }
+                    self.ever_connected = true;
+                }
+            }
+        }
+        Ok(self.conn.as_mut().expect("connection just ensured"))
+    }
+
+    /// Run `f` against a live connection, retrying per the policy.
+    /// Fresh request ids per attempt fall out of the design: ids are
+    /// per-connection counters, and a retried send is a new send.
+    fn with_retry<T>(&mut self,
+                     mut f: impl FnMut(&mut Client)
+                                       -> Result<T, InferError>)
+                     -> Result<T, InferError> {
+        let base = (self.cfg.retry.base.as_micros() as u64).max(1);
+        let cap = (self.cfg.retry.cap.as_micros() as u64).max(base);
+        let max_attempts = self.cfg.retry.max_attempts.max(1);
+        let mut prev = base;
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            self.stats.attempts += 1;
+            let result = match self.ensure_conn() {
+                Ok(c) => f(c),
+                Err(e) => Err(e),
+            };
+            let e = match result {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            };
+            // drop a connection whose stream state is suspect; keep
+            // it for pure capacity sheds (the stream is healthy and
+            // reconnecting would only add SYN load)
+            if matches!(e,
+                        InferError::Io(_) | InferError::Protocol(_)
+                        | InferError::BadFrame(_)
+                        | InferError::ShuttingDown)
+            {
+                self.conn = None;
+            }
+            if !e.is_retryable() {
+                return Err(e);
+            }
+            if attempt >= max_attempts {
+                self.stats.gave_up += 1;
+                return Err(e);
+            }
+            self.stats.retries += 1;
+            let sleep_us = next_backoff_us(&mut self.rng, base, cap, prev);
+            prev = sleep_us;
+            self.stats.backoff_us += sleep_us;
+            std::thread::sleep(Duration::from_micros(sleep_us));
+        }
+    }
+
+    /// Synchronous inference with retries; `deadline_us` rides each
+    /// attempt's frame.
+    pub fn infer(&mut self, model: &str, batch: usize, n_in: usize,
+                 codes: &[i32], deadline_us: Option<u64>)
+                 -> Result<Vec<i32>, InferError> {
+        self.with_retry(|c| {
+            c.infer_deadline(model, batch, n_in, codes.to_vec(),
+                             deadline_us)
+        })
+    }
+
+    /// Ping with retries.
+    pub fn ping(&mut self) -> Result<(), InferError> {
+        self.with_retry(|c| c.ping())
+    }
+
+    /// Stats JSON with retries.
+    pub fn stats(&mut self, model: &str) -> Result<String, InferError> {
+        self.with_retry(|c| c.stats(model))
+    }
+
+    /// IO-width probe with retries.
+    pub fn model_io(&mut self, model: &str)
+                    -> Result<(usize, usize), InferError> {
+        self.with_retry(|c| c.model_io(model))
     }
 }
 
@@ -203,7 +515,9 @@ impl Session for NetSession {
 
 /// A served model viewed as an [`InferenceEngine`], so
 /// [`check_conformance`](crate::coordinator::check_conformance) can
-/// prove TCP answers bit-exact with the in-process executors.
+/// prove TCP answers bit-exact with the in-process executors.  Built
+/// on [`RetryClient`], so a server restart or an injected fault
+/// mid-conformance-run is absorbed instead of failing the contract.
 ///
 /// `run_batch` deliberately does *not* pre-validate input length: the
 /// request goes out with the model's declared `n_in`, so a short
@@ -211,7 +525,7 @@ impl Session for NetSession {
 /// rejection case exercises the remote validation path, not a local
 /// shortcut.
 pub struct RemoteEngine {
-    client: Client,
+    client: RetryClient,
     model: String,
     n_in: usize,
     out_width: usize,
@@ -220,7 +534,13 @@ pub struct RemoteEngine {
 impl RemoteEngine {
     pub fn open(addr: impl ToSocketAddrs, model: &str)
                 -> Result<RemoteEngine, InferError> {
-        let mut client = Client::connect(addr)?;
+        RemoteEngine::open_with(addr, model, ClientConfig::default())
+    }
+
+    /// Open with explicit timeouts / retry policy / fault plan.
+    pub fn open_with(addr: impl ToSocketAddrs, model: &str,
+                     cfg: ClientConfig) -> Result<RemoteEngine, InferError> {
+        let mut client = RetryClient::connect(addr, cfg)?;
         let (n_in, out_width) = client.model_io(model)?;
         Ok(RemoteEngine {
             client,
@@ -229,13 +549,18 @@ impl RemoteEngine {
             out_width,
         })
     }
+
+    /// What the retry loop absorbed (attempts, reconnects, backoff).
+    pub fn retry_stats(&self) -> RetryStats {
+        self.client.retry_stats()
+    }
 }
 
 impl InferenceEngine for RemoteEngine {
     fn run_batch(&mut self, x: &[i32], batch: usize) -> Result<Vec<i32>> {
         let y = self
             .client
-            .infer(&self.model, batch, self.n_in, x.to_vec())
+            .infer(&self.model, batch, self.n_in, x, None)
             .map_err(|e| anyhow::anyhow!("remote run_batch: {e}"))?;
         anyhow::ensure!(y.len() == batch * self.out_width,
                         "remote result len {} != batch {batch} * \
@@ -254,5 +579,81 @@ impl InferenceEngine for RemoteEngine {
     fn describe(&self) -> String {
         format!("remote model '{}': n_in {}, out_width {}", self.model,
                 self.n_in, self.out_width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_stays_within_bounds_and_is_deterministic() {
+        let policy = RetryPolicy {
+            max_attempts: 8,
+            base: Duration::from_millis(10),
+            cap: Duration::from_secs(1),
+            seed: 0xDECAF,
+        };
+        let a = backoff_schedule(&policy, 64);
+        let b = backoff_schedule(&policy, 64);
+        assert_eq!(a, b, "same seed, same schedule");
+        for (i, &s) in a.iter().enumerate() {
+            assert!((10_000..=1_000_000).contains(&s),
+                    "sleep {i} = {s} µs outside [base, cap]");
+        }
+        // the window grows: late sleeps must be able to exceed the
+        // first one (decorrelation, not a constant)
+        assert!(a.iter().max() > a.first().as_ref(),
+                "schedule never grew: {a:?}");
+        let c = backoff_schedule(
+            &RetryPolicy { seed: 0xDECAF + 1, ..policy }, 64);
+        assert_ne!(a, c, "different seed, different jitter");
+    }
+
+    #[test]
+    fn backoff_schedule_is_pinned_cross_language() {
+        // python/tests/test_retry.py computes the same five values
+        // from the same seed with its own Xoshiro256** port — a drift
+        // in either implementation breaks one of the two tests
+        let policy = RetryPolicy {
+            max_attempts: 8,
+            base: Duration::from_millis(10),
+            cap: Duration::from_secs(1),
+            seed: 0xDECAF,
+        };
+        assert_eq!(backoff_schedule(&policy, 5), PINNED_BACKOFF_US);
+    }
+
+    /// Shared with the Python mirror (see test_retry.py).
+    const PINNED_BACKOFF_US: [u64; 5] =
+        [15_407, 42_344, 15_890, 13_804, 23_193];
+
+    #[test]
+    fn zero_cap_and_tiny_base_never_panic() {
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            base: Duration::from_micros(0),
+            cap: Duration::from_micros(0),
+            seed: 1,
+        };
+        for s in backoff_schedule(&policy, 16) {
+            assert_eq!(s, 1, "base floors at 1 µs and cap at base");
+        }
+    }
+
+    #[test]
+    fn connect_timeout_fails_fast_not_forever() {
+        // RFC 5737 TEST-NET-1 address: connect attempts black-hole.
+        // The call must come back around the configured timeout, not
+        // hang — generous ceiling so loaded CI cannot flake it.
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_millis(300),
+            ..ClientConfig::default()
+        };
+        let t0 = std::time::Instant::now();
+        let r = Client::connect_with("192.0.2.1:47999", &cfg);
+        assert!(r.is_err(), "TEST-NET-1 must not accept");
+        assert!(t0.elapsed() < Duration::from_secs(5),
+                "connect took {:?}, timeout not applied", t0.elapsed());
     }
 }

@@ -1,0 +1,532 @@
+//! Deterministic fault injection for the serving path.
+//!
+//! A [`FaultPlan`] is a seeded (or fully scripted) schedule of
+//! transport faults — delays, dropped connections, truncated frames,
+//! corrupted bytes, partial writes — that the chaos test battery
+//! threads into both the server's connection handlers and the client
+//! via [`FaultyIo`], an I/O wrapper that consults the plan on every
+//! `read`/`write`.  [`NetIo`] is the zero-cost-when-disabled switch
+//! the production code actually holds: `Plain` is a bare
+//! `TcpStream`, `Faulty` the wrapped one.
+//!
+//! Design constraints:
+//!
+//! * **Deterministic** — a plan draws every decision from one
+//!   [`Rng`] behind a mutex with a global operation counter, so a
+//!   given seed produces the same fault schedule for the same
+//!   sequence of I/O operations.  (Across threads the *interleaving*
+//!   of operations is scheduling-dependent; tests that need exact
+//!   fault placement use [`FaultPlan::scripted`] on a single
+//!   stream.)
+//! * **Honest at the syscall boundary** — faults are expressed as
+//!   real `io::Result` outcomes (`ConnectionReset`, short reads,
+//!   partial writes) or real byte-level damage, never as magic
+//!   side channels, so the code under test exercises exactly the
+//!   paths a flaky network would.
+//! * **One-way degradation** — once a plan kills a stream (drop /
+//!   truncate), every later operation on that stream fails too;
+//!   a connection never heals mid-life, matching TCP.
+//!
+//! The module is compiled unconditionally (integration tests and the
+//! `serve_load` example need it from outside the crate) but nothing
+//! in the serving path constructs a plan unless one is explicitly
+//! configured — `NetIo::Plain` adds one enum-tag branch per I/O call.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// One injected fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Stall the operation for this many milliseconds, then perform
+    /// it normally (network jitter, a GC'd peer, a slow middlebox).
+    Delay(u64),
+    /// Fail with `ConnectionReset` and kill the stream.
+    DropConnection,
+    /// Perform roughly half of the operation, then kill the stream —
+    /// the peer sees a frame cut mid-body.
+    TruncateFrame,
+    /// Flip one byte of the payload (the checksum must catch it).
+    CorruptByte,
+    /// Complete only part of the operation but report honest short
+    /// counts — exercises `write_all`/`read_exact` resumption.
+    Partial,
+}
+
+/// Injection counters — what a plan actually did, for test assertions
+/// ("the chaos run was not a no-op").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub delays: u64,
+    pub drops: u64,
+    pub truncates: u64,
+    pub corrupts: u64,
+    pub partials: u64,
+}
+
+impl FaultCounts {
+    pub fn total(&self) -> u64 {
+        self.delays + self.drops + self.truncates + self.corrupts
+            + self.partials
+    }
+}
+
+/// Whether the intercepted operation is a read or a write — scripted
+/// plans and directional modes can discriminate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+enum Mode {
+    /// Each operation faults independently with probability `rate`;
+    /// the fault kind is drawn uniformly.  `delay_ms` bounds the
+    /// injected stalls so a seeded chaos run stays fast.
+    Seeded { rate: f64, delay_ms: u64 },
+    /// Exact placement: operation index -> fault, one-shot each.
+    Scripted {
+        events: std::collections::HashMap<u64, (Dir, Fault)>,
+    },
+    /// Every write stalls for `ms`; reads untouched.  The wedged-
+    /// responder scenario the drain-deadline regression test needs.
+    DelayWrites { ms: u64 },
+}
+
+struct Inner {
+    mode: Mode,
+    rng: Rng,
+    op: u64,
+    counts: FaultCounts,
+}
+
+/// A deterministic schedule of transport faults, shared by every
+/// stream it is threaded into (`Arc<FaultPlan>`).
+pub struct FaultPlan {
+    inner: Mutex<Inner>,
+}
+
+impl FaultPlan {
+    /// Seeded plan: every I/O operation faults independently with
+    /// probability `rate` (kind drawn uniformly, delays capped at
+    /// 5 ms).
+    pub fn seeded(seed: u64, rate: f64) -> Arc<FaultPlan> {
+        FaultPlan::seeded_with_delay(seed, rate, 5)
+    }
+
+    /// Seeded plan with an explicit delay bound in milliseconds.
+    pub fn seeded_with_delay(seed: u64, rate: f64, delay_ms: u64)
+                             -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            inner: Mutex::new(Inner {
+                mode: Mode::Seeded { rate, delay_ms },
+                rng: Rng::new(seed),
+                op: 0,
+                counts: FaultCounts::default(),
+            }),
+        })
+    }
+
+    /// Fully scripted plan: fault exactly the listed operations
+    /// (global 0-based operation index across every stream sharing
+    /// the plan), leave the rest untouched.
+    pub fn scripted(events: &[(u64, Dir, Fault)]) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            inner: Mutex::new(Inner {
+                mode: Mode::Scripted {
+                    events: events
+                        .iter()
+                        .map(|&(op, dir, f)| (op, (dir, f)))
+                        .collect(),
+                },
+                rng: Rng::new(0),
+                op: 0,
+                counts: FaultCounts::default(),
+            }),
+        })
+    }
+
+    /// Stall every write by `ms` milliseconds (reads untouched) — a
+    /// responder that wedges without dying.
+    pub fn delay_writes(ms: u64) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            inner: Mutex::new(Inner {
+                mode: Mode::DelayWrites { ms },
+                rng: Rng::new(0),
+                op: 0,
+                counts: FaultCounts::default(),
+            }),
+        })
+    }
+
+    /// What the plan has injected so far.
+    pub fn counts(&self) -> FaultCounts {
+        self.inner.lock().unwrap().counts
+    }
+
+    /// Decide the fate of the next I/O operation.
+    fn next(&self, dir: Dir) -> Option<Fault> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner: &mut Inner = &mut guard;
+        let op = inner.op;
+        inner.op += 1;
+        let fault = match &mut inner.mode {
+            Mode::Seeded { rate, delay_ms } => {
+                if inner.rng.uniform() < *rate {
+                    let cap = (*delay_ms).max(1);
+                    Some(match inner.rng.below(5) {
+                        0 => Fault::Delay(1 + inner.rng.next_u64() % cap),
+                        1 => Fault::DropConnection,
+                        2 => Fault::TruncateFrame,
+                        3 => Fault::CorruptByte,
+                        _ => Fault::Partial,
+                    })
+                } else {
+                    None
+                }
+            }
+            Mode::Scripted { events } => match events.remove(&op) {
+                Some((d, f)) if d == dir => Some(f),
+                Some(_) | None => None,
+            },
+            Mode::DelayWrites { ms } => {
+                if dir == Dir::Write {
+                    Some(Fault::Delay(*ms))
+                } else {
+                    None
+                }
+            }
+        };
+        match fault {
+            Some(Fault::Delay(_)) => inner.counts.delays += 1,
+            Some(Fault::DropConnection) => inner.counts.drops += 1,
+            Some(Fault::TruncateFrame) => inner.counts.truncates += 1,
+            Some(Fault::CorruptByte) => inner.counts.corrupts += 1,
+            Some(Fault::Partial) => inner.counts.partials += 1,
+            None => {}
+        }
+        fault
+    }
+
+    /// A deterministic position in `0..len` for byte corruption.
+    fn pos(&self, len: usize) -> usize {
+        debug_assert!(len > 0);
+        self.inner.lock().unwrap().rng.below(len)
+    }
+}
+
+fn reset() -> io::Error {
+    io::Error::new(io::ErrorKind::ConnectionReset,
+                   "injected connection reset")
+}
+
+/// An I/O wrapper that consults a [`FaultPlan`] on every operation.
+/// Generic over the stream so unit tests can drive it with in-memory
+/// pipes; the serving path always wraps a `TcpStream` (via
+/// [`NetIo`]).
+pub struct FaultyIo<S> {
+    inner: S,
+    plan: Arc<FaultPlan>,
+    dead: bool,
+}
+
+impl<S> FaultyIo<S> {
+    pub fn new(inner: S, plan: Arc<FaultPlan>) -> FaultyIo<S> {
+        FaultyIo { inner, plan, dead: false }
+    }
+
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+}
+
+impl<S: Read> Read for FaultyIo<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(reset());
+        }
+        if buf.is_empty() {
+            return self.inner.read(buf);
+        }
+        match self.plan.next(Dir::Read) {
+            None => self.inner.read(buf),
+            Some(Fault::Delay(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.read(buf)
+            }
+            Some(Fault::DropConnection) => {
+                self.dead = true;
+                Err(reset())
+            }
+            Some(Fault::TruncateFrame) => {
+                // deliver at most half of what arrives, swallow the
+                // rest by dying: the caller's next read (read_exact
+                // resumes) hits the dead stream
+                let n = self.inner.read(buf)?;
+                self.dead = true;
+                if n == 0 {
+                    return Ok(0);
+                }
+                Ok((n / 2).max(1))
+            }
+            Some(Fault::CorruptByte) => {
+                let n = self.inner.read(buf)?;
+                if n > 0 {
+                    let p = self.plan.pos(n);
+                    buf[p] ^= 0x40;
+                }
+                Ok(n)
+            }
+            Some(Fault::Partial) => {
+                let m = (buf.len() / 2).max(1);
+                self.inner.read(&mut buf[..m])
+            }
+        }
+    }
+}
+
+impl<S: Write> Write for FaultyIo<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(reset());
+        }
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        match self.plan.next(Dir::Write) {
+            None => self.inner.write(buf),
+            Some(Fault::Delay(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.write(buf)
+            }
+            Some(Fault::DropConnection) => {
+                self.dead = true;
+                Err(reset())
+            }
+            Some(Fault::TruncateFrame) => {
+                let k = (buf.len() / 2).max(1);
+                let n = self.inner.write(&buf[..k])?;
+                self.dead = true;
+                Ok(n)
+            }
+            Some(Fault::CorruptByte) => {
+                let mut damaged = buf.to_vec();
+                let p = self.plan.pos(damaged.len());
+                damaged[p] ^= 0x40;
+                self.inner.write_all(&damaged)?;
+                Ok(buf.len())
+            }
+            Some(Fault::Partial) => {
+                let k = (buf.len() / 2).max(1);
+                self.inner.write(&buf[..k])
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// The stream type the serving path actually holds: a bare
+/// `TcpStream` in production, a fault-wrapped one under the chaos
+/// battery.
+pub enum NetIo {
+    Plain(TcpStream),
+    Faulty(FaultyIo<TcpStream>),
+}
+
+impl NetIo {
+    /// Wrap `stream` in the plan if one is configured.
+    pub fn wrap(stream: TcpStream, plan: Option<&Arc<FaultPlan>>)
+                -> NetIo {
+        match plan {
+            None => NetIo::Plain(stream),
+            Some(p) => NetIo::Faulty(FaultyIo::new(stream, p.clone())),
+        }
+    }
+
+    /// The underlying socket (timeouts, peer addr, shutdown).
+    pub fn stream(&self) -> &TcpStream {
+        match self {
+            NetIo::Plain(s) => s,
+            NetIo::Faulty(f) => f.get_ref(),
+        }
+    }
+
+    /// Best-effort full shutdown of the underlying socket.
+    pub fn shutdown(&self) {
+        let _ = self.stream().shutdown(Shutdown::Both);
+    }
+}
+
+impl Read for NetIo {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            NetIo::Plain(s) => s.read(buf),
+            NetIo::Faulty(f) => f.read(buf),
+        }
+    }
+}
+
+impl Write for NetIo {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            NetIo::Plain(s) => s.write(buf),
+            NetIo::Faulty(f) => f.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            NetIo::Plain(s) => s.flush(),
+            NetIo::Faulty(f) => f.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-memory byte source/sink standing in for a socket.
+    struct Pipe {
+        incoming: Vec<u8>,
+        pos: usize,
+        outgoing: Vec<u8>,
+    }
+
+    impl Pipe {
+        fn with_incoming(bytes: &[u8]) -> Pipe {
+            Pipe { incoming: bytes.to_vec(), pos: 0, outgoing: vec![] }
+        }
+    }
+
+    impl Read for Pipe {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            let n = buf.len().min(self.incoming.len() - self.pos);
+            buf[..n].copy_from_slice(&self.incoming[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    impl Write for Pipe {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.outgoing.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn scripted_faults_land_on_exact_operations() {
+        let plan = FaultPlan::scripted(&[
+            (1, Dir::Read, Fault::CorruptByte),
+            (2, Dir::Read, Fault::DropConnection),
+        ]);
+        let data = [10u8, 20, 30];
+        let mut io = FaultyIo::new(Pipe::with_incoming(&data), plan.clone());
+        // op 0: clean
+        let mut b = [0u8; 1];
+        assert_eq!(io.read(&mut b).unwrap(), 1);
+        assert_eq!(b[0], 10);
+        // op 1: corrupted (exactly one bit pattern xored in)
+        assert_eq!(io.read(&mut b).unwrap(), 1);
+        assert_eq!(b[0], 20 ^ 0x40);
+        // op 2: reset, and the stream stays dead
+        assert_eq!(io.read(&mut b).unwrap_err().kind(),
+                   io::ErrorKind::ConnectionReset);
+        assert_eq!(io.read(&mut b).unwrap_err().kind(),
+                   io::ErrorKind::ConnectionReset);
+        let c = plan.counts();
+        assert_eq!((c.corrupts, c.drops, c.total()), (1, 1, 2));
+    }
+
+    #[test]
+    fn scripted_dir_mismatch_is_a_no_op() {
+        // a write fault scheduled on a read op index does not fire
+        let plan = FaultPlan::scripted(&[(0, Dir::Write,
+                                          Fault::DropConnection)]);
+        let mut io = FaultyIo::new(Pipe::with_incoming(&[1]), plan.clone());
+        let mut b = [0u8; 1];
+        assert_eq!(io.read(&mut b).unwrap(), 1);
+        assert_eq!(b[0], 1);
+        assert_eq!(plan.counts().total(), 0);
+    }
+
+    #[test]
+    fn partial_write_reports_honest_short_count() {
+        let plan = FaultPlan::scripted(&[(0, Dir::Write, Fault::Partial)]);
+        let mut io = FaultyIo::new(Pipe::with_incoming(&[]), plan);
+        let n = io.write(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(io.get_ref().outgoing, vec![1, 2]);
+        // write_all-style resumption completes on the clean stream
+        let n = io.write(&[3, 4]).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(io.get_ref().outgoing, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn truncate_write_kills_the_stream_after_half() {
+        let plan = FaultPlan::scripted(&[(0, Dir::Write,
+                                          Fault::TruncateFrame)]);
+        let mut io = FaultyIo::new(Pipe::with_incoming(&[]), plan);
+        let n = io.write(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(io.write(&[3, 4]).unwrap_err().kind(),
+                   io::ErrorKind::ConnectionReset);
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_respects_rate() {
+        let run = |seed| {
+            let plan = FaultPlan::seeded(seed, 0.25);
+            let mut faults = Vec::new();
+            for _ in 0..400 {
+                faults.push(plan.next(Dir::Read));
+            }
+            (faults, plan.counts())
+        };
+        let (a, ca) = run(42);
+        let (b, cb) = run(42);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(ca, cb);
+        let (c, cc) = run(43);
+        assert_ne!(a, c, "different seed, different schedule");
+        // rate 0.25 over 400 draws: expect roughly 100, generously
+        // bounded so the test never flakes on seed choice
+        assert!(ca.total() > 40 && ca.total() < 200,
+                "rate off: {} faults", ca.total());
+        assert!(cc.total() > 40 && cc.total() < 200);
+    }
+
+    #[test]
+    fn rate_zero_injects_nothing_rate_one_faults_everything() {
+        let quiet = FaultPlan::seeded(7, 0.0);
+        let loud = FaultPlan::seeded(7, 1.0);
+        for _ in 0..100 {
+            assert_eq!(quiet.next(Dir::Read), None);
+            assert!(loud.next(Dir::Write).is_some());
+        }
+        assert_eq!(quiet.counts().total(), 0);
+        assert_eq!(loud.counts().total(), 100);
+    }
+
+    #[test]
+    fn delay_writes_mode_stalls_writes_only() {
+        let plan = FaultPlan::delay_writes(1);
+        assert_eq!(plan.next(Dir::Read), None);
+        assert_eq!(plan.next(Dir::Write), Some(Fault::Delay(1)));
+        assert_eq!(plan.next(Dir::Read), None);
+        assert_eq!(plan.counts().delays, 1);
+    }
+}

@@ -11,22 +11,33 @@
 //! * [`server`] — [`NetServer`]: per-connection reader/writer thread
 //!   pairs feeding the batching router, admission control with
 //!   explicit sheds, graceful drain, stats over the wire.
-//! * [`client`] — [`Client`] (sync + pipelined), [`NetSession`]
-//!   (`Session` over TCP) and [`RemoteEngine`] (so the conformance
-//!   suite holds the wire path to bit-exactness with in-process
-//!   executors).
+//! * [`client`] — [`Client`] (sync + pipelined), [`RetryClient`]
+//!   (bounded decorrelated-jitter retries over idempotent requests),
+//!   [`NetSession`] (`Session` over TCP) and [`RemoteEngine`] (so the
+//!   conformance suite holds the wire path to bit-exactness with
+//!   in-process executors, retrying through restarts and chaos).
+//! * [`fault`] — deterministic fault injection ([`FaultPlan`],
+//!   [`fault::FaultyIo`], [`fault::NetIo`]): seeded or scripted
+//!   schedules of delays, resets, truncations, corruption and partial
+//!   I/O, threadable into both server connections and clients so the
+//!   chaos battery can prove the failure story instead of asserting
+//!   it.
 //!
 //! The design point mirrors the deployment story of an FPGA LUT
 //! model: the network frontend must never be the reason the answer is
 //! wrong (corruption is detected, overload is an explicit typed shed,
 //! shutdown flushes in-flight work) and must never amplify load
-//! (bounded admission, bounded writer queues, backpressure to TCP).
+//! (bounded admission, bounded per-connection quotas, bounded writer
+//! queues, backpressure to TCP).
 
 pub mod client;
+pub mod fault;
 pub mod server;
 pub mod session;
 pub mod wire;
 
-pub use client::{Client, NetSession, RemoteEngine};
+pub use client::{Client, ClientConfig, NetSession, RemoteEngine,
+                 RetryClient, RetryPolicy, RetryStats};
+pub use fault::{Fault, FaultCounts, FaultPlan};
 pub use server::{NetConfig, NetServer};
 pub use session::{EngineSession, InferError, Session, INPUT_X, OUTPUT_Y};

@@ -12,15 +12,36 @@
 //!
 //! # Admission control
 //!
-//! The frontend bounds *admitted rows* (samples submitted to the
-//! router whose responses have not yet been written) at
-//! [`NetConfig::max_inflight`].  A request that would exceed the bound
-//! is answered immediately with an `ERR_OVERLOADED` error frame — an
-//! explicit shed, counted per model and globally, never a silent drop
-//! and never unbounded queue growth.  Row accounting is released only
-//! after the response bytes are handed to the kernel, so a slow
-//! client reading responses lazily cannot park unbounded result data
-//! in the writer queue either.
+//! Admission is two-level.  The frontend bounds *admitted rows*
+//! (samples submitted to the router whose responses have not yet been
+//! written) globally at [`NetConfig::max_inflight`], and per
+//! connection at [`NetConfig::max_inflight_per_conn`] (default a
+//! quarter of the global bound) so one greedy pipelining client
+//! cannot hold every slot.  A request over the global bound is
+//! answered with `ERR_OVERLOADED`; one over its connection's quota
+//! (while the server as a whole still has room) with
+//! `ERR_CONN_QUOTA` — both explicit sheds, counted per model, per
+//! connection and globally, never a silent drop and never unbounded
+//! queue growth.  Row accounting is released only after the response
+//! bytes are handed to the kernel, so a slow client reading responses
+//! lazily cannot park unbounded result data in the writer queue
+//! either.
+//!
+//! # Deadlines (wire v2)
+//!
+//! A v2 `INFER` frame may carry a µs latency budget, measured from
+//! frame arrival.  Admission sheds with `ERR_DEADLINE` when the
+//! budget is already spent, or when the *remaining* budget is below
+//! the model's observed p50 service time (a cheap, cached estimate —
+//! refreshed at most every 50 ms from the inner server's latency
+//! reservoir): work that would almost surely come back late is
+//! answered immediately instead of clogging the queue for requests
+//! that can still make it.  Shedding happens entirely at admission —
+//! an *admitted* request is always answered exactly once, which keeps
+//! the frontend's delivery contract trivial to state and to test;
+//! the p50 estimate already includes router queueing, so admission
+//! sees through to the whole service time.  Sheds are counted as
+//! `deadline_sheds` per model and globally.
 //!
 //! # Graceful drain ([`NetServer::shutdown`])
 //!
@@ -51,10 +72,14 @@
 //!               "max_batch_seen": 0,
 //!               "latency_us": {"count": 0, "mean": 0.0, "p50": 0.0,
 //!                              "p99": 0.0, "p999": 0.0},
-//!               "net": {"requests": 0, "rows": 0, "shed": 0}}],
+//!               "net": {"requests": 0, "rows": 0, "shed": 0,
+//!                       "deadline_sheds": 0, "quota_sheds": 0}}],
 //!   "server": {"accepted_conns": 0, "open_conns": 0, "inflight": 0,
-//!              "max_inflight": 1024, "shed_total": 0,
+//!              "max_inflight": 1024, "max_inflight_per_conn": 256,
+//!              "shed_total": 0, "deadline_sheds": 0, "quota_sheds": 0,
 //!              "draining": false,
+//!              "connections": [{"conn": 1, "inflight": 0,
+//!                               "requests": 0, "quota_sheds": 0}],
 //!              "plan_cache": {"compiles": 1, "memory_hits": 0,
 //!                             "disk_hits": 0}}
 //! }
@@ -74,16 +99,28 @@ use anyhow::Result;
 use crate::coordinator::{InferenceServer, Pending};
 use crate::util::Json;
 
+use super::fault::{FaultPlan, NetIo};
 use super::wire::{self, Frame, Message, WireError};
 
+/// How long a cached per-model p50 service-time estimate stays fresh
+/// before an admission check refreshes it from the inner server's
+/// latency reservoir (which sorts a sample buffer — too expensive per
+/// request).
+const P50_REFRESH_US: u64 = 50_000;
+
 /// Frontend tuning knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct NetConfig {
-    /// Bound on admitted in-flight rows (samples); requests past it
-    /// are shed with `ERR_OVERLOADED`.  Also the largest admissible
-    /// single request: a batch wider than the bound is always shed,
-    /// even on an idle server.
+    /// Global bound on admitted in-flight rows (samples); requests
+    /// past it are shed with `ERR_OVERLOADED`.  Also the largest
+    /// admissible single request: a batch wider than the bound is
+    /// always shed, even on an idle server.
     pub max_inflight: usize,
+    /// Per-connection bound on admitted in-flight rows; requests past
+    /// it are shed with `ERR_CONN_QUOTA` while other connections keep
+    /// full service.  `None`: a quarter of `max_inflight` (min 1).
+    /// `Some(usize::MAX)` effectively disables the quota.
+    pub max_inflight_per_conn: Option<usize>,
     /// Writer-queue depth per connection (frames).  A full queue
     /// blocks the reader, which backpressures the TCP stream.
     pub writer_queue: usize,
@@ -93,16 +130,30 @@ pub struct NetConfig {
     /// Accept-loop poll interval (the listener is non-blocking so the
     /// stop flag is observed promptly).
     pub accept_poll: Duration,
+    /// Fault-injection plan threaded into every connection's I/O
+    /// (chaos tests only; `None` in production).
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
         NetConfig {
             max_inflight: 1024,
+            max_inflight_per_conn: None,
             writer_queue: 256,
             drain_wait: Duration::from_secs(5),
             accept_poll: Duration::from_millis(2),
+            fault: None,
         }
+    }
+}
+
+impl NetConfig {
+    /// The effective per-connection row quota.
+    pub fn conn_quota(&self) -> usize {
+        self.max_inflight_per_conn
+            .unwrap_or(self.max_inflight / 4)
+            .max(1)
     }
 }
 
@@ -113,6 +164,8 @@ struct NetCounters {
     requests: AtomicU64,
     rows: AtomicU64,
     shed: AtomicU64,
+    deadline_shed: AtomicU64,
+    quota_shed: AtomicU64,
 }
 
 struct ModelMeta {
@@ -123,6 +176,25 @@ struct ModelMeta {
     /// (`plan-w{N}` in the STATS document)
     lane_width: usize,
     net: NetCounters,
+    /// cached p50 service time in µs (f64 bits; 0.0 until measured) —
+    /// the deadline-shedding estimate
+    p50_bits: AtomicU64,
+    /// µs-since-start stamp of the last p50 refresh (`u64::MAX`:
+    /// never refreshed)
+    p50_stamp_us: AtomicU64,
+}
+
+/// Per-connection admission state (lives in `Shared::conn_states` for
+/// the whole connection lifetime; also feeds the STATS document).
+struct ConnState {
+    id: u64,
+    /// rows this connection has admitted whose responses are not yet
+    /// written (bounded by the per-connection quota)
+    inflight: AtomicUsize,
+    /// INFER requests admitted on this connection
+    requests: AtomicU64,
+    /// requests shed because this connection was over its quota
+    quota_shed: AtomicU64,
 }
 
 struct Shared {
@@ -130,15 +202,23 @@ struct Shared {
     models: Vec<ModelMeta>,
     by_name: HashMap<String, usize>,
     cfg: NetConfig,
+    /// resolved once from the config so every admission check agrees
+    conn_quota: usize,
+    /// epoch for the p50-cache stamps
+    start: Instant,
     stop: AtomicBool,
     /// admitted rows whose responses are not yet written
     inflight: AtomicUsize,
     shed_total: AtomicU64,
+    deadline_shed_total: AtomicU64,
+    quota_shed_total: AtomicU64,
     accepted: AtomicU64,
     open: AtomicUsize,
     next_conn: AtomicU64,
     /// socket clones for force-close on drain, keyed by connection id
     conns: Mutex<HashMap<u64, TcpStream>>,
+    /// per-connection admission state, keyed by connection id
+    conn_states: Mutex<HashMap<u64, Arc<ConnState>>>,
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -169,7 +249,9 @@ impl NetServer {
                     .model_lane_width(&name)
                     .expect("hosted model has a lane width");
                 ModelMeta { name, n_in, out_width, lane_width,
-                            net: NetCounters::default() }
+                            net: NetCounters::default(),
+                            p50_bits: AtomicU64::new(0f64.to_bits()),
+                            p50_stamp_us: AtomicU64::new(u64::MAX) }
             })
             .collect();
         let by_name = models
@@ -177,18 +259,24 @@ impl NetServer {
             .enumerate()
             .map(|(i, m)| (m.name.clone(), i))
             .collect();
+        let conn_quota = cfg.conn_quota();
         let shared = Arc::new(Shared {
             server,
             models,
             by_name,
             cfg,
+            conn_quota,
+            start: Instant::now(),
             stop: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
             shed_total: AtomicU64::new(0),
+            deadline_shed_total: AtomicU64::new(0),
+            quota_shed_total: AtomicU64::new(0),
             accepted: AtomicU64::new(0),
             open: AtomicUsize::new(0),
             next_conn: AtomicU64::new(1),
             conns: Mutex::new(HashMap::new()),
+            conn_states: Mutex::new(HashMap::new()),
             threads: Mutex::new(Vec::new()),
         });
         let accept = {
@@ -199,8 +287,9 @@ impl NetServer {
                 .expect("spawn accept thread")
         };
         log::info!("net frontend listening on {addr} ({} models, \
-                    max_inflight {})",
-                   shared.models.len(), cfg.max_inflight);
+                    max_inflight {}, per-conn quota {})",
+                   shared.models.len(), shared.cfg.max_inflight,
+                   shared.conn_quota);
         Ok(NetServer {
             shared,
             addr,
@@ -224,9 +313,19 @@ impl NetServer {
         self.shared.inflight.load(Ordering::SeqCst)
     }
 
-    /// Requests shed by admission control since start.
+    /// Requests shed by admission control (global bound) since start.
     pub fn shed_total(&self) -> u64 {
         self.shared.shed_total.load(Ordering::SeqCst)
+    }
+
+    /// Requests shed because their deadline budget could not be met.
+    pub fn deadline_sheds_total(&self) -> u64 {
+        self.shared.deadline_shed_total.load(Ordering::SeqCst)
+    }
+
+    /// Requests shed by per-connection quotas.
+    pub fn quota_sheds_total(&self) -> u64 {
+        self.shared.quota_shed_total.load(Ordering::SeqCst)
     }
 
     /// Connections accepted since start.
@@ -255,16 +354,23 @@ impl NetServer {
         // responses to flush.  Zero must hold across a settle window:
         // a reader that loaded the stop flag as false may still be a
         // few instructions from admitting, and force-closing under it
-        // would lose that request's answer.
+        // would lose that request's answer.  Every sleep is clamped to
+        // the time left, so `drain_wait` bounds phase 3 exactly — a
+        // streak reset just before the deadline cannot ride past it.
         let deadline = Instant::now() + self.shared.cfg.drain_wait;
         let mut zero_streak = 0;
-        while zero_streak < 3 && Instant::now() < deadline {
+        while zero_streak < 3 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let left = deadline - now;
             if self.shared.inflight.load(Ordering::SeqCst) == 0 {
                 zero_streak += 1;
-                std::thread::sleep(Duration::from_millis(5));
+                std::thread::sleep(left.min(Duration::from_millis(5)));
             } else {
                 zero_streak = 0;
-                std::thread::sleep(Duration::from_millis(1));
+                std::thread::sleep(left.min(Duration::from_millis(1)));
             }
         }
         // 4: force-close every connection socket (unblocks idle
@@ -340,20 +446,30 @@ fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream)
     let force = stream.try_clone()?;
     let wstream = stream.try_clone()?;
     shared.conns.lock().unwrap().insert(conn_id, force);
+    let conn = Arc::new(ConnState {
+        id: conn_id,
+        inflight: AtomicUsize::new(0),
+        requests: AtomicU64::new(0),
+        quota_shed: AtomicU64::new(0),
+    });
+    shared.conn_states.lock().unwrap().insert(conn_id, conn.clone());
     shared.open.fetch_add(1, Ordering::SeqCst);
+    let rio = NetIo::wrap(stream, shared.cfg.fault.as_ref());
+    let wio = NetIo::wrap(wstream, shared.cfg.fault.as_ref());
     let (tx, rx) = sync_channel::<Out>(shared.cfg.writer_queue.max(1));
     let reader = {
         let shared = shared.clone();
+        let conn = conn.clone();
         std::thread::Builder::new()
             .name(format!("nla-net-read-{conn_id}"))
-            .spawn(move || reader_loop(&shared, stream, &tx))
+            .spawn(move || reader_loop(&shared, rio, &conn, &tx))
             .expect("spawn reader")
     };
     let writer = {
         let shared = shared.clone();
         std::thread::Builder::new()
             .name(format!("nla-net-write-{conn_id}"))
-            .spawn(move || writer_loop(&shared, wstream, &rx, conn_id))
+            .spawn(move || writer_loop(&shared, wio, &rx, &conn))
             .expect("spawn writer")
     };
     let mut threads = shared.threads.lock().unwrap();
@@ -366,12 +482,14 @@ fn error_frame(id: u64, code: u16, message: String) -> Vec<u8> {
     wire::encode_frame(id, &Message::Error { code, message })
 }
 
-fn reader_loop(shared: &Arc<Shared>, mut stream: TcpStream,
+fn reader_loop(shared: &Arc<Shared>, mut io: NetIo, conn: &Arc<ConnState>,
                tx: &SyncSender<Out>) {
     loop {
-        match wire::read_frame(&mut stream) {
+        match wire::read_frame(&mut io) {
             Ok(frame) => {
-                if !handle_frame(shared, frame, tx) {
+                // deadline budgets are measured from frame arrival
+                let arrived = Instant::now();
+                if !handle_frame(shared, frame, arrived, conn, tx) {
                     break;
                 }
             }
@@ -403,8 +521,8 @@ fn reader_loop(shared: &Arc<Shared>, mut stream: TcpStream,
 
 /// Process one decoded frame.  Returns false when the connection
 /// should close (writer gone).
-fn handle_frame(shared: &Arc<Shared>, frame: Frame, tx: &SyncSender<Out>)
-                -> bool {
+fn handle_frame(shared: &Arc<Shared>, frame: Frame, arrived: Instant,
+                conn: &Arc<ConnState>, tx: &SyncSender<Out>) -> bool {
     let id = frame.id;
     let out = match frame.msg {
         Message::Ping => {
@@ -415,8 +533,10 @@ fn handle_frame(shared: &Arc<Shared>, frame: Frame, tx: &SyncSender<Out>)
                 id, &Message::StatsResult { json })),
             Err((code, msg)) => Out::Ready(error_frame(id, code, msg)),
         },
-        Message::Infer { model, batch, n_in, codes } => {
-            admit_infer(shared, id, &model, batch, n_in, codes)
+        Message::Infer { model, batch, n_in, deadline_us, codes } => {
+            let req = InferReq { id, model, batch, n_in, deadline_us,
+                                 codes, arrived };
+            admit_infer(shared, conn, req)
         }
         // a client must not send response kinds; answer (don't abort —
         // framing is intact) and continue
@@ -430,16 +550,55 @@ fn handle_frame(shared: &Arc<Shared>, frame: Frame, tx: &SyncSender<Out>)
     tx.send(out).is_ok()
 }
 
+/// One decoded INFER request on its way into admission.
+struct InferReq {
+    id: u64,
+    model: String,
+    batch: u32,
+    n_in: u32,
+    deadline_us: Option<u64>,
+    codes: Vec<i32>,
+    arrived: Instant,
+}
+
+/// The model's p50 service time in µs (0.0 until measured), from a
+/// per-model cache refreshed at most every [`P50_REFRESH_US`] —
+/// `InferenceServer::model_stats` sorts a latency reservoir, far too
+/// expensive per admission check.  One thread wins the refresh CAS;
+/// the rest read the (possibly one-interval-stale) cached value.
+fn model_p50_us(shared: &Arc<Shared>, idx: usize) -> f64 {
+    let meta = &shared.models[idx];
+    let now = shared.start.elapsed().as_micros() as u64;
+    let stamp = meta.p50_stamp_us.load(Ordering::SeqCst);
+    let stale = stamp == u64::MAX
+        || now.saturating_sub(stamp) >= P50_REFRESH_US;
+    if stale
+        && meta
+            .p50_stamp_us
+            .compare_exchange(stamp, now, Ordering::SeqCst,
+                              Ordering::SeqCst)
+            .is_ok()
+    {
+        if let Ok(st) = shared.server.model_stats(&meta.name) {
+            meta.p50_bits
+                .store(st.latency.p50.to_bits(), Ordering::SeqCst);
+        }
+    }
+    f64::from_bits(meta.p50_bits.load(Ordering::SeqCst))
+}
+
 /// Validate, admit (or shed) and submit one inference request;
 /// returns what the writer should send.
-fn admit_infer(shared: &Arc<Shared>, id: u64, model: &str, batch: u32,
-               n_in: u32, codes: Vec<i32>) -> Out {
+fn admit_infer(shared: &Arc<Shared>, conn: &Arc<ConnState>, req: InferReq)
+               -> Out {
+    let InferReq { id, model, batch, n_in, deadline_us, codes, arrived } =
+        req;
     if shared.stop.load(Ordering::SeqCst) {
         return Out::Ready(error_frame(
             id, wire::ERR_SHUTTING_DOWN,
             "server is draining; no new work accepted".into()));
     }
-    let Some(&idx) = shared.by_name.get(model) else {
+    let Some(&idx) = shared.by_name.get(&model) else {
         return Out::Ready(error_frame(
             id, wire::ERR_UNKNOWN_MODEL,
             format!("no model named '{model}' is hosted")));
@@ -458,10 +617,56 @@ fn admit_infer(shared: &Arc<Shared>, id: u64, model: &str, batch: u32,
     }
     debug_assert_eq!(codes.len(), batch * meta.n_in,
                      "wire decode guarantees the code count");
-    // admission: reserve `batch` rows or shed explicitly
+    // deadline shedding: answer now if the budget is spent, or if the
+    // remaining budget is below the model's observed p50 service time
+    // (then the answer would almost surely come back late — shed it
+    // before it consumes an admission slot)
+    if let Some(budget) = deadline_us {
+        let elapsed = arrived.elapsed().as_micros() as u64;
+        let remaining = budget.saturating_sub(elapsed);
+        let p50 = if remaining > 0 {
+            model_p50_us(shared, idx)
+        } else {
+            0.0
+        };
+        if remaining == 0 || (p50 > 0.0 && (remaining as f64) < p50) {
+            meta.net.deadline_shed.fetch_add(1, Ordering::SeqCst);
+            shared.deadline_shed_total.fetch_add(1, Ordering::SeqCst);
+            let why = if remaining == 0 {
+                format!("budget {budget} µs already spent at admission")
+            } else {
+                format!("remaining budget {remaining} µs is below the \
+                         model's observed p50 service time {p50:.0} µs")
+            };
+            return Out::Ready(error_frame(id, wire::ERR_DEADLINE, why));
+        }
+    }
+    // admission level 1: this connection's quota
+    let mut cur = conn.inflight.load(Ordering::SeqCst);
+    loop {
+        if cur.saturating_add(batch) > shared.conn_quota {
+            meta.net.quota_shed.fetch_add(1, Ordering::SeqCst);
+            conn.quota_shed.fetch_add(1, Ordering::SeqCst);
+            shared.quota_shed_total.fetch_add(1, Ordering::SeqCst);
+            return Out::Ready(error_frame(
+                id, wire::ERR_CONN_QUOTA,
+                format!("connection quota exceeded ({cur} of {} rows \
+                         in flight on this connection)",
+                        shared.conn_quota)));
+        }
+        match conn.inflight.compare_exchange(
+            cur, cur + batch, Ordering::SeqCst, Ordering::SeqCst)
+        {
+            Ok(_) => break,
+            Err(now) => cur = now,
+        }
+    }
+    // admission level 2: the global bound — on shed, hand back the
+    // per-connection reservation too
     let mut cur = shared.inflight.load(Ordering::SeqCst);
     loop {
-        if cur + batch > shared.cfg.max_inflight {
+        if cur.saturating_add(batch) > shared.cfg.max_inflight {
+            conn.inflight.fetch_sub(batch, Ordering::SeqCst);
             meta.net.shed.fetch_add(1, Ordering::SeqCst);
             shared.shed_total.fetch_add(1, Ordering::SeqCst);
             return Out::Ready(error_frame(
@@ -488,25 +693,27 @@ fn admit_infer(shared: &Arc<Shared>, id: u64, model: &str, batch: u32,
                 // inner server stopped under us: release the rows and
                 // answer with a value, as always
                 shared.inflight.fetch_sub(batch, Ordering::SeqCst);
+                conn.inflight.fetch_sub(batch, Ordering::SeqCst);
                 return Out::Ready(error_frame(
                     id, wire::ERR_SHUTTING_DOWN, format!("{e:#}")));
             }
         }
     }
+    conn.requests.fetch_add(1, Ordering::SeqCst);
     meta.net.requests.fetch_add(1, Ordering::SeqCst);
     meta.net.rows.fetch_add(batch as u64, Ordering::SeqCst);
     Out::Infer { id, model: idx, batch, pending }
 }
 
-fn writer_loop(shared: &Arc<Shared>, mut stream: TcpStream,
-               rx: &Receiver<Out>, conn_id: u64) {
+fn writer_loop(shared: &Arc<Shared>, mut io: NetIo, rx: &Receiver<Out>,
+               conn: &Arc<ConnState>) {
     // once the socket dies we keep draining the queue so admission
     // rows are always released, but stop writing
     let mut dead = false;
     while let Ok(out) = rx.recv() {
         match out {
             Out::Ready(bytes) => {
-                if !dead && stream.write_all(&bytes).is_err() {
+                if !dead && io.write_all(&bytes).is_err() {
                     dead = true;
                 }
             }
@@ -516,6 +723,7 @@ fn writer_loop(shared: &Arc<Shared>, mut stream: TcpStream,
                     // harmlessly) but release the admission rows
                     drop(pending);
                     shared.inflight.fetch_sub(batch, Ordering::SeqCst);
+                    conn.inflight.fetch_sub(batch, Ordering::SeqCst);
                     continue;
                 }
                 let ow = shared.models[model].out_width;
@@ -543,20 +751,20 @@ fn writer_loop(shared: &Arc<Shared>, mut stream: TcpStream,
                         codes,
                     }
                 };
-                if stream.write_all(&wire::encode_frame(id, &msg))
-                    .is_err()
-                {
+                if io.write_all(&wire::encode_frame(id, &msg)).is_err() {
                     dead = true;
                 }
                 // release only after the response bytes are out (or
                 // the socket is known dead): "in flight" means "the
                 // answer has not reached the kernel yet"
                 shared.inflight.fetch_sub(batch, Ordering::SeqCst);
+                conn.inflight.fetch_sub(batch, Ordering::SeqCst);
             }
         }
     }
-    let _ = stream.shutdown(Shutdown::Both);
-    shared.conns.lock().unwrap().remove(&conn_id);
+    io.shutdown();
+    shared.conns.lock().unwrap().remove(&conn.id);
+    shared.conn_states.lock().unwrap().remove(&conn.id);
     shared.open.fetch_sub(1, Ordering::SeqCst);
 }
 
@@ -599,6 +807,12 @@ fn stats_json(shared: &Arc<Shared>, model: &str)
                    num(meta.net.rows.load(Ordering::SeqCst) as f64));
         net.insert("shed".into(),
                    num(meta.net.shed.load(Ordering::SeqCst) as f64));
+        net.insert("deadline_sheds".into(),
+                   num(meta.net.deadline_shed.load(Ordering::SeqCst)
+                       as f64));
+        net.insert("quota_sheds".into(),
+                   num(meta.net.quota_shed.load(Ordering::SeqCst)
+                       as f64));
         let mut m = BTreeMap::new();
         m.insert("model".into(), Json::Str(meta.name.clone()));
         m.insert("n_in".into(), num(meta.n_in as f64));
@@ -623,10 +837,43 @@ fn stats_json(shared: &Arc<Shared>, model: &str)
                num(shared.inflight.load(Ordering::SeqCst) as f64));
     srv.insert("max_inflight".into(),
                num(shared.cfg.max_inflight as f64));
+    srv.insert("max_inflight_per_conn".into(),
+               num(shared.conn_quota as f64));
     srv.insert("shed_total".into(),
                num(shared.shed_total.load(Ordering::SeqCst) as f64));
+    srv.insert("deadline_sheds".into(),
+               num(shared.deadline_shed_total.load(Ordering::SeqCst)
+                   as f64));
+    srv.insert("quota_sheds".into(),
+               num(shared.quota_shed_total.load(Ordering::SeqCst)
+                   as f64));
     srv.insert("draining".into(),
                Json::Bool(shared.stop.load(Ordering::SeqCst)));
+    // live per-connection admission state, sorted by connection id —
+    // which connections hold slots and which are being throttled
+    let mut conn_list: Vec<Arc<ConnState>> = shared
+        .conn_states
+        .lock()
+        .unwrap()
+        .values()
+        .cloned()
+        .collect();
+    conn_list.sort_by_key(|c| c.id);
+    let conns_json = conn_list
+        .into_iter()
+        .map(|c| {
+            let mut o = BTreeMap::new();
+            o.insert("conn".into(), num(c.id as f64));
+            o.insert("inflight".into(),
+                     num(c.inflight.load(Ordering::SeqCst) as f64));
+            o.insert("requests".into(),
+                     num(c.requests.load(Ordering::SeqCst) as f64));
+            o.insert("quota_sheds".into(),
+                     num(c.quota_shed.load(Ordering::SeqCst) as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    srv.insert("connections".into(), Json::Arr(conns_json));
     // plan-cache telemetry (stable keys, asserted in tests/net.rs):
     // how the hosted plans came to exist — compiled here, shared from
     // an identical registration, or cold-loaded from the persistent

@@ -47,6 +47,15 @@ pub enum InferError {
     ShuttingDown,
     /// Server-side failure while evaluating (wire code 6).
     Internal(String),
+    /// The request's deadline budget cannot be met — already expired
+    /// at admission, or the remaining budget is below the model's
+    /// observed p50 service time (wire code 7).  Retrying with the
+    /// same budget is futile.
+    DeadlineExceeded(String),
+    /// This connection is over its per-connection inflight quota
+    /// (wire code 8).  The server has room; *this* connection must
+    /// drain some of its own inflight work first.
+    ConnQuota,
     /// The peer violated the protocol (unexpected kind, bad frame).
     Protocol(String),
     /// Transport failure (connect, read, write).
@@ -64,8 +73,36 @@ impl InferError {
             InferError::Overloaded => Some(wire::ERR_OVERLOADED),
             InferError::ShuttingDown => Some(wire::ERR_SHUTTING_DOWN),
             InferError::Internal(_) => Some(wire::ERR_INTERNAL),
+            InferError::DeadlineExceeded(_) => Some(wire::ERR_DEADLINE),
+            InferError::ConnQuota => Some(wire::ERR_CONN_QUOTA),
             InferError::Protocol(_) | InferError::Io(_) => None,
         }
+    }
+
+    /// Whether an idempotent request that failed this way is worth
+    /// retrying (see `net::client::RetryClient` for the policy that
+    /// consumes this).  The taxonomy:
+    ///
+    /// * retry **capacity** answers ([`InferError::Overloaded`],
+    ///   [`InferError::ConnQuota`]) — the request was provably *not*
+    ///   admitted, so a retry cannot double-execute it and the
+    ///   condition is transient by construction;
+    /// * retry **transport/protocol** failures ([`InferError::Io`],
+    ///   [`InferError::Protocol`], [`InferError::BadFrame`]) — the
+    ///   request may or may not have executed, but inference is
+    ///   idempotent and a fresh attempt on a fresh connection is safe;
+    /// * retry [`InferError::ShuttingDown`] — a restarting server
+    ///   comes back; this is what lets `RemoteEngine` survive a
+    ///   restart mid-run;
+    /// * never retry **semantic rejections** ([`InferError::BadInput`],
+    ///   [`InferError::UnknownModel`], [`InferError::Internal`],
+    ///   [`InferError::DeadlineExceeded`]) — the same request gets the
+    ///   same answer; retrying only adds load where it cannot help.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self,
+                 InferError::Overloaded | InferError::ConnQuota
+                 | InferError::ShuttingDown | InferError::BadFrame(_)
+                 | InferError::Protocol(_) | InferError::Io(_))
     }
 
     /// Reconstruct the typed error a [`wire::Message::Error`] frame
@@ -81,6 +118,10 @@ impl InferError {
             wire::ERR_OVERLOADED => InferError::Overloaded,
             wire::ERR_SHUTTING_DOWN => InferError::ShuttingDown,
             wire::ERR_INTERNAL => InferError::Internal(message.into()),
+            wire::ERR_DEADLINE => {
+                InferError::DeadlineExceeded(message.into())
+            }
+            wire::ERR_CONN_QUOTA => InferError::ConnQuota,
             other => InferError::Protocol(format!(
                 "unknown error code {other}: {message}")),
         }
@@ -102,6 +143,12 @@ impl fmt::Display for InferError {
                 write!(f, "server is shutting down")
             }
             InferError::Internal(m) => write!(f, "server error: {m}"),
+            InferError::DeadlineExceeded(m) => {
+                write!(f, "deadline exceeded: {m}")
+            }
+            InferError::ConnQuota => {
+                write!(f, "per-connection inflight quota exceeded")
+            }
             InferError::Protocol(m) => write!(f, "protocol error: {m}"),
             InferError::Io(e) => write!(f, "transport error: {e}"),
         }
@@ -256,11 +303,29 @@ mod tests {
     fn wire_code_mapping_is_lossless() {
         for code in [wire::ERR_BAD_FRAME, wire::ERR_UNKNOWN_MODEL,
                      wire::ERR_BAD_INPUT, wire::ERR_OVERLOADED,
-                     wire::ERR_SHUTTING_DOWN, wire::ERR_INTERNAL] {
+                     wire::ERR_SHUTTING_DOWN, wire::ERR_INTERNAL,
+                     wire::ERR_DEADLINE, wire::ERR_CONN_QUOTA] {
             let e = InferError::from_wire(code, "m");
             assert_eq!(e.code(), Some(code));
         }
         // unknown codes degrade to Protocol, not a panic or a misread
         assert!(InferError::from_wire(999, "m").code().is_none());
+    }
+
+    #[test]
+    fn retry_taxonomy_never_retries_semantic_rejections() {
+        // capacity + transport + restart: retryable
+        assert!(InferError::Overloaded.is_retryable());
+        assert!(InferError::ConnQuota.is_retryable());
+        assert!(InferError::ShuttingDown.is_retryable());
+        assert!(InferError::BadFrame("x".into()).is_retryable());
+        assert!(InferError::Protocol("x".into()).is_retryable());
+        assert!(InferError::Io(std::io::Error::other("x"))
+                    .is_retryable());
+        // semantic: the same request gets the same answer
+        assert!(!InferError::BadInput("x".into()).is_retryable());
+        assert!(!InferError::UnknownModel("x".into()).is_retryable());
+        assert!(!InferError::Internal("x".into()).is_retryable());
+        assert!(!InferError::DeadlineExceeded("x".into()).is_retryable());
     }
 }

@@ -11,7 +11,8 @@
 //!
 //! The python mirror (`python/compile/wire.py`) encodes the identical
 //! bytes; the committed golden frames (`rust/tests/golden/
-//! golden_frames.bin`) pin the cross-language contract the same way
+//! golden_frames.bin` for v2, `golden_frames_v1.bin` for the v1
+//! back-compat surface) pin the cross-language contract the same way
 //! the `.nlb` goldens pin the artifact format.
 //!
 //! ## Frame layout (all integers little-endian)
@@ -19,15 +20,18 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "NLWP"
-//! 4       2     version (currently 1)
+//! 4       2     version (1 or 2; encoders emit 2)
 //! 6       2     kind (see the KIND_* constants)
 //! 8       8     request id (echoed verbatim in the response)
 //! 16      4     body length (<= MAX_BODY)
 //! 20      4     body checksum (low 32 bits of FNV-1a over the body)
-//! 24      ..    body (layout depends on kind)
+//! 24      ..    body (layout depends on kind and version)
 //!
 //! kind 1  INFER         u16 model-name length + UTF-8 name,
 //!                       u32 batch, u32 n_in,
+//!                       [v2 only] u64 deadline budget in µs
+//!                       (NO_DEADLINE = none; 0 and values above
+//!                       MAX_DEADLINE_US are malformed),
 //!                       batch * n_in  i32 input codes (row-major)
 //! kind 2  RESULT        u32 batch, u32 out_width,
 //!                       batch * out_width  i32 output codes (row-major)
@@ -42,9 +46,15 @@
 //!
 //! ## Versioning & recovery policy
 //!
-//! The version bumps on any layout change; readers accept exactly the
-//! versions they know and reject the rest — an old peer must never
-//! misparse a new frame.  Errors split into two classes:
+//! The version bumps on any layout change; readers accept the closed
+//! range [`WIRE_MIN_VERSION`]..=[`WIRE_VERSION`] and reject the rest —
+//! an old peer must never misparse a new frame.  v2 added exactly one
+//! field (the INFER deadline); a v1 INFER decodes as "no deadline",
+//! so v1 clients get full service from a v2 server.  Encoders emit
+//! v2 by default; [`encode_frame_versioned`] emits v1 for compat
+//! testing and old peers (and refuses to silently drop a deadline).
+//!
+//! Errors split into two classes:
 //!
 //! * **fatal** ([`WireError::is_fatal`]): bad magic, unknown version,
 //!   a body length beyond [`MAX_BODY`], or transport I/O failure —
@@ -52,8 +62,9 @@
 //!   with one final [`Message::Error`] frame where possible and
 //!   closes the connection;
 //! * **recoverable**: checksum mismatch, unknown kind, malformed body
-//!   — the full frame was consumed, sync holds, so the peer answers
-//!   with a typed [`Message::Error`] and keeps the connection open.
+//!   (including a zero or over-cap deadline) — the full frame was
+//!   consumed, sync holds, so the peer answers with a typed
+//!   [`Message::Error`] and keeps the connection open.
 //!
 //! A single corrupted byte anywhere in a body is always caught: every
 //! FNV-1a step is bijective modulo 2^32 in the running hash, so two
@@ -66,7 +77,10 @@ use std::io::Read;
 use crate::netlist::fnv1a;
 
 pub const WIRE_MAGIC: [u8; 4] = *b"NLWP";
-pub const WIRE_VERSION: u16 = 1;
+/// Version emitted by encoders.
+pub const WIRE_VERSION: u16 = 2;
+/// Oldest version readers still accept (v1: INFER without deadline).
+pub const WIRE_MIN_VERSION: u16 = 1;
 /// Fixed frame-header size in bytes.
 pub const HEADER_LEN: usize = 24;
 /// Hard cap on a frame body — an adversarial length prefix is rejected
@@ -77,6 +91,12 @@ pub const MAX_BODY: usize = 1 << 24;
 pub const MAX_NAME: usize = 256;
 /// Cap on an error-message field (encoders truncate to fit).
 pub const MAX_MESSAGE: usize = 4096;
+/// Wire sentinel for "no deadline" in a v2 INFER body.
+pub const NO_DEADLINE: u64 = u64::MAX;
+/// Cap on a deadline budget: one hour in µs.  A budget of 0 (expired
+/// before it was sent) or beyond the cap (indistinguishable from a
+/// corrupt field) is malformed, not a larger grant.
+pub const MAX_DEADLINE_US: u64 = 3_600_000_000;
 
 pub const KIND_INFER: u16 = 1;
 pub const KIND_RESULT: u16 = 2;
@@ -93,12 +113,29 @@ pub const ERR_BAD_INPUT: u16 = 3;
 pub const ERR_OVERLOADED: u16 = 4;
 pub const ERR_SHUTTING_DOWN: u16 = 5;
 pub const ERR_INTERNAL: u16 = 6;
+/// The request's deadline budget cannot be met (already expired at
+/// admission, or the remaining budget is below the model's observed
+/// p50 service time).  Retrying without a larger budget is futile.
+pub const ERR_DEADLINE: u16 = 7;
+/// This connection is over its per-connection inflight quota while
+/// the server as a whole still has room — back off on *this*
+/// connection; other connections are unaffected.
+pub const ERR_CONN_QUOTA: u16 = 8;
 
 /// One decoded frame body.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     /// Evaluate `batch` row-major samples of `n_in` codes on `model`.
-    Infer { model: String, batch: u32, n_in: u32, codes: Vec<i32> },
+    /// `deadline_us` is the caller's whole-request latency budget in
+    /// µs, measured by the server from frame arrival (`None`: no
+    /// deadline; v1 frames always decode as `None`).
+    Infer {
+        model: String,
+        batch: u32,
+        n_in: u32,
+        deadline_us: Option<u64>,
+        codes: Vec<i32>,
+    },
     /// Row-major output codes for a completed [`Message::Infer`].
     Result { batch: u32, out_width: u32, codes: Vec<i32> },
     /// A rejected or failed request — an answer, not a disconnect.
@@ -167,7 +204,8 @@ impl fmt::Display for WireError {
             }
             WireError::BadVersion(v) => {
                 write!(f, "unsupported protocol version {v} (this peer \
-                           speaks version {WIRE_VERSION})")
+                           speaks versions {WIRE_MIN_VERSION}..=\
+                           {WIRE_VERSION})")
             }
             WireError::Oversize(n) => {
                 write!(f, "body length {n} exceeds the {MAX_BODY}-byte cap")
@@ -191,8 +229,10 @@ impl From<std::io::Error> for WireError {
     }
 }
 
-/// Low 32 bits of FNV-1a — the body checksum.
-fn checksum(body: &[u8]) -> u32 {
+/// Low 32 bits of FNV-1a — the body checksum.  Public so tests (and
+/// fuzzers) can forge frames whose checksum is valid but whose body
+/// is semantically hostile.
+pub fn body_checksum(body: &[u8]) -> u32 {
     fnv1a(body) as u32
 }
 
@@ -221,16 +261,49 @@ fn put_name(out: &mut Vec<u8>, name: &str) {
     out.extend_from_slice(name.as_bytes());
 }
 
-/// Serialize one frame.  Encoding is canonical: decoding the result
-/// and re-encoding it reproduces the bytes (the golden-frame test
-/// holds both implementations to this).
+/// Serialize one frame at the current wire version.  Encoding is
+/// canonical: decoding the result and re-encoding it reproduces the
+/// bytes (the golden-frame test holds both implementations to this).
 pub fn encode_frame(id: u64, msg: &Message) -> Vec<u8> {
+    encode_frame_versioned(id, msg, WIRE_VERSION)
+}
+
+/// Serialize one frame at an explicit wire version (compat testing,
+/// talking to old peers).
+///
+/// # Panics
+///
+/// Panics on a version outside [`WIRE_MIN_VERSION`]..=[`WIRE_VERSION`]
+/// and on a v1 INFER carrying a deadline — v1 cannot represent one,
+/// and silently dropping a latency budget would be worse than
+/// refusing.
+pub fn encode_frame_versioned(id: u64, msg: &Message, version: u16)
+                              -> Vec<u8> {
+    assert!((WIRE_MIN_VERSION..=WIRE_VERSION).contains(&version),
+            "cannot encode wire version {version}");
     let mut body = Vec::new();
     match msg {
-        Message::Infer { model, batch, n_in, codes } => {
+        Message::Infer { model, batch, n_in, deadline_us, codes } => {
             put_name(&mut body, model);
             put_u32(&mut body, *batch);
             put_u32(&mut body, *n_in);
+            match version {
+                1 => assert!(deadline_us.is_none(),
+                             "wire v1 cannot carry a deadline"),
+                _ => {
+                    let raw = match deadline_us {
+                        None => NO_DEADLINE,
+                        Some(d) => {
+                            debug_assert!(
+                                (1..=MAX_DEADLINE_US).contains(d),
+                                "encoder deadline {d} outside \
+                                 1..={MAX_DEADLINE_US}");
+                            *d
+                        }
+                    };
+                    put_u64(&mut body, raw);
+                }
+            }
             put_i32s(&mut body, codes);
         }
         Message::Result { batch, out_width, codes } => {
@@ -259,11 +332,11 @@ pub fn encode_frame(id: u64, msg: &Message) -> Vec<u8> {
     debug_assert!(body.len() <= MAX_BODY, "encoder body over cap");
     let mut out = Vec::with_capacity(HEADER_LEN + body.len());
     out.extend_from_slice(&WIRE_MAGIC);
-    put_u16(&mut out, WIRE_VERSION);
+    put_u16(&mut out, version);
     put_u16(&mut out, msg.kind());
     put_u64(&mut out, id);
     put_u32(&mut out, body.len() as u32);
-    put_u32(&mut out, checksum(&body));
+    put_u32(&mut out, body_checksum(&body));
     out.extend_from_slice(&body);
     out
 }
@@ -302,6 +375,10 @@ impl<'a> Cursor<'a> {
         Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
     }
 
+    fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
     fn i32s(&mut self, count: usize, what: &str)
             -> Result<Vec<i32>, WireError> {
         let n = count.checked_mul(4).ok_or_else(|| {
@@ -329,6 +406,7 @@ impl<'a> Cursor<'a> {
 /// Decoded header: the fixed part of a frame, validated except for the
 /// body checksum (which needs the body).
 struct Header {
+    version: u16,
     kind: u16,
     id: u64,
     body_len: usize,
@@ -340,7 +418,7 @@ fn decode_header(h: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
         return Err(WireError::BadMagic([h[0], h[1], h[2], h[3]]));
     }
     let version = u16::from_le_bytes([h[4], h[5]]);
-    if version != WIRE_VERSION {
+    if !(WIRE_MIN_VERSION..=WIRE_VERSION).contains(&version) {
         return Err(WireError::BadVersion(version));
     }
     let kind = u16::from_le_bytes([h[6], h[7]]);
@@ -350,23 +428,43 @@ fn decode_header(h: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
         return Err(WireError::Oversize(body_len));
     }
     let body_sum = u32::from_le_bytes(h[20..24].try_into().unwrap());
-    Ok(Header { kind, id, body_len: body_len as usize, body_sum })
+    Ok(Header { version, kind, id, body_len: body_len as usize, body_sum })
 }
 
-fn decode_body(kind: u16, body: &[u8]) -> Result<Message, WireError> {
+fn decode_body(version: u16, kind: u16, body: &[u8])
+               -> Result<Message, WireError> {
     let mut c = Cursor::new(body);
     let msg = match kind {
         KIND_INFER => {
             let model = c.name("model name")?;
             let batch = c.u32("batch")?;
             let n_in = c.u32("n_in")?;
+            let deadline_us = if version >= 2 {
+                match c.u64("deadline")? {
+                    NO_DEADLINE => None,
+                    0 => {
+                        return Err(WireError::Malformed(
+                            "deadline budget 0 µs (already expired; \
+                             omit the deadline or grant a budget)"
+                                .into()));
+                    }
+                    d if d > MAX_DEADLINE_US => {
+                        return Err(WireError::Malformed(format!(
+                            "deadline budget {d} µs exceeds the \
+                             {MAX_DEADLINE_US} µs cap")));
+                    }
+                    d => Some(d),
+                }
+            } else {
+                None
+            };
             let count = (batch as usize)
                 .checked_mul(n_in as usize)
                 .ok_or_else(|| {
                     WireError::Malformed("batch * n_in overflow".into())
                 })?;
             let codes = c.i32s(count, "input codes")?;
-            Message::Infer { model, batch, n_in, codes }
+            Message::Infer { model, batch, n_in, deadline_us, codes }
         }
         KIND_RESULT => {
             let batch = c.u32("batch")?;
@@ -424,10 +522,10 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(Frame, usize), WireError> {
             bytes.len())));
     }
     let body = &bytes[HEADER_LEN..total];
-    if checksum(body) != h.body_sum {
+    if body_checksum(body) != h.body_sum {
         return Err(WireError::BadChecksum);
     }
-    let msg = decode_body(h.kind, body)?;
+    let msg = decode_body(h.version, h.kind, body)?;
     Ok((Frame { id: h.id, msg }, total))
 }
 
@@ -441,10 +539,10 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
     let h = decode_header(&hb)?;
     let mut body = vec![0u8; h.body_len];
     r.read_exact(&mut body)?;
-    if checksum(&body) != h.body_sum {
+    if body_checksum(&body) != h.body_sum {
         return Err(WireError::BadChecksum);
     }
-    let msg = decode_body(h.kind, &body)?;
+    let msg = decode_body(h.version, h.kind, &body)?;
     Ok(Frame { id: h.id, msg })
 }
 
@@ -458,7 +556,11 @@ mod tests {
             (2, Message::Pong),
             (0x0123_4567_89AB_CDEF,
              Message::Infer { model: "nid".into(), batch: 2, n_in: 3,
+                              deadline_us: None,
                               codes: vec![0, 1, -2, 3, 2, 1] }),
+            (6, Message::Infer { model: "dl".into(), batch: 1, n_in: 2,
+                                 deadline_us: Some(250_000),
+                                 codes: vec![1, 0] }),
             (7, Message::Result { batch: 2, out_width: 1,
                                   codes: vec![1, -3] }),
             (8, Message::Error { code: ERR_OVERLOADED,
@@ -466,6 +568,10 @@ mod tests {
             (9, Message::Stats { model: String::new() }),
             (10, Message::Stats { model: "jsc".into() }),
             (11, Message::StatsResult { json: "{\"x\":1}".into() }),
+            (12, Message::Error { code: ERR_DEADLINE,
+                                  message: "late".into() }),
+            (13, Message::Error { code: ERR_CONN_QUOTA,
+                                  message: "quota".into() }),
         ]
     }
 
@@ -483,10 +589,76 @@ mod tests {
     }
 
     #[test]
+    fn v1_roundtrip_and_cross_version_decode() {
+        for (id, msg) in sample_frames() {
+            if let Message::Infer { deadline_us: Some(_), .. } = msg {
+                continue; // unrepresentable in v1 (panics, tested below)
+            }
+            let bytes = encode_frame_versioned(id, &msg, 1);
+            assert_eq!(bytes[4..6], 1u16.to_le_bytes());
+            let (frame, used) = decode_frame(&bytes).unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(frame.id, id);
+            // a v1 frame decodes to the same message (deadline None)
+            assert_eq!(frame.msg, msg);
+            // canonical per version: v1 re-encoding reproduces bytes
+            assert_eq!(encode_frame_versioned(frame.id, &frame.msg, 1),
+                       bytes);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "wire v1 cannot carry a deadline")]
+    fn v1_refuses_to_drop_a_deadline() {
+        let msg = Message::Infer { model: "m".into(), batch: 1, n_in: 1,
+                                   deadline_us: Some(5), codes: vec![0] };
+        let _ = encode_frame_versioned(3, &msg, 1);
+    }
+
+    /// Rewrite the raw deadline field of an encoded v2 INFER frame and
+    /// fix the checksum, so only the deadline validation can reject it.
+    fn with_raw_deadline(model: &str, raw: u64) -> Vec<u8> {
+        let msg = Message::Infer { model: model.into(), batch: 1, n_in: 1,
+                                   deadline_us: None, codes: vec![7] };
+        let mut bytes = encode_frame(20, &msg);
+        let off = HEADER_LEN + 2 + model.len() + 4 + 4;
+        bytes[off..off + 8].copy_from_slice(&raw.to_le_bytes());
+        let sum = body_checksum(&bytes[HEADER_LEN..]);
+        bytes[20..24].copy_from_slice(&sum.to_le_bytes());
+        bytes
+    }
+
+    #[test]
+    fn deadline_validation_rejects_zero_and_oversize() {
+        // zero budget: malformed, recoverable
+        let err = decode_frame(&with_raw_deadline("m", 0)).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "got {err:?}");
+        assert!(!err.is_fatal());
+        // just over the cap: malformed, recoverable
+        let err = decode_frame(&with_raw_deadline("m", MAX_DEADLINE_US + 1))
+            .unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "got {err:?}");
+        assert!(!err.is_fatal());
+        // boundary values decode
+        for (raw, want) in [(1, Some(1)),
+                            (MAX_DEADLINE_US, Some(MAX_DEADLINE_US)),
+                            (NO_DEADLINE, None)] {
+            let (frame, _) =
+                decode_frame(&with_raw_deadline("m", raw)).unwrap();
+            match frame.msg {
+                Message::Infer { deadline_us, .. } => {
+                    assert_eq!(deadline_us, want, "raw {raw}");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn rejects_truncation_at_every_length() {
         let bytes = encode_frame(3, &Message::Infer {
             model: "m".into(), batch: 2, n_in: 2,
-            codes: vec![1, 2, 3, 4],
+            deadline_us: Some(1000), codes: vec![1, 2, 3, 4],
         });
         for n in 0..bytes.len() {
             assert!(decode_frame(&bytes[..n]).is_err(),
@@ -498,7 +670,7 @@ mod tests {
     fn single_byte_body_corruption_is_always_caught() {
         let bytes = encode_frame(4, &Message::Infer {
             model: "model".into(), batch: 3, n_in: 4,
-            codes: (0..12).collect(),
+            deadline_us: Some(123_456), codes: (0..12).collect(),
         });
         for pos in HEADER_LEN..bytes.len() {
             for flip in [0x01u8, 0x80, 0xFF] {
@@ -524,11 +696,20 @@ mod tests {
     }
 
     #[test]
-    fn bad_version_is_fatal() {
+    fn future_version_is_fatal() {
         let mut bytes = encode_frame(5, &Message::Ping);
         bytes[4] = WIRE_VERSION as u8 + 1;
         let err = decode_frame(&bytes).unwrap_err();
         assert!(matches!(err, WireError::BadVersion(_)));
+        assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn version_zero_is_fatal() {
+        let mut bytes = encode_frame(5, &Message::Ping);
+        bytes[4] = 0;
+        let err = decode_frame(&bytes).unwrap_err();
+        assert!(matches!(err, WireError::BadVersion(0)));
         assert!(err.is_fatal());
     }
 
@@ -565,13 +746,14 @@ mod tests {
         body.extend_from_slice(&vec![b'a'; MAX_NAME + 1]);
         put_u32(&mut body, 1);
         put_u32(&mut body, 0);
+        put_u64(&mut body, NO_DEADLINE);
         let mut bytes = Vec::new();
         bytes.extend_from_slice(&WIRE_MAGIC);
         put_u16(&mut bytes, WIRE_VERSION);
         put_u16(&mut bytes, KIND_INFER);
         put_u64(&mut bytes, 1);
         put_u32(&mut bytes, body.len() as u32);
-        put_u32(&mut bytes, checksum(&body));
+        put_u32(&mut bytes, body_checksum(&body));
         bytes.extend_from_slice(&body);
         let err = decode_frame(&bytes).unwrap_err();
         assert!(matches!(err, WireError::Malformed(_)), "got {err:?}");
@@ -585,7 +767,7 @@ mod tests {
         bytes.push(0x55);
         let blen = 1u32;
         bytes[16..20].copy_from_slice(&blen.to_le_bytes());
-        let sum = checksum(&[0x55]);
+        let sum = body_checksum(&[0x55]);
         bytes[20..24].copy_from_slice(&sum.to_le_bytes());
         let err = decode_frame(&bytes).unwrap_err();
         assert!(matches!(err, WireError::Malformed(_)), "got {err:?}");
@@ -623,6 +805,22 @@ mod tests {
         let err = read_frame(&mut r).unwrap_err();
         assert!(matches!(err, WireError::Io(_)));
         assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn stream_reader_accepts_mixed_version_frames() {
+        // a v1 INFER between two v2 frames: the reader tracks the
+        // per-frame version, not a per-connection one
+        let infer = Message::Infer { model: "m".into(), batch: 1, n_in: 1,
+                                     deadline_us: None, codes: vec![4] };
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&encode_frame(1, &Message::Ping));
+        stream.extend_from_slice(&encode_frame_versioned(2, &infer, 1));
+        stream.extend_from_slice(&encode_frame(3, &infer));
+        let mut r = std::io::Cursor::new(stream);
+        assert_eq!(read_frame(&mut r).unwrap().msg, Message::Ping);
+        assert_eq!(read_frame(&mut r).unwrap().msg, infer);
+        assert_eq!(read_frame(&mut r).unwrap().msg, infer);
     }
 
     #[test]

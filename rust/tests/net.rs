@@ -1,27 +1,49 @@
 //! TCP serving-frontend battery: the committed cross-language golden
-//! frames, wire-level corruption over a live socket (truncations,
-//! flipped bytes, hostile length prefixes, mid-frame disconnects —
-//! typed errors or clean closes, never a panic or a hang), admission
-//! control under flood (explicit sheds, counted in stats), and
-//! graceful drain (in-flight responses flush, new work is refused).
+//! frames (v2 and the frozen v1 stream), wire-level corruption over a
+//! live socket (truncations, flipped bytes, hostile length prefixes,
+//! forged deadline fields, mid-frame disconnects — typed errors or
+//! clean closes, never a panic or a hang), admission control under
+//! flood (global bound, per-connection quotas, deadline shedding —
+//! explicit sheds, counted in stats), graceful drain (bounded even
+//! when the write path is wedged), the retrying client (server coming
+//! up late, scripted connection drops), and a deterministic chaos
+//! battery (`chaos_*`, seeded via `NLA_CHAOS_SEED`, default 1) that
+//! proves the failure story under injected faults: typed errors or
+//! successful retries, at-most-once answers per request id, bit-exact
+//! conformance through a 1 %-fault plan, bounded drain.
 //!
-//! The python twin of the golden-frame test is
+//! The python twin of the golden-frame tests is
 //! `python/tests/test_wire.py`; regenerate the goldens with
-//! `python -m tests.golden_wire` from `python/`.
+//! `python -m tests.golden_wire` from the repo root.
 
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use neuralut::coordinator::{InferenceServer, ModelRegistry, ServerConfig};
+use neuralut::coordinator::{check_conformance, InferenceServer,
+                            ModelRegistry, ServerConfig};
+use neuralut::net::fault::{Dir, Fault, FaultPlan};
 use neuralut::net::wire::{self, Frame, Message};
-use neuralut::net::{Client, InferError, NetConfig, NetServer, NetSession,
-                    Session, INPUT_X, OUTPUT_Y};
+use neuralut::net::{Client, ClientConfig, InferError, NetConfig,
+                    NetServer, NetSession, RemoteEngine, RetryClient,
+                    RetryPolicy, Session, INPUT_X, OUTPUT_Y};
 use neuralut::netlist::testutil::{random_inputs, random_netlist};
 use neuralut::netlist::Netlist;
 use neuralut::util::Json;
 
-/// The committed golden frames — keep in lockstep with
+/// Seed for the `chaos_*` tests — override with `NLA_CHAOS_SEED=n` to
+/// sweep fault schedules (CI runs several).
+fn chaos_seed() -> u64 {
+    std::env::var("NLA_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// The committed v2 golden frames — keep in lockstep with
 /// `python/tests/golden_wire.py::golden_frames`.
 fn golden_frames() -> Vec<(u64, Message)> {
     vec![
@@ -29,9 +51,46 @@ fn golden_frames() -> Vec<(u64, Message)> {
         (2, Message::Pong),
         (0x0123_4567_89AB_CDEF,
          Message::Infer { model: "nid".into(), batch: 2, n_in: 3,
+                          deadline_us: None,
                           codes: vec![0, 1, -2, 3, 2, 1] }),
         (4, Message::Infer {
             model: "golden_mix".into(), batch: 4, n_in: 5,
+            deadline_us: None,
+            codes: (0..20).map(|i| (i * 7) % 19 - 9).collect(),
+        }),
+        // v2: a request carrying a 250 ms deadline budget
+        (6, Message::Infer { model: "dl".into(), batch: 1, n_in: 4,
+                             deadline_us: Some(250_000),
+                             codes: vec![1, 2, 3, 4] }),
+        (7, Message::Result { batch: 2, out_width: 1,
+                              codes: vec![1, -3] }),
+        (8, Message::Error { code: wire::ERR_OVERLOADED,
+                             message: "shed".into() }),
+        (9, Message::Stats { model: String::new() }),
+        (10, Message::Stats { model: "jsc".into() }),
+        (11, Message::StatsResult { json: "{\"x\":1}".into() }),
+        (12, Message::Result { batch: 3, out_width: 0, codes: vec![] }),
+        // v2 error codes
+        (13, Message::Error { code: wire::ERR_DEADLINE,
+                              message: "late".into() }),
+        (14, Message::Error { code: wire::ERR_CONN_QUOTA,
+                              message: "greedy".into() }),
+    ]
+}
+
+/// The frozen v1 golden list (`golden_wire.py::golden_frames_v1`) —
+/// the original wire-v1 stream, pinned forever.
+fn golden_frames_v1() -> Vec<(u64, Message)> {
+    vec![
+        (1, Message::Ping),
+        (2, Message::Pong),
+        (0x0123_4567_89AB_CDEF,
+         Message::Infer { model: "nid".into(), batch: 2, n_in: 3,
+                          deadline_us: None,
+                          codes: vec![0, 1, -2, 3, 2, 1] }),
+        (4, Message::Infer {
+            model: "golden_mix".into(), batch: 4, n_in: 5,
+            deadline_us: None,
             codes: (0..20).map(|i| (i * 7) % 19 - 9).collect(),
         }),
         (7, Message::Result { batch: 2, out_width: 1,
@@ -63,6 +122,30 @@ fn golden_wire_frames_decode_and_reencode() {
         offset += used;
     }
     assert_eq!(offset, bytes.len(), "trailing bytes in the golden file");
+}
+
+#[test]
+fn golden_v1_frames_decode_with_v2_reader_and_reencode_at_v1() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                       "/rust/tests/golden/golden_frames_v1.bin");
+    let bytes = std::fs::read(path)
+        .expect("tests/golden/golden_frames_v1.bin is committed");
+    let mut offset = 0;
+    for (id, msg) in golden_frames_v1() {
+        let (frame, used) = wire::decode_frame(&bytes[offset..])
+            .unwrap_or_else(|e| panic!("v1 frame id {id}: {e}"));
+        assert_eq!(frame.id, id);
+        assert_eq!(frame.msg, msg, "v1 decodes to the same message \
+                                    (deadline: none)");
+        if let Message::Infer { deadline_us, .. } = &frame.msg {
+            assert_eq!(*deadline_us, None, "v1 frames carry no deadline");
+        }
+        // canonical per version: the v1 encoder reproduces the bytes
+        assert_eq!(wire::encode_frame_versioned(id, &msg, 1),
+                   &bytes[offset..offset + used], "v1 frame id {id}");
+        offset += used;
+    }
+    assert_eq!(offset, bytes.len(), "trailing bytes in the v1 golden");
 }
 
 /// A small served model plus its reference netlist.
@@ -109,12 +192,27 @@ fn tcp_infer_is_bit_exact_and_stats_count_it() {
     assert_eq!(netc.at("requests").unwrap().as_usize().unwrap(), 1);
     assert_eq!(netc.at("rows").unwrap().as_usize().unwrap(), batch);
     assert_eq!(netc.at("shed").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(netc.at("deadline_sheds").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(netc.at("quota_sheds").unwrap().as_usize().unwrap(), 0);
     // the batcher saw every row
     assert_eq!(m.at("requests").unwrap().as_usize().unwrap(), batch);
+    let srv = doc.at("server").unwrap();
+    // default per-connection quota: a quarter of the global bound
+    assert_eq!(srv.at("max_inflight_per_conn").unwrap().as_usize()
+                  .unwrap(),
+               NetConfig::default().max_inflight / 4);
+    assert_eq!(srv.at("deadline_sheds").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(srv.at("quota_sheds").unwrap().as_usize().unwrap(), 0);
+    // this connection shows up in the live per-connection table
+    let conns = srv.at("connections").unwrap().as_arr().unwrap();
+    assert_eq!(conns.len(), 1);
+    assert_eq!(conns[0].at("requests").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(conns[0].at("quota_sheds").unwrap().as_usize().unwrap(),
+               0);
     // plan-cache telemetry rides along under stable keys: this server
     // compiled its one model in-process (no persistent cache, no
     // identical sibling registration)
-    let pc = doc.at("server").unwrap().at("plan_cache").unwrap();
+    let pc = srv.at("plan_cache").unwrap();
     assert_eq!(pc.at("compiles").unwrap().as_usize().unwrap(), 1);
     assert_eq!(pc.at("memory_hits").unwrap().as_usize().unwrap(), 0);
     assert_eq!(pc.at("disk_hits").unwrap().as_usize().unwrap(), 0);
@@ -162,7 +260,8 @@ fn corrupt_frames_get_typed_errors_recoverable_keeps_connection() {
     // id-0 BAD_FRAME error and the connection stays in sync
     let x = random_inputs(203, &nl, 1);
     let good = wire::encode_frame(77, &Message::Infer {
-        model: "m".into(), batch: 1, n_in: 6, codes: x.clone(),
+        model: "m".into(), batch: 1, n_in: 6, deadline_us: None,
+        codes: x.clone(),
     });
     let mut evil = good.clone();
     let last = evil.len() - 1;
@@ -213,6 +312,91 @@ fn corrupt_frames_get_typed_errors_recoverable_keeps_connection() {
     net.shutdown();
 }
 
+/// Rewrite the raw deadline field of an encoded v2 INFER frame and fix
+/// the checksum — forged frames whose checksum is valid but whose
+/// deadline is semantically hostile.
+fn with_raw_deadline(frame: &[u8], model_len: usize, raw: u64) -> Vec<u8> {
+    let off = wire::HEADER_LEN + 2 + model_len + 4 + 4;
+    let mut b = frame.to_vec();
+    b[off..off + 8].copy_from_slice(&raw.to_le_bytes());
+    let sum = wire::body_checksum(&b[wire::HEADER_LEN..]);
+    b[20..24].copy_from_slice(&sum.to_le_bytes());
+    b
+}
+
+#[test]
+fn forged_deadline_fields_get_bad_frame_and_connection_survives() {
+    let (net, nl) = serve(210, NetConfig::default());
+    let x = random_inputs(210, &nl, 1);
+    let good = wire::encode_frame(31, &Message::Infer {
+        model: "m".into(), batch: 1, n_in: 6,
+        deadline_us: Some(10_000_000), codes: x.clone(),
+    });
+    let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+    raw.set_nodelay(true).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // a zero budget and an over-cap budget are both recoverable
+    // BAD_FRAME rejections, not sheds and not connection kills
+    for forged in [0u64, wire::MAX_DEADLINE_US + 1] {
+        raw.write_all(&with_raw_deadline(&good, 1, forged)).unwrap();
+        let frame = read_one(&mut raw);
+        match frame.msg {
+            Message::Error { code, message } => {
+                assert_eq!(code, wire::ERR_BAD_FRAME, "deadline {forged}");
+                assert!(message.contains("deadline"), "{message}");
+                assert_eq!(frame.id, 0);
+            }
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+    // same connection: a roomy genuine deadline is served bit-exactly
+    raw.write_all(&good).unwrap();
+    match read_one(&mut raw).msg {
+        Message::Result { codes, .. } => {
+            assert_eq!(codes, nl.eval_one(&x).unwrap());
+        }
+        other => panic!("expected result frame, got {other:?}"),
+    }
+    // neither forged frame counted as a deadline shed
+    assert_eq!(net.deadline_sheds_total(), 0);
+    net.shutdown();
+}
+
+#[test]
+fn v1_client_gets_full_service_from_a_v2_server() {
+    let (net, nl) = serve(211, NetConfig::default());
+    let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+    raw.set_nodelay(true).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // a pure wire-v1 peer: ping, infer, stats — all served
+    raw.write_all(&wire::encode_frame_versioned(1, &Message::Ping, 1))
+        .unwrap();
+    assert!(matches!(read_one(&mut raw).msg, Message::Pong));
+    let x = random_inputs(211, &nl, 3);
+    raw.write_all(&wire::encode_frame_versioned(
+        2,
+        &Message::Infer { model: "m".into(), batch: 3, n_in: 6,
+                          deadline_us: None, codes: x.clone() },
+        1)).unwrap();
+    let frame = read_one(&mut raw);
+    assert_eq!(frame.id, 2);
+    match frame.msg {
+        Message::Result { codes, .. } => {
+            let ow = nl.out_width();
+            for b in 0..3 {
+                let want = nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap();
+                assert_eq!(&codes[b * ow..(b + 1) * ow], &want[..]);
+            }
+        }
+        other => panic!("expected result, got {other:?}"),
+    }
+    raw.write_all(&wire::encode_frame_versioned(
+        3, &Message::Stats { model: "m".into() }, 1)).unwrap();
+    assert!(matches!(read_one(&mut raw).msg,
+                     Message::StatsResult { .. }));
+    net.shutdown();
+}
+
 #[test]
 fn fatal_corruption_answers_then_closes_cleanly() {
     let (net, _nl) = serve(204, NetConfig::default());
@@ -235,6 +419,12 @@ fn fatal_corruption_answers_then_closes_cleanly() {
             b[4] = 0x42;
             b
         },
+        // version zero predates the protocol: fatal too
+        {
+            let mut b = wire::encode_frame(9, &Message::Ping);
+            b[4] = 0x00;
+            b
+        },
     ] {
         let mut raw = TcpStream::connect(net.local_addr()).unwrap();
         raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
@@ -252,7 +442,7 @@ fn fatal_corruption_answers_then_closes_cleanly() {
         raw.read_to_end(&mut rest).expect("clean close, not a hang");
         assert!(rest.is_empty(), "unexpected bytes after the error");
     }
-    // the server survived three hostile connections
+    // the server survived four hostile connections
     let mut c = Client::connect(net.local_addr()).unwrap();
     c.ping().unwrap();
     net.shutdown();
@@ -263,11 +453,12 @@ fn mid_frame_disconnect_does_not_wedge_the_server() {
     let (net, nl) = serve(205, NetConfig::default());
     // half a header
     let mut raw = TcpStream::connect(net.local_addr()).unwrap();
-    raw.write_all(b"NLWP\x01\x00").unwrap();
+    raw.write_all(b"NLWP\x02\x00").unwrap();
     drop(raw);
     // a full header promising a body that never comes
     let full = wire::encode_frame(3, &Message::Infer {
-        model: "m".into(), batch: 1, n_in: 6, codes: vec![0; 6],
+        model: "m".into(), batch: 1, n_in: 6, deadline_us: None,
+        codes: vec![0; 6],
     });
     let mut raw = TcpStream::connect(net.local_addr()).unwrap();
     raw.write_all(&full[..wire::HEADER_LEN + 3]).unwrap();
@@ -288,9 +479,11 @@ fn mid_frame_disconnect_does_not_wedge_the_server() {
 fn overload_sheds_explicitly_and_counts_in_stats() {
     // admission bound of 1 row: pipelined single-row requests race the
     // writer, so a flood must shed; a batch wider than the bound is
-    // shed deterministically even when idle
+    // shed deterministically even when idle.  The per-connection quota
+    // is disabled so every shed exercises the *global* bound.
     let (net, nl) = serve(206, NetConfig {
         max_inflight: 1,
+        max_inflight_per_conn: Some(usize::MAX),
         ..NetConfig::default()
     });
     let mut c = Client::connect(net.local_addr()).unwrap();
@@ -345,7 +538,232 @@ fn overload_sheds_explicitly_and_counts_in_stats() {
     assert_eq!(srv.at("shed_total").unwrap().as_usize().unwrap(),
                shed + 1);
     assert_eq!(srv.at("max_inflight").unwrap().as_usize().unwrap(), 1);
+    // none of this was a quota shed — the quota was disabled
+    assert_eq!(srv.at("quota_sheds").unwrap().as_usize().unwrap(), 0);
     net.shutdown();
+}
+
+#[test]
+fn conn_quota_sheds_typed_per_connection_and_counts_in_stats() {
+    let (net, nl) = serve(212, NetConfig {
+        max_inflight: 1024,
+        max_inflight_per_conn: Some(4),
+        ..NetConfig::default()
+    });
+    let mut greedy = Client::connect(net.local_addr()).unwrap();
+    greedy.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // batch 5 exceeds this connection's quota of 4: typed CONN_QUOTA,
+    // deterministically, even though the global bound has room
+    match greedy.infer("m", 5, 6, random_inputs(212, &nl, 5)) {
+        Err(InferError::ConnQuota) => {}
+        other => panic!("expected ConnQuota, got {other:?}"),
+    }
+    // batch 4 fits the quota and is served bit-exactly
+    let x = random_inputs(213, &nl, 4);
+    let y = greedy.infer("m", 4, 6, x.clone()).unwrap();
+    let ow = nl.out_width();
+    for b in 0..4 {
+        assert_eq!(&y[b * ow..(b + 1) * ow],
+                   &nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap()[..]);
+    }
+    // quotas are per connection: a second connection has its own
+    let mut polite = Client::connect(net.local_addr()).unwrap();
+    let x2 = random_inputs(214, &nl, 4);
+    polite.infer("m", 4, 6, x2).expect("independent quota");
+    // counted where it happened: once globally, once on the model,
+    // once on the greedy connection (and nowhere else)
+    assert_eq!(net.quota_sheds_total(), 1);
+    assert_eq!(net.shed_total(), 0, "a quota shed is not a global shed");
+    let doc = Json::parse(&greedy.stats("m").unwrap()).unwrap();
+    let m = &doc.at("models").unwrap().as_arr().unwrap()[0];
+    assert_eq!(m.at("net").unwrap().at("quota_sheds").unwrap()
+                  .as_usize().unwrap(), 1);
+    let srv = doc.at("server").unwrap();
+    assert_eq!(srv.at("max_inflight_per_conn").unwrap().as_usize()
+                  .unwrap(), 4);
+    assert_eq!(srv.at("quota_sheds").unwrap().as_usize().unwrap(), 1);
+    let conns = srv.at("connections").unwrap().as_arr().unwrap();
+    assert_eq!(conns.len(), 2);
+    let shed_counts: Vec<usize> = conns
+        .iter()
+        .map(|c| c.at("quota_sheds").unwrap().as_usize().unwrap())
+        .collect();
+    assert_eq!(shed_counts.iter().sum::<usize>(), 1,
+               "exactly one connection was throttled: {shed_counts:?}");
+    net.shutdown();
+}
+
+#[test]
+fn infeasible_deadline_is_shed_at_admission_and_counted() {
+    let (net, nl) = serve(215, NetConfig::default());
+    let mut c = Client::connect(net.local_addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let x = random_inputs(215, &nl, 1);
+    // before any latency history exists, a roomy budget is admitted
+    let y = c
+        .infer_deadline("m", 1, 6, x.clone(), Some(10_000_000))
+        .expect("10 s budget with no p50 history is admitted");
+    assert_eq!(y, nl.eval_one(&x).unwrap());
+    // warm the latency reservoir so the observed p50 is real, then
+    // outwait the p50-cache refresh interval so the next deadline
+    // check reads the warmed estimate, not the pre-warmup snapshot
+    for _ in 0..50 {
+        c.infer("m", 1, 6, x.clone()).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(60));
+    // a 1 µs budget is spent (or below the observed p50) by the time
+    // admission sees it: shed with a typed DEADLINE error
+    match c.infer_deadline("m", 1, 6, x.clone(), Some(1)) {
+        Err(InferError::DeadlineExceeded(msg)) => {
+            assert!(msg.contains("budget"), "{msg}");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(net.deadline_sheds_total(), 1);
+    // the connection survives a deadline shed, and no-deadline
+    // requests are untouched by the policy
+    let y = c.infer("m", 1, 6, x.clone()).unwrap();
+    assert_eq!(y, nl.eval_one(&x).unwrap());
+    let doc = Json::parse(&c.stats("m").unwrap()).unwrap();
+    let m = &doc.at("models").unwrap().as_arr().unwrap()[0];
+    assert_eq!(m.at("net").unwrap().at("deadline_sheds").unwrap()
+                  .as_usize().unwrap(), 1);
+    let srv = doc.at("server").unwrap();
+    assert_eq!(srv.at("deadline_sheds").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(srv.at("shed_total").unwrap().as_usize().unwrap(), 0,
+               "a deadline shed is not a capacity shed");
+    net.shutdown();
+}
+
+/// p99 of a latency sample (µs).
+fn p99(mut v: Vec<f64>) -> f64 {
+    v.sort_by(f64::total_cmp);
+    let idx = ((v.len() as f64 * 0.99).ceil() as usize).max(1) - 1;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Run `rounds` rounds of depth-4 pipelined requests against `addr`,
+/// returning per-round latencies in µs.  Every response must be a
+/// bit-exact result — a polite tenant under quota must never be shed.
+fn polite_rounds(addr: std::net::SocketAddr, nl: &Netlist, seed: u64,
+                 rounds: usize) -> Vec<f64> {
+    let mut c = Client::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let x = random_inputs(seed, nl, 4);
+    let ow = nl.out_width();
+    let mut lats = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let t = Instant::now();
+        let mut ids = Vec::with_capacity(4);
+        for b in 0..4 {
+            ids.push(c.send_infer("m", 1, 6,
+                                  x[b * 6..(b + 1) * 6].to_vec())
+                      .unwrap());
+        }
+        for (b, id) in ids.into_iter().enumerate() {
+            let frame = c.recv_frame().unwrap();
+            assert_eq!(frame.id, id);
+            match frame.msg {
+                Message::Result { codes, .. } => {
+                    let want =
+                        nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap();
+                    assert_eq!(codes[..ow], want[..]);
+                }
+                other => panic!("polite tenant shed: {other:?}"),
+            }
+        }
+        lats.push(t.elapsed().as_micros() as f64);
+    }
+    lats
+}
+
+#[test]
+fn quota_keeps_a_polite_tenant_p99_bounded_under_a_greedy_flood() {
+    // global bound 64, per-connection quota 16: a depth-400 greedy
+    // pipeline can monopolize at most a quarter of the admission
+    // capacity, so a polite depth-4 tenant keeps its latency
+    let (net, nl) = serve(216, NetConfig {
+        max_inflight: 64,
+        ..NetConfig::default()
+    });
+    let addr = net.local_addr();
+    let rounds = 150;
+    let solo = p99(polite_rounds(addr, &nl, 301, rounds));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let greedy = {
+        let stop = stop.clone();
+        let row = random_inputs(302, &nl, 1);
+        std::thread::spawn(move || {
+            let Ok(mut c) = Client::connect(addr) else { return };
+            let _ = c.set_read_timeout(Some(Duration::from_millis(200)));
+            let mut outstanding = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                while outstanding < 400 && !stop.load(Ordering::Relaxed)
+                {
+                    if c.send_infer("m", 1, 6, row.clone()).is_err() {
+                        return;
+                    }
+                    outstanding += 1;
+                }
+                if c.recv_frame().is_ok() {
+                    outstanding -= 1;
+                }
+            }
+        })
+    };
+    // let the flood establish itself before measuring
+    std::thread::sleep(Duration::from_millis(100));
+    let contended = p99(polite_rounds(addr, &nl, 303, rounds));
+    stop.store(true, Ordering::Relaxed);
+    let _ = greedy.join();
+    // within 2x of solo p99 (plus a small absolute grace for noisy CI
+    // runners at µs scales)
+    let bound = (2.0 * solo).max(solo + 2500.0);
+    assert!(contended <= bound,
+            "polite p99 {contended:.0} µs exceeds bound {bound:.0} µs \
+             (solo p99 {solo:.0} µs) — the quota failed to isolate the \
+             greedy flood");
+    assert!(net.quota_sheds_total() > 0,
+            "a depth-400 pipeline against a 16-row quota never shed");
+    net.shutdown();
+}
+
+#[test]
+fn drain_deadline_fires_mid_write_streak_and_stays_bounded() {
+    // every server write sleeps 300 ms, so in-flight answers cannot
+    // flush within the 150 ms drain window: the drain deadline fires
+    // while rows are still in flight.  The regression this guards:
+    // drain sleeps are clamped to the time remaining, so phase 3 ends
+    // at the deadline instead of riding past it streak by streak.
+    let (net, nl) = serve(217, NetConfig {
+        drain_wait: Duration::from_millis(150),
+        fault: Some(FaultPlan::delay_writes(300)),
+        ..NetConfig::default()
+    });
+    let mut c = Client::connect(net.local_addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let x = random_inputs(217, &nl, 6);
+    for i in 0..6 {
+        c.send_infer("m", 1, 6, x[i * 6..(i + 1) * 6].to_vec())
+            .unwrap();
+    }
+    // let the admissions land so the drain has real in-flight work
+    std::thread::sleep(Duration::from_millis(50));
+    let t = Instant::now();
+    net.shutdown();
+    let elapsed = t.elapsed();
+    assert!(elapsed >= Duration::from_millis(140),
+            "drain returned in {elapsed:?} with rows still in flight \
+             behind a wedged writer — the deadline cannot have been \
+             honored");
+    assert!(elapsed < Duration::from_secs(3),
+            "drain took {elapsed:?}; the deadline fired but shutdown \
+             was not bounded");
+    // idempotent, and instant the second time
+    let t = Instant::now();
+    net.shutdown();
+    assert!(t.elapsed() < Duration::from_millis(50));
 }
 
 #[test]
@@ -424,6 +842,232 @@ fn net_session_speaks_the_session_api_over_tcp() {
                      Err(InferError::BadInput(_))));
     assert!(matches!(s.run(&[(INPUT_X, &x[..5])]),
                      Err(InferError::BadInput(_))));
+    net.shutdown();
+}
+
+#[test]
+fn retry_client_survives_the_server_coming_up_late() {
+    // reserve a loopback port, free it, and point a retrying client at
+    // it before the server exists: connects are refused, the retry
+    // loop backs off, and the request lands once the server binds —
+    // the restart-survival story without a rebind race
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let nl = random_netlist(218, 6, 1, &[(5, 2, 2), (3, 2, 2)]);
+    let server = {
+        let nl = nl.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(250));
+            let mut registry = ModelRegistry::new();
+            registry.register("m", nl);
+            let server = InferenceServer::start(
+                registry,
+                ServerConfig { max_batch: 8,
+                               max_wait: Duration::from_micros(100),
+                               workers: 2, ..ServerConfig::default() },
+            );
+            NetServer::bind(server, addr, NetConfig::default())
+                .expect("rebind the reserved port")
+        })
+    };
+    let cfg = ClientConfig {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Some(Duration::from_secs(5)),
+        retry: RetryPolicy {
+            max_attempts: 12,
+            base: Duration::from_millis(50),
+            cap: Duration::from_millis(200),
+            seed: 7,
+        },
+        fault: None,
+    };
+    let mut rc = RetryClient::connect(addr, cfg).unwrap();
+    let x = random_inputs(218, &nl, 1);
+    let y = rc.infer("m", 1, 6, &x, None)
+        .expect("the retry loop outlives the server's startup");
+    assert_eq!(y, nl.eval_one(&x).unwrap());
+    let st = rc.retry_stats();
+    assert!(st.retries >= 1,
+            "the server started 250 ms late; the first attempt cannot \
+             have succeeded: {st:?}");
+    assert!(st.backoff_us > 0);
+    assert_eq!(st.gave_up, 0);
+    let net = server.join().expect("server thread");
+    net.shutdown();
+}
+
+#[test]
+fn retry_client_reconnects_after_a_scripted_connection_drop() {
+    let (net, nl) = serve(219, NetConfig::default());
+    // kill the very first client write, deterministically
+    let plan = FaultPlan::scripted(&[(0, Dir::Write,
+                                      Fault::DropConnection)]);
+    let cfg = ClientConfig {
+        read_timeout: Some(Duration::from_secs(5)),
+        retry: RetryPolicy {
+            max_attempts: 4,
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(20),
+            seed: 11,
+        },
+        fault: Some(plan.clone()),
+        ..ClientConfig::default()
+    };
+    let mut rc = RetryClient::connect(net.local_addr(), cfg).unwrap();
+    let x = random_inputs(219, &nl, 2);
+    let y = rc.infer("m", 2, 6, &x, None)
+        .expect("one dropped connection must not fail the request");
+    let ow = nl.out_width();
+    for b in 0..2 {
+        assert_eq!(&y[b * ow..(b + 1) * ow],
+                   &nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap()[..]);
+    }
+    let st = rc.retry_stats();
+    assert_eq!(st.reconnects, 1, "{st:?}");
+    assert!(st.retries >= 1, "{st:?}");
+    assert_eq!(plan.counts().drops, 1);
+    // non-retryable rejections still pass straight through
+    match rc.infer("ghost", 1, 6, &x[..6], None) {
+        Err(InferError::UnknownModel(_)) => {}
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    net.shutdown();
+}
+
+#[test]
+fn chaos_client_faults_retry_to_bit_exact_answers() {
+    // a seeded 1 % fault plan on the client's own sockets: every
+    // injected delay, reset, truncation, corruption or partial op
+    // must end in a typed error absorbed by a retry — the answers
+    // that come back are bit-exact, every time
+    let seed = chaos_seed();
+    let (net, nl) = serve(220 ^ seed, NetConfig::default());
+    let plan = FaultPlan::seeded(seed, 0.01);
+    let cfg = ClientConfig {
+        connect_timeout: Duration::from_secs(5),
+        // short read timeout: a fault-killed stream surfaces as a
+        // typed timeout the retry loop can absorb, not a 30 s stall
+        read_timeout: Some(Duration::from_secs(2)),
+        retry: RetryPolicy {
+            max_attempts: 8,
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(50),
+            seed,
+        },
+        fault: Some(plan.clone()),
+    };
+    let mut eng = RemoteEngine::open_with(net.local_addr(), "m", cfg)
+        .expect("open through the fault plan");
+    use neuralut::coordinator::InferenceEngine;
+    let ow = nl.out_width();
+    for i in 0..400u64 {
+        let batch = 1 + (i as usize % 7);
+        let x = random_inputs(seed.wrapping_add(i), &nl, batch);
+        let y = eng
+            .run_batch(&x, batch)
+            .unwrap_or_else(|e| panic!("request {i}: {e:#}"));
+        for b in 0..batch {
+            let want = nl.eval_one(&x[b * 6..(b + 1) * 6]).unwrap();
+            assert_eq!(&y[b * ow..(b + 1) * ow], &want[..],
+                       "request {i} row {b}");
+        }
+    }
+    assert!(plan.counts().total() > 0,
+            "a 1 % plan never fired across hundreds of requests \
+             (seed {seed})");
+    let st = eng.retry_stats();
+    assert!(st.attempts >= 400, "{st:?}");
+    net.shutdown();
+}
+
+#[test]
+fn chaos_server_faults_conformance_stays_bit_exact_and_drain_bounded() {
+    // the same engine-conformance contract every in-process backend
+    // passes, driven through a server whose sockets fail 1 % of the
+    // time: retries absorb the chaos, the answers stay bit-exact
+    let seed = chaos_seed();
+    let (net, nl) = serve(221 ^ seed, NetConfig {
+        fault: Some(FaultPlan::seeded(seed ^ 0x5EED, 0.01)),
+        ..NetConfig::default()
+    });
+    let cfg = ClientConfig {
+        connect_timeout: Duration::from_secs(5),
+        read_timeout: Some(Duration::from_secs(2)),
+        retry: RetryPolicy {
+            max_attempts: 8,
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(50),
+            seed,
+        },
+        fault: None,
+    };
+    let mut eng = RemoteEngine::open_with(net.local_addr(), "m", cfg)
+        .expect("open against a faulty server");
+    check_conformance(&mut eng, &nl, seed)
+        .expect("conformance through 1 % server faults");
+    // drain stays bounded even with fault-wedged connections
+    let t = Instant::now();
+    net.shutdown();
+    assert!(t.elapsed() < Duration::from_secs(15),
+            "chaos drain took {:?}", t.elapsed());
+}
+
+#[test]
+fn chaos_answers_are_at_most_once_per_request_id() {
+    // a plain non-retrying client against a faulty server: whatever
+    // the fault schedule does, no request id is ever answered twice,
+    // and every answered id is answered correctly
+    let seed = chaos_seed();
+    let (net, nl) = serve(222 ^ seed, NetConfig {
+        fault: Some(FaultPlan::seeded(seed ^ 0xACE, 0.01)),
+        ..NetConfig::default()
+    });
+    let cfg = ClientConfig {
+        read_timeout: Some(Duration::from_secs(2)),
+        retry: RetryPolicy::none(),
+        ..ClientConfig::default()
+    };
+    let mut c = Client::connect_with(net.local_addr(), &cfg).unwrap();
+    let n = 300usize;
+    let x = random_inputs(seed.wrapping_add(5), &nl, n);
+    let mut sent: HashMap<u64, usize> = HashMap::new();
+    for i in 0..n {
+        match c.send_infer("m", 1, 6, x[i * 6..(i + 1) * 6].to_vec()) {
+            Ok(id) => {
+                sent.insert(id, i);
+            }
+            Err(_) => break, // the fault plan killed the connection
+        }
+    }
+    assert!(!sent.is_empty(), "nothing was sent");
+    let ow = nl.out_width();
+    let mut answered: HashSet<u64> = HashSet::new();
+    loop {
+        match c.recv_frame() {
+            Ok(frame) => {
+                if frame.id == 0 {
+                    // an id-0 BAD_FRAME from injected read corruption
+                    // answers no specific request
+                    continue;
+                }
+                assert!(sent.contains_key(&frame.id),
+                        "answer for an id never sent: {}", frame.id);
+                assert!(answered.insert(frame.id),
+                        "request id {} answered twice", frame.id);
+                if let Message::Result { codes, .. } = frame.msg {
+                    let i = sent[&frame.id];
+                    let want =
+                        nl.eval_one(&x[i * 6..(i + 1) * 6]).unwrap();
+                    assert_eq!(codes[..ow], want[..],
+                               "request id {} answered wrong", frame.id);
+                }
+            }
+            Err(_) => break, // EOF, reset or timeout: stream is done
+        }
+    }
+    assert!(answered.len() <= sent.len());
     net.shutdown();
 }
 
